@@ -1,0 +1,137 @@
+"""AOT compiler: lower the L2/L1 graphs to HLO text artifacts.
+
+Run once by ``make artifacts``:
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Emits per (d, k) shape variant:
+  - ``power_step_d{d}_k{k}.hlo.txt``      (A[d,d], W[d,k]) -> (A·W,)
+  - ``deepca_step_d{d}_k{k}.hlo.txt``     (S, A, W, W_prev) -> (S+A(W−W_prev),)
+  - ``orthonormalize_d{d}_k{k}.hlo.txt``  (S, W0) -> (SignAdjust(QR(S), W0),)
+and per (n, d):
+  - ``gram_n{n}_d{d}.hlo.txt``            (X[n,d]) -> (XᵀX/n,)
+plus ``manifest.json`` for the Rust registry.
+
+Interchange is HLO *text*: jax ≥ 0.5 serializes HloModuleProto with
+64-bit instruction ids that xla_extension 0.5.1 (the version the `xla`
+crate binds) rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md and DESIGN.md §7).
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Default shape variants: the paper's two datasets (d=300 w8a, d=123 a9a,
+# k=5) plus the example/driver shapes.
+STEP_SHAPES = [(300, 5), (123, 5), (64, 4), (32, 2)]
+GRAM_SHAPES = [(800, 300), (600, 123)]
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation (return_tuple) -> HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_fn(fn, example_args):
+    return jax.jit(fn).lower(*example_args)
+
+
+def f32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def build_artifacts(step_shapes, gram_shapes):
+    """Yield (name, kind, d, k, hlo_text) for every artifact."""
+    for d, k in step_shapes:
+        a = f32((d, d))
+        dk = f32((d, k))
+        yield (
+            f"power_step_d{d}_k{k}",
+            "power_step",
+            d,
+            k,
+            to_hlo_text(lower_fn(model.power_step, (a, dk))),
+        )
+        yield (
+            f"deepca_step_d{d}_k{k}",
+            "deepca_step",
+            d,
+            k,
+            to_hlo_text(lower_fn(model.deepca_local_step, (dk, a, dk, dk))),
+        )
+        yield (
+            f"orthonormalize_d{d}_k{k}",
+            "orthonormalize",
+            d,
+            k,
+            to_hlo_text(lower_fn(model.orthonormalize, (dk, dk))),
+        )
+    for n, d in gram_shapes:
+        yield (
+            f"gram_n{n}_d{d}",
+            "gram",
+            d,
+            n,
+            to_hlo_text(lower_fn(model.gram, (f32((n, d)),))),
+        )
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="output directory")
+    parser.add_argument(
+        "--shapes",
+        default=None,
+        help="comma list of d:k step shapes, e.g. '300:5,64:4' (default: built-ins)",
+    )
+    parser.add_argument(
+        "--gram-shapes",
+        default=None,
+        help="comma list of n:d gram shapes, e.g. '800:300'",
+    )
+    args = parser.parse_args(argv)
+
+    step_shapes = STEP_SHAPES
+    if args.shapes:
+        step_shapes = [
+            tuple(int(x) for x in pair.split(":")) for pair in args.shapes.split(",")
+        ]
+    gram_shapes = GRAM_SHAPES
+    if args.gram_shapes is not None:
+        gram_shapes = [
+            tuple(int(x) for x in pair.split(":")) for pair in args.gram_shapes.split(",")
+        ] if args.gram_shapes else []
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {"jax_version": jax.__version__, "generated_by": "compile/aot.py", "artifacts": []}
+    for name, kind, d, k, hlo in build_artifacts(step_shapes, gram_shapes):
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out, fname)
+        with open(path, "w") as f:
+            f.write(hlo)
+        manifest["artifacts"].append(
+            {"name": name, "kind": kind, "d": d, "k": k, "file": fname}
+        )
+        print(f"wrote {path} ({len(hlo)} chars)")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out, 'manifest.json')} "
+          f"({len(manifest['artifacts'])} artifacts, jax {jax.__version__})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,56 @@
+"""L1 Pallas kernel: per-agent Gram matrix ``XᵀX / n`` (Eqn. 5.1).
+
+Builds the local matrix A_j from an agent's raw feature rows. Grid over
+row blocks of X with an accumulating output: every grid step adds its
+tile's ``blockᵀ @ block`` into the same (d, d) output block (revisited
+output + ``pl.when`` init — the standard Pallas reduction pattern).
+
+VMEM: a (bm, d) tile plus the (d, d) accumulator; for d=300 f32 the
+accumulator is 352 KiB, fine. For much larger d one would tile the output
+too ((d/bd)² grid) — not needed at the paper's scales.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gram_kernel(x_ref, o_ref, *, inv_n, n, bm):
+    """Accumulate one row-block's Gram contribution.
+
+    The final grid step may be padded (n % bm != 0); padded rows contain
+    unspecified values (NaN under interpret=True) and MUST be masked out
+    before the accumulation — unlike the power-step kernels, where padded
+    rows only ever write to masked-out output rows.
+    """
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    block = x_ref[...]
+    row_ids = i * bm + jax.lax.broadcasted_iota(jnp.int32, block.shape, 0)
+    block = jnp.where(row_ids < n, block, 0.0)
+    o_ref[...] += (
+        jnp.dot(block.T, block, preferred_element_type=jnp.float32) * inv_n
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def gram_pallas(x, block_rows: int = 128):
+    """``XᵀX / n`` for X: [n, d] (PerRow scaling of DESIGN.md §5)."""
+    n, d = x.shape
+    bm = min(block_rows, n)
+    grid = (pl.cdiv(n, bm),)
+    kernel = functools.partial(_gram_kernel, inv_n=1.0 / n, n=n, bm=bm)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((d, d), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((d, d), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32))

@@ -1,0 +1,59 @@
+"""L1 Pallas kernel: the power-iteration product ``A @ W``.
+
+The per-agent hot-spot of every algorithm in the paper (DeEPCA Eqn. 3.1,
+DePCA Eqn. 3.4) is the tall-thin product A[d,d] @ W[d,k] with k ≤ 16.
+
+TPU mapping (DESIGN.md §6): grid over row blocks of ``A``; each grid step
+streams one (bm, d) tile of A through VMEM against the whole of W (d·k
+floats — tiny, broadcast to every step) and writes a (bm, k) output tile.
+With bm=128, d=300, k=8 in f32 the working set is ~185 KiB — far under
+VMEM, leaving room for double buffering the A stream. k ≤ 16 underfills
+the 128-lane MXU; production TPU deployments would batch agents or pad k
+(recorded as the utilization estimate in DESIGN.md, since interpret=True
+runs on CPU and gives no TPU wallclock).
+
+``interpret=True`` everywhere: the kernels must lower to plain HLO so the
+CPU PJRT plugin (and the Rust runtime) can execute them.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _power_step_kernel(a_ref, w_ref, o_ref):
+    """One row-block: o = a_block @ W."""
+    o_ref[...] = jnp.dot(
+        a_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def power_step_pallas(a, w, block_rows: int = 128):
+    """``A @ W`` as a Pallas kernel (grid over row blocks of A).
+
+    Args:
+      a: [d, d] local matrix.
+      w: [d, k] iterate.
+      block_rows: row-tile height (VMEM knob; any value works, padded
+        grid cells are masked on write).
+    """
+    d, d2 = a.shape
+    assert d == d2, f"A must be square, got {a.shape}"
+    dk, k = w.shape
+    assert dk == d, f"W rows {dk} != A dim {d}"
+    bm = min(block_rows, d)
+    grid = (pl.cdiv(d, bm),)
+    return pl.pallas_call(
+        _power_step_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),   # stream A row-tiles
+            pl.BlockSpec((d, k), lambda i: (0, 0)),    # W resident in VMEM
+        ],
+        out_specs=pl.BlockSpec((bm, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((d, k), jnp.float32),
+        interpret=True,
+    )(a.astype(jnp.float32), w.astype(jnp.float32))

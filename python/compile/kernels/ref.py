@@ -1,0 +1,64 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the ground truth the L1 kernels are validated against at build
+time (pytest + hypothesis): any kernel change must keep
+``assert_allclose(kernel(...), ref(...))`` green across the shape/dtype
+sweep in ``python/tests/test_kernels.py``.
+"""
+
+import jax.numpy as jnp
+
+
+def power_step(a, w):
+    """Power-iteration product: ``A @ W`` (A: [d,d], W: [d,k])."""
+    return jnp.matmul(a, w, preferred_element_type=jnp.float32)
+
+
+def tracking_update(s, a, w, w_prev):
+    """DeEPCA Eqn. 3.1 fused update: ``S + A @ (W - W_prev)``.
+
+    One pass over ``A`` instead of two products — the kernel-level
+    expression of the paper's "one new product per iteration" property.
+    """
+    return s + jnp.matmul(a, w - w_prev, preferred_element_type=jnp.float32)
+
+
+def gram(x):
+    """Per-agent Gram matrix (paper Eqn. 5.1, PerRow scaling):
+    ``XᵀX / n`` for X: [n, d]."""
+    n = x.shape[0]
+    return jnp.matmul(x.T, x, preferred_element_type=jnp.float32) / n
+
+
+def mgs_orthonormalize(s):
+    """Modified Gram–Schmidt thin-Q with positive-diagonal convention.
+
+    Matches the Rust Householder QR's Q for full-rank input (thin QR with
+    R_ii > 0 is unique), which is what makes the PJRT and Rust backends
+    interchangeable.
+    """
+    d, k = s.shape
+    cols = []
+    for i in range(k):
+        v = s[:, i]
+        for j in range(i):
+            v = v - jnp.dot(cols[j], v) * cols[j]
+        # Second orthogonalization pass for numerical robustness (MGS2).
+        for j in range(i):
+            v = v - jnp.dot(cols[j], v) * cols[j]
+        nrm = jnp.linalg.norm(v)
+        cols.append(v / nrm)
+    return jnp.stack(cols, axis=1)
+
+
+def sign_adjust(w, w0):
+    """Paper Algorithm 2: flip columns of ``w`` whose inner product with
+    the same column of ``w0`` is negative."""
+    dots = jnp.sum(w * w0, axis=0)
+    signs = jnp.where(dots < 0, -1.0, 1.0)
+    return w * signs[None, :]
+
+
+def orthonormalize(s, w0):
+    """Eqn. 3.3 composite: ``SignAdjust(QR(S), W0)``."""
+    return sign_adjust(mgs_orthonormalize(s), w0)

@@ -1,0 +1,67 @@
+"""L1 Pallas kernel: the fused DeEPCA tracking update (Eqn. 3.1).
+
+``S + A @ (W − W_prev)`` in a single pass over ``A``:
+
+- The naive form runs two d×d×k products per iteration (A·W and A·W_prev)
+  and reads A twice from HBM. Caching G = A·W_prev (the Rust coordinator
+  does this too) leaves one product; fusing the subtraction into the
+  kernel keeps the paper's exact arithmetic while touching A once and
+  S once per tile.
+- ΔW = W − W_prev is recomputed per grid step — d·k flops against the
+  bm·d·k of the tile matmul, i.e. noise — which keeps the kernel free of
+  cross-step state.
+
+Same BlockSpec schedule as ``power_step``; see that module and
+DESIGN.md §6 for the VMEM/MXU analysis.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _tracking_kernel(s_ref, a_ref, w_ref, wp_ref, o_ref):
+    """One row-block: o = s_block + a_block @ (W − W_prev)."""
+    dw = w_ref[...] - wp_ref[...]
+    o_ref[...] = s_ref[...] + jnp.dot(
+        a_ref[...], dw, preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def tracking_update_pallas(s, a, w, w_prev, block_rows: int = 128):
+    """Fused ``S + A(W − W_prev)`` (all f32).
+
+    Args:
+      s: [d, k] tracked variable.
+      a: [d, d] local matrix.
+      w: [d, k] current iterate.
+      w_prev: [d, k] previous iterate.
+      block_rows: row-tile height.
+    """
+    d, d2 = a.shape
+    assert d == d2, f"A must be square, got {a.shape}"
+    dk, k = s.shape
+    assert dk == d and w.shape == s.shape and w_prev.shape == s.shape
+    bm = min(block_rows, d)
+    grid = (pl.cdiv(d, bm),)
+    return pl.pallas_call(
+        _tracking_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),   # S row-tile
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),   # A row-tile
+            pl.BlockSpec((d, k), lambda i: (0, 0)),    # W resident
+            pl.BlockSpec((d, k), lambda i: (0, 0)),    # W_prev resident
+        ],
+        out_specs=pl.BlockSpec((bm, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((d, k), jnp.float32),
+        interpret=True,
+    )(
+        s.astype(jnp.float32),
+        a.astype(jnp.float32),
+        w.astype(jnp.float32),
+        w_prev.astype(jnp.float32),
+    )

@@ -1,0 +1,78 @@
+"""Layer 2: the per-agent DeEPCA compute graph in JAX.
+
+Everything an agent computes locally per power iteration, authored as
+jax functions over the Layer-1 Pallas kernels:
+
+- ``deepca_local_step``  — Eqn. 3.1 fused tracking update (Pallas).
+- ``power_step``         — Eqn. 3.4 / centralized product (Pallas).
+- ``orthonormalize``     — Eqn. 3.3: MGS thin-QR (positive-diagonal
+  convention, loop unrolled over the compile-time constant k ≤ 16) +
+  Algorithm-2 SignAdjust. Written in plain jnp ops so it lowers to
+  ordinary HLO (no LAPACK custom-calls the CPU PJRT plugin could trip
+  on).
+- ``gram``               — Eqn. 5.1 local matrix construction (Pallas).
+
+These are lowered ONCE per shape by ``aot.py`` into
+``artifacts/*.hlo.txt``; the Rust coordinator loads and executes them via
+PJRT. Python never runs at request time.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.gram import gram_pallas
+from .kernels.power_step import power_step_pallas
+from .kernels.tracking import tracking_update_pallas
+
+
+def power_step(a, w):
+    """``A_j @ W`` — the per-agent power product (L1 Pallas)."""
+    return (power_step_pallas(a, w),)
+
+
+def deepca_local_step(s, a, w, w_prev):
+    """Eqn. 3.1: ``S + A_j (W − W_prev)`` fused (L1 Pallas)."""
+    return (tracking_update_pallas(s, a, w, w_prev),)
+
+
+def gram(x):
+    """Eqn. 5.1 per-row-scaled local Gram ``XᵀX/n`` (L1 Pallas)."""
+    return (gram_pallas(x),)
+
+
+def _mgs_q(s):
+    """Modified Gram–Schmidt (two passes) thin-Q, positive-diagonal
+    convention; k is static so the loop unrolls at trace time."""
+    d, k = s.shape
+    cols = []
+    for i in range(k):
+        v = s[:, i]
+        for j in range(i):
+            v = v - jnp.dot(cols[j], v) * cols[j]
+        for j in range(i):  # re-orthogonalization pass (MGS2)
+            v = v - jnp.dot(cols[j], v) * cols[j]
+        nrm = jnp.linalg.norm(v)
+        cols.append(v / nrm)
+    return jnp.stack(cols, axis=1)
+
+
+def orthonormalize(s, w0):
+    """Eqn. 3.3: ``SignAdjust(QR(S), W0)``.
+
+    MGS's Q already has positive-diagonal R (matching the Rust
+    Householder backend), so SignAdjust only repairs genuine subspace
+    sign rotations relative to the shared ``W0``.
+    """
+    q = _mgs_q(s.astype(jnp.float32))
+    dots = jnp.sum(q * w0.astype(jnp.float32), axis=0)
+    signs = jnp.where(dots < 0, -1.0, 1.0)
+    return (q * signs[None, :],)
+
+
+def deepca_full_iteration(s, a, w, w_prev, w0):
+    """A complete local iteration minus communication: tracking update
+    followed by orthonormalize of the *pre-mix* S. Used as a shape/
+    composition check in tests; the deployed artifacts keep the two
+    halves separate because FastMix happens between them."""
+    (s_new,) = deepca_local_step(s, a, w, w_prev)
+    (w_new,) = orthonormalize(s_new, w0)
+    return (s_new, w_new)

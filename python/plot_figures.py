@@ -1,0 +1,110 @@
+#!/usr/bin/env python
+"""Render the regenerated paper figures from the bench CSV output.
+
+Build-time/analysis tool only (like everything in python/ — never on the
+request path). After `cargo bench --bench fig1_w8a --bench fig2_a9a`:
+
+    python python/plot_figures.py --results results --out results
+
+produces `fig1.png` / `fig2.png` with the paper's three panels:
+‖Sᵗ−S̄ᵗ⊗1‖, ‖Wᵗ−W̄ᵗ⊗1‖, and (1/m)Σ tanθ_k(U, W_jᵗ), each against the
+number of communication rounds — directly comparable to Figures 1–2 of
+Ye & Zhang (2021).
+"""
+
+import argparse
+import csv
+import glob
+import os
+
+import matplotlib
+
+matplotlib.use("Agg")
+import matplotlib.pyplot as plt  # noqa: E402
+
+PANELS = [
+    ("s_deviation", r"$\|\mathbf{S}^t - \bar{S}^t \otimes 1\|$"),
+    ("w_deviation", r"$\|\mathbf{W}^t - \bar{W}^t \otimes 1\|$"),
+    ("mean_tan_theta", r"$\frac{1}{m}\sum_j \tan\theta_k(U, W_j^t)$"),
+]
+
+
+def load_series(path):
+    with open(path) as f:
+        rows = list(csv.DictReader(f))
+    return {
+        "comm": [int(r["comm_rounds"]) for r in rows],
+        **{
+            key: [float(r[key]) for r in rows]
+            for key, _ in PANELS
+        },
+    }
+
+
+def label_from_filename(fname, fig):
+    stem = os.path.basename(fname)[len(fig) + 1 : -4]
+    return stem.replace("_", " ").strip()
+
+
+def style(label):
+    if label.startswith("DeEPCA"):
+        return {"linestyle": "-", "linewidth": 1.6}
+    if label.startswith("DePCA"):
+        return {"linestyle": "--", "linewidth": 1.4}
+    return {"linestyle": ":", "linewidth": 1.4, "color": "black"}
+
+
+def plot_figure(fig_id, results_dir, out_dir):
+    paths = sorted(glob.glob(os.path.join(results_dir, f"{fig_id}_*.csv")))
+    series = [
+        (label_from_filename(p, fig_id), load_series(p))
+        for p in paths
+        if "cpca" not in p
+    ]
+    if not series:
+        print(f"no CSVs for {fig_id} in {results_dir} — run the bench first")
+        return False
+
+    # Cap the x-axis at ~1.5× the largest constant-K budget so the paper's
+    # plateaus are visible (the increasing-K series alone would stretch
+    # the axis by 10×; it keeps descending off-plot).
+    xmax = 1.5 * max(
+        data["comm"][-1]
+        for label, data in series
+        if label.startswith("DeEPCA") or (label.startswith("DePCA") and "+t" not in label)
+    )
+
+    fig, axes = plt.subplots(1, 3, figsize=(15, 4.2))
+    for ax, (key, title) in zip(axes, PANELS):
+        for label, data in series:
+            vals = [max(v, 1e-17) for v in data[key]]
+            ax.semilogy(data["comm"], vals, label=label, **style(label))
+        ax.set_xlabel("# communication rounds")
+        ax.set_xlim(0, xmax)
+        ax.set_title(title)
+        ax.grid(True, which="both", alpha=0.25)
+    axes[0].legend(fontsize=7, loc="lower left")
+    dataset = "w8a" if fig_id == "fig1" else "a9a"
+    fig.suptitle(f"{fig_id}: DeEPCA vs DePCA on '{dataset}'-like data (Ye & Zhang 2021 reproduction)")
+    fig.tight_layout()
+    out = os.path.join(out_dir, f"{fig_id}.png")
+    fig.savefig(out, dpi=130)
+    print(f"wrote {out} ({len(series)} series)")
+    return True
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--results", default="results")
+    ap.add_argument("--out", default="results")
+    ap.add_argument("--figures", default="fig1,fig2")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    any_ok = False
+    for fig_id in args.figures.split(","):
+        any_ok |= plot_figure(fig_id.strip(), args.results, args.out)
+    return 0 if any_ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

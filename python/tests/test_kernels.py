@@ -1,0 +1,158 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes (d, k, n, block size) and seeds; fixed cases pin
+the paper's exact shapes. interpret=True keeps everything on CPU.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.gram import gram_pallas
+from compile.kernels.power_step import power_step_pallas
+from compile.kernels.tracking import tracking_update_pallas
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rand(rng, *shape):
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+# ------------------------------------------------------------- power_step
+
+
+@settings(**SETTINGS)
+@given(
+    d=st.integers(2, 96),
+    k=st.integers(1, 8),
+    bm=st.sampled_from([8, 16, 64, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_power_step_matches_ref(d, k, bm, seed):
+    rng = np.random.default_rng(seed)
+    a, w = rand(rng, d, d), rand(rng, d, k)
+    got = power_step_pallas(a, w, block_rows=bm)
+    np.testing.assert_allclose(got, ref.power_step(a, w), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("d,k", [(300, 5), (123, 5), (64, 4), (32, 2)])
+def test_power_step_paper_shapes(d, k):
+    rng = np.random.default_rng(7)
+    a, w = rand(rng, d, d), rand(rng, d, k)
+    got = power_step_pallas(a, w)
+    np.testing.assert_allclose(got, ref.power_step(a, w), rtol=1e-4, atol=1e-4)
+    assert np.asarray(got).dtype == np.float32
+
+
+def test_power_step_block_size_invariance():
+    rng = np.random.default_rng(11)
+    a, w = rand(rng, 70, 70), rand(rng, 70, 3)
+    outs = [np.asarray(power_step_pallas(a, w, block_rows=bm)) for bm in (7, 16, 70, 128)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=1e-5, atol=1e-5)
+
+
+def test_power_step_rejects_bad_shapes():
+    rng = np.random.default_rng(1)
+    with pytest.raises(AssertionError):
+        power_step_pallas(rand(rng, 4, 5), rand(rng, 5, 2))
+    with pytest.raises(AssertionError):
+        power_step_pallas(rand(rng, 4, 4), rand(rng, 5, 2))
+
+
+def test_power_step_bf16_inputs_upcast():
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(3)
+    a, w = rand(rng, 24, 24), rand(rng, 24, 2)
+    got = power_step_pallas(jnp.asarray(a, jnp.bfloat16), jnp.asarray(w, jnp.bfloat16))
+    assert np.asarray(got).dtype == np.float32
+    np.testing.assert_allclose(got, ref.power_step(a, w), rtol=5e-2, atol=5e-2)
+
+
+# ---------------------------------------------------------------- tracking
+
+
+@settings(**SETTINGS)
+@given(
+    d=st.integers(2, 96),
+    k=st.integers(1, 8),
+    bm=st.sampled_from([8, 16, 64, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_tracking_matches_ref(d, k, bm, seed):
+    rng = np.random.default_rng(seed)
+    s, a = rand(rng, d, k), rand(rng, d, d)
+    w, wp = rand(rng, d, k), rand(rng, d, k)
+    got = tracking_update_pallas(s, a, w, wp, block_rows=bm)
+    np.testing.assert_allclose(
+        got, ref.tracking_update(s, a, w, wp), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_tracking_stationary_point():
+    """W == W_prev ⇒ S returned untouched (the tracking telescoping)."""
+    rng = np.random.default_rng(5)
+    s, a, w = rand(rng, 40, 3), rand(rng, 40, 40), rand(rng, 40, 3)
+    got = np.asarray(tracking_update_pallas(s, a, w, w))
+    np.testing.assert_allclose(got, s, rtol=1e-6, atol=1e-6)
+
+
+def test_tracking_equals_two_products():
+    """Fused form == S + A·W − A·W_prev computed as two power steps."""
+    rng = np.random.default_rng(6)
+    s, a = rand(rng, 50, 4), rand(rng, 50, 50)
+    w, wp = rand(rng, 50, 4), rand(rng, 50, 4)
+    fused = np.asarray(tracking_update_pallas(s, a, w, wp))
+    two = (
+        s
+        + np.asarray(power_step_pallas(a, w))
+        - np.asarray(power_step_pallas(a, wp))
+    )
+    np.testing.assert_allclose(fused, two, rtol=1e-4, atol=1e-4)
+
+
+# -------------------------------------------------------------------- gram
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(2, 200),
+    d=st.integers(2, 64),
+    bm=st.sampled_from([8, 16, 64, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gram_matches_ref(n, d, bm, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, n, d)
+    got = gram_pallas(x, block_rows=bm)
+    np.testing.assert_allclose(got, ref.gram(x), rtol=1e-4, atol=1e-4)
+
+
+def test_gram_padded_tail_masked():
+    """n not divisible by block_rows must not leak padding (NaN) rows."""
+    rng = np.random.default_rng(9)
+    x = rand(rng, 53, 37)
+    got = np.asarray(gram_pallas(x, block_rows=16))
+    assert np.isfinite(got).all()
+    np.testing.assert_allclose(got, ref.gram(x), rtol=1e-4, atol=1e-4)
+
+
+def test_gram_is_symmetric_psd():
+    rng = np.random.default_rng(10)
+    x = rand(rng, 80, 12)
+    g = np.asarray(gram_pallas(x))
+    np.testing.assert_allclose(g, g.T, rtol=1e-5, atol=1e-6)
+    evals = np.linalg.eigvalsh(g.astype(np.float64))
+    assert evals.min() > -1e-5
+
+
+def test_gram_paper_shapes():
+    rng = np.random.default_rng(12)
+    for n, d in [(800, 300), (600, 123)]:
+        x = rand(rng, n, d)
+        np.testing.assert_allclose(
+            gram_pallas(x), ref.gram(x), rtol=1e-4, atol=1e-4
+        )

@@ -1,0 +1,142 @@
+"""L2 correctness: the jax model functions (composition of L1 kernels +
+orthonormalization) against numpy ground truth."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def rand(rng, *shape):
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+# ---------------------------------------------------------- orthonormalize
+
+
+@settings(**SETTINGS)
+@given(d=st.integers(3, 80), k=st.integers(1, 6), seed=st.integers(0, 2**31 - 1))
+def test_orthonormalize_is_orthonormal(d, k, seed):
+    k = min(k, d - 1)
+    rng = np.random.default_rng(seed)
+    s, w0 = rand(rng, d, k), rand(rng, d, k)
+    (q,) = model.orthonormalize(s, w0)
+    q = np.asarray(q)
+    np.testing.assert_allclose(q.T @ q, np.eye(k), rtol=0, atol=5e-5)
+
+
+def test_orthonormalize_positive_diag_matches_numpy_qr():
+    """Same Q as numpy's QR normalized to positive-diagonal R — i.e. the
+    same convention the Rust Householder backend uses."""
+    rng = np.random.default_rng(21)
+    s = rand(rng, 30, 4).astype(np.float64)
+    w0 = np.abs(rand(rng, 30, 4)).astype(np.float64)  # positive ⇒ rarely flips
+    qn, rn = np.linalg.qr(s)
+    flip = np.sign(np.diag(rn))
+    qn = qn * flip[None, :]
+    # Sign adjust against w0 may flip further; apply the same to qn.
+    dots = np.sum(qn * w0, axis=0)
+    qn = qn * np.where(dots < 0, -1.0, 1.0)[None, :]
+    (q,) = model.orthonormalize(s.astype(np.float32), w0.astype(np.float32))
+    np.testing.assert_allclose(np.asarray(q), qn, rtol=1e-3, atol=1e-4)
+
+
+def test_orthonormalize_sign_alignment():
+    rng = np.random.default_rng(22)
+    s, w0 = rand(rng, 25, 3), rand(rng, 25, 3)
+    (q,) = model.orthonormalize(s, w0)
+    dots = np.sum(np.asarray(q) * w0, axis=0)
+    assert (dots >= -1e-6).all(), f"columns misaligned: {dots}"
+
+
+def test_orthonormalize_preserves_column_space():
+    rng = np.random.default_rng(23)
+    s, w0 = rand(rng, 40, 3), rand(rng, 40, 3)
+    (q,) = model.orthonormalize(s, w0)
+    q = np.asarray(q).astype(np.float64)
+    s64 = s.astype(np.float64)
+    # Projection of S onto span(Q) must equal S.
+    proj = q @ (q.T @ s64)
+    np.testing.assert_allclose(proj, s64, rtol=1e-3, atol=1e-3)
+
+
+def test_orthonormalize_matches_ref():
+    rng = np.random.default_rng(24)
+    s, w0 = rand(rng, 35, 4), rand(rng, 35, 4)
+    (q,) = model.orthonormalize(s, w0)
+    np.testing.assert_allclose(
+        np.asarray(q), np.asarray(ref.orthonormalize(s, w0)), rtol=1e-4, atol=1e-5
+    )
+
+
+# ------------------------------------------------------------- composition
+
+
+@settings(**SETTINGS)
+@given(d=st.integers(4, 64), k=st.integers(1, 5), seed=st.integers(0, 2**31 - 1))
+def test_deepca_local_step_matches_ref(d, k, seed):
+    k = min(k, d - 1)
+    rng = np.random.default_rng(seed)
+    s, a = rand(rng, d, k), rand(rng, d, d)
+    w, wp = rand(rng, d, k), rand(rng, d, k)
+    (got,) = model.deepca_local_step(s, a, w, wp)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(ref.tracking_update(s, a, w, wp)),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+def test_full_iteration_composition():
+    rng = np.random.default_rng(25)
+    d, k = 30, 3
+    s, a = rand(rng, d, k), rand(rng, d, d)
+    w, wp, w0 = rand(rng, d, k), rand(rng, d, k), rand(rng, d, k)
+    s_new, w_new = model.deepca_full_iteration(s, a, w, wp, w0)
+    (s_expect,) = model.deepca_local_step(s, a, w, wp)
+    (w_expect,) = model.orthonormalize(np.asarray(s_expect), w0)
+    np.testing.assert_allclose(np.asarray(s_new), np.asarray(s_expect), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(w_new), np.asarray(w_expect), rtol=1e-6)
+
+
+def test_power_iteration_converges_via_model():
+    """Sanity: iterating power_step + orthonormalize on a gapped PSD
+    matrix converges to its top-k eigenspace (the L2 graph really is a
+    power method)."""
+    rng = np.random.default_rng(26)
+    d, k = 20, 2
+    basis, _ = np.linalg.qr(rng.standard_normal((d, d)))
+    evals = np.array([10.0, 6.0] + [0.5] * (d - 2))
+    a = (basis * evals) @ basis.T
+    a = a.astype(np.float32)
+    w0 = np.linalg.qr(rng.standard_normal((d, k)))[0].astype(np.float32)
+    w = w0
+    for _ in range(60):
+        (p,) = model.power_step(a, w)
+        (w,) = model.orthonormalize(np.asarray(p), w0)
+    w = np.asarray(w).astype(np.float64)
+    u = basis[:, :k]
+    # Projector distance ≈ 0.
+    dist = np.linalg.norm(w @ w.T - u @ u.T)
+    assert dist < 1e-3, f"projector distance {dist}"
+
+
+def test_gram_model_wrapper():
+    rng = np.random.default_rng(27)
+    x = rand(rng, 64, 10)
+    (g,) = model.gram(x)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(ref.gram(x)), rtol=1e-4, atol=1e-4)
+
+
+def test_mgs_near_degenerate_columns():
+    """Nearly colinear columns: Q must stay orthonormal (MGS2 pass)."""
+    rng = np.random.default_rng(28)
+    d = 40
+    v = rand(rng, d, 1)
+    s = np.concatenate([v, v + 1e-3 * rand(rng, d, 1), rand(rng, d, 1)], axis=1)
+    (q,) = model.orthonormalize(s, rand(rng, d, 3))
+    q = np.asarray(q)
+    np.testing.assert_allclose(q.T @ q, np.eye(3), atol=5e-3)

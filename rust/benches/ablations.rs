@@ -1,0 +1,46 @@
+//! Bench: the DESIGN.md ablations — sign adjustment (2×2 with QR sign
+//! convention), topology sweep (K* vs 1/√(1−λ₂)), minimal K vs data
+//! heterogeneity (Remark 2), and non-PSD robustness (Remark 1).
+
+use deepca::benchkit::{section, Bench};
+use deepca::experiments::{ablations, Scale};
+
+fn main() {
+    let scale = match std::env::var("DEEPCA_BENCH_SCALE").as_deref() {
+        Ok("small") => Scale::Small,
+        _ => Scale::Full,
+    };
+    let bench = Bench::new(0, 1);
+
+    section(&format!("ablation: SignAdjust × QR sign convention, scale {scale:?}"));
+    let mut sign_cells = None;
+    bench.run("abl_sign", || {
+        sign_cells = Some(ablations::sign_adjust(scale).expect("abl_sign"));
+    });
+    let cells = sign_cells.unwrap();
+    assert!(
+        cells[0].final_tan > 1e3 * cells[1].final_tan.max(1e-14),
+        "raw QR without SignAdjust should fail"
+    );
+
+    section("ablation: topology sweep (K* vs network gap)");
+    bench.run("abl_topology", || {
+        ablations::topology(scale).expect("abl_topology");
+    });
+
+    section("ablation: minimal K vs heterogeneity (Remark 2)");
+    bench.run("abl_min_k", || {
+        ablations::min_k_vs_heterogeneity(scale).expect("abl_min_k");
+    });
+
+    section("ablation: non-PSD locals (Remark 1)");
+    let mut psd_cells = None;
+    bench.run("abl_non_psd", || {
+        psd_cells = Some(ablations::non_psd(scale).expect("abl_non_psd"));
+    });
+    for c in psd_cells.unwrap() {
+        assert!(c.final_tan < 1e-6, "{}: Remark-1 robustness violated", c.label);
+    }
+
+    println!("ablations bench OK");
+}

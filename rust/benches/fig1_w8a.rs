@@ -1,0 +1,51 @@
+//! Bench: regenerate paper Figure 1 ('w8a').
+//!
+//! ```bash
+//! cargo bench --bench fig1_w8a                     # paper scale
+//! DEEPCA_BENCH_SCALE=small cargo bench --bench fig1_w8a
+//! ```
+//!
+//! Emits every series (CSV under results/) and self-checks the paper's
+//! qualitative claims: DeEPCA(K ok) ≈ CPCA ≪ DeEPCA(K small), fixed-K
+//! DePCA plateaus, increasing-K DePCA pays extra communication.
+
+use deepca::benchkit::{section, Bench};
+use deepca::experiments::figures::{self, Figure};
+use deepca::experiments::Scale;
+
+fn main() {
+    let scale = match std::env::var("DEEPCA_BENCH_SCALE").as_deref() {
+        Ok("small") => Scale::Small,
+        _ => Scale::Full,
+    };
+    section(&format!("Figure 1 (w8a-like), scale {scale:?}"));
+
+    let bench = Bench::new(0, 1); // one full regeneration, timed
+    let mut result = None;
+    bench.run("fig1 regeneration", || {
+        result = Some(figures::run_figure(Figure::Fig1W8a, scale).expect("fig1"));
+    });
+    let res = result.unwrap();
+    let c = figures::claims(&res);
+
+    section("Figure-1 claims check (paper-vs-measured shape)");
+    println!("DeEPCA best-K final tanθ      : {:.3e}", c.deepca_best);
+    println!("DeEPCA smallest-K final tanθ  : {:.3e}", c.deepca_smallest_k);
+    println!("DePCA fixed-K best final tanθ : {:.3e}", c.depca_fixed_best);
+    println!(
+        "DePCA increasing-K final tanθ : {:.3e}",
+        c.depca_increasing.unwrap_or(f64::NAN)
+    );
+    println!("CPCA final tanθ               : {:.3e}", c.cpca);
+    println!("matched-K DePCA/DeEPCA ratio  : {:.1}", c.matched_k_ratio);
+    println!("local-only heterogeneity floor: {:.3e}", res.local_floor);
+
+    let ok_rate = c.deepca_best < 200.0 * c.cpca.max(1e-14);
+    let ok_small_k = c.deepca_smallest_k > 1e2 * c.deepca_best.max(1e-14);
+    let ok_depca = c.matched_k_ratio > 1e2;
+    println!(
+        "\nclaims: matches-CPCA-rate={ok_rate} small-K-stalls={ok_small_k} DePCA-plateaus={ok_depca}"
+    );
+    assert!(ok_rate && ok_small_k && ok_depca, "figure-1 shape not reproduced");
+    println!("fig1_w8a bench OK");
+}

@@ -1,0 +1,100 @@
+//! Microbenchmarks for the §Perf pass: every hot path in the L3 stack,
+//! measured in isolation. EXPERIMENTS.md §Perf records before/after for
+//! each optimization applied against these numbers.
+//!
+//! ```bash
+//! cargo bench --bench microbench
+//! ```
+
+use deepca::algo::backend::{ParallelBackend, PowerBackend, RustBackend};
+use deepca::algo::deepca::DeepcaConfig;
+use deepca::algo::metrics::RunRecorder;
+use deepca::algo::problem::Problem;
+use deepca::benchkit::{section, Bench};
+use deepca::consensus::comm::{Communicator, DenseComm, ThreadedNetwork};
+use deepca::consensus::metrics::CommStats;
+use deepca::consensus::AgentStack;
+use deepca::data::synthetic;
+use deepca::graph::topology::Topology;
+use deepca::linalg::angles::tan_theta;
+use deepca::linalg::eig::eig_sym;
+use deepca::linalg::qr::thin_qr;
+use deepca::linalg::Mat;
+use deepca::prelude::deepca_algo;
+use deepca::util::rng::Rng;
+
+fn main() {
+    let bench = Bench::new(2, 10);
+    let mut rng = Rng::seed_from(901);
+
+    // ----------------------------------------------------------- linalg
+    section("linalg kernels (paper shapes: d=300, k=5, m=50)");
+    let a300 = {
+        let g = Mat::randn(300, 300, &mut rng);
+        let mut a = g.t_matmul(&g);
+        a.scale(1.0 / 300.0);
+        a.symmetrize();
+        a
+    };
+    let w300 = Mat::rand_orthonormal(300, 5, &mut rng);
+    bench.run("matmul A(300x300) @ W(300x5)", || a300.matmul(&w300));
+    let x800 = Mat::randn(800, 300, &mut rng);
+    bench.run("gram XtX (800x300)", || x800.t_matmul(&x800));
+    let s300 = Mat::randn(300, 5, &mut rng);
+    bench.run("householder thin-QR (300x5)", || thin_qr(&s300));
+    let u300 = Mat::rand_orthonormal(300, 5, &mut rng);
+    bench.run("tan_theta(U, X) (300x5)", || tan_theta(&u300, &s300));
+
+    let a64 = {
+        let g = Mat::randn(64, 64, &mut rng);
+        let mut a = g.t_matmul(&g);
+        a.symmetrize();
+        a
+    };
+    Bench::new(1, 5).run("jacobi eig_sym (64x64)", || eig_sym(&a64));
+    Bench::new(1, 3).run("jacobi eig_sym (300x300)", || eig_sym(&a300));
+
+    // -------------------------------------------------------- consensus
+    section("consensus (m=50, ER(0.5), d=300, k=5)");
+    let topo = Topology::erdos_renyi(50, 0.5, &mut Rng::seed_from(902));
+    let dense = DenseComm::from_topology(&topo);
+    let stack0 = AgentStack::new(
+        (0..50).map(|_| Mat::randn(300, 5, &mut rng)).collect(),
+    );
+    bench.run("FastMix K=8 (dense engine)", || {
+        let mut s = stack0.clone();
+        dense.fastmix(&mut s, 8, &mut CommStats::default());
+        s
+    });
+    let threaded = ThreadedNetwork::from_topology(&topo);
+    Bench::new(1, 5).run("FastMix K=8 (threaded engine)", || {
+        let mut s = stack0.clone();
+        threaded.fastmix(&mut s, 8, &mut CommStats::default());
+        s
+    });
+    bench.run("stack deviation-from-mean", || stack0.deviation_from_mean());
+
+    // --------------------------------------------------------- backends
+    section("power-step backends (m=50 agents)");
+    let ds = synthetic::w8a_like_scaled(50, 100, &mut Rng::seed_from(903));
+    let problem = Problem::from_dataset(&ds, 50, 5);
+    let ws = AgentStack::replicate(50, &problem.initial_w(1));
+    let seq = RustBackend::new(&problem.locals);
+    bench.run("local products, sequential", || seq.local_products(&ws));
+    let par = ParallelBackend::new(&problem.locals, 0);
+    bench.run("local products, thread-parallel", || par.local_products(&ws));
+
+    // ------------------------------------------------------- end-to-end
+    section("end-to-end DeEPCA iteration cost (m=50, d=300, k=5, K=8)");
+    let cfg = DeepcaConfig { consensus_rounds: 8, max_iters: 10, ..Default::default() };
+    Bench::new(1, 5).run("10 iterations, metrics ON (stride 1)", || {
+        let mut rec = RunRecorder::every_iteration();
+        deepca_algo::run_dense(&problem, &topo, &cfg, &mut rec)
+    });
+    Bench::new(1, 5).run("10 iterations, metrics strided (10)", || {
+        let mut rec = RunRecorder::with_stride(10);
+        deepca_algo::run_dense(&problem, &topo, &cfg, &mut rec)
+    });
+
+    println!("\nmicrobench OK");
+}

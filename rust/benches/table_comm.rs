@@ -1,0 +1,37 @@
+//! Bench: the Remark-2 / Theorem-1 communication-to-ε table
+//! (DeEPCA constant-K vs DePCA increasing-K, measured).
+
+use deepca::benchkit::{section, Bench};
+use deepca::experiments::{comm_table, Scale};
+
+fn main() {
+    let scale = match std::env::var("DEEPCA_BENCH_SCALE").as_deref() {
+        Ok("small") => Scale::Small,
+        _ => Scale::Full,
+    };
+    section(&format!("table_comm (communication to reach ε), scale {scale:?}"));
+
+    let bench = Bench::new(0, 1);
+    let mut rows = None;
+    bench.run("table_comm regeneration", || {
+        rows = Some(comm_table::run(scale).expect("table_comm"));
+    });
+    let rows = rows.unwrap();
+
+    // Self-check: the DePCA/DeEPCA ratio must grow with precision —
+    // that's the log(1/ε) advantage of Theorem 1.
+    let ratios: Vec<f64> = rows
+        .iter()
+        .filter_map(|r| match (r.deepca_rounds, r.depca_rounds) {
+            (Some(a), Some(b)) if a > 0 => Some(b as f64 / a as f64),
+            _ => None,
+        })
+        .collect();
+    println!("\nDePCA/DeEPCA round ratios across the ε grid: {ratios:?}");
+    assert!(ratios.len() >= 2, "not enough comparable ε rows");
+    assert!(
+        ratios.last().unwrap() > ratios.first().unwrap(),
+        "advantage must grow with precision"
+    );
+    println!("table_comm bench OK");
+}

@@ -1,0 +1,186 @@
+//! Local-compute backends: where `A_j · W` actually runs.
+//!
+//! The power-step product is the only numerical heavy lifting an agent
+//! does per iteration; everything else is communication and a thin QR.
+//! Three interchangeable implementations:
+//!
+//! - [`RustBackend`] — in-process `Mat::matmul` (always available).
+//! - [`ParallelBackend`] — same math, agents fanned out over scoped
+//!   threads (the L3 perf path for sweeps; see EXPERIMENTS.md §Perf).
+//! - `PjrtBackend` (in [`crate::runtime`]) — executes the AOT-compiled
+//!   JAX/Pallas artifact through the PJRT C API. That is the production
+//!   three-layer path; the Rust backends double as its test oracle.
+
+use crate::consensus::AgentStack;
+use crate::linalg::Mat;
+
+/// Per-agent power-step provider.
+///
+/// Deliberately not `Send`/`Sync`-bounded: the PJRT client is `Rc`-based
+/// and single-threaded, so PJRT-backed runs stay on the leader thread
+/// while the pure-Rust backends parallelize internally.
+pub trait PowerBackend {
+    /// Number of agents.
+    fn m(&self) -> usize;
+    /// `A_j · w` for agent `j`.
+    fn local_product(&self, agent: usize, w: &Mat) -> Mat;
+    /// All agents' products for one iteration. Default: sequential loop;
+    /// implementations may parallelize.
+    fn local_products(&self, ws: &AgentStack) -> AgentStack {
+        assert_eq!(ws.m(), self.m());
+        AgentStack::new(
+            (0..self.m())
+                .map(|j| self.local_product(j, ws.slice(j)))
+                .collect(),
+        )
+    }
+    /// Short label for reports.
+    fn label(&self) -> &'static str;
+}
+
+/// Sequential in-process backend over dense local matrices.
+pub struct RustBackend<'a> {
+    locals: &'a [Mat],
+}
+
+impl<'a> RustBackend<'a> {
+    /// Borrow the problem's local matrices.
+    pub fn new(locals: &'a [Mat]) -> Self {
+        RustBackend { locals }
+    }
+}
+
+impl PowerBackend for RustBackend<'_> {
+    fn m(&self) -> usize {
+        self.locals.len()
+    }
+    fn local_product(&self, agent: usize, w: &Mat) -> Mat {
+        self.locals[agent].matmul(w)
+    }
+    fn label(&self) -> &'static str {
+        "rust"
+    }
+}
+
+/// Thread-parallel backend: one scoped thread per chunk of agents.
+pub struct ParallelBackend<'a> {
+    locals: &'a [Mat],
+    threads: usize,
+}
+
+impl<'a> ParallelBackend<'a> {
+    /// `threads = 0` → available_parallelism.
+    pub fn new(locals: &'a [Mat], threads: usize) -> Self {
+        let threads = if threads == 0 {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+        } else {
+            threads
+        };
+        ParallelBackend { locals, threads }
+    }
+}
+
+impl PowerBackend for ParallelBackend<'_> {
+    fn m(&self) -> usize {
+        self.locals.len()
+    }
+
+    fn local_product(&self, agent: usize, w: &Mat) -> Mat {
+        self.locals[agent].matmul(w)
+    }
+
+    fn local_products(&self, ws: &AgentStack) -> AgentStack {
+        let m = self.m();
+        assert_eq!(ws.m(), m);
+        let nthreads = self.threads.min(m).max(1);
+        let chunk = m.div_ceil(nthreads);
+        let mut out: Vec<Option<Mat>> = (0..m).map(|_| None).collect();
+
+        std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for t in 0..nthreads {
+                let lo = t * chunk;
+                let hi = ((t + 1) * chunk).min(m);
+                if lo >= hi {
+                    break;
+                }
+                let locals = self.locals;
+                let handle = scope.spawn(move || {
+                    (lo..hi)
+                        .map(|j| locals[j].matmul(ws.slice(j)))
+                        .collect::<Vec<Mat>>()
+                });
+                handles.push((lo, handle));
+            }
+            for (lo, h) in handles {
+                for (off, mat) in h.join().expect("backend thread panicked").into_iter().enumerate() {
+                    out[lo + off] = Some(mat);
+                }
+            }
+        });
+        AgentStack::new(out.into_iter().map(Option::unwrap).collect())
+    }
+
+    fn label(&self) -> &'static str {
+        "rust-parallel"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn locals(m: usize, d: usize, seed: u64) -> Vec<Mat> {
+        let mut rng = Rng::seed_from(seed);
+        (0..m)
+            .map(|_| {
+                let g = Mat::randn(d, d, &mut rng);
+                let mut a = g.t_matmul(&g);
+                a.symmetrize();
+                a
+            })
+            .collect()
+    }
+
+    #[test]
+    fn rust_backend_products() {
+        let ls = locals(4, 8, 131);
+        let be = RustBackend::new(&ls);
+        let mut rng = Rng::seed_from(132);
+        let w = Mat::randn(8, 3, &mut rng);
+        let got = be.local_product(2, &w);
+        assert!((&got - &ls[2].matmul(&w)).fro_norm() < 1e-14);
+    }
+
+    #[test]
+    fn parallel_matches_sequential() {
+        let ls = locals(7, 10, 133);
+        let seq = RustBackend::new(&ls);
+        let par = ParallelBackend::new(&ls, 3);
+        let mut rng = Rng::seed_from(134);
+        let stack = AgentStack::new((0..7).map(|_| Mat::randn(10, 2, &mut rng)).collect());
+        let a = seq.local_products(&stack);
+        let b = par.local_products(&stack);
+        assert!(a.distance(&b) < 1e-14);
+    }
+
+    #[test]
+    fn parallel_more_threads_than_agents() {
+        let ls = locals(2, 5, 135);
+        let par = ParallelBackend::new(&ls, 16);
+        let mut rng = Rng::seed_from(136);
+        let stack = AgentStack::new((0..2).map(|_| Mat::randn(5, 2, &mut rng)).collect());
+        let out = par.local_products(&stack);
+        assert_eq!(out.m(), 2);
+    }
+
+    #[test]
+    fn zero_threads_defaults() {
+        let ls = locals(3, 4, 137);
+        let par = ParallelBackend::new(&ls, 0);
+        assert!(par.threads >= 1);
+    }
+}

@@ -1,0 +1,122 @@
+//! CPCA — the centralized power-method reference.
+//!
+//! The paper's figures include centralized PCA as the convergence-rate
+//! yardstick: DeEPCA with sufficient K should match its linear rate.
+//! `W ← QR(A·W)` on the aggregate, with per-iteration tan θ records.
+
+use super::problem::Problem;
+use crate::linalg::angles::tan_theta;
+use crate::linalg::qr::orth;
+use crate::linalg::Mat;
+use std::time::Instant;
+
+/// Output of a centralized run.
+#[derive(Clone, Debug)]
+pub struct CentralizedOutput {
+    /// Final orthonormal iterate.
+    pub w: Mat,
+    /// tan θ_k(U, Wᵗ) per iteration.
+    pub tan_trace: Vec<f64>,
+    /// Iterations executed.
+    pub iters: usize,
+    /// Wall time.
+    pub elapsed_secs: f64,
+}
+
+/// Run `iters` power iterations from the seed-`init_seed` start
+/// (same initializer as the decentralized runs for fair comparison).
+pub fn run(problem: &Problem, iters: usize, init_seed: u64) -> CentralizedOutput {
+    run_with_tol(problem, iters, init_seed, 0.0)
+}
+
+/// As [`run`], stopping early once tan θ ≤ tol (if tol > 0).
+pub fn run_with_tol(
+    problem: &Problem,
+    iters: usize,
+    init_seed: u64,
+    tol: f64,
+) -> CentralizedOutput {
+    let u = problem.u();
+    let mut w = problem.initial_w(init_seed);
+    let t0 = Instant::now();
+    let mut tan_trace = Vec::with_capacity(iters);
+    let mut done = 0;
+    for t in 0..iters {
+        w = orth(&problem.aggregate.matmul(&w));
+        let tan = tan_theta(&u, &w);
+        tan_trace.push(tan);
+        done = t + 1;
+        if tol > 0.0 && tan <= tol {
+            break;
+        }
+    }
+    CentralizedOutput { w, tan_trace, iters: done, elapsed_secs: t0.elapsed().as_secs_f64() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::util::rng::Rng;
+
+    fn problem(seed: u64) -> Problem {
+        let ds = synthetic::spiked_covariance(
+            500,
+            14,
+            &[10.0, 7.0, 4.0],
+            0.2,
+            &mut Rng::seed_from(seed),
+        );
+        Problem::from_dataset(&ds, 5, 2)
+    }
+
+    #[test]
+    fn converges_to_truth() {
+        let p = problem(181);
+        let out = run(&p, 150, 2021);
+        assert!(
+            *out.tan_trace.last().unwrap() < 1e-10,
+            "tanθ={}",
+            out.tan_trace.last().unwrap()
+        );
+        // Output is orthonormal.
+        let g = out.w.t_matmul(&out.w);
+        assert!((&g - &Mat::eye(2)).fro_norm() < 1e-10);
+    }
+
+    #[test]
+    fn monotone_decay_after_burnin() {
+        let p = problem(182);
+        let out = run(&p, 80, 7);
+        for win in out.tan_trace[5..].windows(2) {
+            assert!(
+                win[1] <= win[0] * 1.01 + 1e-14,
+                "tanθ increased: {} -> {}",
+                win[0],
+                win[1]
+            );
+        }
+    }
+
+    #[test]
+    fn rate_close_to_eigen_ratio() {
+        let p = problem(183);
+        let out = run(&p, 60, 11);
+        let lam_ratio = p.lambda_k1() / p.lambda_k();
+        let e10 = out.tan_trace[10];
+        let e40 = out.tan_trace[40];
+        let empirical = (e40 / e10).powf(1.0 / 30.0);
+        assert!(
+            (empirical - lam_ratio).abs() < 0.1,
+            "rate {empirical} vs λ-ratio {lam_ratio}"
+        );
+    }
+
+    #[test]
+    fn tol_stops_early() {
+        let p = problem(184);
+        let out = run_with_tol(&p, 500, 3, 1e-6);
+        assert!(out.iters < 500);
+        assert!(*out.tan_trace.last().unwrap() <= 1e-6);
+    }
+}

@@ -1,0 +1,304 @@
+//! DePCA — the Eqn. 3.4 baseline (Wai et al. 2017 style).
+//!
+//! The conventional decentralized power method: each iteration runs the
+//! local power step, then multi-consensus on the *iterate itself* (no
+//! tracking variable), then QR:
+//!
+//! ```text
+//! P_j ← A_j W_j ;  P ← FastMix(P, K_t) ;  W_j ← QR(P_j)
+//! ```
+//!
+//! Without tracking, the consensus residue is proportional to the
+//! *heterogeneity* of the `A_j W_j` products — which does not shrink as
+//! the iterates converge — so a fixed K leaves an error floor ~ρ(K)
+//! (paper Figures 1–2, middle series), and reaching precision ε needs
+//! `K_t = O(log 1/ε)` rounds per iteration (Eqn. 3.12). Both schedules
+//! are implemented so the figure benches can show the contrast.
+
+use super::backend::{PowerBackend, RustBackend};
+use super::metrics::{RunOutput, RunRecorder};
+use super::problem::Problem;
+use super::sign_adjust::sign_adjust;
+use crate::consensus::comm::{Communicator, DenseComm};
+use crate::consensus::metrics::CommStats;
+use crate::consensus::AgentStack;
+use crate::graph::topology::Topology;
+use crate::linalg::qr::orth;
+use std::time::Instant;
+
+/// Consensus-rounds schedule for DePCA.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum KPolicy {
+    /// Constant K every iteration (plateaus at a K-dependent floor).
+    Fixed(usize),
+    /// `K_t = base + ceil(slope·t)` — the growing schedule the prior art
+    /// needs to keep converging (paper Remark 2 / Eqn. 3.12).
+    Increasing {
+        /// Rounds at t = 0.
+        base: usize,
+        /// Extra rounds per iteration.
+        slope: f64,
+    },
+}
+
+impl KPolicy {
+    /// Rounds for iteration t.
+    pub fn rounds(&self, t: usize) -> usize {
+        match *self {
+            KPolicy::Fixed(k) => k,
+            KPolicy::Increasing { base, slope } => base + (slope * t as f64).ceil() as usize,
+        }
+    }
+}
+
+/// DePCA hyperparameters.
+#[derive(Clone, Debug)]
+pub struct DepcaConfig {
+    /// Consensus schedule.
+    pub k_policy: KPolicy,
+    /// Maximum power iterations.
+    pub max_iters: usize,
+    /// Early stop on mean tan θ ≤ tol (0 disables).
+    pub tol: f64,
+    /// Seed for the shared `W⁰`.
+    pub init_seed: u64,
+    /// Sign-adjust the QR output against `W⁰` (kept on for parity with
+    /// DeEPCA so the consensus-error metric is sign-noise free).
+    pub sign_adjust: bool,
+}
+
+impl Default for DepcaConfig {
+    fn default() -> Self {
+        DepcaConfig {
+            k_policy: KPolicy::Fixed(8),
+            max_iters: 100,
+            tol: 0.0,
+            init_seed: 2021,
+            sign_adjust: true,
+        }
+    }
+}
+
+/// Run DePCA with explicit backend and communicator.
+pub fn run_with(
+    problem: &Problem,
+    backend: &dyn PowerBackend,
+    comm: &dyn Communicator,
+    cfg: &DepcaConfig,
+    recorder: &mut RunRecorder,
+) -> RunOutput {
+    let m = problem.m();
+    assert_eq!(backend.m(), m);
+    assert_eq!(comm.m(), m);
+    let u = problem.u();
+    let w0 = problem.initial_w(cfg.init_seed);
+
+    let mut w = AgentStack::replicate(m, &w0);
+    let mut stats = CommStats::default();
+    let t0 = Instant::now();
+    let mut iters = 0;
+    let mut diverged = false;
+
+    for t in 0..cfg.max_iters {
+        // Local power step on the iterate itself (no tracking).
+        let mut p = backend.local_products(&w);
+        // Multi-consensus.
+        comm.fastmix(&mut p, cfg.k_policy.rounds(t), &mut stats);
+        // Local orthonormalization.
+        for j in 0..m {
+            let q = orth(p.slice(j));
+            *w.slice_mut(j) = if cfg.sign_adjust {
+                sign_adjust(&q, &w0)
+            } else {
+                q
+            };
+        }
+
+        iters = t + 1;
+        if !w.is_finite() {
+            diverged = true;
+            break;
+        }
+        if recorder.should_record(t) {
+            // DePCA has no tracked S; report the pre-QR consensus variable
+            // deviation as its s_deviation analogue (the paper's first
+            // column plots ‖S−S̄⊗1‖ for DeEPCA only).
+            recorder.record(t, &u, &w, Some(&p), &stats, t0.elapsed().as_secs_f64());
+        }
+        if cfg.tol > 0.0 && recorder.final_tan_theta() <= cfg.tol {
+            break;
+        }
+    }
+
+    RunOutput {
+        iters,
+        final_tan_theta: recorder.final_tan_theta(),
+        comm: stats,
+        final_w: w,
+        elapsed_secs: t0.elapsed().as_secs_f64(),
+        diverged,
+    }
+}
+
+/// Convenience runner with Rust backend + dense FastMix.
+pub fn run_dense(
+    problem: &Problem,
+    topo: &Topology,
+    cfg: &DepcaConfig,
+    recorder: &mut RunRecorder,
+) -> RunOutput {
+    let backend = RustBackend::new(&problem.locals);
+    let comm = DenseComm::from_topology(topo);
+    run_with(problem, &backend, &comm, cfg, recorder)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::deepca::{self, DeepcaConfig};
+    use crate::data::synthetic;
+    use crate::util::rng::Rng;
+
+    fn heterogeneous_problem(seed: u64) -> (Problem, Topology) {
+        // Block-drifted binary data → heterogeneous A_j, the regime where
+        // DePCA's floor shows clearly.
+        let ds = synthetic::sparse_binary(
+            &synthetic::SparseBinaryParams {
+                rows: 1600,
+                dim: 40,
+                density: 0.15,
+                popularity_exponent: 0.9,
+                blocks: 8,
+                drift: 0.8,
+            },
+            &mut Rng::seed_from(seed),
+        );
+        let p = Problem::from_dataset(&ds, 8, 2);
+        let topo = Topology::erdos_renyi(8, 0.5, &mut Rng::seed_from(seed + 1));
+        (p, topo)
+    }
+
+    #[test]
+    fn k_policy_schedules() {
+        assert_eq!(KPolicy::Fixed(5).rounds(0), 5);
+        assert_eq!(KPolicy::Fixed(5).rounds(99), 5);
+        let inc = KPolicy::Increasing { base: 3, slope: 0.5 };
+        assert_eq!(inc.rounds(0), 3);
+        assert_eq!(inc.rounds(4), 5);
+        assert!(inc.rounds(40) > inc.rounds(4));
+    }
+
+    #[test]
+    fn fixed_k_plateaus_above_deepca() {
+        let (p, topo) = heterogeneous_problem(171);
+        let iters = 80;
+
+        let mut rec_depca = RunRecorder::every_iteration();
+        let out_depca = run_dense(
+            &p,
+            &topo,
+            &DepcaConfig {
+                k_policy: KPolicy::Fixed(6),
+                max_iters: iters,
+                ..Default::default()
+            },
+            &mut rec_depca,
+        );
+
+        let mut rec_deepca = RunRecorder::every_iteration();
+        let out_deepca = deepca::run_dense(
+            &p,
+            &topo,
+            &DeepcaConfig { consensus_rounds: 6, max_iters: iters, ..Default::default() },
+            &mut rec_deepca,
+        );
+
+        assert!(
+            out_deepca.final_tan_theta < 1e-3 * out_depca.final_tan_theta.max(1e-12),
+            "DeEPCA {:.3e} should beat DePCA {:.3e} by orders of magnitude",
+            out_deepca.final_tan_theta,
+            out_depca.final_tan_theta
+        );
+        // And DePCA's floor is genuinely a plateau: late iterations barely move.
+        let mid = rec_depca.records[iters / 2].mean_tan_theta;
+        let last = rec_depca.records.last().unwrap().mean_tan_theta;
+        assert!(
+            last > 0.2 * mid,
+            "DePCA kept converging unexpectedly: mid {mid:.3e} last {last:.3e}"
+        );
+    }
+
+    #[test]
+    fn increasing_k_keeps_converging() {
+        let (p, topo) = heterogeneous_problem(172);
+        let mut rec_fix = RunRecorder::every_iteration();
+        let out_fix = run_dense(
+            &p,
+            &topo,
+            &DepcaConfig {
+                k_policy: KPolicy::Fixed(4),
+                max_iters: 60,
+                ..Default::default()
+            },
+            &mut rec_fix,
+        );
+        let mut rec_inc = RunRecorder::every_iteration();
+        let out_inc = run_dense(
+            &p,
+            &topo,
+            &DepcaConfig {
+                k_policy: KPolicy::Increasing { base: 4, slope: 1.0 },
+                max_iters: 60,
+                ..Default::default()
+            },
+            &mut rec_inc,
+        );
+        assert!(
+            out_inc.final_tan_theta < 1e-2 * out_fix.final_tan_theta.max(1e-12),
+            "increasing K {:.3e} vs fixed {:.3e}",
+            out_inc.final_tan_theta,
+            out_fix.final_tan_theta
+        );
+        // But at a much higher communication bill per ε — the paper's point.
+        assert!(out_inc.comm.rounds > out_fix.comm.rounds);
+    }
+
+    #[test]
+    fn depca_converges_on_homogeneous_data() {
+        // With identical A_j there is no heterogeneity penalty; DePCA works.
+        let mut rng = Rng::seed_from(173);
+        let ds = synthetic::spiked_covariance(600, 10, &[8.0, 4.0], 0.1, &mut rng);
+        let full = ds.features.t_matmul(&ds.features).scaled(1.0 / 600.0);
+        let mut a = full;
+        a.symmetrize();
+        let p = Problem::new(vec![a; 6], 2, "homogeneous");
+        let topo = Topology::ring(6);
+        let mut rec = RunRecorder::every_iteration();
+        let out = run_dense(
+            &p,
+            &topo,
+            &DepcaConfig { k_policy: KPolicy::Fixed(5), max_iters: 120, ..Default::default() },
+            &mut rec,
+        );
+        assert!(out.final_tan_theta < 1e-8, "tanθ={}", out.final_tan_theta);
+    }
+
+    #[test]
+    fn comm_accounting_with_increasing_schedule() {
+        let (p, topo) = heterogeneous_problem(174);
+        let mut rec = RunRecorder::every_iteration();
+        let out = run_dense(
+            &p,
+            &topo,
+            &DepcaConfig {
+                k_policy: KPolicy::Increasing { base: 2, slope: 1.0 },
+                max_iters: 5,
+                ..Default::default()
+            },
+            &mut rec,
+        );
+        // K_t = 2+ceil(t): 2,3,4,5,6 → 20 rounds.
+        assert_eq!(out.comm.rounds, 20);
+        assert_eq!(out.comm.mixes, 5);
+    }
+}

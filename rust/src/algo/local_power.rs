@@ -1,0 +1,114 @@
+//! Local-only power method — the no-communication strawman.
+//!
+//! Each agent power-iterates on its own `A_j` and never talks. §1 of the
+//! paper observes this converges to the principal components *of the
+//! local matrix*, not of the aggregate — the heterogeneity that forces
+//! multi-consensus in the first place. We implement it to (a) quantify
+//! that gap in the ablation bench and (b) measure the heterogeneity
+//! floor `(1/m)Σ tanθ_k(U, U_j)` of a given partition.
+
+use super::problem::Problem;
+use crate::consensus::AgentStack;
+use crate::linalg::angles::tan_theta;
+use crate::linalg::qr::orth;
+
+/// Output of the local-only baseline.
+#[derive(Clone, Debug)]
+pub struct LocalPowerOutput {
+    /// Final per-agent iterates (each ≈ top-k of its own A_j).
+    pub final_w: AgentStack,
+    /// Mean tan θ_k(U, W_j) vs the *global* U per iteration.
+    pub mean_tan_trace: Vec<f64>,
+}
+
+/// Run `iters` purely-local power iterations.
+pub fn run(problem: &Problem, iters: usize, init_seed: u64) -> LocalPowerOutput {
+    let u = problem.u();
+    let w0 = problem.initial_w(init_seed);
+    let m = problem.m();
+    let mut w = AgentStack::replicate(m, &w0);
+    let mut mean_tan_trace = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        for j in 0..m {
+            let p = problem.locals[j].matmul(w.slice(j));
+            *w.slice_mut(j) = orth(&p);
+        }
+        let mean = w.iter().map(|wj| tan_theta(&u, wj)).sum::<f64>() / m as f64;
+        mean_tan_trace.push(mean);
+    }
+    LocalPowerOutput { final_w: w, mean_tan_trace }
+}
+
+/// The heterogeneity floor of a partition: where local-only power
+/// iterations level off (mean angle between local and global top-k).
+pub fn heterogeneity_floor(problem: &Problem, iters: usize) -> f64 {
+    let out = run(problem, iters, 2021);
+    *out.mean_tan_trace.last().unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn converges_to_local_not_global() {
+        // Strong block drift: local PCs differ from global PCs.
+        let ds = synthetic::sparse_binary(
+            &synthetic::SparseBinaryParams {
+                rows: 1200,
+                dim: 30,
+                density: 0.15,
+                popularity_exponent: 0.9,
+                blocks: 6,
+                drift: 0.9,
+            },
+            &mut Rng::seed_from(191),
+        );
+        let p = Problem::from_dataset(&ds, 6, 2);
+        let out = run(&p, 60, 2021);
+        let floor = *out.mean_tan_trace.last().unwrap();
+        assert!(
+            floor > 1e-2,
+            "local-only should NOT reach the global subspace, floor={floor}"
+        );
+        // And it stalls rather than keeps improving.
+        let mid = out.mean_tan_trace[30];
+        assert!(floor > 0.3 * mid, "unexpected continued convergence");
+    }
+
+    #[test]
+    fn homogeneous_data_has_no_floor() {
+        let mut rng = Rng::seed_from(192);
+        let ds = synthetic::spiked_covariance(600, 10, &[9.0, 5.0], 0.1, &mut rng);
+        let full = ds.features.t_matmul(&ds.features).scaled(1.0 / 600.0);
+        let mut a = full;
+        a.symmetrize();
+        let p = Problem::new(vec![a; 4], 2, "homog");
+        let floor = heterogeneity_floor(&p, 100);
+        assert!(floor < 1e-9, "identical locals must converge, floor={floor}");
+    }
+
+    #[test]
+    fn floor_increases_with_drift() {
+        let mk = |drift: f64| {
+            let ds = synthetic::sparse_binary(
+                &synthetic::SparseBinaryParams {
+                    rows: 1200,
+                    dim: 24,
+                    density: 0.2,
+                    popularity_exponent: 0.8,
+                    blocks: 4,
+                    drift,
+                },
+                &mut Rng::seed_from(193),
+            );
+            let p = Problem::from_dataset(&ds, 4, 1);
+            heterogeneity_floor(&p, 50)
+        };
+        let low = mk(0.1);
+        let high = mk(0.9);
+        assert!(high > low, "floor should grow with drift: {low} vs {high}");
+    }
+}

@@ -1,0 +1,196 @@
+//! Per-iteration convergence records — the Figure 1–2 panels.
+//!
+//! Each power iteration logs the three quantities the paper plots:
+//! `‖Sᵗ − S̄ᵗ⊗1‖` (tracked-variable consensus error),
+//! `‖Wᵗ − W̄ᵗ⊗1‖` (iterate consensus error), and
+//! `(1/m) Σ_j tan θ_k(U, W_jᵗ)` (mean subspace error), plus cumulative
+//! communication so error-vs-communication curves drop out directly.
+
+use crate::consensus::metrics::CommStats;
+use crate::consensus::AgentStack;
+use crate::linalg::angles::{tan_theta, tan_theta_orthonormal};
+use crate::linalg::Mat;
+
+/// One row of a convergence trace.
+#[derive(Clone, Debug)]
+pub struct IterationRecord {
+    /// Power iteration index t (0-based).
+    pub iter: usize,
+    /// Cumulative gossip rounds after this iteration.
+    pub comm_rounds: u64,
+    /// `‖Sᵗ − S̄ᵗ⊗1‖` (0 for algorithms without a tracked variable).
+    pub s_deviation: f64,
+    /// `‖Wᵗ − W̄ᵗ⊗1‖`.
+    pub w_deviation: f64,
+    /// `(1/m) Σ_j tan θ_k(U, W_jᵗ)`.
+    pub mean_tan_theta: f64,
+    /// `tan θ_k(U, S̄ᵗ)` — the Lemma-1 mean-variable error.
+    pub tan_theta_mean: f64,
+    /// Wall-clock seconds spent inside the algorithm so far.
+    pub elapsed_secs: f64,
+}
+
+/// Collects [`IterationRecord`]s during a run.
+#[derive(Clone, Debug, Default)]
+pub struct RunRecorder {
+    /// The trace.
+    pub records: Vec<IterationRecord>,
+    /// Skip the (relatively expensive) ground-truth metrics every
+    /// `stride` iterations (1 = record everything).
+    pub stride: usize,
+}
+
+impl RunRecorder {
+    /// Recorder that logs every iteration.
+    pub fn every_iteration() -> Self {
+        RunRecorder { records: Vec::new(), stride: 1 }
+    }
+
+    /// Recorder that logs every `stride`-th iteration.
+    pub fn with_stride(stride: usize) -> Self {
+        RunRecorder { records: Vec::new(), stride: stride.max(1) }
+    }
+
+    /// Whether iteration `t` should be recorded.
+    pub fn should_record(&self, t: usize) -> bool {
+        let stride = self.stride.max(1);
+        t % stride == 0
+    }
+
+    /// Record one iteration given the algorithm state.
+    #[allow(clippy::too_many_arguments)]
+    pub fn record(
+        &mut self,
+        iter: usize,
+        u: &Mat,
+        ws: &AgentStack,
+        ss: Option<&AgentStack>,
+        comm: &CommStats,
+        elapsed_secs: f64,
+    ) {
+        let m = ws.m() as f64;
+        // W iterates are orthonormal by construction — skip the QR.
+        let mean_tan_theta =
+            ws.iter().map(|w| tan_theta_orthonormal(u, w)).sum::<f64>() / m;
+        let (s_deviation, tan_theta_mean) = match ss {
+            Some(s) => (s.deviation_from_mean(), tan_theta(u, &s.mean())),
+            None => (0.0, tan_theta(u, &ws.mean())),
+        };
+        self.records.push(IterationRecord {
+            iter,
+            comm_rounds: comm.rounds,
+            s_deviation,
+            w_deviation: ws.deviation_from_mean(),
+            mean_tan_theta,
+            tan_theta_mean,
+            elapsed_secs,
+        });
+    }
+
+    /// Last recorded mean tan θ (∞ if nothing recorded).
+    pub fn final_tan_theta(&self) -> f64 {
+        self.records
+            .last()
+            .map(|r| r.mean_tan_theta)
+            .unwrap_or(f64::INFINITY)
+    }
+
+    /// First iteration whose mean tanθ drops below `eps` and the
+    /// cumulative communication at that point, if reached.
+    pub fn first_below(&self, eps: f64) -> Option<(usize, u64)> {
+        self.records
+            .iter()
+            .find(|r| r.mean_tan_theta <= eps)
+            .map(|r| (r.iter, r.comm_rounds))
+    }
+
+    /// Render the trace as CSV (matching the figure panels).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "iter,comm_rounds,s_deviation,w_deviation,mean_tan_theta,tan_theta_mean,elapsed_secs\n",
+        );
+        for r in &self.records {
+            out.push_str(&format!(
+                "{},{},{:.6e},{:.6e},{:.6e},{:.6e},{:.6e}\n",
+                r.iter,
+                r.comm_rounds,
+                r.s_deviation,
+                r.w_deviation,
+                r.mean_tan_theta,
+                r.tan_theta_mean,
+                r.elapsed_secs
+            ));
+        }
+        out
+    }
+}
+
+/// Final output of a decentralized run.
+#[derive(Clone, Debug)]
+pub struct RunOutput {
+    /// Power iterations executed.
+    pub iters: usize,
+    /// Mean tan θ_k(U, W_j) at exit.
+    pub final_tan_theta: f64,
+    /// Communication totals.
+    pub comm: CommStats,
+    /// Final per-agent iterates.
+    pub final_w: AgentStack,
+    /// Wall time inside the algorithm.
+    pub elapsed_secs: f64,
+    /// True if the run tripped the divergence guard (non-finite iterates).
+    pub diverged: bool,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn recorder_stride() {
+        let rec = RunRecorder::with_stride(3);
+        assert!(rec.should_record(0));
+        assert!(!rec.should_record(1));
+        assert!(rec.should_record(3));
+    }
+
+    #[test]
+    fn record_and_csv() {
+        let mut rng = Rng::seed_from(151);
+        let u = Mat::rand_orthonormal(8, 2, &mut rng);
+        let ws = AgentStack::replicate(3, &u);
+        let mut rec = RunRecorder::every_iteration();
+        let comm = CommStats::default();
+        rec.record(0, &u, &ws, None, &comm, 0.01);
+        assert_eq!(rec.records.len(), 1);
+        assert!(rec.final_tan_theta() < 1e-10);
+        let csv = rec.to_csv();
+        assert!(csv.starts_with("iter,"));
+        assert_eq!(csv.lines().count(), 2);
+    }
+
+    #[test]
+    fn first_below_finds_crossing() {
+        let mut rec = RunRecorder::every_iteration();
+        for (i, tan) in [1.0f64, 0.1, 0.01, 0.001].iter().enumerate() {
+            rec.records.push(IterationRecord {
+                iter: i,
+                comm_rounds: (i as u64 + 1) * 8,
+                s_deviation: 0.0,
+                w_deviation: 0.0,
+                mean_tan_theta: *tan,
+                tan_theta_mean: *tan,
+                elapsed_secs: 0.0,
+            });
+        }
+        assert_eq!(rec.first_below(0.05), Some((2, 24)));
+        assert_eq!(rec.first_below(1e-9), None);
+    }
+
+    #[test]
+    fn empty_recorder_infinite() {
+        let rec = RunRecorder::default();
+        assert!(rec.final_tan_theta().is_infinite());
+    }
+}

@@ -1,0 +1,24 @@
+//! The paper's algorithms and baselines.
+//!
+//! - [`problem`] — the decentralized PCA problem instance: local Grams
+//!   `A_j`, aggregate `A`, target rank k, exact ground truth `U`.
+//! - [`backend`] — where the per-agent product `A_j·W` runs: pure Rust
+//!   ([`backend::RustBackend`]), thread-parallel, or PJRT artifacts
+//!   compiled from the JAX/Pallas layers ([`crate::runtime`]).
+//! - [`sign_adjust`] — paper Algorithm 2.
+//! - [`deepca`] — paper Algorithm 1 (subspace tracking + FastMix).
+//! - [`depca`] — the Eqn. 3.4 baseline (local power + multi-consensus),
+//!   with fixed or increasing consensus schedules.
+//! - [`local_power`] — no-communication strawman (converges to local PCs).
+//! - [`centralized`] — CPCA reference (exact power method on `A`).
+//! - [`metrics`] — per-iteration records for the Figure 1–2 panels.
+
+pub mod problem;
+pub mod backend;
+pub mod sign_adjust;
+pub mod deepca;
+pub mod depca;
+pub mod local_power;
+pub mod centralized;
+pub mod rayleigh;
+pub mod metrics;

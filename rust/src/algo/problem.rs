@@ -1,0 +1,193 @@
+//! The decentralized PCA problem instance.
+
+use crate::data::partition::{partition_gram, GramScaling, PartitionedGram};
+use crate::data::Dataset;
+use crate::linalg::eig::{eig_sym, EigSym};
+use crate::linalg::Mat;
+use crate::util::rng::Rng;
+
+/// A fully-specified instance: per-agent matrices, aggregate, rank, and
+/// exact ground truth (for metrics only — no algorithm reads `truth`).
+#[derive(Clone, Debug)]
+pub struct Problem {
+    /// Local symmetric matrices `A_j` (PSD in the paper's main setting).
+    pub locals: Vec<Mat>,
+    /// Aggregate `A = (1/m) Σ_j A_j`.
+    pub aggregate: Mat,
+    /// Target subspace dimension k.
+    pub k: usize,
+    /// Exact eigendecomposition of the aggregate (ground truth oracle).
+    pub truth: EigSym,
+    /// Spectral bound `L ≥ max_j ‖A_j‖₂`.
+    pub spectral_bound: f64,
+    /// Provenance for reports.
+    pub name: String,
+}
+
+impl Problem {
+    /// Build from per-agent matrices.
+    pub fn new(locals: Vec<Mat>, k: usize, name: &str) -> Self {
+        assert!(!locals.is_empty());
+        let d = locals[0].rows();
+        assert!(k >= 1 && k < d, "need 1 <= k < d");
+        let m = locals.len();
+        let mut aggregate = Mat::zeros(d, d);
+        for a in &locals {
+            assert_eq!(a.shape(), (d, d));
+            aggregate.axpy(1.0 / m as f64, a);
+        }
+        aggregate.symmetrize();
+        let truth = eig_sym(&aggregate);
+        assert!(
+            truth.values[k - 1] > truth.values[k] + 1e-12,
+            "no eigengap at k={k}: λ_k={} λ_k+1={}",
+            truth.values[k - 1],
+            truth.values[k]
+        );
+        let spectral_bound = locals
+            .iter()
+            .map(|a| crate::linalg::norms::spectral_norm_power(a, 60))
+            .fold(0.0f64, f64::max);
+        Problem { locals, aggregate, k, truth, spectral_bound, name: name.to_string() }
+    }
+
+    /// Build from a partitioned Gram.
+    pub fn from_partition(p: PartitionedGram, k: usize, name: &str) -> Self {
+        // Reuse the already-computed aggregate/spectral bound.
+        let truth = eig_sym(&p.aggregate);
+        assert!(
+            truth.values[k - 1] > truth.values[k] + 1e-12,
+            "no eigengap at k={k}"
+        );
+        Problem {
+            locals: p.locals,
+            aggregate: p.aggregate,
+            k,
+            truth,
+            spectral_bound: p.spectral_bound,
+            name: name.to_string(),
+        }
+    }
+
+    /// Paper Eqn. 5.1 placement: split `ds` over `m` agents, rank k.
+    pub fn from_dataset(ds: &Dataset, m: usize, k: usize) -> Self {
+        let p = partition_gram(ds, m, GramScaling::PerRow);
+        Self::from_partition(p, k, &ds.name)
+    }
+
+    /// Number of agents m.
+    pub fn m(&self) -> usize {
+        self.locals.len()
+    }
+
+    /// Ambient dimension d.
+    pub fn dim(&self) -> usize {
+        self.aggregate.rows()
+    }
+
+    /// Ground-truth top-k subspace U (d×k, orthonormal).
+    pub fn u(&self) -> Mat {
+        self.truth.top_k(self.k)
+    }
+
+    /// λ_k of the aggregate.
+    pub fn lambda_k(&self) -> f64 {
+        self.truth.values[self.k - 1]
+    }
+
+    /// λ_{k+1} of the aggregate.
+    pub fn lambda_k1(&self) -> f64 {
+        self.truth.values[self.k]
+    }
+
+    /// The paper's convergence factor γ = 1 − (λ_k − λ_{k+1})/(2λ_k).
+    pub fn gamma(&self) -> f64 {
+        1.0 - (self.lambda_k() - self.lambda_k1()) / (2.0 * self.lambda_k())
+    }
+
+    /// Remark-2 heterogeneity `L²/(λ_k λ_{k+1})`.
+    pub fn heterogeneity(&self) -> f64 {
+        self.spectral_bound * self.spectral_bound / (self.lambda_k() * self.lambda_k1())
+    }
+
+    /// Shared initial iterate `W⁰`: random orthonormal d×k (all agents
+    /// start identical, per Algorithm 1's initialization).
+    pub fn initial_w(&self, seed: u64) -> Mat {
+        Mat::rand_orthonormal(self.dim(), self.k, &mut Rng::seed_from(seed))
+    }
+
+    /// Theorem-1 iteration bound T(ε) (up to its constants).
+    pub fn iteration_bound(&self, eps: f64, tan0: f64) -> f64 {
+        let gap = (self.lambda_k() - self.lambda_k1()) / self.lambda_k();
+        let a = (4.0 * tan0 / eps).ln();
+        let b = (4.0 * (self.lambda_k() + 2.0 * self.spectral_bound) * tan0
+            / ((self.m() as f64).sqrt() * (self.lambda_k() - self.lambda_k1()) * eps))
+            .ln();
+        2.0 / gap * a.max(b).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    fn problem() -> Problem {
+        let ds = synthetic::spiked_covariance(240, 12, &[10.0, 6.0, 3.0], 0.2, &mut Rng::seed_from(121));
+        Problem::from_dataset(&ds, 8, 2)
+    }
+
+    #[test]
+    fn shapes_and_counts() {
+        let p = problem();
+        assert_eq!(p.m(), 8);
+        assert_eq!(p.dim(), 12);
+        assert_eq!(p.u().shape(), (12, 2));
+    }
+
+    #[test]
+    fn eigen_order() {
+        let p = problem();
+        assert!(p.lambda_k() > p.lambda_k1());
+        assert!(p.gamma() > 0.0 && p.gamma() < 1.0);
+    }
+
+    #[test]
+    fn u_is_orthonormal_and_invariant() {
+        let p = problem();
+        let u = p.u();
+        let g = u.t_matmul(&u);
+        assert!((&g - &Mat::eye(2)).fro_norm() < 1e-10);
+        // A·U ≈ U·Λ_k: U spans an invariant subspace.
+        let au = p.aggregate.matmul(&u);
+        let lam = Mat::diag(&[p.truth.values[0], p.truth.values[1]]);
+        let ul = u.matmul(&lam);
+        assert!((&au - &ul).fro_norm() < 1e-8 * p.aggregate.fro_norm());
+    }
+
+    #[test]
+    fn initial_w_deterministic() {
+        let p = problem();
+        let a = p.initial_w(5);
+        let b = p.initial_w(5);
+        assert_eq!(a.data(), b.data());
+        let g = a.t_matmul(&a);
+        assert!((&g - &Mat::eye(2)).fro_norm() < 1e-10);
+    }
+
+    #[test]
+    fn iteration_bound_scales_with_eps() {
+        let p = problem();
+        let t1 = p.iteration_bound(1e-3, 1.0);
+        let t2 = p.iteration_bound(1e-9, 1.0);
+        assert!(t2 > t1, "tighter ε needs more iterations");
+    }
+
+    #[test]
+    #[should_panic(expected = "eigengap")]
+    fn rejects_gapless_k() {
+        // Two equal top eigenvalues → no gap at k=1.
+        let locals = vec![Mat::diag(&[2.0, 2.0, 1.0]); 3];
+        let _ = Problem::new(locals, 1, "gapless");
+    }
+}

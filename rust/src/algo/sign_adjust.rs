@@ -1,0 +1,111 @@
+//! SignAdjust — paper Algorithm 2.
+//!
+//! Column signs of an orthonormal basis are arbitrary: a power iteration
+//! can flip them between steps without changing the subspace, but a flip
+//! wrecks both the cross-agent average `W̄ = (1/m)ΣW_j` and the tracking
+//! difference `A_j(W^t − W^{t−1})`. Algorithm 2 pins every column to the
+//! half-space of the corresponding column of the shared `W⁰`: flip
+//! column i iff `⟨Wᵗ(:,i), W⁰(:,i)⟩ < 0`.
+
+use crate::linalg::Mat;
+
+/// Flip columns of `w` whose inner product with the same column of
+/// `reference` is negative. Returns the adjusted matrix.
+pub fn sign_adjust(w: &Mat, reference: &Mat) -> Mat {
+    assert_eq!(w.shape(), reference.shape(), "SignAdjust shape mismatch");
+    let (d, k) = w.shape();
+    let mut out = w.clone();
+    for i in 0..k {
+        let mut dot = 0.0;
+        for r in 0..d {
+            dot += w[(r, i)] * reference[(r, i)];
+        }
+        if dot < 0.0 {
+            for r in 0..d {
+                out[(r, i)] = -out[(r, i)];
+            }
+        }
+    }
+    out
+}
+
+/// In-place variant.
+pub fn sign_adjust_inplace(w: &mut Mat, reference: &Mat) {
+    let adjusted = sign_adjust(w, reference);
+    *w = adjusted;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn aligned_input_unchanged() {
+        let mut rng = Rng::seed_from(141);
+        let w = Mat::rand_orthonormal(10, 3, &mut rng);
+        let out = sign_adjust(&w, &w);
+        assert_eq!(out.data(), w.data());
+    }
+
+    #[test]
+    fn flipped_column_restored() {
+        let mut rng = Rng::seed_from(142);
+        let w = Mat::rand_orthonormal(10, 3, &mut rng);
+        let mut flipped = w.clone();
+        let c1: Vec<f64> = w.col(1).iter().map(|v| -v).collect();
+        flipped.set_col(1, &c1);
+        let out = sign_adjust(&flipped, &w);
+        assert!((&out - &w).fro_norm() < 1e-15);
+    }
+
+    #[test]
+    fn idempotent() {
+        let mut rng = Rng::seed_from(143);
+        let w0 = Mat::rand_orthonormal(12, 4, &mut rng);
+        let w = Mat::rand_orthonormal(12, 4, &mut rng);
+        let once = sign_adjust(&w, &w0);
+        let twice = sign_adjust(&once, &w0);
+        assert_eq!(once.data(), twice.data());
+    }
+
+    #[test]
+    fn preserves_column_space() {
+        let mut rng = Rng::seed_from(144);
+        let w0 = Mat::rand_orthonormal(15, 3, &mut rng);
+        let w = Mat::rand_orthonormal(15, 3, &mut rng);
+        let out = sign_adjust(&w, &w0);
+        // Projectors identical.
+        let pw = w.matmul(&w.t());
+        let po = out.matmul(&out.t());
+        assert!((&pw - &po).fro_norm() < 1e-12);
+    }
+
+    #[test]
+    fn all_outputs_positively_aligned() {
+        let mut rng = Rng::seed_from(145);
+        let w0 = Mat::rand_orthonormal(20, 5, &mut rng);
+        let w = Mat::rand_orthonormal(20, 5, &mut rng);
+        let out = sign_adjust(&w, &w0);
+        for i in 0..5 {
+            let dot: f64 = out
+                .col(i)
+                .iter()
+                .zip(w0.col(i))
+                .map(|(a, b)| a * b)
+                .sum();
+            assert!(dot >= 0.0, "column {i} still misaligned");
+        }
+    }
+
+    #[test]
+    fn inplace_matches() {
+        let mut rng = Rng::seed_from(146);
+        let w0 = Mat::rand_orthonormal(8, 2, &mut rng);
+        let w = Mat::rand_orthonormal(8, 2, &mut rng);
+        let pure = sign_adjust(&w, &w0);
+        let mut wm = w.clone();
+        sign_adjust_inplace(&mut wm, &w0);
+        assert_eq!(pure.data(), wm.data());
+    }
+}

@@ -1,0 +1,130 @@
+//! Micro/macro benchmark harness (offline stand-in for `criterion`).
+//!
+//! `cargo bench` targets in `rust/benches/` use `harness = false` and
+//! drive this module: warmup, repeated timed runs, and a median/p10/p90
+//! report. Used both for the §Perf microbenchmarks and as the scaffolding
+//! around the figure-regeneration benches (where the "measurement" is the
+//! experiment output itself plus its wall time).
+
+use crate::util::format;
+use std::time::Instant;
+
+/// One benchmark's measured distribution (seconds).
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    /// Benchmark label.
+    pub name: String,
+    /// Sorted per-iteration seconds.
+    pub samples: Vec<f64>,
+}
+
+impl Measurement {
+    /// Percentile (0..=100) by nearest-rank.
+    pub fn percentile(&self, p: f64) -> f64 {
+        assert!(!self.samples.is_empty());
+        let idx = ((p / 100.0) * (self.samples.len() - 1) as f64).round() as usize;
+        self.samples[idx.min(self.samples.len() - 1)]
+    }
+
+    /// Median seconds.
+    pub fn median(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    /// Mean seconds.
+    pub fn mean(&self) -> f64 {
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    /// One-line report.
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} median {:>10}  p10 {:>10}  p90 {:>10}  (n={})",
+            self.name,
+            format::secs(self.median()),
+            format::secs(self.percentile(10.0)),
+            format::secs(self.percentile(90.0)),
+            self.samples.len()
+        )
+    }
+}
+
+/// Benchmark runner with warmup.
+pub struct Bench {
+    warmup: usize,
+    iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup: 2, iters: 10 }
+    }
+}
+
+impl Bench {
+    /// Custom warmup/iteration counts.
+    pub fn new(warmup: usize, iters: usize) -> Self {
+        assert!(iters > 0);
+        Bench { warmup, iters }
+    }
+
+    /// Time `f`, returning the measurement (and printing the report).
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Measurement {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let m = Measurement { name: name.to_string(), samples };
+        println!("{}", m.report());
+        m
+    }
+}
+
+/// Print a bench section header.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measurement_percentiles() {
+        let m = Measurement {
+            name: "t".into(),
+            samples: vec![1.0, 2.0, 3.0, 4.0, 5.0],
+        };
+        assert_eq!(m.median(), 3.0);
+        assert_eq!(m.percentile(0.0), 1.0);
+        assert_eq!(m.percentile(100.0), 5.0);
+        assert!((m.mean() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bench_runs_expected_iterations() {
+        let mut count = 0usize;
+        let b = Bench::new(1, 5);
+        let m = b.run("counter", || {
+            count += 1;
+            count
+        });
+        assert_eq!(count, 6); // 1 warmup + 5 timed
+        assert_eq!(m.samples.len(), 5);
+    }
+
+    #[test]
+    fn samples_sorted() {
+        let b = Bench::new(0, 8);
+        let m = b.run("noop", || 1 + 1);
+        for w in m.samples.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+    }
+}

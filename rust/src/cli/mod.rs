@@ -1,0 +1,141 @@
+//! Hand-rolled CLI argument parser (offline stand-in for `clap`).
+//!
+//! Grammar: `deepca <subcommand> [positionals] [--flag] [--key value|--key=value]`.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// First token (subcommand), if any.
+    pub command: Option<String>,
+    /// Remaining positional arguments.
+    pub positionals: Vec<String>,
+    /// `--key value` / `--key=value` options; bare `--flag` maps to "true".
+    pub options: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Result<Self> {
+        let mut out = Args::default();
+        let mut iter = tokens.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if body.is_empty() {
+                    bail!("bare `--` is not supported");
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|next| !next.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(body.to_string(), v);
+                } else {
+                    out.options.insert(body.to_string(), "true".to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(tok);
+            } else {
+                out.positionals.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Option as string with default.
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.options
+            .get(key)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    /// Option as usize with default.
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} `{v}`: expected an integer")),
+        }
+    }
+
+    /// Option as f64 with default.
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} `{v}`: expected a number")),
+        }
+    }
+
+    /// Bare-flag presence (or explicit true/false value).
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(
+            self.options.get(key).map(|s| s.as_str()),
+            Some("true") | Some("1") | Some("yes")
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_positionals() {
+        let a = parse("experiment fig1 extra");
+        assert_eq!(a.command.as_deref(), Some("experiment"));
+        assert_eq!(a.positionals, vec!["fig1", "extra"]);
+    }
+
+    #[test]
+    fn options_both_styles() {
+        let a = parse("run --k 5 --tol=1e-6 --verbose");
+        assert_eq!(a.usize_or("k", 0).unwrap(), 5);
+        assert!((a.f64_or("tol", 0.0).unwrap() - 1e-6).abs() < 1e-18);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn negative_number_values() {
+        // A value starting with '-' but not '--' is consumed as a value.
+        let a = parse("run --shift -3.5");
+        assert!((a.f64_or("shift", 0.0).unwrap() + 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("run");
+        assert_eq!(a.str_or("engine", "dense"), "dense");
+        assert_eq!(a.usize_or("iters", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        let a = parse("run --k notanum");
+        assert!(a.usize_or("k", 0).is_err());
+    }
+
+    #[test]
+    fn empty_is_ok() {
+        let a = parse("");
+        assert!(a.command.is_none());
+    }
+}

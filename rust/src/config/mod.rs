@@ -1,0 +1,183 @@
+//! Experiment configuration: a TOML-subset parser + typed configs.
+//!
+//! No `serde`/`toml` offline, so [`ConfigMap`] parses the subset the
+//! launcher needs: `key = value` lines, `[section]` headers (flattened to
+//! `section.key`), `#` comments, strings/numbers/bools. Typed accessors
+//! carry defaults so config files only state what they override.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Flat key → raw-string-value map with typed accessors.
+#[derive(Clone, Debug, Default)]
+pub struct ConfigMap {
+    entries: BTreeMap<String, String>,
+}
+
+impl ConfigMap {
+    /// Parse TOML-subset text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected `key = value`", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let val = v.trim().trim_matches('"').to_string();
+            if key.is_empty() {
+                bail!("line {}: empty key", lineno + 1);
+            }
+            entries.insert(key, val);
+        }
+        Ok(ConfigMap { entries })
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Insert/override a key programmatically (CLI overrides).
+    pub fn set(&mut self, key: &str, value: &str) {
+        self.entries.insert(key.to_string(), value.to_string());
+    }
+
+    /// Raw lookup.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.entries.get(key).map(|s| s.as_str())
+    }
+
+    /// String with default.
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// usize with default.
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("config `{key}` = `{v}`: not a usize")),
+        }
+    }
+
+    /// f64 with default.
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("config `{key}` = `{v}`: not a number")),
+        }
+    }
+
+    /// bool with default (`true/false/1/0/yes/no`).
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => match v.to_ascii_lowercase().as_str() {
+                "true" | "1" | "yes" => Ok(true),
+                "false" | "0" | "no" => Ok(false),
+                other => bail!("config `{key}` = `{other}`: not a bool"),
+            },
+        }
+    }
+
+    /// Comma-separated usize list with default.
+    pub fn usize_list_or(&self, key: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .with_context(|| format!("config `{key}`: bad element `{s}`"))
+                })
+                .collect(),
+        }
+    }
+
+    /// All keys (for validation / debugging).
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+name = "fig1"
+seed = 7
+
+[deepca]
+consensus_rounds = 8
+tol = 1e-9
+sign_adjust = true
+
+[sweep]
+ks = 1, 3, 5, 8
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = ConfigMap::parse(SAMPLE).unwrap();
+        assert_eq!(c.str_or("name", "x"), "fig1");
+        assert_eq!(c.usize_or("seed", 0).unwrap(), 7);
+        assert_eq!(c.usize_or("deepca.consensus_rounds", 0).unwrap(), 8);
+        assert!((c.f64_or("deepca.tol", 0.0).unwrap() - 1e-9).abs() < 1e-24);
+        assert!(c.bool_or("deepca.sign_adjust", false).unwrap());
+        assert_eq!(c.usize_list_or("sweep.ks", &[]).unwrap(), vec![1, 3, 5, 8]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let c = ConfigMap::parse("").unwrap();
+        assert_eq!(c.usize_or("missing", 42).unwrap(), 42);
+        assert_eq!(c.str_or("missing", "d"), "d");
+        assert!(!c.bool_or("missing", false).unwrap());
+        assert_eq!(c.usize_list_or("missing", &[1, 2]).unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn cli_override() {
+        let mut c = ConfigMap::parse(SAMPLE).unwrap();
+        c.set("deepca.consensus_rounds", "12");
+        assert_eq!(c.usize_or("deepca.consensus_rounds", 0).unwrap(), 12);
+    }
+
+    #[test]
+    fn bad_types_error() {
+        let c = ConfigMap::parse("x = notanumber").unwrap();
+        assert!(c.usize_or("x", 0).is_err());
+        assert!(c.f64_or("x", 0.0).is_err());
+        assert!(c.bool_or("x", false).is_err());
+    }
+
+    #[test]
+    fn bad_lines_error() {
+        assert!(ConfigMap::parse("just a line without equals").is_err());
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let c = ConfigMap::parse("# only a comment\n\n  \n").unwrap();
+        assert_eq!(c.keys().count(), 0);
+    }
+}

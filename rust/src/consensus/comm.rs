@@ -1,0 +1,299 @@
+//! Communication engines.
+//!
+//! Two interchangeable implementations of [`Communicator`]:
+//!
+//! - [`DenseComm`] — single-process: applies the gossip weight matrix
+//!   directly (exploiting its sparsity). Used by the experiment sweeps
+//!   where we want thousands of runs per minute.
+//! - [`ThreadedNetwork`] — a real message-passing runtime: one OS thread
+//!   per agent, one `std::sync::mpsc` channel per *directed edge*, every
+//!   payload serialized length counted. Each FastMix round is a genuine
+//!   neighbor exchange; nothing is shared between agents but channels.
+//!   This is the engine the end-to-end examples run on, and integration
+//!   tests assert it produces the same numbers as [`DenseComm`].
+//!
+//! Both run the identical Algorithm-3 recursion, so Proposition 1 applies
+//! to either.
+
+use super::fastmix::FastMix;
+use super::metrics::CommStats;
+use super::stack::AgentStack;
+use crate::graph::gossip::GossipMatrix;
+use crate::graph::topology::Topology;
+use crate::linalg::Mat;
+use std::sync::mpsc;
+
+/// Abstraction over "run K gossip rounds across the network".
+pub trait Communicator: Send + Sync {
+    /// Number of agents.
+    fn m(&self) -> usize;
+    /// The gossip matrix (for spectral quantities / reporting).
+    fn gossip(&self) -> &GossipMatrix;
+    /// In-place FastMix over the stack, accumulating stats.
+    fn fastmix(&self, stack: &mut AgentStack, rounds: usize, stats: &mut CommStats);
+}
+
+// --------------------------------------------------------------- DenseComm
+
+/// Single-process dense engine (fast path for sweeps).
+pub struct DenseComm {
+    fm: FastMix,
+}
+
+impl DenseComm {
+    /// Build from a topology using the paper's Laplacian weights.
+    pub fn from_topology(topo: &Topology) -> Self {
+        let g = GossipMatrix::from_laplacian(topo);
+        DenseComm { fm: FastMix::new(g, topo.num_edges()) }
+    }
+
+    /// Build from an explicit gossip matrix (edges for accounting).
+    pub fn new(gossip: GossipMatrix, edges: usize) -> Self {
+        DenseComm { fm: FastMix::new(gossip, edges) }
+    }
+}
+
+impl Communicator for DenseComm {
+    fn m(&self) -> usize {
+        self.fm.gossip().m()
+    }
+    fn gossip(&self) -> &GossipMatrix {
+        self.fm.gossip()
+    }
+    fn fastmix(&self, stack: &mut AgentStack, rounds: usize, stats: &mut CommStats) {
+        self.fm.mix(stack, rounds, stats);
+    }
+}
+
+// --------------------------------------------------------- ThreadedNetwork
+
+/// Fault injection: agent `agent` transmits zeros during gossip round
+/// `round` (0-based, within one `fastmix` call) — models a transient
+/// corrupted/blanked transmission.
+#[derive(Clone, Copy, Debug)]
+pub struct Fault {
+    /// Misbehaving agent id.
+    pub agent: usize,
+    /// Round index within the mix at which the fault fires.
+    pub round: usize,
+}
+
+/// Message-passing engine: threads + per-edge channels.
+pub struct ThreadedNetwork {
+    topo: Topology,
+    gossip: GossipMatrix,
+    eta: f64,
+    fault: Option<Fault>,
+}
+
+impl ThreadedNetwork {
+    /// Build with the paper's Laplacian gossip weights.
+    pub fn from_topology(topo: &Topology) -> Self {
+        let gossip = GossipMatrix::from_laplacian(topo);
+        let l2 = gossip.lambda2;
+        let root = (1.0 - l2 * l2).sqrt();
+        let eta = (1.0 - root) / (1.0 + root);
+        ThreadedNetwork { topo: topo.clone(), gossip, eta, fault: None }
+    }
+
+    /// Enable fault injection (see [`Fault`]).
+    pub fn with_fault(mut self, fault: Fault) -> Self {
+        self.fault = Some(fault);
+        self
+    }
+}
+
+impl Communicator for ThreadedNetwork {
+    fn m(&self) -> usize {
+        self.topo.n()
+    }
+
+    fn gossip(&self) -> &GossipMatrix {
+        &self.gossip
+    }
+
+    fn fastmix(&self, stack: &mut AgentStack, rounds: usize, stats: &mut CommStats) {
+        stats.record_mix();
+        if rounds == 0 {
+            return;
+        }
+        let m = self.topo.n();
+        assert_eq!(stack.m(), m);
+        let (d, k) = stack.slice_shape();
+
+        // One channel per directed edge (i -> j). Each agent sends exactly
+        // one message per out-edge per round and receives one per in-edge,
+        // so rounds are self-synchronizing: a receiver blocks until its
+        // neighbors' round-r messages arrive.
+        let mut senders: Vec<Vec<(usize, mpsc::Sender<Vec<f64>>)>> = (0..m).map(|_| Vec::new()).collect();
+        let mut receivers: Vec<Vec<(usize, mpsc::Receiver<Vec<f64>>)>> = (0..m).map(|_| Vec::new()).collect();
+        for i in 0..m {
+            for &j in self.topo.neighbors(i) {
+                let (tx, rx) = mpsc::channel::<Vec<f64>>();
+                senders[i].push((j, tx));
+                receivers[j].push((i, rx));
+            }
+        }
+
+        let eta = self.eta;
+        let weights = &self.gossip.weights;
+        let fault = self.fault;
+
+        // Take each agent's slice out so threads own their state.
+        let mut results: Vec<Option<(Mat, u64 /*scalars sent*/)>> = (0..m).map(|_| None).collect();
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(m);
+            for (j, (outs, ins)) in senders
+                .drain(..)
+                .zip(receivers.drain(..))
+                .enumerate()
+            {
+                let init = stack.slice(j).clone();
+                let wrow: Vec<f64> = weights.row(j).to_vec();
+                let handle = scope.spawn(move || {
+                    let mut prev = init.clone();
+                    let mut cur = init;
+                    let mut scalars_sent: u64 = 0;
+                    for r in 0..rounds {
+                        // 1. Transmit current state to every neighbor.
+                        let payload: Vec<f64> = if matches!(fault, Some(f) if f.agent == j && f.round == r)
+                        {
+                            vec![0.0; d * k]
+                        } else {
+                            cur.data().to_vec()
+                        };
+                        for (_to, tx) in &outs {
+                            tx.send(payload.clone()).expect("receiver alive");
+                            scalars_sent += (d * k) as u64;
+                        }
+                        // 2. Collect neighbor states for this round.
+                        let mut acc = cur.scaled(wrow[j]);
+                        for (from, rx) in &ins {
+                            let data = rx.recv().expect("sender alive");
+                            let neighbor = Mat::from_vec(d, k, data);
+                            acc.axpy(wrow[*from], &neighbor);
+                        }
+                        // 3. Chebyshev update.
+                        acc.scale(1.0 + eta);
+                        acc.axpy(-eta, &prev);
+                        prev = std::mem::replace(&mut cur, acc);
+                    }
+                    (cur, scalars_sent)
+                });
+                handles.push(handle);
+            }
+            for (j, h) in handles.into_iter().enumerate() {
+                results[j] = Some(h.join().expect("agent thread panicked"));
+            }
+        });
+
+        let mut total_scalars = 0u64;
+        for (j, res) in results.into_iter().enumerate() {
+            let (mat, scalars) = res.unwrap();
+            *stack.slice_mut(j) = mat;
+            total_scalars += scalars;
+        }
+        stats.rounds += rounds as u64;
+        stats.messages += (rounds * 2 * self.topo.num_edges()) as u64;
+        stats.scalars_sent += total_scalars;
+        stats.bytes_sent += total_scalars * 8;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_stack(m: usize, d: usize, k: usize, seed: u64) -> AgentStack {
+        let mut rng = Rng::seed_from(seed);
+        AgentStack::new((0..m).map(|_| Mat::randn(d, k, &mut rng)).collect())
+    }
+
+    #[test]
+    fn threaded_matches_dense_exactly() {
+        let topo = Topology::erdos_renyi(12, 0.4, &mut Rng::seed_from(111));
+        let dense = DenseComm::from_topology(&topo);
+        let threaded = ThreadedNetwork::from_topology(&topo);
+
+        let stack0 = random_stack(12, 6, 3, 112);
+        let mut a = stack0.clone();
+        let mut b = stack0;
+        dense.fastmix(&mut a, 6, &mut CommStats::default());
+        threaded.fastmix(&mut b, 6, &mut CommStats::default());
+        assert!(
+            a.distance(&b) < 1e-10,
+            "engines disagree: {}",
+            a.distance(&b)
+        );
+    }
+
+    #[test]
+    fn threaded_preserves_mean() {
+        let topo = Topology::ring(9);
+        let net = ThreadedNetwork::from_topology(&topo);
+        let mut stack = random_stack(9, 4, 2, 113);
+        let mean0 = stack.mean();
+        net.fastmix(&mut stack, 8, &mut CommStats::default());
+        assert!((&stack.mean() - &mean0).fro_norm() < 1e-10);
+    }
+
+    #[test]
+    fn threaded_counts_bytes() {
+        let topo = Topology::ring(6); // 6 edges
+        let net = ThreadedNetwork::from_topology(&topo);
+        let mut stack = random_stack(6, 5, 2, 114);
+        let mut stats = CommStats::default();
+        net.fastmix(&mut stack, 3, &mut stats);
+        // Each round: every directed edge (12) carries 5*2 scalars.
+        assert_eq!(stats.scalars_sent, 3 * 12 * 10);
+        assert_eq!(stats.bytes_sent, 3 * 12 * 10 * 8);
+        assert_eq!(stats.rounds, 3);
+        assert_eq!(stats.messages, 3 * 12);
+    }
+
+    #[test]
+    fn fault_perturbs_then_recontracts() {
+        let topo = Topology::complete(8);
+        let clean = ThreadedNetwork::from_topology(&topo);
+        let faulty = ThreadedNetwork::from_topology(&topo)
+            .with_fault(Fault { agent: 2, round: 0 });
+
+        let stack0 = random_stack(8, 3, 2, 115);
+        let mut a = stack0.clone();
+        let mut b = stack0;
+        clean.fastmix(&mut a, 10, &mut CommStats::default());
+        faulty.fastmix(&mut b, 10, &mut CommStats::default());
+        // The corrupted transmission shifts the consensus value...
+        assert!(a.distance(&b) > 1e-6, "fault had no effect");
+        // ...but the network still reaches (a different) consensus.
+        assert!(
+            b.deviation_from_mean() < 1e-6,
+            "post-fault deviation {}",
+            b.deviation_from_mean()
+        );
+    }
+
+    #[test]
+    fn zero_rounds_noop_threaded() {
+        let topo = Topology::ring(5);
+        let net = ThreadedNetwork::from_topology(&topo);
+        let mut stack = random_stack(5, 3, 2, 116);
+        let before = stack.clone();
+        net.fastmix(&mut stack, 0, &mut CommStats::default());
+        assert_eq!(stack, before);
+    }
+
+    #[test]
+    fn works_on_sparse_topologies() {
+        for topo in [Topology::path(7), Topology::star(7), Topology::grid(2, 4)] {
+            let net = ThreadedNetwork::from_topology(&topo);
+            let m = topo.n();
+            let mut stack = random_stack(m, 3, 2, 117);
+            let mean0 = stack.mean();
+            net.fastmix(&mut stack, 25, &mut CommStats::default());
+            assert!((&stack.mean() - &mean0).fro_norm() < 1e-9);
+            assert!(stack.deviation_from_mean() < 0.2 * m as f64);
+        }
+    }
+}

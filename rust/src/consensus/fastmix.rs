@@ -1,0 +1,259 @@
+//! FastMix — Algorithm 3 (Liu & Morse 2011 accelerated gossip).
+//!
+//! Chebyshev-accelerated distributed averaging:
+//!
+//! ```text
+//! W^{k+1} = (1 + η) · W^k · L − η · W^{k−1},   η = (1−√(1−λ₂²))/(1+√(1−λ₂²))
+//! ```
+//!
+//! with `W^{-1} = W^0`. Proposition 1 guarantees the mean is preserved
+//! exactly (it is a fixed point of the recursion) and the deviation from
+//! the mean contracts by `ρ = (1 − √(1−λ₂))^K` after K rounds — the √
+//! acceleration over plain gossip's `λ₂^K` is what makes the Theorem-1
+//! communication bound carry the `1/√(1−λ₂)` factor instead of `1/(1−λ₂)`.
+//!
+//! The operator is *linear* in the stack — Lemma 2's proof leans on this,
+//! and `tests::linearity` checks it directly.
+
+use super::metrics::CommStats;
+use super::stack::AgentStack;
+use crate::graph::gossip::GossipMatrix;
+use crate::linalg::Mat;
+
+/// Reusable FastMix operator bound to one gossip matrix.
+#[derive(Clone, Debug)]
+pub struct FastMix {
+    gossip: GossipMatrix,
+    /// Chebyshev step size η_w.
+    pub eta: f64,
+    edges: usize,
+}
+
+impl FastMix {
+    /// Bind to a gossip matrix; `edges` is the physical undirected edge
+    /// count of the underlying topology (for byte accounting).
+    pub fn new(gossip: GossipMatrix, edges: usize) -> Self {
+        let l2 = gossip.lambda2;
+        // Algorithm 3's step size uses λ₂² under the root.
+        let root = (1.0 - l2 * l2).sqrt();
+        let eta = (1.0 - root) / (1.0 + root);
+        FastMix { gossip, eta, edges }
+    }
+
+    /// Underlying gossip matrix.
+    pub fn gossip(&self) -> &GossipMatrix {
+        &self.gossip
+    }
+
+    /// Apply `rounds` accelerated gossip iterations in place.
+    ///
+    /// `stats` accrues one round per iteration with the stack's slice
+    /// shape as payload size.
+    pub fn mix(&self, stack: &mut AgentStack, rounds: usize, stats: &mut CommStats) {
+        stats.record_mix();
+        if rounds == 0 {
+            return;
+        }
+        let (d, k) = stack.slice_shape();
+        let m = stack.m();
+        assert_eq!(m, self.gossip.m(), "stack size != network size");
+
+        // Maintain current and previous stacks; each round computes
+        //   next_j = (1+η) Σ_i w_{ij} cur_i − η prev_j.
+        // With symmetric L, Σ_i w_{ij} cur_i = Σ_i w_{ji} cur_i — each
+        // agent j only touches its neighbors (w_{ji} ≠ 0 ⇔ edge).
+        //
+        // Perf (§Perf): the three stacks are allocated once and rotated;
+        // the Chebyshev (1+η) factor is folded into the accumulation
+        // weights so each round is pure fused multiply-adds over
+        // contiguous buffers — no per-round allocation, no scale pass.
+        let mut prev: Vec<Mat> = stack.iter().cloned().collect();
+        let mut cur = prev.clone();
+        let mut next: Vec<Mat> = vec![Mat::zeros(d, k); m];
+        let one_plus_eta = 1.0 + self.eta;
+
+        for _round in 0..rounds {
+            for j in 0..m {
+                let wj = self.gossip.weights.row(j);
+                let acc = &mut next[j];
+                // acc = −η · prev_j  (overwrite, no zero pass)
+                acc.data_mut().copy_from_slice(prev[j].data());
+                acc.scale(-self.eta);
+                for (i, &w) in wj.iter().enumerate() {
+                    if w != 0.0 {
+                        acc.axpy(one_plus_eta * w, &cur[i]);
+                    }
+                }
+            }
+            // Rotate buffers: prev ← cur ← next ← (old prev, reused).
+            std::mem::swap(&mut prev, &mut cur);
+            std::mem::swap(&mut cur, &mut next);
+            stats.record_round(self.edges, d, k);
+        }
+        for (dst, src) in stack.iter_mut().zip(cur) {
+            *dst = src;
+        }
+    }
+
+    /// Convenience: mix and return the implied contraction bound ρ(K).
+    pub fn rho(&self, rounds: usize) -> f64 {
+        self.gossip.rho(rounds)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::topology::Topology;
+    use crate::util::rng::Rng;
+
+    fn setup(n: usize) -> FastMix {
+        let topo = Topology::ring(n);
+        let edges = topo.num_edges();
+        FastMix::new(GossipMatrix::from_laplacian(&topo), edges)
+    }
+
+    fn random_stack(m: usize, d: usize, k: usize, seed: u64) -> AgentStack {
+        let mut rng = Rng::seed_from(seed);
+        AgentStack::new((0..m).map(|_| Mat::randn(d, k, &mut rng)).collect())
+    }
+
+    #[test]
+    fn preserves_mean_exactly() {
+        let fm = setup(8);
+        let mut stack = random_stack(8, 5, 3, 101);
+        let mean_before = stack.mean();
+        let mut stats = CommStats::default();
+        fm.mix(&mut stack, 7, &mut stats);
+        let mean_after = stack.mean();
+        assert!(
+            (&mean_before - &mean_after).fro_norm() < 1e-10,
+            "FastMix must preserve the average (Proposition 1)"
+        );
+    }
+
+    #[test]
+    fn contracts_at_least_at_proposition_rate() {
+        let fm = setup(10);
+        let mut stack = random_stack(10, 4, 2, 102);
+        let dev0 = stack.deviation_from_mean();
+        let k = 12;
+        let mut stats = CommStats::default();
+        fm.mix(&mut stack, k, &mut stats);
+        let dev1 = stack.deviation_from_mean();
+        let rho = fm.rho(k);
+        assert!(
+            dev1 <= rho * dev0 * 1.05 + 1e-12,
+            "dev {dev1} > ρ·dev₀ = {}",
+            rho * dev0
+        );
+    }
+
+    #[test]
+    fn faster_than_plain_gossip() {
+        // Plain gossip contracts like λ₂^K; FastMix like (1−√(1−λ₂))^K.
+        // On a poorly-connected ring the difference is stark.
+        let topo = Topology::ring(20);
+        let g = GossipMatrix::from_laplacian(&topo);
+        let fm = FastMix::new(g.clone(), topo.num_edges());
+        let k = 20;
+
+        let stack0 = random_stack(20, 3, 2, 103);
+
+        let mut fast = stack0.clone();
+        fm.mix(&mut fast, k, &mut CommStats::default());
+
+        // Plain gossip: W ← L·W k times.
+        let mut plain = stack0.clone();
+        for _ in 0..k {
+            let cur: Vec<Mat> = plain.iter().cloned().collect();
+            for j in 0..20 {
+                let mut acc = Mat::zeros(3, 2);
+                for (i, &w) in g.weights.row(j).iter().enumerate() {
+                    if w != 0.0 {
+                        acc.axpy(w, &cur[i]);
+                    }
+                }
+                *plain.slice_mut(j) = acc;
+            }
+        }
+        assert!(
+            fast.deviation_from_mean() < 0.2 * plain.deviation_from_mean(),
+            "fastmix {} vs plain {}",
+            fast.deviation_from_mean(),
+            plain.deviation_from_mean()
+        );
+    }
+
+    #[test]
+    fn zero_rounds_is_identity() {
+        let fm = setup(6);
+        let mut stack = random_stack(6, 3, 2, 104);
+        let before = stack.clone();
+        fm.mix(&mut stack, 0, &mut CommStats::default());
+        assert_eq!(stack, before);
+    }
+
+    #[test]
+    fn linearity() {
+        // T(aX + bY) = aT(X) + bT(Y) — Lemma 2 depends on this.
+        let fm = setup(7);
+        let x = random_stack(7, 4, 2, 105);
+        let y = random_stack(7, 4, 2, 106);
+        let (a, b) = (2.5, -1.25);
+
+        let mut combo = {
+            let mut c = x.clone();
+            for (cs, ys) in c.iter_mut().zip(y.iter()) {
+                cs.scale(a);
+                cs.axpy(b, ys);
+            }
+            c
+        };
+        fm.mix(&mut combo, 5, &mut CommStats::default());
+
+        let mut tx = x.clone();
+        fm.mix(&mut tx, 5, &mut CommStats::default());
+        let mut ty = y.clone();
+        fm.mix(&mut ty, 5, &mut CommStats::default());
+        let mut want = tx.clone();
+        for (ws, ts) in want.iter_mut().zip(ty.iter()) {
+            ws.scale(a);
+            ws.axpy(b, ts);
+        }
+        assert!(combo.distance(&want) < 1e-9);
+    }
+
+    #[test]
+    fn consensus_on_constant_stack_is_noop() {
+        let fm = setup(5);
+        let mut rng = Rng::seed_from(107);
+        let w = Mat::randn(4, 2, &mut rng);
+        let mut stack = AgentStack::replicate(5, &w);
+        fm.mix(&mut stack, 9, &mut CommStats::default());
+        for s in stack.iter() {
+            assert!((s - &w).fro_norm() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn stats_accrue() {
+        let topo = Topology::ring(6);
+        let fm = FastMix::new(GossipMatrix::from_laplacian(&topo), topo.num_edges());
+        let mut stack = random_stack(6, 3, 2, 108);
+        let mut stats = CommStats::default();
+        fm.mix(&mut stack, 4, &mut stats);
+        assert_eq!(stats.rounds, 4);
+        assert_eq!(stats.mixes, 1);
+        assert_eq!(stats.messages, 4 * 2 * 6); // 4 rounds × 2 dir × 6 edges
+        assert_eq!(stats.scalars_sent, 4 * 12 * 6);
+    }
+
+    #[test]
+    fn eta_in_unit_interval() {
+        for n in [4usize, 9, 16, 30] {
+            let fm = setup(n);
+            assert!(fm.eta >= 0.0 && fm.eta < 1.0, "eta={}", fm.eta);
+        }
+    }
+}

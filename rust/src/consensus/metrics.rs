@@ -1,0 +1,115 @@
+//! Communication accounting.
+//!
+//! The paper's x-axis is the number of communication (gossip) rounds; its
+//! headline claim is a communication-complexity bound (Theorem 1,
+//! Eqn. 3.9). Both engines in [`super::comm`] report through this struct
+//! so experiments can plot error-vs-communication exactly like Figures
+//! 1–2, and the threaded runtime additionally counts real bytes.
+
+/// Cumulative communication statistics for one run.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CommStats {
+    /// Gossip rounds executed (each round = one neighbor exchange
+    /// network-wide; the paper's "communication" unit).
+    pub rounds: u64,
+    /// Number of FastMix invocations (= power iterations that communicated).
+    pub mixes: u64,
+    /// Total scalar values exchanged over all edges (both directions).
+    pub scalars_sent: u64,
+    /// Total bytes on the wire (scalars × 8 for f64; the threaded engine
+    /// measures actual serialized sizes).
+    pub bytes_sent: u64,
+    /// Messages (edge-transmissions) sent.
+    pub messages: u64,
+}
+
+impl CommStats {
+    /// Record one gossip round over `edges` undirected edges where each
+    /// transmission carries a d×k matrix.
+    pub fn record_round(&mut self, edges: usize, d: usize, k: usize) {
+        self.rounds += 1;
+        // Undirected edge = two directed transmissions per round.
+        let tx = 2 * edges as u64;
+        let scalars = tx * (d * k) as u64;
+        self.messages += tx;
+        self.scalars_sent += scalars;
+        self.bytes_sent += scalars * 8;
+    }
+
+    /// Record the start of a FastMix invocation.
+    pub fn record_mix(&mut self) {
+        self.mixes += 1;
+    }
+
+    /// Merge another stats block (e.g. from a worker thread).
+    pub fn merge(&mut self, other: &CommStats) {
+        self.rounds += other.rounds;
+        self.mixes += other.mixes;
+        self.scalars_sent += other.scalars_sent;
+        self.bytes_sent += other.bytes_sent;
+        self.messages += other.messages;
+    }
+
+    /// Mean gossip rounds per mix (the effective K actually used).
+    pub fn rounds_per_mix(&self) -> f64 {
+        if self.mixes == 0 {
+            0.0
+        } else {
+            self.rounds as f64 / self.mixes as f64
+        }
+    }
+}
+
+impl std::fmt::Display for CommStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} rounds ({} mixes, K̄={:.1}), {} msgs, {}",
+            self.rounds,
+            self.mixes,
+            self.rounds_per_mix(),
+            self.messages,
+            crate::util::format::bytes(self.bytes_sent)
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_round_counts() {
+        let mut s = CommStats::default();
+        s.record_round(10, 300, 5); // 10 edges, 300x5 matrices
+        assert_eq!(s.rounds, 1);
+        assert_eq!(s.messages, 20);
+        assert_eq!(s.scalars_sent, 20 * 1500);
+        assert_eq!(s.bytes_sent, 20 * 1500 * 8);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = CommStats::default();
+        a.record_mix();
+        a.record_round(3, 2, 2);
+        let mut b = CommStats::default();
+        b.record_mix();
+        b.record_round(3, 2, 2);
+        b.record_round(3, 2, 2);
+        a.merge(&b);
+        assert_eq!(a.rounds, 3);
+        assert_eq!(a.mixes, 2);
+        assert!((a.rounds_per_mix() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn display_is_humane() {
+        let mut s = CommStats::default();
+        s.record_mix();
+        s.record_round(5, 10, 2);
+        let txt = format!("{s}");
+        assert!(txt.contains("rounds"));
+        assert!(txt.contains("msgs"));
+    }
+}

@@ -1,0 +1,20 @@
+//! Communication substrate: gossip averaging over the agent network.
+//!
+//! - [`stack`] — `AgentStack`, the aggregate variable `W ∈ R^{d×k×m}` of
+//!   §4.1 (one d×k slice per agent) plus the mean/deviation operators the
+//!   analysis uses (`W̄`, `‖W − W̄⊗1‖`).
+//! - [`fastmix`] — Algorithm 3 (Chebyshev-accelerated gossip, Liu & Morse
+//!   2011) with the Proposition-1 contraction guarantee.
+//! - [`comm`] — the [`comm::Communicator`] abstraction: a dense
+//!   single-process engine for fast experiment sweeps, and a threaded
+//!   message-passing runtime (one thread per agent, channels per edge)
+//!   that exercises real concurrency and counts every byte on the wire.
+//! - [`metrics`] — communication accounting shared by both engines.
+
+pub mod stack;
+pub mod fastmix;
+pub mod comm;
+pub mod metrics;
+
+pub use fastmix::FastMix;
+pub use stack::AgentStack;

@@ -1,0 +1,197 @@
+//! The aggregate variable of §4.1: one d×k matrix per agent.
+//!
+//! `AgentStack` is the paper's `W ∈ R^{d×k×m}` with slice
+//! `W(:,:,j) = W_j`. It owns the mean / deviation operators that appear
+//! throughout the analysis and in the Figure 1–2 metrics:
+//! `W̄ = (1/m) Σ_j W_j` and `‖W − W̄ ⊗ 1‖`.
+
+use crate::linalg::Mat;
+
+/// Per-agent stack of equally-shaped matrices.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AgentStack {
+    slices: Vec<Mat>,
+}
+
+impl AgentStack {
+    /// Build from per-agent slices (all must share a shape).
+    pub fn new(slices: Vec<Mat>) -> Self {
+        assert!(!slices.is_empty(), "empty stack");
+        let shape = slices[0].shape();
+        assert!(
+            slices.iter().all(|s| s.shape() == shape),
+            "inconsistent slice shapes"
+        );
+        AgentStack { slices }
+    }
+
+    /// `m` copies of one matrix (the paper's shared initialization
+    /// `S_j⁰ = W⁰` for every agent).
+    pub fn replicate(m: usize, w: &Mat) -> Self {
+        AgentStack::new(vec![w.clone(); m])
+    }
+
+    /// Number of agents m.
+    pub fn m(&self) -> usize {
+        self.slices.len()
+    }
+
+    /// Shape of each slice.
+    pub fn slice_shape(&self) -> (usize, usize) {
+        self.slices[0].shape()
+    }
+
+    /// Agent j's slice.
+    pub fn slice(&self, j: usize) -> &Mat {
+        &self.slices[j]
+    }
+
+    /// Mutable access to agent j's slice.
+    pub fn slice_mut(&mut self, j: usize) -> &mut Mat {
+        &mut self.slices[j]
+    }
+
+    /// Iterate over slices.
+    pub fn iter(&self) -> impl Iterator<Item = &Mat> {
+        self.slices.iter()
+    }
+
+    /// Mutable iteration.
+    pub fn iter_mut(&mut self) -> impl Iterator<Item = &mut Mat> {
+        self.slices.iter_mut()
+    }
+
+    /// The mean slice `(1/m) Σ_j W_j` (the bar variables of Eqn. 4.4).
+    pub fn mean(&self) -> Mat {
+        let (d, k) = self.slice_shape();
+        let mut out = Mat::zeros(d, k);
+        let inv_m = 1.0 / self.m() as f64;
+        for s in &self.slices {
+            out.axpy(inv_m, s);
+        }
+        out
+    }
+
+    /// Frobenius deviation from the mean: `‖W − W̄ ⊗ 1‖` — the consensus
+    /// error plotted in the paper's first figure column.
+    pub fn deviation_from_mean(&self) -> f64 {
+        let mean = self.mean();
+        self.slices
+            .iter()
+            .map(|s| {
+                let d = s - &mean;
+                let n = d.fro_norm();
+                n * n
+            })
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// Stack-wide Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.slices
+            .iter()
+            .map(|s| {
+                let n = s.fro_norm();
+                n * n
+            })
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// Elementwise `self += alpha · other`.
+    pub fn axpy(&mut self, alpha: f64, other: &AgentStack) {
+        assert_eq!(self.m(), other.m());
+        for (a, b) in self.slices.iter_mut().zip(&other.slices) {
+            a.axpy(alpha, b);
+        }
+    }
+
+    /// Stack distance `‖self − other‖` (used for `‖Wᵗ − Wᵗ⁻¹‖`, Lemma 8).
+    pub fn distance(&self, other: &AgentStack) -> f64 {
+        assert_eq!(self.m(), other.m());
+        self.slices
+            .iter()
+            .zip(&other.slices)
+            .map(|(a, b)| {
+                let n = (a - b).fro_norm();
+                n * n
+            })
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// True iff every slice is finite.
+    pub fn is_finite(&self) -> bool {
+        self.slices.iter().all(|s| s.is_finite())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_stack(m: usize, d: usize, k: usize, seed: u64) -> AgentStack {
+        let mut rng = Rng::seed_from(seed);
+        AgentStack::new((0..m).map(|_| Mat::randn(d, k, &mut rng)).collect())
+    }
+
+    #[test]
+    fn replicate_has_zero_deviation() {
+        let mut rng = Rng::seed_from(91);
+        let w = Mat::randn(6, 2, &mut rng);
+        let s = AgentStack::replicate(5, &w);
+        assert_eq!(s.m(), 5);
+        assert!(s.deviation_from_mean() < 1e-15);
+        assert!((&s.mean() - &w).fro_norm() < 1e-15);
+    }
+
+    #[test]
+    fn mean_is_linear() {
+        let a = random_stack(4, 5, 3, 92);
+        let b = random_stack(4, 5, 3, 93);
+        let mut c = a.clone();
+        c.axpy(2.0, &b);
+        let want = {
+            let mut w = a.mean();
+            w.axpy(2.0, &b.mean());
+            w
+        };
+        assert!((&c.mean() - &want).fro_norm() < 1e-12);
+    }
+
+    #[test]
+    fn deviation_detects_outlier() {
+        let mut rng = Rng::seed_from(94);
+        let w = Mat::randn(4, 2, &mut rng);
+        let mut s = AgentStack::replicate(3, &w);
+        s.slice_mut(1).axpy(1.0, &Mat::eye(4).cols_range(0, 2));
+        assert!(s.deviation_from_mean() > 0.5);
+    }
+
+    #[test]
+    fn distance_zero_iff_equal() {
+        let a = random_stack(3, 4, 2, 95);
+        assert_eq!(a.distance(&a), 0.0);
+        let b = random_stack(3, 4, 2, 96);
+        assert!(a.distance(&b) > 0.0);
+    }
+
+    #[test]
+    fn fro_norm_pythagorean() {
+        let a = random_stack(3, 4, 2, 97);
+        let direct: f64 = a
+            .iter()
+            .map(|s| s.fro_norm().powi(2))
+            .sum::<f64>()
+            .sqrt();
+        assert!((a.fro_norm() - direct).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "inconsistent")]
+    fn rejects_mixed_shapes() {
+        let _ = AgentStack::new(vec![Mat::zeros(2, 2), Mat::zeros(3, 2)]);
+    }
+}

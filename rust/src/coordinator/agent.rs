@@ -1,0 +1,123 @@
+//! Per-agent private state for the distributed runtime.
+
+use crate::algo::sign_adjust::sign_adjust;
+use crate::linalg::qr::orth;
+use crate::linalg::Mat;
+
+/// Everything agent j owns in Algorithm 1.
+#[derive(Clone, Debug)]
+pub struct AgentState {
+    /// This agent's id.
+    pub id: usize,
+    /// Local matrix `A_j` (private to the agent — never transmitted).
+    pub local: Mat,
+    /// Tracked variable `S_j`.
+    pub s: Mat,
+    /// Current orthonormal iterate `W_j`.
+    pub w: Mat,
+    /// Cached previous product `G_j = A_j W_j^{t−1}`.
+    pub g_prev: Mat,
+    /// The shared reference `W⁰` for SignAdjust.
+    pub w0: Mat,
+}
+
+impl AgentState {
+    /// Algorithm-1 initialization: `S_j = W_j = W⁰`, `A_j W^{-1} := W⁰`.
+    pub fn init(id: usize, local: Mat, w0: Mat) -> Self {
+        AgentState {
+            id,
+            local,
+            s: w0.clone(),
+            w: w0.clone(),
+            g_prev: w0.clone(),
+            w0,
+        }
+    }
+
+    /// Eqn. 3.1: the local tracking update (one `A_j·W` product).
+    /// Returns nothing; mutates `s` and refreshes the cached product.
+    pub fn tracking_update(&mut self) {
+        let g = self.local.matmul(&self.w);
+        self.s.axpy(1.0, &g);
+        self.s.axpy(-1.0, &self.g_prev);
+        self.g_prev = g;
+    }
+
+    /// Eqn. 3.3: orthonormalize the (post-mix) `S_j` into `W_j`.
+    pub fn orthonormalize(&mut self, use_sign_adjust: bool) {
+        let q = orth(&self.s);
+        self.w = if use_sign_adjust {
+            sign_adjust(&q, &self.w0)
+        } else {
+            q
+        };
+    }
+
+    /// DePCA's local step (no tracking): `S_j ← A_j W_j`.
+    pub fn power_step(&mut self) {
+        self.s = self.local.matmul(&self.w);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn state(seed: u64) -> AgentState {
+        let mut rng = Rng::seed_from(seed);
+        let g = Mat::randn(8, 8, &mut rng);
+        let mut a = g.t_matmul(&g);
+        a.symmetrize();
+        let w0 = Mat::rand_orthonormal(8, 2, &mut rng);
+        AgentState::init(0, a, w0)
+    }
+
+    #[test]
+    fn init_replicates_w0() {
+        let st = state(201);
+        assert_eq!(st.s.data(), st.w0.data());
+        assert_eq!(st.w.data(), st.w0.data());
+        assert_eq!(st.g_prev.data(), st.w0.data());
+    }
+
+    #[test]
+    fn first_tracking_update_matches_formula() {
+        let mut st = state(202);
+        let expect = {
+            // S¹ = W⁰ + A W⁰ − W⁰ = A W⁰.
+            st.local.matmul(&st.w0)
+        };
+        st.tracking_update();
+        assert!((&st.s - &expect).fro_norm() < 1e-12);
+        assert!((&st.g_prev - &expect).fro_norm() < 1e-12);
+    }
+
+    #[test]
+    fn orthonormalize_produces_orthonormal_w() {
+        let mut st = state(203);
+        st.tracking_update();
+        st.orthonormalize(true);
+        let g = st.w.t_matmul(&st.w);
+        assert!((&g - &Mat::eye(2)).fro_norm() < 1e-10);
+    }
+
+    #[test]
+    fn power_step_overwrites_s() {
+        let mut st = state(204);
+        st.power_step();
+        let expect = st.local.matmul(&st.w);
+        assert!((&st.s - &expect).fro_norm() < 1e-12);
+    }
+
+    #[test]
+    fn tracking_telescopes() {
+        // After two updates with unchanged W, S gains A·W − A·W = 0 net
+        // beyond the first injection.
+        let mut st = state(205);
+        st.tracking_update();
+        let s1 = st.s.clone();
+        st.tracking_update(); // W unchanged → G == G_prev → S unchanged
+        assert!((&st.s - &s1).fro_norm() < 1e-12);
+    }
+}

@@ -1,0 +1,253 @@
+//! Fully-distributed DeEPCA: one thread per agent, channels per edge.
+//!
+//! Each agent thread executes the complete Algorithm-1 loop on its
+//! private state — tracking update, K channel-level gossip exchanges,
+//! QR + SignAdjust — with *no shared memory* between agents. A telemetry
+//! channel streams per-iteration `(S_j, W_j)` snapshots to the leader,
+//! which computes the Figure 1–2 metrics offline. Message payloads are
+//! byte-counted per agent and merged at join time.
+//!
+//! Integration tests pin this engine's output to the leader-driven
+//! [`crate::algo::deepca::run_dense`] to ~1e-9 (the engines accumulate
+//! neighbor contributions in different orders, so agreement is to fp
+//! round-off, not bit-for-bit).
+
+use super::agent::AgentState;
+use crate::algo::deepca::DeepcaConfig;
+use crate::algo::metrics::{RunOutput, RunRecorder};
+use crate::algo::problem::Problem;
+use crate::consensus::metrics::CommStats;
+use crate::consensus::AgentStack;
+use crate::graph::gossip::GossipMatrix;
+use crate::graph::topology::Topology;
+use crate::linalg::Mat;
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// Telemetry sample sent by an agent each iteration.
+struct Telemetry {
+    agent: usize,
+    iter: usize,
+    s: Mat,
+    w: Mat,
+}
+
+/// Run DeEPCA with every agent in its own thread.
+///
+/// Returns the usual [`RunOutput`] plus a populated recorder. `tol`-based
+/// early stopping is not available in this engine (there is no global
+/// barrier to broadcast a stop decision through); use `max_iters`.
+pub fn run_deepca_distributed(
+    problem: &Problem,
+    topo: &Topology,
+    cfg: &DeepcaConfig,
+    recorder: &mut RunRecorder,
+) -> RunOutput {
+    let m = problem.m();
+    assert_eq!(topo.n(), m, "topology/problem size mismatch");
+    let gossip = GossipMatrix::from_laplacian(topo);
+    let l2 = gossip.lambda2;
+    let root = (1.0 - l2 * l2).sqrt();
+    let eta = (1.0 - root) / (1.0 + root);
+
+    let w0 = problem.initial_w(cfg.init_seed);
+    let (d, k) = w0.shape();
+    let u = problem.u();
+    let rounds = cfg.consensus_rounds;
+    let iters = cfg.max_iters;
+
+    // Edge channels: senders[i] -> (dest j, tx), receivers[j] -> (src i, rx).
+    // One channel per directed edge for the entire run; mpsc ordering
+    // makes rounds and iterations self-synchronizing.
+    let mut senders: Vec<Vec<(usize, mpsc::Sender<Vec<f64>>)>> =
+        (0..m).map(|_| Vec::new()).collect();
+    let mut receivers: Vec<Vec<(usize, mpsc::Receiver<Vec<f64>>)>> =
+        (0..m).map(|_| Vec::new()).collect();
+    for i in 0..m {
+        for &j in topo.neighbors(i) {
+            let (tx, rx) = mpsc::channel();
+            senders[i].push((j, tx));
+            receivers[j].push((i, rx));
+        }
+    }
+    let (tele_tx, tele_rx) = mpsc::channel::<Telemetry>();
+
+    let weights = &gossip.weights;
+    let t0 = Instant::now();
+
+    let mut final_slices: Vec<Option<Mat>> = (0..m).map(|_| None).collect();
+    let mut per_agent_scalars: Vec<u64> = vec![0; m];
+
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(m);
+        for (j, (outs, ins)) in senders.drain(..).zip(receivers.drain(..)).enumerate() {
+            let local = problem.locals[j].clone();
+            let w0j = w0.clone();
+            let wrow: Vec<f64> = weights.row(j).to_vec();
+            let tele = tele_tx.clone();
+            let use_sign = cfg.sign_adjust;
+            let handle = scope.spawn(move || {
+                let mut st = AgentState::init(j, local, w0j);
+                let mut scalars: u64 = 0;
+                for t in 0..iters {
+                    // (3.1) local tracking update.
+                    st.tracking_update();
+                    // (3.2) K gossip rounds on S_j (FastMix recursion).
+                    let mut prev = st.s.clone();
+                    let mut cur = st.s.clone();
+                    for _r in 0..rounds {
+                        let payload = cur.data().to_vec();
+                        for (_to, tx) in &outs {
+                            tx.send(payload.clone()).expect("peer alive");
+                            scalars += (d * k) as u64;
+                        }
+                        let mut acc = cur.scaled(wrow[j]);
+                        for (from, rx) in &ins {
+                            let data = rx.recv().expect("peer alive");
+                            acc.axpy(wrow[*from], &Mat::from_vec(d, k, data));
+                        }
+                        acc.scale(1.0 + eta);
+                        acc.axpy(-eta, &prev);
+                        prev = std::mem::replace(&mut cur, acc);
+                    }
+                    st.s = cur;
+                    // (3.3) orthonormalize + sign adjust.
+                    st.orthonormalize(use_sign);
+                    // Telemetry (leader-side metrics only; not part of the
+                    // algorithm's communication budget).
+                    tele.send(Telemetry { agent: j, iter: t, s: st.s.clone(), w: st.w.clone() })
+                        .ok();
+                }
+                (st.w, scalars)
+            });
+            handles.push(handle);
+        }
+        drop(tele_tx);
+
+        // Leader: assemble per-iteration snapshots as they stream in.
+        let mut pending: Vec<Vec<Option<(Mat, Mat)>>> =
+            (0..iters).map(|_| (0..m).map(|_| None).collect()).collect();
+        let mut complete = vec![0usize; iters];
+        for tele in tele_rx.iter() {
+            let Telemetry { agent, iter, s, w } = tele;
+            pending[iter][agent] = Some((s, w));
+            complete[iter] += 1;
+            if complete[iter] == m && recorder.should_record(iter) {
+                let ss = AgentStack::new(
+                    pending[iter].iter().map(|p| p.as_ref().unwrap().0.clone()).collect(),
+                );
+                let ws = AgentStack::new(
+                    pending[iter].iter().map(|p| p.as_ref().unwrap().1.clone()).collect(),
+                );
+                // Communication to date: (iter+1) mixes of `rounds` rounds.
+                let mut stats_for_record = CommStats::default();
+                stats_for_record.mixes = (iter + 1) as u64;
+                stats_for_record.rounds = ((iter + 1) * rounds) as u64;
+                recorder.record(iter, &u, &ws, Some(&ss), &stats_for_record, t0.elapsed().as_secs_f64());
+                pending[iter].iter_mut().for_each(|p| *p = None); // free
+            }
+        }
+
+        for (j, h) in handles.into_iter().enumerate() {
+            let (wj, scalars) = h.join().expect("agent thread panicked");
+            final_slices[j] = Some(wj);
+            per_agent_scalars[j] = scalars;
+        }
+    });
+
+    // Records may arrive out of iteration order; sort.
+    recorder.records.sort_by_key(|r| r.iter);
+
+    let final_w = AgentStack::new(final_slices.into_iter().map(Option::unwrap).collect());
+    let total_scalars: u64 = per_agent_scalars.iter().sum();
+    let mut comm = CommStats::default();
+    comm.mixes = iters as u64;
+    comm.rounds = (iters * rounds) as u64;
+    comm.messages = (iters * rounds * 2 * topo.num_edges()) as u64;
+    comm.scalars_sent = total_scalars;
+    comm.bytes_sent = total_scalars * 8;
+
+    let diverged = !final_w.is_finite();
+    RunOutput {
+        iters,
+        final_tan_theta: recorder.final_tan_theta(),
+        comm,
+        final_w,
+        elapsed_secs: t0.elapsed().as_secs_f64(),
+        diverged,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::deepca;
+    use crate::data::synthetic;
+    use crate::util::rng::Rng;
+
+    fn setup(seed: u64) -> (Problem, Topology) {
+        let ds = synthetic::spiked_covariance(
+            300,
+            12,
+            &[9.0, 6.0],
+            0.3,
+            &mut Rng::seed_from(seed),
+        );
+        let p = Problem::from_dataset(&ds, 6, 2);
+        let topo = Topology::erdos_renyi(6, 0.6, &mut Rng::seed_from(seed + 1));
+        (p, topo)
+    }
+
+    #[test]
+    fn distributed_converges() {
+        let (p, topo) = setup(211);
+        let cfg = DeepcaConfig { consensus_rounds: 8, max_iters: 80, ..Default::default() };
+        let mut rec = RunRecorder::every_iteration();
+        let out = run_deepca_distributed(&p, &topo, &cfg, &mut rec);
+        assert!(!out.diverged);
+        assert!(out.final_tan_theta < 1e-9, "tanθ={}", out.final_tan_theta);
+        assert_eq!(rec.records.len(), 80);
+    }
+
+    #[test]
+    fn matches_leader_driven_engine() {
+        let (p, topo) = setup(212);
+        let cfg = DeepcaConfig { consensus_rounds: 6, max_iters: 25, ..Default::default() };
+        let mut rec_a = RunRecorder::every_iteration();
+        let dist = run_deepca_distributed(&p, &topo, &cfg, &mut rec_a);
+        let mut rec_b = RunRecorder::every_iteration();
+        let dense = deepca::run_dense(&p, &topo, &cfg, &mut rec_b);
+        assert!(
+            dist.final_w.distance(&dense.final_w) < 1e-9,
+            "engines disagree by {}",
+            dist.final_w.distance(&dense.final_w)
+        );
+        // Metric traces agree too.
+        for (a, b) in rec_a.records.iter().zip(&rec_b.records) {
+            assert!((a.mean_tan_theta - b.mean_tan_theta).abs() < 1e-9 * (1.0 + a.mean_tan_theta));
+            assert!((a.s_deviation - b.s_deviation).abs() < 1e-9 * (1.0 + a.s_deviation));
+        }
+    }
+
+    #[test]
+    fn byte_accounting_consistent() {
+        let (p, topo) = setup(213);
+        let cfg = DeepcaConfig { consensus_rounds: 4, max_iters: 7, ..Default::default() };
+        let mut rec = RunRecorder::every_iteration();
+        let out = run_deepca_distributed(&p, &topo, &cfg, &mut rec);
+        let expect = (7 * 4 * 2 * topo.num_edges() * 12 * 2) as u64;
+        assert_eq!(out.comm.scalars_sent, expect);
+        assert_eq!(out.comm.bytes_sent, expect * 8);
+    }
+
+    #[test]
+    fn records_sorted_by_iter() {
+        let (p, topo) = setup(214);
+        let cfg = DeepcaConfig { consensus_rounds: 5, max_iters: 12, ..Default::default() };
+        let mut rec = RunRecorder::every_iteration();
+        let _ = run_deepca_distributed(&p, &topo, &cfg, &mut rec);
+        for win in rec.records.windows(2) {
+            assert!(win[0].iter < win[1].iter);
+        }
+    }
+}

@@ -1,0 +1,168 @@
+//! Leader-driven orchestration: config → engine selection → run.
+//!
+//! The `Leader` is the programmatic entry point `main.rs`, the examples,
+//! and the experiment harness share: pick an algorithm, an execution
+//! engine, and get back a `RunOutput` plus the metric trace.
+
+use crate::algo::deepca::{self, DeepcaConfig};
+use crate::algo::depca::{self, DepcaConfig};
+use crate::algo::metrics::{RunOutput, RunRecorder};
+use crate::algo::problem::Problem;
+use crate::algo::backend::{ParallelBackend, PowerBackend, RustBackend};
+use crate::consensus::comm::{Communicator, DenseComm, ThreadedNetwork};
+use crate::graph::topology::Topology;
+
+/// Which algorithm to run.
+#[derive(Clone, Debug)]
+pub enum Algorithm {
+    /// Paper Algorithm 1.
+    Deepca(DeepcaConfig),
+    /// Eqn. 3.4 baseline.
+    Depca(DepcaConfig),
+}
+
+/// Which execution engine carries the run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Single-process dense gossip, sequential products.
+    Dense,
+    /// Dense gossip, thread-parallel local products.
+    DenseParallel,
+    /// Real message-passing gossip (threads + channels).
+    Threaded,
+    /// Fully distributed: the whole loop inside per-agent threads
+    /// (DeEPCA only; DePCA falls back to `Threaded`).
+    Distributed,
+}
+
+/// Leader: owns the problem/topology pair and dispatches runs.
+pub struct Leader<'a> {
+    /// Problem instance.
+    pub problem: &'a Problem,
+    /// Agent network.
+    pub topo: &'a Topology,
+    /// Engine selection.
+    pub engine: EngineKind,
+}
+
+impl<'a> Leader<'a> {
+    /// New leader with the default dense engine.
+    pub fn new(problem: &'a Problem, topo: &'a Topology) -> Self {
+        Leader { problem, topo, engine: EngineKind::Dense }
+    }
+
+    /// Select an engine.
+    pub fn with_engine(mut self, engine: EngineKind) -> Self {
+        self.engine = engine;
+        self
+    }
+
+    /// Execute `algo`, filling `recorder`.
+    pub fn run(&self, algo: &Algorithm, recorder: &mut RunRecorder) -> RunOutput {
+        match (algo, self.engine) {
+            (Algorithm::Deepca(cfg), EngineKind::Distributed) => {
+                crate::coordinator::distributed::run_deepca_distributed(
+                    self.problem,
+                    self.topo,
+                    cfg,
+                    recorder,
+                )
+            }
+            (Algorithm::Deepca(cfg), engine) => {
+                let (backend, comm) = self.make_parts(engine);
+                deepca::run_with(self.problem, backend.as_ref(), comm.as_ref(), cfg, recorder)
+            }
+            (Algorithm::Depca(cfg), engine) => {
+                let engine = if engine == EngineKind::Distributed {
+                    EngineKind::Threaded
+                } else {
+                    engine
+                };
+                let (backend, comm) = self.make_parts(engine);
+                depca::run_with(self.problem, backend.as_ref(), comm.as_ref(), cfg, recorder)
+            }
+        }
+    }
+
+    fn make_parts(
+        &self,
+        engine: EngineKind,
+    ) -> (Box<dyn PowerBackend + 'a>, Box<dyn Communicator + 'a>) {
+        let backend: Box<dyn PowerBackend + 'a> = match engine {
+            EngineKind::DenseParallel => Box::new(ParallelBackend::new(&self.problem.locals, 0)),
+            _ => Box::new(RustBackend::new(&self.problem.locals)),
+        };
+        let comm: Box<dyn Communicator + 'a> = match engine {
+            EngineKind::Threaded => Box::new(ThreadedNetwork::from_topology(self.topo)),
+            _ => Box::new(DenseComm::from_topology(self.topo)),
+        };
+        (backend, comm)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::util::rng::Rng;
+
+    fn setup(seed: u64) -> (Problem, Topology) {
+        let ds = synthetic::spiked_covariance(
+            300,
+            10,
+            &[8.0, 5.0],
+            0.3,
+            &mut Rng::seed_from(seed),
+        );
+        let p = Problem::from_dataset(&ds, 5, 1);
+        let topo = Topology::erdos_renyi(5, 0.7, &mut Rng::seed_from(seed + 1));
+        (p, topo)
+    }
+
+    #[test]
+    fn all_engines_agree_deepca() {
+        let (p, topo) = setup(221);
+        let cfg = DeepcaConfig { consensus_rounds: 8, max_iters: 30, ..Default::default() };
+        let algo = Algorithm::Deepca(cfg);
+        let mut outs = Vec::new();
+        for engine in [
+            EngineKind::Dense,
+            EngineKind::DenseParallel,
+            EngineKind::Threaded,
+            EngineKind::Distributed,
+        ] {
+            let mut rec = RunRecorder::every_iteration();
+            let out = Leader::new(&p, &topo).with_engine(engine).run(&algo, &mut rec);
+            outs.push((engine, out));
+        }
+        let base = &outs[0].1;
+        for (engine, out) in &outs[1..] {
+            assert!(
+                base.final_w.distance(&out.final_w) < 1e-8,
+                "{engine:?} disagrees with Dense by {}",
+                base.final_w.distance(&out.final_w)
+            );
+        }
+    }
+
+    #[test]
+    fn depca_through_leader() {
+        let (p, topo) = setup(222);
+        let cfg = DepcaConfig::default();
+        let mut rec = RunRecorder::every_iteration();
+        let out = Leader::new(&p, &topo).run(&Algorithm::Depca(cfg), &mut rec);
+        assert!(out.iters > 0);
+        assert!(out.final_tan_theta.is_finite());
+    }
+
+    #[test]
+    fn depca_distributed_falls_back() {
+        let (p, topo) = setup(223);
+        let cfg = DepcaConfig { max_iters: 10, ..Default::default() };
+        let mut rec = RunRecorder::every_iteration();
+        let out = Leader::new(&p, &topo)
+            .with_engine(EngineKind::Distributed)
+            .run(&Algorithm::Depca(cfg), &mut rec);
+        assert_eq!(out.iters, 10);
+    }
+}

@@ -1,0 +1,17 @@
+//! L3 coordination runtime: leader/agent process topology.
+//!
+//! Two execution styles:
+//!
+//! - **Leader-driven** ([`leader`]) — the leader owns the loop and calls
+//!   into pluggable backends/communicators ([`crate::algo`]); the natural
+//!   mode for experiment sweeps and the PJRT artifact backend.
+//! - **Fully distributed** ([`distributed`]) — one OS thread per agent
+//!   owning its private `A_j, S_j, W_j, G_j` state end-to-end; gossip
+//!   rounds are real channel exchanges; the leader thread only receives
+//!   per-iteration telemetry. This is the deployment-shaped runtime the
+//!   end-to-end example runs, and integration tests pin it numerically to
+//!   the leader-driven engine.
+
+pub mod agent;
+pub mod leader;
+pub mod distributed;

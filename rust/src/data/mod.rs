@@ -1,0 +1,50 @@
+//! Dataset substrate: loading, synthesizing, and partitioning data.
+//!
+//! The paper evaluates on libsvm's 'w8a' (d=300) and 'a9a' (d=123) with
+//! rows distributed across m=50 agents per Eqn. 5.1:
+//! `A_j = Σ_{i=1..n} v_i v_iᵀ` over the j-th sequential block of n rows.
+//!
+//! The offline image cannot download libsvm files, so [`synthetic`]
+//! generates datasets matching their shapes and sparsity statistics (see
+//! DESIGN.md §8); [`libsvm`] parses the real format so genuine files can
+//! be dropped in and used unchanged.
+
+pub mod libsvm;
+pub mod synthetic;
+pub mod partition;
+
+use crate::linalg::Mat;
+
+/// A dense row-sample dataset: `rows × dim` feature matrix.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// Feature rows (one sample per row).
+    pub features: Mat,
+    /// Optional labels (unused by PCA, kept for provenance).
+    pub labels: Vec<f64>,
+    /// Provenance string for reports.
+    pub name: String,
+}
+
+impl Dataset {
+    /// Number of samples.
+    pub fn num_rows(&self) -> usize {
+        self.features.rows()
+    }
+
+    /// Feature dimension d.
+    pub fn dim(&self) -> usize {
+        self.features.cols()
+    }
+
+    /// Fraction of nonzero entries.
+    pub fn density(&self) -> f64 {
+        let nnz = self
+            .features
+            .data()
+            .iter()
+            .filter(|&&x| x != 0.0)
+            .count();
+        nnz as f64 / (self.num_rows() * self.dim()) as f64
+    }
+}

@@ -1,0 +1,200 @@
+//! Eqn.-5.1 data placement: sequential row blocks → local Gram matrices.
+//!
+//! The paper assigns agent `j` the rows `(j−1)·n+1 .. j·n` and forms
+//! `A_j = Σ_i v_i v_iᵀ` over its block; the global matrix is
+//! `A = (1/m) Σ_j A_j`. We optionally normalize by the per-agent row
+//! count so eigenvalues stay O(feature-norm²) regardless of n — a pure
+//! rescaling that leaves every convergence ratio in Theorem 1 unchanged.
+
+use super::Dataset;
+use crate::linalg::Mat;
+
+/// How to scale each local Gram matrix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GramScaling {
+    /// Paper-literal `A_j = Σ v vᵀ`.
+    RawSum,
+    /// `A_j = (1/n) Σ v vᵀ` — same dynamics, tamer magnitudes (default).
+    PerRow,
+}
+
+/// The decentralized problem data: one PSD (or, for the Remark-1
+/// robustness ablation, merely symmetric) matrix per agent.
+#[derive(Clone, Debug)]
+pub struct PartitionedGram {
+    /// Local matrices `A_j`, all d×d.
+    pub locals: Vec<Mat>,
+    /// Aggregate `A = (1/m) Σ_j A_j`.
+    pub aggregate: Mat,
+    /// Max spectral norm bound `L ≥ max_j ‖A_j‖₂` (paper's L).
+    pub spectral_bound: f64,
+}
+
+/// Split `ds` into `m` sequential blocks and build the local Grams.
+///
+/// Panics unless `ds.num_rows()` is divisible by `m` (the paper's setup
+/// always is; trim the dataset first otherwise).
+pub fn partition_gram(ds: &Dataset, m: usize, scaling: GramScaling) -> PartitionedGram {
+    let rows = ds.num_rows();
+    assert!(m > 0 && rows % m == 0, "rows {rows} not divisible by m {m}");
+    let n = rows / m;
+    let d = ds.dim();
+
+    let mut locals = Vec::with_capacity(m);
+    for j in 0..m {
+        // Block view as its own matrix, then A_j = Bᵀ B.
+        let block = Mat::from_fn(n, d, |i, c| ds.features[(j * n + i, c)]);
+        let mut a_j = block.t_matmul(&block);
+        if scaling == GramScaling::PerRow {
+            a_j.scale(1.0 / n as f64);
+        }
+        a_j.symmetrize();
+        locals.push(a_j);
+    }
+
+    let mut aggregate = Mat::zeros(d, d);
+    for a_j in &locals {
+        aggregate.axpy(1.0 / m as f64, a_j);
+    }
+    aggregate.symmetrize();
+
+    let spectral_bound = locals
+        .iter()
+        .map(|a| crate::linalg::norms::spectral_norm_power(a, 60))
+        .fold(0.0f64, f64::max);
+
+    PartitionedGram { locals, aggregate, spectral_bound }
+}
+
+/// Heterogeneity diagnostic `L² / (λ_k λ_{k+1})` from Remark 2 — the
+/// quantity that sets the minimum viable consensus rounds K.
+pub fn heterogeneity(p: &PartitionedGram, lambda_k: f64, lambda_k1: f64) -> f64 {
+    p.spectral_bound * p.spectral_bound / (lambda_k * lambda_k1)
+}
+
+/// Mean-shift each local matrix (keeping the aggregate fixed) so some
+/// `A_j` are *not* PSD — the Remark-1 robustness setting. `strength`
+/// scales the alternating ±shift added to agent j and removed from j+1.
+pub fn make_non_psd(p: &mut PartitionedGram, strength: f64) {
+    let m = p.locals.len();
+    if m < 2 {
+        return;
+    }
+    let d = p.locals[0].rows();
+    let shift = Mat::from_fn(d, d, |i, j| if i == j { strength } else { 0.0 });
+    // Pairwise: add to even agents, subtract from their odd partner —
+    // the aggregate (1/m)ΣA_j is untouched.
+    for pair in 0..m / 2 {
+        p.locals[2 * pair].axpy(1.0, &shift);
+        p.locals[2 * pair + 1].axpy(-1.0, &shift);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::linalg::eig::eig_sym;
+    use crate::util::rng::Rng;
+
+    fn small_ds() -> Dataset {
+        synthetic::spiked_covariance(120, 10, &[8.0, 4.0], 0.3, &mut Rng::seed_from(81))
+    }
+
+    #[test]
+    fn partition_shapes() {
+        let ds = small_ds();
+        let p = partition_gram(&ds, 6, GramScaling::PerRow);
+        assert_eq!(p.locals.len(), 6);
+        for a in &p.locals {
+            assert_eq!(a.shape(), (10, 10));
+        }
+        assert_eq!(p.aggregate.shape(), (10, 10));
+    }
+
+    #[test]
+    fn aggregate_is_mean_of_locals() {
+        let ds = small_ds();
+        let p = partition_gram(&ds, 4, GramScaling::PerRow);
+        let mut mean = Mat::zeros(10, 10);
+        for a in &p.locals {
+            mean.axpy(0.25, a);
+        }
+        assert!((&mean - &p.aggregate).fro_norm() < 1e-10);
+    }
+
+    #[test]
+    fn aggregate_matches_full_gram() {
+        let ds = small_ds();
+        let p = partition_gram(&ds, 4, GramScaling::PerRow);
+        // (1/m) Σ (1/n) B_jᵀB_j = (1/rows) XᵀX.
+        let mut full = ds.features.t_matmul(&ds.features);
+        full.scale(1.0 / ds.num_rows() as f64);
+        assert!((&full - &p.aggregate).fro_norm() < 1e-9);
+    }
+
+    #[test]
+    fn raw_sum_scaling() {
+        let ds = small_ds();
+        let p_raw = partition_gram(&ds, 4, GramScaling::RawSum);
+        let p_row = partition_gram(&ds, 4, GramScaling::PerRow);
+        let n = ds.num_rows() / 4;
+        let diff = (&p_raw.locals[0].scaled(1.0 / n as f64) - &p_row.locals[0]).fro_norm();
+        assert!(diff < 1e-10);
+    }
+
+    #[test]
+    fn locals_are_psd() {
+        let ds = small_ds();
+        let p = partition_gram(&ds, 6, GramScaling::PerRow);
+        for a in &p.locals {
+            let e = eig_sym(a);
+            assert!(*e.values.last().unwrap() > -1e-9);
+        }
+    }
+
+    #[test]
+    fn spectral_bound_dominates() {
+        let ds = small_ds();
+        let p = partition_gram(&ds, 6, GramScaling::PerRow);
+        for a in &p.locals {
+            let n2 = crate::linalg::norms::spectral_norm(a);
+            assert!(n2 <= p.spectral_bound * (1.0 + 1e-6), "{n2} > bound");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "divisible")]
+    fn rejects_indivisible() {
+        let ds = small_ds();
+        let _ = partition_gram(&ds, 7, GramScaling::PerRow);
+    }
+
+    #[test]
+    fn non_psd_preserves_aggregate() {
+        let ds = small_ds();
+        let mut p = partition_gram(&ds, 6, GramScaling::PerRow);
+        let before = p.aggregate.clone();
+        make_non_psd(&mut p, 5.0);
+        let mut mean = Mat::zeros(10, 10);
+        for a in &p.locals {
+            mean.axpy(1.0 / 6.0, a);
+        }
+        assert!((&mean - &before).fro_norm() < 1e-9);
+        // At least one local is now non-PSD.
+        let any_negative = p.locals.iter().any(|a| {
+            let e = eig_sym(a);
+            *e.values.last().unwrap() < -0.1
+        });
+        assert!(any_negative);
+    }
+
+    #[test]
+    fn heterogeneity_positive() {
+        let ds = small_ds();
+        let p = partition_gram(&ds, 6, GramScaling::PerRow);
+        let e = eig_sym(&p.aggregate);
+        let h = heterogeneity(&p, e.values[1], e.values[2]);
+        assert!(h >= 1.0, "heterogeneity {h} should exceed 1");
+    }
+}

@@ -1,0 +1,312 @@
+//! Synthetic dataset generators.
+//!
+//! Stand-ins for the paper's libsvm 'w8a' / 'a9a' downloads (unavailable
+//! offline — DESIGN.md §8). The figures measure convergence *dynamics*,
+//! which are governed by (i) the aggregate spectrum λ₁.., λ_k, λ_{k+1} and
+//! (ii) cross-agent heterogeneity `L²/(λ_kλ_{k+1})` (paper Remark 2).
+//! These generators reproduce both knobs:
+//!
+//! - [`sparse_binary`] mimics libsvm's binary bag-of-features rows with a
+//!   power-law feature popularity profile (a few very common features →
+//!   dominant principal directions, long tail → decaying spectrum) and a
+//!   *block drift*: consecutive row blocks prefer different feature
+//!   clusters, so the sequential Eqn.-5.1 partition yields genuinely
+//!   heterogeneous `A_j` — exactly what makes small-K DeEPCA fail in the
+//!   paper's Figure 1.
+//! - [`spiked_covariance`] plants an exact eigengap for controlled tests.
+
+use super::Dataset;
+use crate::linalg::Mat;
+use crate::util::rng::Rng;
+
+/// Parameters for the sparse binary generator.
+#[derive(Clone, Debug)]
+pub struct SparseBinaryParams {
+    /// Total number of rows (= m agents × n rows/agent in the paper).
+    pub rows: usize,
+    /// Feature dimension d.
+    pub dim: usize,
+    /// Target overall nonzero density (libsvm w8a ≈ 0.039, a9a ≈ 0.11).
+    pub density: f64,
+    /// Power-law exponent for feature popularity (larger → steeper
+    /// spectrum decay). ~1.1 reproduces w8a-like spectra.
+    pub popularity_exponent: f64,
+    /// Number of row blocks with drifted feature preferences; the paper's
+    /// partition assigns one block per agent.
+    pub blocks: usize,
+    /// Drift strength in [0,1]: 0 = homogeneous blocks, 1 = disjoint
+    /// feature clusters per block (maximum heterogeneity).
+    pub drift: f64,
+}
+
+/// Generate a sparse binary dataset per [`SparseBinaryParams`].
+pub fn sparse_binary(p: &SparseBinaryParams, rng: &mut Rng) -> Dataset {
+    assert!(p.rows > 0 && p.dim > 0 && p.blocks > 0);
+    assert!((0.0..=1.0).contains(&p.drift));
+
+    // Base popularity: power law over a random permutation of features so
+    // popular features are spread across coordinates.
+    let mut order: Vec<usize> = (0..p.dim).collect();
+    rng.shuffle(&mut order);
+    let mut base = vec![0.0f64; p.dim];
+    let mut sum = 0.0;
+    for (rank, &f) in order.iter().enumerate() {
+        let w = 1.0 / (1.0 + rank as f64).powf(p.popularity_exponent);
+        base[f] = w;
+        sum += w;
+    }
+    // Normalize so the expected density matches.
+    let target_nnz_per_row = p.density * p.dim as f64;
+    for b in &mut base {
+        *b *= target_nnz_per_row / sum;
+    }
+
+    // Block drift: block `b` boosts a contiguous (wrapping) cluster of
+    // features and damps the rest.
+    let cluster = (p.dim / p.blocks).max(1);
+    let rows_per_block = p.rows.div_ceil(p.blocks);
+
+    let mut features = Mat::zeros(p.rows, p.dim);
+    let mut labels = Vec::with_capacity(p.rows);
+    for r in 0..p.rows {
+        let block = (r / rows_per_block).min(p.blocks - 1);
+        let start = (block * cluster) % p.dim;
+        let row = features.row_mut(r);
+        for (f, &pf) in base.iter().enumerate() {
+            let in_cluster = {
+                let off = (f + p.dim - start) % p.dim;
+                off < cluster * 2 // cluster + its right neighbor
+            };
+            let boost = if in_cluster {
+                1.0 + 3.0 * p.drift
+            } else {
+                1.0 - 0.8 * p.drift
+            };
+            let prob = (pf * boost).min(0.95);
+            if rng.chance(prob) {
+                row[f] = 1.0;
+            }
+        }
+        labels.push(if rng.chance(0.5) { 1.0 } else { -1.0 });
+    }
+    Dataset { features, labels, name: "sparse_binary".into() }
+}
+
+/// w8a-like dataset at the paper's scale: 50 agents × 800 rows, d = 300.
+pub fn w8a_like(rng: &mut Rng) -> Dataset {
+    w8a_like_scaled(50, 800, rng)
+}
+
+/// w8a-like with custom (agents, rows-per-agent) for fast tests.
+pub fn w8a_like_scaled(m: usize, n: usize, rng: &mut Rng) -> Dataset {
+    let mut ds = sparse_binary(
+        &SparseBinaryParams {
+            rows: m * n,
+            dim: 300,
+            density: 0.039,
+            popularity_exponent: 1.1,
+            blocks: m,
+            drift: 0.6,
+        },
+        rng,
+    );
+    ds.name = format!("w8a-like(m={m},n={n})");
+    ds
+}
+
+/// a9a-like dataset at the paper's scale: 50 agents × 600 rows, d = 123.
+pub fn a9a_like(rng: &mut Rng) -> Dataset {
+    a9a_like_scaled(50, 600, rng)
+}
+
+/// a9a-like with custom (agents, rows-per-agent).
+pub fn a9a_like_scaled(m: usize, n: usize, rng: &mut Rng) -> Dataset {
+    let mut ds = sparse_binary(
+        &SparseBinaryParams {
+            rows: m * n,
+            dim: 123,
+            density: 0.11,
+            popularity_exponent: 0.9,
+            blocks: m,
+            drift: 0.6,
+        },
+        rng,
+    );
+    ds.name = format!("a9a-like(m={m},n={n})");
+    ds
+}
+
+/// Gaussian rows with a planted covariance spectrum: the first
+/// `spikes.len()` directions have variance `spikes[i]`, the remaining
+/// directions variance `noise`. Gives an exactly known eigengap.
+pub fn spiked_covariance(
+    rows: usize,
+    dim: usize,
+    spikes: &[f64],
+    noise: f64,
+    rng: &mut Rng,
+) -> Dataset {
+    assert!(spikes.len() <= dim);
+    let basis = Mat::rand_orthonormal(dim, dim, rng);
+    let mut scales = vec![noise.sqrt(); dim];
+    for (i, &s) in spikes.iter().enumerate() {
+        scales[i] = s.sqrt();
+    }
+    let mut features = Mat::zeros(rows, dim);
+    for r in 0..rows {
+        // x = B · diag(scales) · z, z ~ N(0, I).
+        let z: Vec<f64> = (0..dim).map(|i| rng.normal() * scales[i]).collect();
+        for c in 0..dim {
+            let mut acc = 0.0;
+            for (i, &zi) in z.iter().enumerate() {
+                acc += basis[(c, i)] * zi;
+            }
+            features[(r, c)] = acc;
+        }
+    }
+    Dataset {
+        features,
+        labels: vec![0.0; rows],
+        name: format!("spiked(d={dim},k={})", spikes.len()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::eig::eig_sym;
+
+    #[test]
+    fn sparse_binary_shape_and_density() {
+        let mut rng = Rng::seed_from(71);
+        let p = SparseBinaryParams {
+            rows: 2000,
+            dim: 100,
+            density: 0.05,
+            popularity_exponent: 1.0,
+            blocks: 10,
+            drift: 0.5,
+        };
+        let ds = sparse_binary(&p, &mut rng);
+        assert_eq!(ds.num_rows(), 2000);
+        assert_eq!(ds.dim(), 100);
+        let dens = ds.density();
+        assert!(
+            (dens - 0.05).abs() < 0.02,
+            "density {dens} too far from target"
+        );
+        // Binary entries only.
+        assert!(ds.features.data().iter().all(|&x| x == 0.0 || x == 1.0));
+    }
+
+    #[test]
+    fn sparse_binary_blocks_are_heterogeneous() {
+        let mut rng = Rng::seed_from(72);
+        let p = SparseBinaryParams {
+            rows: 1000,
+            dim: 60,
+            density: 0.1,
+            popularity_exponent: 0.8,
+            blocks: 5,
+            drift: 0.9,
+        };
+        let ds = sparse_binary(&p, &mut rng);
+        // Mean feature vector of block 0 vs block 2 should differ clearly.
+        let block = |b: usize| -> Vec<f64> {
+            let mut mean = vec![0.0; 60];
+            for r in b * 200..(b + 1) * 200 {
+                for (f, m) in mean.iter_mut().enumerate() {
+                    *m += ds.features[(r, f)];
+                }
+            }
+            mean.iter().map(|x| x / 200.0).collect()
+        };
+        let m0 = block(0);
+        let m2 = block(2);
+        let dist: f64 = m0
+            .iter()
+            .zip(&m2)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt();
+        assert!(dist > 0.3, "blocks too similar: {dist}");
+    }
+
+    #[test]
+    fn drift_zero_is_homogeneous() {
+        let mut rng = Rng::seed_from(73);
+        let mk = |drift: f64, rng: &mut Rng| {
+            sparse_binary(
+                &SparseBinaryParams {
+                    rows: 1500,
+                    dim: 50,
+                    density: 0.1,
+                    popularity_exponent: 0.8,
+                    blocks: 3,
+                    drift,
+                },
+                rng,
+            )
+        };
+        let homo = mk(0.0, &mut rng);
+        let hetero = mk(0.9, &mut rng);
+        let block_dist = |ds: &Dataset| {
+            let rows = ds.num_rows() / 3;
+            let mean = |b: usize| -> Vec<f64> {
+                let mut m = vec![0.0; ds.dim()];
+                for r in b * rows..(b + 1) * rows {
+                    for (f, mm) in m.iter_mut().enumerate() {
+                        *mm += ds.features[(r, f)] / rows as f64;
+                    }
+                }
+                m
+            };
+            let (a, b) = (mean(0), mean(2));
+            a.iter()
+                .zip(&b)
+                .map(|(x, y)| (x - y) * (x - y))
+                .sum::<f64>()
+                .sqrt()
+        };
+        assert!(block_dist(&hetero) > 3.0 * block_dist(&homo));
+    }
+
+    #[test]
+    fn w8a_like_scaled_shapes() {
+        let mut rng = Rng::seed_from(74);
+        let ds = w8a_like_scaled(4, 50, &mut rng);
+        assert_eq!(ds.num_rows(), 200);
+        assert_eq!(ds.dim(), 300);
+        assert!(ds.name.contains("w8a"));
+    }
+
+    #[test]
+    fn a9a_like_scaled_shapes() {
+        let mut rng = Rng::seed_from(75);
+        let ds = a9a_like_scaled(4, 30, &mut rng);
+        assert_eq!(ds.num_rows(), 120);
+        assert_eq!(ds.dim(), 123);
+    }
+
+    #[test]
+    fn spiked_covariance_recovers_spectrum() {
+        let mut rng = Rng::seed_from(76);
+        let spikes = [20.0, 10.0];
+        let ds = spiked_covariance(4000, 12, &spikes, 0.5, &mut rng);
+        // Sample covariance ≈ planted spectrum.
+        let mut cov = ds.features.t_matmul(&ds.features);
+        cov.scale(1.0 / 4000.0);
+        cov.symmetrize();
+        let e = eig_sym(&cov);
+        assert!((e.values[0] - 20.0).abs() < 2.5, "λ1={}", e.values[0]);
+        assert!((e.values[1] - 10.0).abs() < 1.5, "λ2={}", e.values[1]);
+        assert!(e.values[2] < 1.0, "bulk should be ≈0.5, got {}", e.values[2]);
+    }
+
+    #[test]
+    fn generators_deterministic_per_seed() {
+        let a = w8a_like_scaled(2, 20, &mut Rng::seed_from(9));
+        let b = w8a_like_scaled(2, 20, &mut Rng::seed_from(9));
+        assert_eq!(a.features.data(), b.features.data());
+    }
+}

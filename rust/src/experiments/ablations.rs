@@ -1,0 +1,389 @@
+//! Ablations for the design choices DESIGN.md calls out.
+//!
+//! - `sign_adjust`: Algorithm 2 on vs off on a rank-k problem where the
+//!   QR output genuinely sign-flips → off diverges/stalls (paper §3.1's
+//!   "necessary to make DeEPCA converge stably").
+//! - `topology`: required consensus rounds K* vs the network's
+//!   `1/√(1−λ₂)` across ring/grid/star/ER/complete/barbell — the
+//!   Theorem-1 network factor.
+//! - `min_k`: measured minimal K for convergence vs data heterogeneity
+//!   `L²/(λ_kλ_{k+1})` (Remark 2: K grows with heterogeneity).
+//! - `non_psd`: Remark 1 robustness — mean-shifted non-PSD locals.
+
+use super::report;
+use super::Scale;
+use crate::algo::deepca::{self, DeepcaConfig};
+use crate::algo::metrics::RunRecorder;
+use crate::algo::problem::Problem;
+use crate::data::partition::{make_non_psd, partition_gram, GramScaling};
+use crate::data::synthetic::{self, SparseBinaryParams};
+use crate::graph::gossip::GossipMatrix;
+use crate::graph::topology::Topology;
+use crate::util::format;
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+/// Outcome of one ablation cell.
+#[derive(Clone, Debug)]
+pub struct Cell {
+    /// Row label.
+    pub label: String,
+    /// Final mean tan θ.
+    pub final_tan: f64,
+    /// Extra context (e.g. K used, spectral gap).
+    pub note: String,
+}
+
+fn run_deepca(problem: &Problem, topo: &Topology, k: usize, iters: usize, sign: bool) -> f64 {
+    run_deepca_qr(problem, topo, k, iters, sign, true)
+}
+
+fn run_deepca_qr(
+    problem: &Problem,
+    topo: &Topology,
+    k: usize,
+    iters: usize,
+    sign: bool,
+    qr_canonical: bool,
+) -> f64 {
+    let cfg = DeepcaConfig {
+        consensus_rounds: k,
+        max_iters: iters,
+        sign_adjust: sign,
+        qr_canonical,
+        ..Default::default()
+    };
+    let mut rec = RunRecorder::every_iteration();
+    let out = deepca::run_dense(problem, topo, &cfg, &mut rec);
+    if out.diverged {
+        f64::INFINITY
+    } else {
+        out.final_tan_theta
+    }
+}
+
+fn hetero_problem(m: usize, n: usize, dim: usize, drift: f64, seed: u64, k: usize) -> Problem {
+    let ds = synthetic::sparse_binary(
+        &SparseBinaryParams {
+            rows: m * n,
+            dim,
+            density: 0.12,
+            popularity_exponent: 0.9,
+            blocks: m,
+            drift,
+        },
+        &mut Rng::seed_from(seed),
+    );
+    Problem::from_dataset(&ds, m, k)
+}
+
+/// Adversarial instance for the sign ablation: the planted top-k
+/// eigenvectors have *zero first coordinate*, so the Householder pivot
+/// of every QR column sits at ≈0 ± consensus noise — raw (LAPACK-style)
+/// QR signs are then decided by per-agent noise and flip independently
+/// across agents, wrecking the average unless SignAdjust repairs them.
+/// This is not exotic: any dataset where some feature is uncorrelated
+/// with the leading factors produces pivots near zero.
+fn sign_adversarial_problem(m: usize, k: usize, seed: u64) -> Problem {
+    let d = 24;
+    let mut rng = Rng::seed_from(seed);
+    // Orthonormal basis with first row zeroed in the first k columns.
+    let mut g = crate::linalg::Mat::randn(d, d, &mut rng);
+    for c in 0..k {
+        g[(0, c)] = 0.0;
+    }
+    let (q, _r) = crate::linalg::qr::thin_qr(&g);
+    // Descending spectrum with a clean gap at k.
+    let spectrum: Vec<f64> = (0..d)
+        .map(|i| {
+            if i < k {
+                10.0 - i as f64
+            } else {
+                1.0 / (1.0 + i as f64 - k as f64)
+            }
+        })
+        .collect();
+    let base = q
+        .matmul(&crate::linalg::Mat::diag(&spectrum))
+        .matmul(&q.t());
+    // Heterogeneous locals with exactly-zero-mean symmetric perturbations.
+    let mut locals = Vec::with_capacity(m);
+    let mut sum_e = crate::linalg::Mat::zeros(d, d);
+    for j in 0..m {
+        let e = if j + 1 == m {
+            sum_e.scaled(-1.0)
+        } else {
+            let g = crate::linalg::Mat::randn(d, d, &mut rng);
+            let mut e = &g + &g.t();
+            e.scale(0.35);
+            sum_e.axpy(1.0, &e);
+            e
+        };
+        let mut a_j = base.clone();
+        a_j.axpy(1.0, &e);
+        a_j.symmetrize();
+        locals.push(a_j);
+    }
+    Problem::new(locals, k, "sign-adversarial")
+}
+
+/// Sign-adjust ablation: the 2×2 of QR sign convention × SignAdjust.
+///
+/// Reproduction note (recorded in EXPERIMENTS.md): with the crate's
+/// canonical positive-diagonal QR, column signs are already consistent
+/// across agents and SignAdjust is a no-op — DeEPCA converges either
+/// way. With raw Householder/LAPACK-style QR signs (what a stock-LAPACK
+/// implementation of the paper would use), pivot-sign flips differ
+/// across agents and SignAdjust is *necessary*, exactly as §3.1 claims.
+pub fn sign_adjust(scale: Scale) -> Result<Vec<Cell>> {
+    let m = match scale {
+        Scale::Full => 20,
+        Scale::Small => 8,
+    };
+    let iters = 150;
+    let k_rounds = 12;
+    let seeds: &[u64] = &[721, 731, 741];
+
+    let mut worst = [0.0f64; 4]; // [raw+off, raw+on, canon+off, canon+on]
+    for &seed in seeds {
+        let problem = sign_adversarial_problem(m, 3, seed);
+        let topo = Topology::erdos_renyi(m, 0.5, &mut Rng::seed_from(seed + 1));
+        let cases = [
+            run_deepca_qr(&problem, &topo, k_rounds, iters, false, false),
+            run_deepca_qr(&problem, &topo, k_rounds, iters, true, false),
+            run_deepca_qr(&problem, &topo, k_rounds, iters, false, true),
+            run_deepca_qr(&problem, &topo, k_rounds, iters, true, true),
+        ];
+        for (w, c) in worst.iter_mut().zip(cases) {
+            *w = w.max(c);
+        }
+    }
+    let note = format!("K={k_rounds}, worst over {} seeds", seeds.len());
+    let cells = vec![
+        Cell { label: "raw QR, SignAdjust OFF".into(), final_tan: worst[0], note: note.clone() },
+        Cell { label: "raw QR, SignAdjust ON".into(), final_tan: worst[1], note: note.clone() },
+        Cell { label: "canonical QR, SignAdjust OFF".into(), final_tan: worst[2], note: note.clone() },
+        Cell { label: "canonical QR, SignAdjust ON".into(), final_tan: worst[3], note },
+    ];
+    emit("abl_sign", &cells)?;
+    Ok(cells)
+}
+
+/// Topology sweep: measured minimal K vs 1/√(1−λ₂).
+pub fn topology(scale: Scale) -> Result<Vec<Cell>> {
+    let m = match scale {
+        Scale::Full => 50,
+        Scale::Small => 12,
+    };
+    let problem = hetero_problem(m, 100, 40, 0.6, 723, 2);
+    let iters = 60;
+    let tol = 1e-6;
+
+    let topos: Vec<Topology> = vec![
+        Topology::complete(m),
+        Topology::erdos_renyi(m, 0.5, &mut Rng::seed_from(724)),
+        Topology::erdos_renyi(m, 0.15, &mut Rng::seed_from(725)),
+        Topology::grid(grid_rows(m), m / grid_rows(m)),
+        Topology::star(m),
+        Topology::ring(m),
+    ];
+
+    let mut cells = Vec::new();
+    for topo in &topos {
+        let gossip = GossipMatrix::from_laplacian(topo);
+        let kstar = minimal_k(&problem, topo, iters, tol, 64);
+        cells.push(Cell {
+            label: topo.name.clone(),
+            final_tan: kstar.map(|k| run_deepca(&problem, topo, k, iters, true)).unwrap_or(f64::INFINITY),
+            note: format!(
+                "K*={} | 1/√(1−λ₂)={:.2}",
+                kstar.map(|k| k.to_string()).unwrap_or_else(|| ">64".into()),
+                1.0 / gossip.gap().sqrt()
+            ),
+        });
+    }
+    emit("abl_topology", &cells)?;
+    Ok(cells)
+}
+
+/// Largest divisor of m that is <= sqrt(m) (grid row count).
+fn grid_rows(m: usize) -> usize {
+    (1..=m).rev().find(|r| m % r == 0 && r * r <= m).unwrap_or(1)
+}
+
+/// Minimal consensus rounds to reach `tol` within `iters` (doubling +
+/// binary search over K).
+pub fn minimal_k(
+    problem: &Problem,
+    topo: &Topology,
+    iters: usize,
+    tol: f64,
+    k_cap: usize,
+) -> Option<usize> {
+    let reaches = |k: usize| run_deepca(problem, topo, k, iters, true) <= tol;
+    // Exponential probe.
+    let mut hi = 1;
+    while hi <= k_cap && !reaches(hi) {
+        hi *= 2;
+    }
+    if hi > k_cap {
+        return None;
+    }
+    let mut lo = hi / 2; // lo fails (or is 0)
+    while hi - lo > 1 {
+        let mid = (lo + hi) / 2;
+        if reaches(mid) {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    Some(hi)
+}
+
+/// Heterogeneity sweep: minimal K vs drift (Remark 2).
+pub fn min_k_vs_heterogeneity(scale: Scale) -> Result<Vec<Cell>> {
+    let m = match scale {
+        Scale::Full => 20,
+        Scale::Small => 8,
+    };
+    let topo = Topology::erdos_renyi(m, 0.5, &mut Rng::seed_from(726));
+    let mut cells = Vec::new();
+    for &drift in &[0.0, 0.3, 0.6, 0.9] {
+        let problem = hetero_problem(m, 120, 40, drift, 727, 2);
+        // Generous iteration budget so K* measures the *consensus*
+        // requirement, not the spectral-gap iteration limit.
+        let iters = 200;
+        let kstar = minimal_k(&problem, &topo, iters, 1e-6, 64);
+        cells.push(Cell {
+            label: format!("drift={drift}"),
+            final_tan: kstar
+                .map(|k| run_deepca(&problem, &topo, k, iters, true))
+                .unwrap_or(f64::INFINITY),
+            note: format!(
+                "K*={} | heterogeneity={:.1}",
+                kstar.map(|k| k.to_string()).unwrap_or_else(|| ">64".into()),
+                problem.heterogeneity()
+            ),
+        });
+    }
+    emit("abl_min_k", &cells)?;
+    Ok(cells)
+}
+
+/// Remark-1 robustness: non-PSD locals.
+pub fn non_psd(scale: Scale) -> Result<Vec<Cell>> {
+    let (m, n) = match scale {
+        Scale::Full => (20, 200),
+        Scale::Small => (8, 100),
+    };
+    let ds = synthetic::spiked_covariance(m * n, 24, &[12.0, 7.0, 4.0], 0.3, &mut Rng::seed_from(728));
+    let topo = Topology::erdos_renyi(m, 0.5, &mut Rng::seed_from(729));
+    let mut cells = Vec::new();
+    for &shift in &[0.0, 2.0, 8.0] {
+        let mut part = partition_gram(&ds, m, GramScaling::PerRow);
+        if shift > 0.0 {
+            make_non_psd(&mut part, shift);
+        }
+        let problem = Problem::from_partition(part, 2, "non-psd");
+        let tan = run_deepca(&problem, &topo, 12, 100, true);
+        cells.push(Cell {
+            label: format!("shift={shift}"),
+            final_tan: tan,
+            note: format!("L={:.2}", problem.spectral_bound),
+        });
+    }
+    emit("abl_non_psd", &cells)?;
+    Ok(cells)
+}
+
+fn emit(id: &str, cells: &[Cell]) -> Result<()> {
+    let rows: Vec<Vec<String>> = cells
+        .iter()
+        .map(|c| {
+            vec![
+                c.label.clone(),
+                format!("{:.3e}", c.final_tan),
+                c.note.clone(),
+            ]
+        })
+        .collect();
+    let text = format!(
+        "{id}\n{}",
+        format::table(&["case", "final tanθ", "notes"], &rows)
+    );
+    report::emit_table(id, &text, std::path::Path::new(&format!("{id}.txt")))?;
+    Ok(())
+}
+
+/// Run every ablation.
+pub fn run_all(scale: Scale) -> Result<()> {
+    sign_adjust(scale)?;
+    topology(scale)?;
+    min_k_vs_heterogeneity(scale)?;
+    non_psd(scale)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn with_tmp_results<T>(f: impl FnOnce() -> T) -> T {
+        std::env::set_var(
+            "DEEPCA_RESULTS",
+            std::env::temp_dir().join("deepca_abl_test"),
+        );
+        let out = f();
+        std::env::remove_var("DEEPCA_RESULTS");
+        out
+    }
+
+    #[test]
+    fn sign_adjust_matters() {
+        let cells = with_tmp_results(|| sign_adjust(Scale::Small).unwrap());
+        let raw_off = cells[0].final_tan;
+        let raw_on = cells[1].final_tan;
+        let canon_off = cells[2].final_tan;
+        let canon_on = cells[3].final_tan;
+        // With SignAdjust (the paper's Algorithm 2) both QR conventions
+        // converge deep.
+        assert!(raw_on < 1e-8, "raw QR + SignAdjust: {raw_on:.3e}");
+        assert!(canon_on < 1e-8, "canonical QR + SignAdjust: {canon_on:.3e}");
+        // Canonical QR is sign-stable on its own.
+        assert!(canon_off < 1e-8, "canonical QR alone: {canon_off:.3e}");
+        // Raw (LAPACK-style) QR without SignAdjust hits the sign
+        // instability on at least one seed — the §3.1 failure mode.
+        assert!(
+            raw_off > 1e4 * raw_on.max(1e-14),
+            "raw QR without SignAdjust should fail somewhere: worst={raw_off:.3e} vs {raw_on:.3e}"
+        );
+    }
+
+    #[test]
+    fn minimal_k_monotone_in_connectivity() {
+        let m = 8;
+        let problem = hetero_problem(m, 80, 30, 0.6, 730, 2);
+        let good = Topology::complete(m);
+        let bad = Topology::ring(m);
+        let k_good = minimal_k(&problem, &good, 50, 1e-6, 64).unwrap();
+        let k_bad = minimal_k(&problem, &bad, 50, 1e-6, 64).unwrap();
+        assert!(
+            k_bad >= k_good,
+            "worse connectivity should need ≥ rounds: ring {k_bad} vs complete {k_good}"
+        );
+    }
+
+    #[test]
+    fn non_psd_still_converges() {
+        let cells = with_tmp_results(|| non_psd(Scale::Small).unwrap());
+        for c in &cells {
+            assert!(
+                c.final_tan < 1e-7,
+                "{}: tanθ={:.3e} (Remark 1 violated)",
+                c.label,
+                c.final_tan
+            );
+        }
+    }
+}

@@ -1,0 +1,342 @@
+//! Figures 1 and 2: convergence vs. communication on 'w8a' / 'a9a'.
+//!
+//! Paper setup (§5): m = 50 agents, Erdős–Rényi p = 0.5 network
+//! (`1 − λ₂(L) ≈ 0.4563` for their draw), datasets partitioned per
+//! Eqn. 5.1. Each figure has three panels over #communications:
+//!
+//! 1. `‖Sᵗ − S̄ᵗ⊗1‖`   (tracked-variable consensus error)
+//! 2. `‖Wᵗ − W̄ᵗ⊗1‖`   (iterate consensus error)
+//! 3. `(1/m) Σ tanθ_k(U, W_jᵗ)` (subspace error)
+//!
+//! Series: DeEPCA across several K (small K stalls — their K=3 case),
+//! DePCA with fixed K (plateaus) and an increasing schedule, and CPCA as
+//! the rate reference. We additionally run the local-only strawman to
+//! report the heterogeneity floor.
+
+use super::report;
+use super::Scale;
+use crate::algo::centralized;
+use crate::algo::deepca::{self, DeepcaConfig};
+use crate::algo::depca::{self, DepcaConfig, KPolicy};
+use crate::algo::local_power;
+use crate::algo::metrics::RunRecorder;
+use crate::algo::problem::Problem;
+use crate::data::synthetic;
+use crate::data::Dataset;
+use crate::graph::gossip::GossipMatrix;
+use crate::graph::topology::Topology;
+use crate::util::format::sci;
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+/// Which paper figure.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Figure {
+    /// Figure 1: 'w8a' (d=300, n=800/agent).
+    Fig1W8a,
+    /// Figure 2: 'a9a' (d=123, n=600/agent).
+    Fig2A9a,
+}
+
+impl Figure {
+    /// Experiment id string.
+    pub fn id(&self) -> &'static str {
+        match self {
+            Figure::Fig1W8a => "fig1",
+            Figure::Fig2A9a => "fig2",
+        }
+    }
+}
+
+/// One convergence series of a figure.
+pub struct Series {
+    /// Legend label.
+    pub label: String,
+    /// Trace (empty for scalar-only series).
+    pub recorder: RunRecorder,
+}
+
+/// Everything a figure run produced.
+pub struct FigureResult {
+    /// Figure id.
+    pub figure: Figure,
+    /// Problem diagnostics (λ_k, gap, heterogeneity, network gap).
+    pub summary: String,
+    /// All series.
+    pub series: Vec<Series>,
+    /// CPCA tan trace (per power iteration).
+    pub cpca_tan: Vec<f64>,
+    /// Local-only heterogeneity floor.
+    pub local_floor: f64,
+}
+
+/// Build the figure's dataset at the given scale.
+pub fn dataset(figure: Figure, scale: Scale, rng: &mut Rng) -> Dataset {
+    match (figure, scale) {
+        (Figure::Fig1W8a, Scale::Full) => synthetic::w8a_like(rng),
+        (Figure::Fig1W8a, Scale::Small) => synthetic::w8a_like_scaled(10, 80, rng),
+        (Figure::Fig2A9a, Scale::Full) => synthetic::a9a_like(rng),
+        (Figure::Fig2A9a, Scale::Small) => synthetic::a9a_like_scaled(10, 60, rng),
+    }
+}
+
+/// Figure hyperparameters at a scale.
+pub struct FigureSpec {
+    /// Agents.
+    pub m: usize,
+    /// Rank.
+    pub k: usize,
+    /// Power iterations per run.
+    pub iters: usize,
+    /// DeEPCA consensus-round sweep.
+    pub deepca_ks: Vec<usize>,
+    /// DePCA schedules (label, policy).
+    pub depca: Vec<(String, KPolicy)>,
+    /// Seeds (data, graph, init).
+    pub seeds: (u64, u64, u64),
+}
+
+impl FigureSpec {
+    /// The paper's configuration (scaled down for `Scale::Small`).
+    pub fn paper(scale: Scale) -> Self {
+        match scale {
+            // 250 iterations: the w8a-like spectrum has a small gap at
+            // k=5 (γ ≈ 0.95), so CPCA needs ~250 power iterations to hit
+            // the fp floor — that depth is exactly where fixed-K DePCA's
+            // consensus plateau separates from DeEPCA (paper Figure 1).
+            Scale::Full => FigureSpec {
+                m: 50,
+                k: 5,
+                iters: 250,
+                deepca_ks: vec![1, 3, 5, 8, 12],
+                depca: vec![
+                    ("DePCA K=5".into(), KPolicy::Fixed(5)),
+                    ("DePCA K=20".into(), KPolicy::Fixed(20)),
+                    (
+                        "DePCA K=3+t".into(),
+                        KPolicy::Increasing { base: 3, slope: 1.0 },
+                    ),
+                ],
+                seeds: (701, 702, 2021),
+            },
+            Scale::Small => FigureSpec {
+                m: 10,
+                k: 3,
+                iters: 120,
+                deepca_ks: vec![1, 4, 8],
+                depca: vec![
+                    ("DePCA K=4".into(), KPolicy::Fixed(4)),
+                    (
+                        "DePCA K=2+t".into(),
+                        KPolicy::Increasing { base: 2, slope: 1.0 },
+                    ),
+                ],
+                seeds: (701, 702, 2021),
+            },
+        }
+    }
+}
+
+/// Run one figure end to end and emit its series.
+pub fn run_figure(figure: Figure, scale: Scale) -> Result<FigureResult> {
+    let spec = FigureSpec::paper(scale);
+    let mut data_rng = Rng::seed_from(spec.seeds.0);
+    let ds = dataset(figure, scale, &mut data_rng);
+    let problem = Problem::from_dataset(&ds, spec.m, spec.k);
+    let topo = Topology::erdos_renyi(spec.m, 0.5, &mut Rng::seed_from(spec.seeds.1));
+    let gossip = GossipMatrix::from_laplacian(&topo);
+
+    let summary = format!(
+        "{} [{}]: d={} m={} k={} | λ_k={} λ_k+1={} gap={:.4} γ={:.4} | L={} heterogeneity={:.1} | 1−λ₂(L)={:.4} (paper: 0.4563) | density={:.4}",
+        figure.id(),
+        ds.name,
+        problem.dim(),
+        problem.m(),
+        problem.k,
+        sci(problem.lambda_k()),
+        sci(problem.lambda_k1()),
+        problem.truth.relative_gap(problem.k),
+        problem.gamma(),
+        sci(problem.spectral_bound),
+        problem.heterogeneity(),
+        gossip.gap(),
+        ds.density(),
+    );
+    println!("{summary}");
+
+    let mut series = Vec::new();
+
+    // DeEPCA sweep over K.
+    for &k_rounds in &spec.deepca_ks {
+        let cfg = DeepcaConfig {
+            consensus_rounds: k_rounds,
+            max_iters: spec.iters,
+            init_seed: spec.seeds.2,
+            ..Default::default()
+        };
+        let mut rec = RunRecorder::every_iteration();
+        let out = deepca::run_dense(&problem, &topo, &cfg, &mut rec);
+        let label = format!("DeEPCA K={k_rounds}");
+        println!(
+            "  {label:<16} tanθ={:.3e} after {} iters ({}) {}",
+            out.final_tan_theta,
+            out.iters,
+            out.comm,
+            if out.diverged { "[DIVERGED]" } else { "" },
+        );
+        report::emit_series(figure.id(), &label, &rec)?;
+        series.push(Series { label, recorder: rec });
+    }
+
+    // DePCA schedules.
+    for (label, policy) in &spec.depca {
+        let cfg = DepcaConfig {
+            k_policy: *policy,
+            max_iters: spec.iters,
+            init_seed: spec.seeds.2,
+            ..Default::default()
+        };
+        let mut rec = RunRecorder::every_iteration();
+        let out = depca::run_dense(&problem, &topo, &cfg, &mut rec);
+        println!(
+            "  {label:<16} tanθ={:.3e} after {} iters ({})",
+            out.final_tan_theta, out.iters, out.comm
+        );
+        report::emit_series(figure.id(), label, &rec)?;
+        series.push(Series { label: label.clone(), recorder: rec });
+    }
+
+    // CPCA reference.
+    let cpca = centralized::run(&problem, spec.iters, spec.seeds.2);
+    println!(
+        "  {:<16} tanθ={:.3e} after {} iters (centralized)",
+        "CPCA",
+        cpca.tan_trace.last().copied().unwrap_or(f64::INFINITY),
+        cpca.iters
+    );
+    let cpca_csv: String = std::iter::once("iter,tan_theta\n".to_string())
+        .chain(
+            cpca.tan_trace
+                .iter()
+                .enumerate()
+                .map(|(i, t)| format!("{i},{t:.6e}\n")),
+        )
+        .collect();
+    report::write_result(&format!("{}_cpca.csv", figure.id()), &cpca_csv)?;
+
+    // Local-only floor.
+    let local_floor = local_power::heterogeneity_floor(&problem, spec.iters.min(40));
+    println!("  {:<16} floor tanθ={local_floor:.3e} (no communication)", "Local-only");
+
+    Ok(FigureResult {
+        figure,
+        summary,
+        series,
+        cpca_tan: cpca.tan_trace,
+        local_floor,
+    })
+}
+
+/// The qualitative claims a figure must reproduce (used by tests and the
+/// bench harness to self-check the regenerated figure against the paper).
+pub struct FigureClaims {
+    /// Best DeEPCA final tanθ across the K sweep.
+    pub deepca_best: f64,
+    /// DeEPCA with the smallest swept K.
+    pub deepca_smallest_k: f64,
+    /// Best fixed-K DePCA final tanθ.
+    pub depca_fixed_best: f64,
+    /// The matched-budget comparison: max over fixed K of
+    /// `DePCA(K) / DeEPCA(K)` at the *same* K — the paper's plateau
+    /// claim is per-budget, not best-vs-best (a huge fixed K can push
+    /// DePCA's floor below the iteration-limited CPCA level).
+    pub matched_k_ratio: f64,
+    /// Increasing-K DePCA final tanθ (if present).
+    pub depca_increasing: Option<f64>,
+    /// CPCA final tanθ.
+    pub cpca: f64,
+}
+
+/// Extract the claim numbers from a result.
+pub fn claims(res: &FigureResult) -> FigureClaims {
+    let mut deepca_best = f64::INFINITY;
+    let mut deepca_smallest_k = f64::INFINITY;
+    let mut smallest_k = usize::MAX;
+    let mut depca_fixed_best = f64::INFINITY;
+    let mut depca_increasing = None;
+    let mut deepca_by_k: Vec<(usize, f64)> = Vec::new();
+    let mut depca_by_k: Vec<(usize, f64)> = Vec::new();
+    for s in &res.series {
+        let final_tan = s.recorder.final_tan_theta();
+        if let Some(kstr) = s.label.strip_prefix("DeEPCA K=") {
+            let k: usize = kstr.parse().unwrap();
+            deepca_by_k.push((k, final_tan));
+            deepca_best = deepca_best.min(final_tan);
+            if k < smallest_k {
+                smallest_k = k;
+                deepca_smallest_k = final_tan;
+            }
+        } else if s.label.contains("+t") {
+            depca_increasing = Some(final_tan);
+        } else if let Some(kstr) = s.label.strip_prefix("DePCA K=") {
+            let k: usize = kstr.parse().unwrap();
+            depca_by_k.push((k, final_tan));
+            depca_fixed_best = depca_fixed_best.min(final_tan);
+        }
+    }
+    let mut matched_k_ratio: f64 = 0.0;
+    for &(k, depca_tan) in &depca_by_k {
+        if let Some(&(_, deepca_tan)) = deepca_by_k.iter().find(|(dk, _)| *dk == k) {
+            matched_k_ratio = matched_k_ratio.max(depca_tan / deepca_tan.max(1e-14));
+        }
+    }
+    FigureClaims {
+        deepca_best,
+        deepca_smallest_k,
+        depca_fixed_best,
+        matched_k_ratio,
+        depca_increasing,
+        cpca: *res.cpca_tan.last().unwrap(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_fig1_reproduces_paper_shape() {
+        std::env::set_var(
+            "DEEPCA_RESULTS",
+            std::env::temp_dir().join("deepca_fig_test"),
+        );
+        let res = run_figure(Figure::Fig1W8a, Scale::Small).unwrap();
+        let c = claims(&res);
+        // Claim 1: DeEPCA (enough K) matches the centralized rate — its
+        // final error tracks CPCA's (the paper's headline comparison).
+        assert!(c.cpca < 1e-6, "CPCA should be deep by now: {:.3e}", c.cpca);
+        assert!(
+            c.deepca_best < 200.0 * c.cpca.max(1e-14) && c.deepca_best < 1e-8,
+            "best DeEPCA {:.3e} vs CPCA {:.3e}",
+            c.deepca_best,
+            c.cpca
+        );
+        // Claim 2: smallest K stalls well above.
+        assert!(
+            c.deepca_smallest_k > 1e2 * c.deepca_best.max(1e-14),
+            "K=1 should stall: {:.3e} vs best {:.3e}",
+            c.deepca_smallest_k,
+            c.deepca_best
+        );
+        // Claim 3: fixed-K DePCA plateaus above DeEPCA at the same K.
+        assert!(
+            c.matched_k_ratio > 1e2,
+            "matched-K DePCA/DeEPCA ratio {:.1}",
+            c.matched_k_ratio
+        );
+        // Claim 4: increasing-K DePCA keeps descending below fixed-K.
+        let inc = c.depca_increasing.unwrap();
+        assert!(inc < 0.5 * c.depca_fixed_best);
+        std::env::remove_var("DEEPCA_RESULTS");
+    }
+}

@@ -1,0 +1,37 @@
+//! Experiment harness: regenerates every figure/table in the paper's
+//! evaluation section plus the ablations DESIGN.md calls out.
+//!
+//! | id | paper object | module |
+//! |----|--------------|--------|
+//! | `fig1` | Figure 1 ('w8a', 3 panels × series) | [`figures`] |
+//! | `fig2` | Figure 2 ('a9a') | [`figures`] |
+//! | `table_comm` | Remark 2 / Theorem 1 comm-to-ε comparison | [`comm_table`] |
+//! | `ablations` | sign-adjust, topology, min-K vs heterogeneity, non-PSD | [`ablations`] |
+//!
+//! Every experiment prints CSV blocks (machine-readable, one per series)
+//! and a human summary; EXPERIMENTS.md records paper-vs-measured.
+
+pub mod figures;
+pub mod comm_table;
+pub mod ablations;
+pub mod report;
+
+/// Experiment scale: paper-sized or CI-sized.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    /// The paper's setup (m=50, n=800/600, full iteration budget).
+    Full,
+    /// Shrunk setup for tests and quick runs (same qualitative shapes).
+    Small,
+}
+
+impl Scale {
+    /// Parse from CLI string.
+    pub fn parse(s: &str) -> Option<Scale> {
+        match s {
+            "full" => Some(Scale::Full),
+            "small" => Some(Scale::Small),
+            _ => None,
+        }
+    }
+}

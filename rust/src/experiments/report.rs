@@ -1,0 +1,62 @@
+//! Report emission: CSV blocks to stdout + optional files under
+//! `results/`.
+
+use crate::algo::metrics::RunRecorder;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Where experiment outputs land (`$DEEPCA_RESULTS` or `./results`).
+pub fn results_dir() -> PathBuf {
+    std::env::var_os("DEEPCA_RESULTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("results"))
+}
+
+/// Write `content` to `<results>/<name>` (creating directories).
+pub fn write_result(name: &str, content: &str) -> Result<PathBuf> {
+    let dir = results_dir();
+    std::fs::create_dir_all(&dir).context("creating results dir")?;
+    let path = dir.join(name);
+    std::fs::write(&path, content).with_context(|| format!("writing {}", path.display()))?;
+    Ok(path)
+}
+
+/// Print a labelled CSV block for one series (stdout protocol used by
+/// the plotting script and the bench logs).
+pub fn print_series(experiment: &str, label: &str, rec: &RunRecorder) {
+    println!("### series experiment={experiment} label={label}");
+    print!("{}", rec.to_csv());
+    println!("### end");
+}
+
+/// Print + persist one series.
+pub fn emit_series(experiment: &str, label: &str, rec: &RunRecorder) -> Result<()> {
+    print_series(experiment, label, rec);
+    let fname = format!(
+        "{experiment}_{}.csv",
+        label.replace(['=', ' ', '(', ')', ','], "_")
+    );
+    write_result(&fname, &rec.to_csv())?;
+    Ok(())
+}
+
+/// Print + persist a one-off text table.
+pub fn emit_table(experiment: &str, text: &str, path: &Path) -> Result<()> {
+    println!("{text}");
+    write_result(&path.display().to_string(), text)?;
+    let _ = experiment;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_result_roundtrip() {
+        std::env::set_var("DEEPCA_RESULTS", std::env::temp_dir().join("deepca_results_test"));
+        let p = write_result("unit.csv", "a,b\n1,2\n").unwrap();
+        assert_eq!(std::fs::read_to_string(p).unwrap(), "a,b\n1,2\n");
+        std::env::remove_var("DEEPCA_RESULTS");
+    }
+}

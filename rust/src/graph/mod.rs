@@ -1,0 +1,14 @@
+//! Network topology substrate.
+//!
+//! The paper assumes agents on a connected undirected graph with a gossip
+//! weight matrix `L` that is symmetric, doubly stochastic, `0 ⪯ L ⪯ I`, and
+//! `null(I − L) = span(1)` (§2.2). This module provides:
+//!
+//! - [`topology`] — graph generators (the paper's Erdős–Rényi p=0.5 setup
+//!   plus ring/path/star/grid/complete/barbell for ablations);
+//! - [`gossip`] — the paper's weight construction `L = I − M/λ_max(M)`
+//!   (M = Laplacian), Metropolis–Hastings weights as an alternative, and
+//!   the spectral quantities (λ₂, `1 − λ₂`) driving FastMix.
+
+pub mod topology;
+pub mod gossip;

@@ -1,0 +1,294 @@
+//! Undirected graph generators for the agent network.
+//!
+//! The paper's experiments use a random (Erdős–Rényi) network with edge
+//! probability p = 0.5 over m = 50 agents. The ablation benches sweep the
+//! other families to probe how `1 − λ₂(L)` (graph connectivity) drives the
+//! required consensus rounds K — Theorem 1's `1/√(1−λ₂)` factor.
+
+use crate::util::rng::Rng;
+
+/// Undirected simple graph on `n` nodes, adjacency stored both as a list
+/// and a lookup set.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    n: usize,
+    /// Sorted neighbor lists.
+    adj: Vec<Vec<usize>>,
+    /// Human-readable family name (for reports).
+    pub name: String,
+}
+
+impl Topology {
+    fn from_edges(n: usize, edges: &[(usize, usize)], name: &str) -> Self {
+        let mut adj = vec![Vec::new(); n];
+        for &(a, b) in edges {
+            assert!(a < n && b < n && a != b, "bad edge ({a},{b})");
+            if !adj[a].contains(&b) {
+                adj[a].push(b);
+                adj[b].push(a);
+            }
+        }
+        for l in &mut adj {
+            l.sort_unstable();
+        }
+        Topology { n, adj, name: name.to_string() }
+    }
+
+    /// Erdős–Rényi G(n, p), retried until connected (paper setup: p=0.5).
+    pub fn erdos_renyi(n: usize, p: f64, rng: &mut Rng) -> Self {
+        assert!(n >= 2);
+        for attempt in 0..1000 {
+            let mut edges = Vec::new();
+            for i in 0..n {
+                for j in (i + 1)..n {
+                    if rng.chance(p) {
+                        edges.push((i, j));
+                    }
+                }
+            }
+            let t = Topology::from_edges(n, &edges, &format!("erdos_renyi(p={p})"));
+            if t.is_connected() {
+                return t;
+            }
+            let _ = attempt;
+        }
+        panic!("erdos_renyi: failed to draw a connected graph (n={n}, p={p})");
+    }
+
+    /// Cycle graph.
+    pub fn ring(n: usize) -> Self {
+        let edges: Vec<_> = (0..n).map(|i| (i, (i + 1) % n)).collect();
+        Topology::from_edges(n, &edges, "ring")
+    }
+
+    /// Path graph (worst-case diameter).
+    pub fn path(n: usize) -> Self {
+        let edges: Vec<_> = (0..n - 1).map(|i| (i, i + 1)).collect();
+        Topology::from_edges(n, &edges, "path")
+    }
+
+    /// Star graph centered at node 0.
+    pub fn star(n: usize) -> Self {
+        let edges: Vec<_> = (1..n).map(|i| (0, i)).collect();
+        Topology::from_edges(n, &edges, "star")
+    }
+
+    /// Complete graph.
+    pub fn complete(n: usize) -> Self {
+        let mut edges = Vec::new();
+        for i in 0..n {
+            for j in (i + 1)..n {
+                edges.push((i, j));
+            }
+        }
+        Topology::from_edges(n, &edges, "complete")
+    }
+
+    /// `rows × cols` 2-D grid.
+    pub fn grid(rows: usize, cols: usize) -> Self {
+        let n = rows * cols;
+        let mut edges = Vec::new();
+        for r in 0..rows {
+            for c in 0..cols {
+                let id = r * cols + c;
+                if c + 1 < cols {
+                    edges.push((id, id + 1));
+                }
+                if r + 1 < rows {
+                    edges.push((id, id + cols));
+                }
+            }
+        }
+        Topology::from_edges(n, &edges, &format!("grid({rows}x{cols})"))
+    }
+
+    /// Two complete cliques of size n/2 joined by a single bridge edge —
+    /// pathological connectivity (tiny `1 − λ₂`), stress-tests FastMix.
+    pub fn barbell(n: usize) -> Self {
+        assert!(n >= 4 && n % 2 == 0);
+        let h = n / 2;
+        let mut edges = Vec::new();
+        for i in 0..h {
+            for j in (i + 1)..h {
+                edges.push((i, j));
+                edges.push((h + i, h + j));
+            }
+        }
+        edges.push((h - 1, h));
+        Topology::from_edges(n, &edges, "barbell")
+    }
+
+    /// Number of nodes.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Neighbors of node `i` (sorted).
+    pub fn neighbors(&self, i: usize) -> &[usize] {
+        &self.adj[i]
+    }
+
+    /// Degree of node `i`.
+    pub fn degree(&self, i: usize) -> usize {
+        self.adj[i].len()
+    }
+
+    /// Total number of undirected edges.
+    pub fn num_edges(&self) -> usize {
+        self.adj.iter().map(|l| l.len()).sum::<usize>() / 2
+    }
+
+    /// All undirected edges (i < j).
+    pub fn edges(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::with_capacity(self.num_edges());
+        for i in 0..self.n {
+            for &j in &self.adj[i] {
+                if i < j {
+                    out.push((i, j));
+                }
+            }
+        }
+        out
+    }
+
+    /// BFS connectivity check.
+    pub fn is_connected(&self) -> bool {
+        if self.n == 0 {
+            return true;
+        }
+        let mut seen = vec![false; self.n];
+        let mut stack = vec![0usize];
+        seen[0] = true;
+        let mut count = 1;
+        while let Some(u) = stack.pop() {
+            for &v in &self.adj[u] {
+                if !seen[v] {
+                    seen[v] = true;
+                    count += 1;
+                    stack.push(v);
+                }
+            }
+        }
+        count == self.n
+    }
+
+    /// Graph diameter via BFS from every node (small n only).
+    pub fn diameter(&self) -> usize {
+        let mut diam = 0;
+        for s in 0..self.n {
+            let mut dist = vec![usize::MAX; self.n];
+            dist[s] = 0;
+            let mut queue = std::collections::VecDeque::from([s]);
+            while let Some(u) = queue.pop_front() {
+                for &v in &self.adj[u] {
+                    if dist[v] == usize::MAX {
+                        dist[v] = dist[u] + 1;
+                        queue.push_back(v);
+                    }
+                }
+            }
+            diam = diam.max(*dist.iter().max().unwrap());
+        }
+        diam
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_structure() {
+        let t = Topology::ring(6);
+        assert_eq!(t.n(), 6);
+        assert_eq!(t.num_edges(), 6);
+        for i in 0..6 {
+            assert_eq!(t.degree(i), 2);
+        }
+        assert!(t.is_connected());
+        assert_eq!(t.diameter(), 3);
+    }
+
+    #[test]
+    fn path_structure() {
+        let t = Topology::path(5);
+        assert_eq!(t.num_edges(), 4);
+        assert_eq!(t.degree(0), 1);
+        assert_eq!(t.degree(2), 2);
+        assert_eq!(t.diameter(), 4);
+    }
+
+    #[test]
+    fn star_structure() {
+        let t = Topology::star(7);
+        assert_eq!(t.degree(0), 6);
+        for i in 1..7 {
+            assert_eq!(t.degree(i), 1);
+        }
+        assert_eq!(t.diameter(), 2);
+    }
+
+    #[test]
+    fn complete_structure() {
+        let t = Topology::complete(5);
+        assert_eq!(t.num_edges(), 10);
+        assert_eq!(t.diameter(), 1);
+    }
+
+    #[test]
+    fn grid_structure() {
+        let t = Topology::grid(3, 4);
+        assert_eq!(t.n(), 12);
+        assert_eq!(t.num_edges(), 3 * 3 + 2 * 4); // horizontal + vertical
+        assert!(t.is_connected());
+        assert_eq!(t.diameter(), 2 + 3);
+    }
+
+    #[test]
+    fn barbell_structure() {
+        let t = Topology::barbell(10);
+        assert!(t.is_connected());
+        // Two K5s (10 edges each) + bridge.
+        assert_eq!(t.num_edges(), 21);
+    }
+
+    #[test]
+    fn erdos_renyi_connected_and_symmetric() {
+        let mut rng = Rng::seed_from(61);
+        let t = Topology::erdos_renyi(50, 0.5, &mut rng);
+        assert!(t.is_connected());
+        for i in 0..50 {
+            for &j in t.neighbors(i) {
+                assert!(t.neighbors(j).contains(&i), "asymmetric adjacency");
+                assert_ne!(i, j, "self loop");
+            }
+        }
+        // p=0.5 on 50 nodes: expected degree ≈ 24.5.
+        let mean_deg: f64 =
+            (0..50).map(|i| t.degree(i) as f64).sum::<f64>() / 50.0;
+        assert!((mean_deg - 24.5).abs() < 6.0, "mean degree {mean_deg}");
+    }
+
+    #[test]
+    fn erdos_renyi_deterministic_per_seed() {
+        let t1 = Topology::erdos_renyi(20, 0.3, &mut Rng::seed_from(5));
+        let t2 = Topology::erdos_renyi(20, 0.3, &mut Rng::seed_from(5));
+        assert_eq!(t1.edges(), t2.edges());
+    }
+
+    #[test]
+    fn edges_are_canonical() {
+        let t = Topology::ring(4);
+        for (i, j) in t.edges() {
+            assert!(i < j);
+        }
+        assert_eq!(t.edges().len(), t.num_edges());
+    }
+
+    #[test]
+    fn disconnected_detected() {
+        // Two disjoint edges on 4 nodes.
+        let t = Topology::from_edges(4, &[(0, 1), (2, 3)], "manual");
+        assert!(!t.is_connected());
+    }
+}

@@ -1,0 +1,73 @@
+//! # DeEPCA — Decentralized Exact PCA with Linear Convergence Rate
+//!
+//! Production-quality reproduction of *Ye & Zhang, "DeEPCA: Decentralized
+//! Exact PCA with Linear Convergence Rate" (2021)* as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! - **Layer 3 (this crate)** — the decentralized coordinator: agents,
+//!   gossip communication (FastMix), the DeEPCA algorithm and its baselines
+//!   (DePCA, local power method, centralized PCA), metrics, experiments.
+//! - **Layer 2** — the per-agent compute graph authored in JAX
+//!   (`python/compile/model.py`), AOT-lowered to HLO text artifacts.
+//! - **Layer 1** — Pallas kernels (`python/compile/kernels/`) for the
+//!   tracking-update / power-step hot paths, lowered into the same HLO.
+//!
+//! Python never runs at request time: [`runtime`] loads the pre-built
+//! artifacts through the PJRT C API (the `xla` crate) and executes them
+//! from the Rust hot path. A pure-Rust [`linalg`] backend implements the
+//! identical local step, so everything also runs without artifacts and the
+//! two backends are cross-checked in integration tests.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use deepca::prelude::*;
+//!
+//! // Synthetic 'w8a'-like dataset split across 10 agents (paper Eqn. 5.1).
+//! let data = deepca::data::synthetic::w8a_like_scaled(10, 80, &mut Rng::seed_from(7));
+//! let problem = Problem::from_dataset(&data, 10, 5);
+//! let net = Topology::erdos_renyi(10, 0.5, &mut Rng::seed_from(13));
+//!
+//! let cfg = DeepcaConfig { consensus_rounds: 8, max_iters: 60, ..Default::default() };
+//! let mut rec = RunRecorder::every_iteration();
+//! let out = deepca::algo::deepca::run_dense(&problem, &net, &cfg, &mut rec);
+//! println!("tan(theta) after {} iters: {:.3e}", out.iters, out.final_tan_theta);
+//! ```
+//!
+//! See `examples/` for runnable end-to-end drivers and `DESIGN.md` for the
+//! full system inventory.
+
+pub mod util;
+pub mod linalg;
+pub mod graph;
+pub mod data;
+pub mod consensus;
+pub mod algo;
+pub mod coordinator;
+pub mod runtime;
+pub mod config;
+pub mod cli;
+pub mod experiments;
+pub mod testing;
+pub mod benchkit;
+
+/// Convenience re-exports for examples and downstream users.
+///
+/// Algorithm *modules* are aliased (`deepca_algo`, `depca_algo`,
+/// `centralized`) so a glob import never shadows the crate name.
+pub mod prelude {
+    pub use crate::algo::centralized;
+    pub use crate::algo::centralized::CentralizedOutput;
+    pub use crate::algo::deepca as deepca_algo;
+    pub use crate::algo::deepca::DeepcaConfig;
+    pub use crate::algo::depca as depca_algo;
+    pub use crate::algo::depca::{DepcaConfig, KPolicy};
+    pub use crate::algo::metrics::{IterationRecord, RunOutput, RunRecorder};
+    pub use crate::algo::problem::Problem;
+    pub use crate::consensus::fastmix::FastMix;
+    pub use crate::coordinator::leader::{Algorithm, EngineKind, Leader};
+    pub use crate::graph::gossip::GossipMatrix;
+    pub use crate::graph::topology::Topology;
+    pub use crate::linalg::Mat;
+    pub use crate::util::rng::Rng;
+}

@@ -1,0 +1,226 @@
+//! Symmetric eigendecomposition via the cyclic Jacobi method.
+//!
+//! Used for the *ground truth* the paper's metrics need: the exact top-k
+//! principal subspace `U` of the aggregate `A = (1/m) Σ A_j` (Definition 1
+//! angles are always measured against this U), as well as λ_k / λ_{k+1}
+//! gap diagnostics and λ₂ of the gossip matrix.
+//!
+//! Jacobi is O(d³) per sweep and converges quadratically; at the paper's
+//! d ≤ 300 a full decomposition takes well under a second and is accurate
+//! to fp precision — exactly what a ground-truth oracle should be.
+
+use super::matrix::Mat;
+
+/// Result of a symmetric eigendecomposition, eigenvalues sorted descending.
+#[derive(Clone, Debug)]
+pub struct EigSym {
+    /// Eigenvalues in descending order.
+    pub values: Vec<f64>,
+    /// Column `i` of `vectors` is the eigenvector for `values[i]`.
+    pub vectors: Mat,
+}
+
+impl EigSym {
+    /// The top-k eigenvector block (d×k), the paper's `U`.
+    pub fn top_k(&self, k: usize) -> Mat {
+        self.vectors.cols_range(0, k)
+    }
+
+    /// Relative spectral gap `(λ_k − λ_{k+1}) / λ_k` used in Theorem 1.
+    pub fn relative_gap(&self, k: usize) -> f64 {
+        (self.values[k - 1] - self.values[k]) / self.values[k - 1]
+    }
+}
+
+/// Eigendecomposition of a symmetric matrix by cyclic Jacobi rotations.
+///
+/// `a` must be symmetric (asserted up to 1e-8 relative). Converges when the
+/// off-diagonal Frobenius mass falls below `1e-14 * ||A||_F` or after 50
+/// sweeps (never observed to need more than ~12 at d=300).
+pub fn eig_sym(a: &Mat) -> EigSym {
+    let n = a.rows();
+    assert_eq!(a.rows(), a.cols(), "eig_sym needs a square matrix");
+    let scale = a.max_abs().max(1e-300);
+    for i in 0..n {
+        for j in (i + 1)..n {
+            assert!(
+                (a[(i, j)] - a[(j, i)]).abs() <= 1e-8 * scale,
+                "eig_sym: matrix not symmetric at ({i},{j})"
+            );
+        }
+    }
+
+    let mut m = a.clone();
+    m.symmetrize();
+    let mut v = Mat::eye(n);
+    let fro = m.fro_norm().max(1e-300);
+    let tol = 1e-14 * fro;
+
+    for _sweep in 0..50 {
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m[(i, j)] * m[(i, j)];
+            }
+        }
+        if (2.0 * off).sqrt() <= tol {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[(p, q)];
+                if apq.abs() <= 1e-300 {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(q, q)];
+                // Stable rotation computation (Golub & Van Loan §8.5).
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = if theta >= 0.0 {
+                    1.0 / (theta + (1.0 + theta * theta).sqrt())
+                } else {
+                    -1.0 / (-theta + (1.0 + theta * theta).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+
+                // M := Jᵀ M J, applied to rows/cols p and q.
+                for i in 0..n {
+                    let mip = m[(i, p)];
+                    let miq = m[(i, q)];
+                    m[(i, p)] = c * mip - s * miq;
+                    m[(i, q)] = s * mip + c * miq;
+                }
+                for i in 0..n {
+                    let mpi = m[(p, i)];
+                    let mqi = m[(q, i)];
+                    m[(p, i)] = c * mpi - s * mqi;
+                    m[(q, i)] = s * mpi + c * mqi;
+                }
+                // Accumulate eigenvectors.
+                for i in 0..n {
+                    let vip = v[(i, p)];
+                    let viq = v[(i, q)];
+                    v[(i, p)] = c * vip - s * viq;
+                    v[(i, q)] = s * vip + c * viq;
+                }
+            }
+        }
+    }
+
+    // Collect and sort descending.
+    let mut pairs: Vec<(f64, usize)> = (0..n).map(|i| (m[(i, i)], i)).collect();
+    pairs.sort_by(|x, y| y.0.partial_cmp(&x.0).unwrap());
+    let values: Vec<f64> = pairs.iter().map(|p| p.0).collect();
+    let mut vectors = Mat::zeros(n, n);
+    for (newj, &(_, oldj)) in pairs.iter().enumerate() {
+        for i in 0..n {
+            vectors[(i, newj)] = v[(i, oldj)];
+        }
+    }
+    EigSym { values, vectors }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_sym_with_spectrum(evals: &[f64], rng: &mut Rng) -> (Mat, Mat) {
+        let n = evals.len();
+        let q = Mat::rand_orthonormal(n, n, rng);
+        let d = Mat::diag(evals);
+        let a = q.matmul(&d).matmul(&q.t());
+        (a, q)
+    }
+
+    #[test]
+    fn eig_diagonal() {
+        let a = Mat::diag(&[3.0, 1.0, 2.0]);
+        let e = eig_sym(&a);
+        assert_eq!(e.values.len(), 3);
+        assert!((e.values[0] - 3.0).abs() < 1e-12);
+        assert!((e.values[1] - 2.0).abs() < 1e-12);
+        assert!((e.values[2] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eig_2x2_analytic() {
+        // [[2,1],[1,2]] has eigenvalues 3 and 1.
+        let a = Mat::from_rows(2, 2, &[2.0, 1.0, 1.0, 2.0]);
+        let e = eig_sym(&a);
+        assert!((e.values[0] - 3.0).abs() < 1e-12);
+        assert!((e.values[1] - 1.0).abs() < 1e-12);
+        // Eigenvector of 3 is (1,1)/sqrt(2) up to sign.
+        let v0 = e.vectors.col(0);
+        assert!((v0[0].abs() - std::f64::consts::FRAC_1_SQRT_2).abs() < 1e-10);
+        assert!((v0[0] - v0[1]).abs() < 1e-10);
+    }
+
+    #[test]
+    fn eig_recovers_planted_spectrum() {
+        let mut rng = Rng::seed_from(21);
+        let evals = [10.0, 7.0, 5.5, 2.0, 1.0, 0.5, 0.1, 0.0];
+        let (a, _q) = random_sym_with_spectrum(&evals, &mut rng);
+        let e = eig_sym(&a);
+        for (got, want) in e.values.iter().zip(&evals) {
+            assert!((got - want).abs() < 1e-10, "got {got}, want {want}");
+        }
+    }
+
+    #[test]
+    fn eig_residual_small() {
+        let mut rng = Rng::seed_from(22);
+        let g = Mat::randn(40, 40, &mut rng);
+        let mut a = g.t_matmul(&g); // PSD
+        a.symmetrize();
+        let e = eig_sym(&a);
+        // ||A V - V D|| small
+        let d = Mat::diag(&e.values);
+        let lhs = a.matmul(&e.vectors);
+        let rhs = e.vectors.matmul(&d);
+        assert!((&lhs - &rhs).fro_norm() < 1e-9 * a.fro_norm().max(1.0));
+        // V orthonormal
+        let gvv = e.vectors.t_matmul(&e.vectors);
+        assert!((&gvv - &Mat::eye(40)).fro_norm() < 1e-10);
+    }
+
+    #[test]
+    fn top_k_spans_planted_subspace() {
+        let mut rng = Rng::seed_from(23);
+        let evals = [9.0, 8.0, 7.0, 0.3, 0.2, 0.1];
+        let (a, q) = random_sym_with_spectrum(&evals, &mut rng);
+        let e = eig_sym(&a);
+        let u = e.top_k(3);
+        let planted = q.cols_range(0, 3);
+        // Projector distance: ||UUᵀ − PPᵀ|| should vanish.
+        let pu = u.matmul(&u.t());
+        let pp = planted.matmul(&planted.t());
+        assert!((&pu - &pp).fro_norm() < 1e-9);
+    }
+
+    #[test]
+    fn relative_gap_matches() {
+        let e = EigSym { values: vec![4.0, 2.0, 1.0], vectors: Mat::eye(3) };
+        assert!((e.relative_gap(1) - 0.5).abs() < 1e-15);
+        assert!((e.relative_gap(2) - 0.5).abs() < 1e-15);
+    }
+
+    #[test]
+    #[should_panic(expected = "not symmetric")]
+    fn eig_rejects_asymmetric() {
+        let a = Mat::from_rows(2, 2, &[1.0, 2.0, 3.0, 4.0]);
+        let _ = eig_sym(&a);
+    }
+
+    #[test]
+    fn eig_handles_repeated_eigenvalues() {
+        let mut rng = Rng::seed_from(24);
+        let evals = [5.0, 5.0, 1.0, 1.0];
+        let (a, _q) = random_sym_with_spectrum(&evals, &mut rng);
+        let e = eig_sym(&a);
+        for (got, want) in e.values.iter().zip(&evals) {
+            assert!((got - want).abs() < 1e-10);
+        }
+    }
+}

@@ -1,0 +1,551 @@
+//! Row-major dense `f64` matrix with the operations the DeEPCA stack needs.
+//!
+//! Sized for the paper's regime (d ≤ a few hundred): matmul uses an
+//! `i-k-j` loop order so the inner loop is a contiguous fused
+//! multiply-add over the output row — autovectorizes well and needs no
+//! explicit blocking at these sizes (see EXPERIMENTS.md §Perf for the
+//! measured comparison against the naive `i-j-k` order).
+
+use crate::util::rng::Rng;
+use std::fmt;
+use std::ops::{Add, Mul, Sub};
+
+/// Dense row-major matrix of `f64`.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Mat {
+    // ---------------------------------------------------------------- ctors
+
+    /// Zero matrix of shape (rows, cols).
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity matrix of size n.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a closure over (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// Build from a row-major slice.
+    pub fn from_rows(rows: usize, cols: usize, data: &[f64]) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Mat { rows, cols, data: data.to_vec() }
+    }
+
+    /// Take ownership of a row-major vector.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Mat { rows, cols, data }
+    }
+
+    /// i.i.d. standard normal entries.
+    pub fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        Mat::from_fn(rows, cols, |_, _| rng.normal())
+    }
+
+    /// Random matrix with orthonormal columns (QR of a Gaussian).
+    pub fn rand_orthonormal(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        assert!(cols <= rows);
+        let g = Mat::randn(rows, cols, rng);
+        let (q, _r) = super::qr::thin_qr(&g);
+        q
+    }
+
+    /// Diagonal matrix from a slice.
+    pub fn diag(d: &[f64]) -> Self {
+        let mut m = Mat::zeros(d.len(), d.len());
+        for (i, &v) in d.iter().enumerate() {
+            m[(i, i)] = v;
+        }
+        m
+    }
+
+    // ------------------------------------------------------------ accessors
+
+    /// Number of rows.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns.
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// (rows, cols).
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Underlying row-major data.
+    #[inline]
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Mutable underlying row-major data.
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Borrow row `i` as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutably borrow row `i`.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Copy column `j` out.
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    /// Overwrite column `j`.
+    pub fn set_col(&mut self, j: usize, v: &[f64]) {
+        assert_eq!(v.len(), self.rows);
+        for i in 0..self.rows {
+            self[(i, j)] = v[i];
+        }
+    }
+
+    /// Columns `j0..j1` as a new matrix.
+    pub fn cols_range(&self, j0: usize, j1: usize) -> Mat {
+        assert!(j0 <= j1 && j1 <= self.cols);
+        Mat::from_fn(self.rows, j1 - j0, |i, j| self[(i, j0 + j)])
+    }
+
+    // ----------------------------------------------------------- arithmetic
+
+    /// Transpose.
+    pub fn t(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out[(j, i)] = self[(i, j)];
+            }
+        }
+        out
+    }
+
+    /// Matrix product `self * other`.
+    ///
+    /// The DeEPCA hot path is `A(d×d) @ W(d×k)` with k ≤ 16: that case
+    /// dispatches to a register-blocked kernel (`M` output accumulators
+    /// live in registers, one streaming pass over the A row and the B
+    /// panel — ~8× the naive i-k-j loop, see EXPERIMENTS.md §Perf).
+    /// Wider results fall back to the cache-friendly i-k-j order.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let m = other.cols;
+        match m {
+            1 => self.matmul_thin::<1>(other),
+            2 => self.matmul_thin::<2>(other),
+            3 => self.matmul_thin::<3>(other),
+            4 => self.matmul_thin::<4>(other),
+            5 => self.matmul_thin::<5>(other),
+            6 => self.matmul_thin::<6>(other),
+            7 => self.matmul_thin::<7>(other),
+            8 => self.matmul_thin::<8>(other),
+            9..=16 => self.matmul_thin_pair(other),
+            _ => self.matmul_wide(other),
+        }
+    }
+
+    /// Register-blocked kernel for `cols == M` (compile-time width):
+    /// `M` output accumulators live in registers, one streaming pass
+    /// over the A row per output row. (A transposed-panel dot-product
+    /// variant with 4-wide unrolling was measured 10–25% *slower* at
+    /// these shapes — see EXPERIMENTS.md §Perf — and reverted.)
+    fn matmul_thin<const M: usize>(&self, other: &Mat) -> Mat {
+        let (n, k) = (self.rows, self.cols);
+        debug_assert_eq!(other.cols, M);
+        let mut out = Mat::zeros(n, M);
+        // Two A-rows per pass: 2·M independent accumulator chains hide
+        // FMA latency, and each B row is loaded once for both outputs.
+        let mut i = 0;
+        while i + 1 < n {
+            let arow0 = &self.data[i * k..(i + 1) * k];
+            let arow1 = &self.data[(i + 1) * k..(i + 2) * k];
+            let mut acc0 = [0.0f64; M];
+            let mut acc1 = [0.0f64; M];
+            for p in 0..k {
+                let a0 = arow0[p];
+                let a1 = arow1[p];
+                let brow = &other.data[p * M..(p + 1) * M];
+                for j in 0..M {
+                    acc0[j] += a0 * brow[j];
+                    acc1[j] += a1 * brow[j];
+                }
+            }
+            out.data[i * M..(i + 1) * M].copy_from_slice(&acc0);
+            out.data[(i + 1) * M..(i + 2) * M].copy_from_slice(&acc1);
+            i += 2;
+        }
+        if i < n {
+            let arow = self.row(i);
+            let mut acc = [0.0f64; M];
+            for (p, &a) in arow.iter().enumerate().take(k) {
+                let brow = &other.data[p * M..(p + 1) * M];
+                for j in 0..M {
+                    acc[j] += a * brow[j];
+                }
+            }
+            out.data[i * M..(i + 1) * M].copy_from_slice(&acc);
+        }
+        out
+    }
+
+    /// 9..=16 columns: split into two ≤8-wide passes (keeps accumulators
+    /// in registers without 16 monomorphized variants).
+    fn matmul_thin_pair(&self, other: &Mat) -> Mat {
+        let half = other.cols / 2;
+        let left = self.matmul(&other.cols_range(0, half));
+        let right = self.matmul(&other.cols_range(half, other.cols));
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            out.row_mut(i)[..half].copy_from_slice(left.row(i));
+            out.row_mut(i)[half..].copy_from_slice(right.row(i));
+        }
+        out
+    }
+
+    /// General i-k-j product (contiguous FMA inner loop).
+    fn matmul_wide(&self, other: &Mat) -> Mat {
+        let (n, k, m) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(n, m);
+        for i in 0..n {
+            let arow = self.row(i);
+            let orow = out.row_mut(i);
+            for (p, &a) in arow.iter().enumerate().take(k) {
+                if a == 0.0 {
+                    continue; // sparse-ish operands (binary features)
+                }
+                let brow = &other.data[p * m..(p + 1) * m];
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// `selfᵀ * other` without materializing the transpose.
+    pub fn t_matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows, "t_matmul shape mismatch");
+        let (n, k, m) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(k, m);
+        for p in 0..n {
+            let arow = self.row(p);
+            let brow = other.row(p);
+            for (i, &a) in arow.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = &mut out.data[i * m..(i + 1) * m];
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// Matrix-vector product.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, x.len());
+        (0..self.rows)
+            .map(|i| self.row(i).iter().zip(x).map(|(a, b)| a * b).sum())
+            .collect()
+    }
+
+    /// In-place `self += alpha * other`.
+    pub fn axpy(&mut self, alpha: f64, other: &Mat) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, &b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// In-place scale.
+    pub fn scale(&mut self, alpha: f64) {
+        for a in &mut self.data {
+            *a *= alpha;
+        }
+    }
+
+    /// `alpha * self` as a new matrix.
+    pub fn scaled(&self, alpha: f64) -> Mat {
+        let mut out = self.clone();
+        out.scale(alpha);
+        out
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Max absolute entry.
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |m, &x| m.max(x.abs()))
+    }
+
+    /// Frobenius inner product <self, other>.
+    pub fn dot(&self, other: &Mat) -> f64 {
+        assert_eq!(self.shape(), other.shape());
+        self.data.iter().zip(&other.data).map(|(a, b)| a * b).sum()
+    }
+
+    /// Symmetrize in place: `(A + Aᵀ)/2` (counters fp drift on PSD matrices).
+    pub fn symmetrize(&mut self) {
+        assert_eq!(self.rows, self.cols);
+        for i in 0..self.rows {
+            for j in (i + 1)..self.cols {
+                let v = 0.5 * (self[(i, j)] + self[(j, i)]);
+                self[(i, j)] = v;
+                self[(j, i)] = v;
+            }
+        }
+    }
+
+    /// True iff all entries are finite.
+    pub fn is_finite(&self) -> bool {
+        self.data.iter().all(|x| x.is_finite())
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl Add for &Mat {
+    type Output = Mat;
+    fn add(self, rhs: &Mat) -> Mat {
+        let mut out = self.clone();
+        out.axpy(1.0, rhs);
+        out
+    }
+}
+
+impl Sub for &Mat {
+    type Output = Mat;
+    fn sub(self, rhs: &Mat) -> Mat {
+        let mut out = self.clone();
+        out.axpy(-1.0, rhs);
+        out
+    }
+}
+
+impl Mul for &Mat {
+    type Output = Mat;
+    fn mul(self, rhs: &Mat) -> Mat {
+        self.matmul(rhs)
+    }
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
+        let show_rows = self.rows.min(6);
+        for i in 0..show_rows {
+            let cells: Vec<String> = self
+                .row(i)
+                .iter()
+                .take(8)
+                .map(|v| format!("{v:>10.4}"))
+                .collect();
+            let ell = if self.cols > 8 { " …" } else { "" };
+            writeln!(f, "  [{}{}]", cells.join(", "), ell)?;
+        }
+        if self.rows > show_rows {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn approx(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() <= tol
+    }
+
+    #[test]
+    fn eye_matmul_identity() {
+        let mut r = Rng::seed_from(1);
+        let a = Mat::randn(5, 5, &mut r);
+        let i = Mat::eye(5);
+        let prod = a.matmul(&i);
+        assert!((&prod - &a).fro_norm() < 1e-14);
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        let a = Mat::from_rows(2, 3, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let b = Mat::from_rows(3, 2, &[7.0, 8.0, 9.0, 10.0, 11.0, 12.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.shape(), (2, 2));
+        assert_eq!(c[(0, 0)], 58.0);
+        assert_eq!(c[(0, 1)], 64.0);
+        assert_eq!(c[(1, 0)], 139.0);
+        assert_eq!(c[(1, 1)], 154.0);
+    }
+
+    #[test]
+    fn t_matmul_matches_explicit_transpose() {
+        let mut r = Rng::seed_from(2);
+        let a = Mat::randn(7, 4, &mut r);
+        let b = Mat::randn(7, 3, &mut r);
+        let fast = a.t_matmul(&b);
+        let slow = a.t().matmul(&b);
+        assert!((&fast - &slow).fro_norm() < 1e-12);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut r = Rng::seed_from(3);
+        let a = Mat::randn(6, 4, &mut r);
+        assert!((&a.t().t() - &a).fro_norm() == 0.0);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut r = Rng::seed_from(4);
+        let a = Mat::randn(5, 3, &mut r);
+        let x = vec![1.0, -2.0, 0.5];
+        let xm = Mat::from_vec(3, 1, x.clone());
+        let via_mm = a.matmul(&xm);
+        let via_mv = a.matvec(&x);
+        for i in 0..5 {
+            assert!(approx(via_mm[(i, 0)], via_mv[i], 1e-14));
+        }
+    }
+
+    #[test]
+    fn axpy_and_ops() {
+        let a = Mat::from_rows(2, 2, &[1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_rows(2, 2, &[10.0, 20.0, 30.0, 40.0]);
+        let mut c = a.clone();
+        c.axpy(0.5, &b);
+        assert_eq!(c[(1, 1)], 24.0);
+        let s = &a + &b;
+        assert_eq!(s[(0, 0)], 11.0);
+        let d = &b - &a;
+        assert_eq!(d[(0, 1)], 18.0);
+    }
+
+    #[test]
+    fn fro_norm_and_dot() {
+        let a = Mat::from_rows(1, 3, &[3.0, 4.0, 0.0]);
+        assert!(approx(a.fro_norm(), 5.0, 1e-15));
+        let b = Mat::from_rows(1, 3, &[1.0, 1.0, 1.0]);
+        assert!(approx(a.dot(&b), 7.0, 1e-15));
+    }
+
+    #[test]
+    fn col_roundtrip() {
+        let mut r = Rng::seed_from(6);
+        let mut a = Mat::randn(4, 3, &mut r);
+        let c = a.col(1);
+        a.set_col(1, &c);
+        assert_eq!(a.col(1), c);
+    }
+
+    #[test]
+    fn cols_range_slices() {
+        let a = Mat::from_rows(2, 4, &[0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0]);
+        let s = a.cols_range(1, 3);
+        assert_eq!(s.shape(), (2, 2));
+        assert_eq!(s[(0, 0)], 1.0);
+        assert_eq!(s[(1, 1)], 6.0);
+    }
+
+    #[test]
+    fn rand_orthonormal_is_orthonormal() {
+        let mut r = Rng::seed_from(8);
+        let q = Mat::rand_orthonormal(20, 5, &mut r);
+        let g = q.t_matmul(&q);
+        assert!((&g - &Mat::eye(5)).fro_norm() < 1e-12);
+    }
+
+    #[test]
+    fn symmetrize_fixes_drift() {
+        let mut a = Mat::from_rows(2, 2, &[1.0, 2.0, 2.0 + 1e-10, 3.0]);
+        a.symmetrize();
+        assert_eq!(a[(0, 1)], a[(1, 0)]);
+    }
+
+    #[test]
+    fn diag_builds() {
+        let d = Mat::diag(&[1.0, 2.0, 3.0]);
+        assert_eq!(d[(1, 1)], 2.0);
+        assert_eq!(d[(0, 1)], 0.0);
+    }
+
+    #[test]
+    fn thin_and_wide_matmul_agree() {
+        let mut r = Rng::seed_from(60);
+        for m in [1usize, 2, 5, 8, 9, 12, 16, 17, 40] {
+            let a = Mat::randn(23, 31, &mut r);
+            let b = Mat::randn(31, m, &mut r);
+            let fast = a.matmul(&b);
+            let slow = a.matmul_wide(&b);
+            assert!(
+                (&fast - &slow).fro_norm() < 1e-12 * (1.0 + slow.fro_norm()),
+                "cols={m}"
+            );
+        }
+    }
+
+    #[test]
+    fn is_finite_detects_nan() {
+        let mut a = Mat::zeros(2, 2);
+        assert!(a.is_finite());
+        a[(0, 1)] = f64::NAN;
+        assert!(!a.is_finite());
+    }
+}

@@ -1,0 +1,25 @@
+//! Dense linear algebra substrate.
+//!
+//! The paper's analysis lives in plain dense linear algebra: QR
+//! factorizations (Eqn. 3.3), symmetric eigendecompositions (ground-truth
+//! top-k subspace U), spectral norms and pseudo-inverse norms (the Lemma 4–7
+//! quantities), and principal angles between subspaces (Definition 1).
+//! No BLAS/LAPACK is available in the offline image, so this module
+//! implements the needed kernels from scratch with care for the sizes the
+//! paper uses (d ≤ 300, k ≤ 16, m = 50):
+//!
+//! - [`Mat`] — row-major `f64` matrix with cache-blocked matmul.
+//! - [`qr`] — Householder thin QR with the positive-diagonal-R convention.
+//! - [`eig`] — cyclic Jacobi eigensolver for symmetric matrices.
+//! - [`solve`] — LU with partial pivoting; triangular and general solves.
+//! - [`norms`] — spectral norm / σ_min via power iteration + Jacobi.
+//! - [`angles`] — cos/sin/tan θ_k between subspaces (paper Definition 1).
+
+pub mod matrix;
+pub mod qr;
+pub mod eig;
+pub mod solve;
+pub mod norms;
+pub mod angles;
+
+pub use matrix::Mat;

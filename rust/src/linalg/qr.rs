@@ -1,0 +1,249 @@
+//! Householder thin QR with the positive-diagonal-R convention.
+//!
+//! Algorithm 1 of the paper orthonormalizes the tracked subspace every
+//! power iteration (`W = QR(S)`). For full-rank `S`, the thin QR with
+//! `R_ii > 0` is *unique*, which gives two properties the system relies on:
+//!
+//! 1. The Rust backend and the JAX/PJRT backend (modified Gram–Schmidt,
+//!    positive-diagonal by construction) produce the same `Q` up to fp
+//!    precision, so they are interchangeable and cross-checkable.
+//! 2. `SignAdjust` (paper Algorithm 2) only has to repair genuine sign
+//!    flips caused by the *subspace* rotating, not factorization noise.
+
+use super::matrix::Mat;
+
+/// Thin QR: returns (Q: m×n with orthonormal columns, R: n×n upper
+/// triangular with non-negative diagonal) such that `A = Q·R`.
+///
+/// Panics if `A.rows() < A.cols()`.
+pub fn thin_qr(a: &Mat) -> (Mat, Mat) {
+    thin_qr_with(a, true)
+}
+
+/// Thin QR with a choice of sign convention.
+///
+/// `canonical = true`: flip so `R_ii ≥ 0` (unique factorization — the
+/// crate default). `canonical = false`: keep the raw Householder signs,
+/// i.e. `sign(R_ii) = −sign` of the leading pivot element — what
+/// LAPACK's `geqrf` produces. The raw convention flips a column whenever
+/// that element crosses zero between iterations, and *differently on
+/// different agents* whose `S_j` straddle the boundary — exactly the
+/// instability paper Algorithm 2 (SignAdjust) exists to repair. The
+/// `abl_sign` experiment runs the 2×2 of {raw, canonical} × {adjust on,
+/// off}.
+pub fn thin_qr_with(a: &Mat, canonical: bool) -> (Mat, Mat) {
+    let (m, n) = a.shape();
+    assert!(m >= n, "thin_qr needs rows >= cols, got {m}x{n}");
+
+    // Working copy that becomes R in its upper triangle; Householder
+    // vectors are stored below the diagonal (classic compact form).
+    let mut h = a.clone();
+    let mut betas = vec![0.0f64; n];
+
+    for j in 0..n {
+        // Householder vector for column j, rows j..m.
+        let mut norm2 = 0.0;
+        for i in j..m {
+            norm2 += h[(i, j)] * h[(i, j)];
+        }
+        let norm = norm2.sqrt();
+        if norm == 0.0 {
+            betas[j] = 0.0;
+            continue;
+        }
+        let alpha = if h[(j, j)] >= 0.0 { -norm } else { norm };
+        let v0 = h[(j, j)] - alpha;
+        // v = x - alpha*e1; normalize so v[0] = 1 (stored implicitly).
+        let mut vnorm2 = v0 * v0;
+        for i in (j + 1)..m {
+            vnorm2 += h[(i, j)] * h[(i, j)];
+        }
+        if vnorm2 == 0.0 {
+            betas[j] = 0.0;
+            h[(j, j)] = alpha;
+            continue;
+        }
+        betas[j] = 2.0 * v0 * v0 / vnorm2;
+        // Store normalized v below diagonal: v / v0 (so v[j] = 1).
+        for i in (j + 1)..m {
+            h[(i, j)] /= v0;
+        }
+        h[(j, j)] = alpha;
+
+        // Apply reflector to remaining columns: A := (I - beta v vᵀ) A.
+        for c in (j + 1)..n {
+            let mut dot = h[(j, c)]; // v[j] = 1
+            for i in (j + 1)..m {
+                dot += h[(i, j)] * h[(i, c)];
+            }
+            let s = betas[j] * dot;
+            h[(j, c)] -= s;
+            for i in (j + 1)..m {
+                let vij = h[(i, j)];
+                h[(i, c)] -= s * vij;
+            }
+        }
+    }
+
+    // Extract R (upper triangle).
+    let mut r = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            r[(i, j)] = h[(i, j)];
+        }
+    }
+
+    // Form thin Q by applying reflectors to the first n columns of I,
+    // in reverse order.
+    let mut q = Mat::zeros(m, n);
+    for j in 0..n {
+        q[(j, j)] = 1.0;
+    }
+    for j in (0..n).rev() {
+        if betas[j] == 0.0 {
+            continue;
+        }
+        for c in 0..n {
+            let mut dot = q[(j, c)];
+            for i in (j + 1)..m {
+                dot += h[(i, j)] * q[(i, c)];
+            }
+            let s = betas[j] * dot;
+            q[(j, c)] -= s;
+            for i in (j + 1)..m {
+                let vij = h[(i, j)];
+                q[(i, c)] -= s * vij;
+            }
+        }
+    }
+
+    // Positive-diagonal convention: flip columns of Q / rows of R so
+    // R_ii >= 0 (unique thin QR for full-rank A).
+    if canonical {
+        for i in 0..n {
+            if r[(i, i)] < 0.0 {
+                for j in i..n {
+                    r[(i, j)] = -r[(i, j)];
+                }
+                for row in 0..m {
+                    q[(row, i)] = -q[(row, i)];
+                }
+            }
+        }
+    }
+
+    (q, r)
+}
+
+/// Orthonormal basis of the columns of `A` (the Q factor, canonical signs).
+pub fn orth(a: &Mat) -> Mat {
+    thin_qr(a).0
+}
+
+/// Q factor with raw Householder (LAPACK-style) signs — see
+/// [`thin_qr_with`].
+pub fn orth_raw(a: &Mat) -> Mat {
+    thin_qr_with(a, false).0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn check_qr(a: &Mat, tol: f64) {
+        let (q, r) = thin_qr(a);
+        let (m, n) = a.shape();
+        assert_eq!(q.shape(), (m, n));
+        assert_eq!(r.shape(), (n, n));
+        // Reconstruction.
+        assert!((&q.matmul(&r) - a).fro_norm() < tol, "A != QR");
+        // Orthonormal columns.
+        let g = q.t_matmul(&q);
+        assert!((&g - &Mat::eye(n)).fro_norm() < tol, "QᵀQ != I");
+        // Upper triangular with non-negative diagonal.
+        for i in 0..n {
+            assert!(r[(i, i)] >= 0.0, "R diag negative");
+            for j in 0..i {
+                assert!(r[(i, j)].abs() < tol, "R not upper triangular");
+            }
+        }
+    }
+
+    #[test]
+    fn qr_random_tall() {
+        let mut rng = Rng::seed_from(10);
+        for &(m, n) in &[(5, 3), (20, 5), (100, 8), (300, 5)] {
+            let a = Mat::randn(m, n, &mut rng);
+            check_qr(&a, 1e-10);
+        }
+    }
+
+    #[test]
+    fn qr_square() {
+        let mut rng = Rng::seed_from(11);
+        let a = Mat::randn(6, 6, &mut rng);
+        check_qr(&a, 1e-10);
+    }
+
+    #[test]
+    fn qr_of_orthonormal_is_identityish() {
+        let mut rng = Rng::seed_from(12);
+        let q0 = Mat::rand_orthonormal(30, 4, &mut rng);
+        let (q, r) = thin_qr(&q0);
+        assert!((&q - &q0).fro_norm() < 1e-10);
+        assert!((&r - &Mat::eye(4)).fro_norm() < 1e-10);
+    }
+
+    #[test]
+    fn qr_unique_positive_diagonal() {
+        // Same column space, scaled by a positive-diagonal upper triangular
+        // matrix on the right => identical Q.
+        let mut rng = Rng::seed_from(13);
+        let a = Mat::randn(15, 3, &mut rng);
+        let t = Mat::from_rows(3, 3, &[2.0, 1.0, -0.5, 0.0, 3.0, 0.7, 0.0, 0.0, 1.5]);
+        let b = a.matmul(&t);
+        let (qa, _) = thin_qr(&a);
+        let (qb, _) = thin_qr(&b);
+        assert!((&qa - &qb).fro_norm() < 1e-9);
+    }
+
+    #[test]
+    fn qr_sign_flip_of_input_flips_q_column() {
+        let mut rng = Rng::seed_from(14);
+        let a = Mat::randn(10, 2, &mut rng);
+        let mut b = a.clone();
+        // Negate column 0 of the input.
+        let c0: Vec<f64> = a.col(0).iter().map(|v| -v).collect();
+        b.set_col(0, &c0);
+        let (qa, _) = thin_qr(&a);
+        let (qb, _) = thin_qr(&b);
+        let qa0 = qa.col(0);
+        let qb0 = qb.col(0);
+        let dot: f64 = qa0.iter().zip(&qb0).map(|(x, y)| x * y).sum();
+        assert!(dot < -0.999, "column sign should flip with input");
+    }
+
+    #[test]
+    fn qr_near_rank_deficient_stays_finite() {
+        let mut rng = Rng::seed_from(15);
+        let a = Mat::randn(20, 3, &mut rng);
+        let mut b = a.clone();
+        // Make column 2 almost a copy of column 0.
+        let c0 = a.col(0);
+        let c2: Vec<f64> = c0.iter().map(|v| v * (1.0 + 1e-13)).collect();
+        b.set_col(2, &c2);
+        let (q, r) = thin_qr(&b);
+        assert!(q.is_finite());
+        assert!(r.is_finite());
+    }
+
+    #[test]
+    fn orth_returns_q() {
+        let mut rng = Rng::seed_from(16);
+        let a = Mat::randn(12, 4, &mut rng);
+        let q = orth(&a);
+        let g = q.t_matmul(&q);
+        assert!((&g - &Mat::eye(4)).fro_norm() < 1e-10);
+    }
+}

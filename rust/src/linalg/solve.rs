@@ -1,0 +1,236 @@
+//! Linear solves: LU with partial pivoting, triangular solves, inverse.
+//!
+//! Needed for the tan-θ computation (`V̂ = V̂ (UᵀQ)^{-1}` in
+//! [`super::angles`]) and for small k×k systems throughout the metrics
+//! layer. Sizes here are k×k (k ≤ 16), so simplicity beats blocking.
+
+use super::matrix::Mat;
+
+/// LU factorization with partial pivoting: `P·A = L·U` stored compactly.
+#[derive(Clone, Debug)]
+pub struct Lu {
+    lu: Mat,
+    /// Row permutation: `perm[i]` is the original row now at position i.
+    perm: Vec<usize>,
+    /// Sign of the permutation (for determinants).
+    sign: f64,
+    singular: bool,
+}
+
+/// Factor a square matrix.
+pub fn lu(a: &Mat) -> Lu {
+    let n = a.rows();
+    assert_eq!(a.rows(), a.cols(), "lu needs a square matrix");
+    let mut m = a.clone();
+    let mut perm: Vec<usize> = (0..n).collect();
+    let mut sign = 1.0;
+    let mut singular = false;
+
+    for col in 0..n {
+        // Pivot: largest |entry| in column `col`, rows col..n.
+        let mut piv = col;
+        let mut best = m[(col, col)].abs();
+        for r in (col + 1)..n {
+            let v = m[(r, col)].abs();
+            if v > best {
+                best = v;
+                piv = r;
+            }
+        }
+        if best == 0.0 {
+            singular = true;
+            continue;
+        }
+        if piv != col {
+            for j in 0..n {
+                let tmp = m[(col, j)];
+                m[(col, j)] = m[(piv, j)];
+                m[(piv, j)] = tmp;
+            }
+            perm.swap(col, piv);
+            sign = -sign;
+        }
+        let d = m[(col, col)];
+        for r in (col + 1)..n {
+            let f = m[(r, col)] / d;
+            m[(r, col)] = f;
+            for j in (col + 1)..n {
+                let mcj = m[(col, j)];
+                m[(r, j)] -= f * mcj;
+            }
+        }
+    }
+    Lu { lu: m, perm, sign, singular }
+}
+
+impl Lu {
+    /// Whether a zero pivot was hit (matrix numerically singular).
+    pub fn is_singular(&self) -> bool {
+        self.singular
+    }
+
+    /// Determinant of the original matrix.
+    pub fn det(&self) -> f64 {
+        if self.singular {
+            return 0.0;
+        }
+        let n = self.lu.rows();
+        let mut d = self.sign;
+        for i in 0..n {
+            d *= self.lu[(i, i)];
+        }
+        d
+    }
+
+    /// Solve `A x = b` for a single right-hand side.
+    pub fn solve_vec(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.lu.rows();
+        assert_eq!(b.len(), n);
+        assert!(!self.singular, "solve on singular matrix");
+        // Apply permutation.
+        let mut x: Vec<f64> = (0..n).map(|i| b[self.perm[i]]).collect();
+        // Forward substitution (L has unit diagonal).
+        for i in 1..n {
+            let mut s = x[i];
+            for j in 0..i {
+                s -= self.lu[(i, j)] * x[j];
+            }
+            x[i] = s;
+        }
+        // Back substitution.
+        for i in (0..n).rev() {
+            let mut s = x[i];
+            for j in (i + 1)..n {
+                s -= self.lu[(i, j)] * x[j];
+            }
+            x[i] = s / self.lu[(i, i)];
+        }
+        x
+    }
+
+    /// Solve `A X = B` column by column.
+    pub fn solve_mat(&self, b: &Mat) -> Mat {
+        let n = self.lu.rows();
+        assert_eq!(b.rows(), n);
+        let mut out = Mat::zeros(n, b.cols());
+        for j in 0..b.cols() {
+            let col = b.col(j);
+            let x = self.solve_vec(&col);
+            out.set_col(j, &x);
+        }
+        out
+    }
+}
+
+/// Inverse of a square matrix (via LU). Panics if singular.
+pub fn inverse(a: &Mat) -> Mat {
+    let f = lu(a);
+    assert!(!f.is_singular(), "inverse of singular matrix");
+    f.solve_mat(&Mat::eye(a.rows()))
+}
+
+/// Solve `X R = B` for upper-triangular `R` (right division), i.e.
+/// `X = B R^{-1}`. Used to form `Q = S R^{-1}` style products cheaply.
+pub fn solve_upper_right(b: &Mat, r: &Mat) -> Mat {
+    let (m, n) = b.shape();
+    assert_eq!(r.shape(), (n, n));
+    let mut x = b.clone();
+    // Column j of X: (B[:,j] - sum_{i<j} X[:,i] R[i,j]) / R[j,j]
+    for j in 0..n {
+        for i in 0..j {
+            let rij = r[(i, j)];
+            if rij != 0.0 {
+                for row in 0..m {
+                    let xi = x[(row, i)];
+                    x[(row, j)] -= xi * rij;
+                }
+            }
+        }
+        let d = r[(j, j)];
+        assert!(d != 0.0, "singular triangular factor");
+        for row in 0..m {
+            x[(row, j)] /= d;
+        }
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn lu_solve_matches_direct() {
+        let mut rng = Rng::seed_from(31);
+        let a = Mat::randn(8, 8, &mut rng);
+        let xtrue: Vec<f64> = (0..8).map(|i| i as f64 - 3.5).collect();
+        let b = a.matvec(&xtrue);
+        let f = lu(&a);
+        let x = f.solve_vec(&b);
+        for (got, want) in x.iter().zip(&xtrue) {
+            assert!((got - want).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn lu_det_2x2() {
+        let a = Mat::from_rows(2, 2, &[1.0, 2.0, 3.0, 4.0]);
+        assert!((lu(&a).det() - (-2.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lu_detects_singular() {
+        let a = Mat::from_rows(2, 2, &[1.0, 2.0, 2.0, 4.0]);
+        assert!(lu(&a).is_singular());
+        assert_eq!(lu(&a).det(), 0.0);
+    }
+
+    #[test]
+    fn inverse_roundtrip() {
+        let mut rng = Rng::seed_from(32);
+        let a = Mat::randn(6, 6, &mut rng);
+        let ainv = inverse(&a);
+        let prod = a.matmul(&ainv);
+        assert!((&prod - &Mat::eye(6)).fro_norm() < 1e-9);
+    }
+
+    #[test]
+    fn solve_mat_multi_rhs() {
+        let mut rng = Rng::seed_from(33);
+        let a = Mat::randn(5, 5, &mut rng);
+        let x = Mat::randn(5, 3, &mut rng);
+        let b = a.matmul(&x);
+        let f = lu(&a);
+        let got = f.solve_mat(&b);
+        assert!((&got - &x).fro_norm() < 1e-9);
+    }
+
+    #[test]
+    fn solve_upper_right_matches_inverse() {
+        let mut rng = Rng::seed_from(34);
+        let b = Mat::randn(7, 4, &mut rng);
+        // Random well-conditioned upper triangular with positive diagonal.
+        let mut r = Mat::zeros(4, 4);
+        for i in 0..4 {
+            r[(i, i)] = 1.0 + rng.uniform();
+            for j in (i + 1)..4 {
+                r[(i, j)] = rng.normal() * 0.3;
+            }
+        }
+        let fast = solve_upper_right(&b, &r);
+        let slow = b.matmul(&inverse(&r));
+        assert!((&fast - &slow).fro_norm() < 1e-10);
+    }
+
+    #[test]
+    fn permutation_needed_case() {
+        // Zero on the first pivot forces a row swap.
+        let a = Mat::from_rows(2, 2, &[0.0, 1.0, 1.0, 0.0]);
+        let f = lu(&a);
+        assert!(!f.is_singular());
+        let x = f.solve_vec(&[2.0, 3.0]);
+        assert!((x[0] - 3.0).abs() < 1e-14);
+        assert!((x[1] - 2.0).abs() < 1e-14);
+    }
+}

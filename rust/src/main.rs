@@ -1,0 +1,246 @@
+//! `deepca` — launcher CLI for the DeEPCA reproduction.
+//!
+//! ```text
+//! deepca experiment <fig1|fig2|comm-table|ablations|all> [--scale full|small]
+//! deepca run   [--config file.toml] [--algo deepca|depca] [--engine dense|parallel|threaded|distributed]
+//!              [--m 50] [--n 800] [--k 5] [--rounds 8] [--iters 60] [--tol 1e-9]
+//!              [--dataset w8a|a9a] [--data path/to/libsvm] [--topology er|ring|grid|star|complete]
+//! deepca info  [--dataset w8a|a9a] [--data path]   # spectrum / network diagnostics
+//! ```
+
+use anyhow::{bail, Context, Result};
+use deepca::algo::metrics::RunRecorder;
+use deepca::algo::problem::Problem;
+use deepca::cli::Args;
+use deepca::config::ConfigMap;
+use deepca::coordinator::leader::{Algorithm, EngineKind, Leader};
+use deepca::data::{libsvm, synthetic, Dataset};
+use deepca::experiments::{ablations, comm_table, figures, Scale};
+use deepca::graph::gossip::GossipMatrix;
+use deepca::graph::topology::Topology;
+use deepca::prelude::{DeepcaConfig, DepcaConfig, KPolicy, Rng};
+use std::path::Path;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.command.as_deref() {
+        Some("experiment") => cmd_experiment(&args),
+        Some("run") => cmd_run(&args),
+        Some("info") => cmd_info(&args),
+        Some("help") | None => {
+            print_help();
+            Ok(())
+        }
+        Some(other) => bail!("unknown subcommand `{other}` (try `deepca help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "deepca — Decentralized Exact PCA (Ye & Zhang 2021) reproduction
+
+USAGE:
+  deepca experiment <fig1|fig2|comm-table|ablations|all> [--scale full|small]
+  deepca run  [--config cfg.toml] [--algo deepca|depca] [--engine dense|parallel|threaded|distributed]
+              [--m N] [--n N] [--k N] [--rounds K] [--iters T] [--tol EPS]
+              [--dataset w8a|a9a] [--data libsvm-file] [--topology er|ring|grid|star|complete]
+              [--seed S]
+  deepca info [--dataset w8a|a9a] [--data libsvm-file] [--m N] [--k N]
+
+Outputs land in ./results (override with DEEPCA_RESULTS)."
+    );
+}
+
+fn scale_of(args: &Args) -> Result<Scale> {
+    let s = args.str_or("scale", "full");
+    Scale::parse(&s).with_context(|| format!("bad --scale `{s}` (full|small)"))
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let scale = scale_of(args)?;
+    let which = args
+        .positionals
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    match which {
+        "fig1" => {
+            figures::run_figure(figures::Figure::Fig1W8a, scale)?;
+        }
+        "fig2" => {
+            figures::run_figure(figures::Figure::Fig2A9a, scale)?;
+        }
+        "comm-table" => {
+            comm_table::run(scale)?;
+        }
+        "ablations" => ablations::run_all(scale)?,
+        "all" => {
+            figures::run_figure(figures::Figure::Fig1W8a, scale)?;
+            figures::run_figure(figures::Figure::Fig2A9a, scale)?;
+            comm_table::run(scale)?;
+            ablations::run_all(scale)?;
+        }
+        other => bail!("unknown experiment `{other}`"),
+    }
+    Ok(())
+}
+
+fn load_dataset(args: &Args, cfg: &ConfigMap, m: usize, n: usize) -> Result<Dataset> {
+    if let Some(path) = args
+        .options
+        .get("data")
+        .cloned()
+        .or_else(|| cfg.get("data.path").map(String::from))
+    {
+        let dim = match args.str_or("dataset", &cfg.str_or("data.kind", "w8a")).as_str() {
+            "w8a" => Some(300),
+            "a9a" => Some(123),
+            _ => None,
+        };
+        return libsvm::load(Path::new(&path), dim, Some(m * n));
+    }
+    let seed = args.usize_or("seed", cfg.usize_or("seed", 701)?)? as u64;
+    let mut rng = Rng::seed_from(seed);
+    match args.str_or("dataset", &cfg.str_or("data.kind", "w8a")).as_str() {
+        "w8a" => Ok(synthetic::w8a_like_scaled(m, n, &mut rng)),
+        "a9a" => Ok(synthetic::a9a_like_scaled(m, n, &mut rng)),
+        other => bail!("unknown dataset `{other}` (w8a|a9a or --data <file>)"),
+    }
+}
+
+fn build_topology(kind: &str, m: usize, seed: u64) -> Result<Topology> {
+    Ok(match kind {
+        "er" => Topology::erdos_renyi(m, 0.5, &mut Rng::seed_from(seed)),
+        "ring" => Topology::ring(m),
+        "grid" => {
+            let rows = (1..=m)
+                .rev()
+                .find(|r| m % r == 0 && *r * *r <= m)
+                .unwrap_or(1);
+            Topology::grid(rows, m / rows)
+        }
+        "star" => Topology::star(m),
+        "complete" => Topology::complete(m),
+        other => bail!("unknown topology `{other}`"),
+    })
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let cfg = match args.options.get("config") {
+        Some(path) => ConfigMap::load(Path::new(path))?,
+        None => ConfigMap::default(),
+    };
+    let m = args.usize_or("m", cfg.usize_or("m", 50)?)?;
+    let n = args.usize_or("n", cfg.usize_or("n", 800)?)?;
+    let k = args.usize_or("k", cfg.usize_or("k", 5)?)?;
+    let rounds = args.usize_or("rounds", cfg.usize_or("deepca.consensus_rounds", 8)?)?;
+    let iters = args.usize_or("iters", cfg.usize_or("iters", 60)?)?;
+    let tol = args.f64_or("tol", cfg.f64_or("tol", 0.0)?)?;
+    let seed = args.usize_or("seed", cfg.usize_or("seed", 701)?)? as u64;
+
+    let ds = load_dataset(args, &cfg, m, n)?;
+    println!(
+        "dataset {} rows={} d={} density={:.4}",
+        ds.name,
+        ds.num_rows(),
+        ds.dim(),
+        ds.density()
+    );
+    let problem = Problem::from_dataset(&ds, m, k);
+    let topo = build_topology(
+        &args.str_or("topology", &cfg.str_or("topology", "er")),
+        m,
+        seed + 1,
+    )?;
+    let gossip = GossipMatrix::from_laplacian(&topo);
+    println!(
+        "network {} m={} edges={} 1−λ₂={:.4}",
+        topo.name,
+        topo.n(),
+        topo.num_edges(),
+        gossip.gap()
+    );
+    println!(
+        "problem λ_k={:.4e} λ_k+1={:.4e} γ={:.4} heterogeneity={:.1}",
+        problem.lambda_k(),
+        problem.lambda_k1(),
+        problem.gamma(),
+        problem.heterogeneity()
+    );
+
+    let engine = match args.str_or("engine", &cfg.str_or("engine", "dense")).as_str() {
+        "dense" => EngineKind::Dense,
+        "parallel" => EngineKind::DenseParallel,
+        "threaded" => EngineKind::Threaded,
+        "distributed" => EngineKind::Distributed,
+        other => bail!("unknown engine `{other}`"),
+    };
+    let algo_name = args.str_or("algo", &cfg.str_or("algo", "deepca"));
+    let algo = match algo_name.as_str() {
+        "deepca" => Algorithm::Deepca(DeepcaConfig {
+            consensus_rounds: rounds,
+            max_iters: iters,
+            tol,
+            init_seed: cfg.usize_or("init_seed", 2021)? as u64,
+            sign_adjust: cfg.bool_or("deepca.sign_adjust", true)?,
+            qr_canonical: cfg.bool_or("deepca.qr_canonical", true)?,
+        }),
+        "depca" => Algorithm::Depca(DepcaConfig {
+            k_policy: KPolicy::Fixed(rounds),
+            max_iters: iters,
+            tol,
+            init_seed: cfg.usize_or("init_seed", 2021)? as u64,
+            sign_adjust: true,
+        }),
+        other => bail!("unknown algo `{other}`"),
+    };
+
+    let mut rec = RunRecorder::every_iteration();
+    let out = Leader::new(&problem, &topo)
+        .with_engine(engine)
+        .run(&algo, &mut rec);
+    println!(
+        "{algo_name} finished: {} iters, tanθ={:.3e}, {}, {:.2}s{}",
+        out.iters,
+        out.final_tan_theta,
+        out.comm,
+        out.elapsed_secs,
+        if out.diverged { " [DIVERGED]" } else { "" }
+    );
+    deepca::experiments::report::emit_series("run", &algo_name, &rec)?;
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let m = args.usize_or("m", 50)?;
+    let n = args.usize_or("n", 800)?;
+    let k = args.usize_or("k", 5)?;
+    let ds = load_dataset(args, &ConfigMap::default(), m, n)?;
+    println!(
+        "dataset {} rows={} d={} density={:.4}",
+        ds.name,
+        ds.num_rows(),
+        ds.dim(),
+        ds.density()
+    );
+    let problem = Problem::from_dataset(&ds, m, k);
+    println!("top-{} eigenvalues:", (k + 3).min(problem.dim()));
+    for (i, v) in problem.truth.values.iter().take(k + 3).enumerate() {
+        println!("  λ_{} = {v:.6e}", i + 1);
+    }
+    println!(
+        "gap (λ_k−λ_k+1)/λ_k = {:.4}, γ = {:.4}, L = {:.4e}, heterogeneity = {:.1}",
+        problem.truth.relative_gap(k),
+        problem.gamma(),
+        problem.spectral_bound,
+        problem.heterogeneity()
+    );
+    Ok(())
+}

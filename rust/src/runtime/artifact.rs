@@ -1,0 +1,205 @@
+//! Artifact manifest: what `make artifacts` produced.
+//!
+//! `python/compile/aot.py` writes `artifacts/manifest.json`:
+//!
+//! ```json
+//! {
+//!   "jax_version": "0.8.2",
+//!   "artifacts": [
+//!     {"name": "power_step_d300_k5", "kind": "power_step",
+//!      "d": 300, "k": 5, "file": "power_step_d300_k5.hlo.txt"},
+//!     ...
+//!   ]
+//! }
+//! ```
+//!
+//! The registry is shape-keyed: algorithms ask for `(kind, d, k)` and get
+//! the artifact path (or `None`, at which point callers fall back to the
+//! Rust backend and say so).
+
+use super::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// The role an artifact plays.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    /// `(A[d,d], W[d,k]) -> A·W` — Pallas matmul power step.
+    PowerStep,
+    /// `(S, A, W, W_prev) -> S + A(W−W_prev)` — fused tracking update.
+    DeepcaStep,
+    /// `(S[d,k], W0[d,k]) -> SignAdjust(MGS(S), W0)` — L2 orthonormalize.
+    Orthonormalize,
+    /// `(X[n,d]) -> XᵀX/n` — Pallas Gram/covariance builder.
+    Gram,
+}
+
+impl ArtifactKind {
+    /// Manifest string → kind.
+    pub fn from_str(s: &str) -> Option<Self> {
+        match s {
+            "power_step" => Some(Self::PowerStep),
+            "deepca_step" => Some(Self::DeepcaStep),
+            "orthonormalize" => Some(Self::Orthonormalize),
+            "gram" => Some(Self::Gram),
+            _ => None,
+        }
+    }
+}
+
+/// One manifest entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    /// Artifact name (file stem).
+    pub name: String,
+    /// Role.
+    pub kind: ArtifactKind,
+    /// Primary dimension d (rows for Gram).
+    pub d: usize,
+    /// Secondary dimension: k for steps, n for Gram.
+    pub k: usize,
+    /// HLO text file path (absolute).
+    pub path: PathBuf,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    /// All entries.
+    pub entries: Vec<ArtifactEntry>,
+    /// jax version recorded at build time.
+    pub jax_version: String,
+    /// Directory the manifest lives in.
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`?)", path.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        let jax_version = j
+            .get("jax_version")
+            .and_then(|v| v.as_str())
+            .unwrap_or("unknown")
+            .to_string();
+        let arts = j
+            .get("artifacts")
+            .and_then(|v| v.as_arr())
+            .context("manifest missing `artifacts` array")?;
+        let mut entries = Vec::new();
+        for a in arts {
+            let name = a
+                .get("name")
+                .and_then(|v| v.as_str())
+                .context("artifact missing name")?
+                .to_string();
+            let kind_str = a
+                .get("kind")
+                .and_then(|v| v.as_str())
+                .context("artifact missing kind")?;
+            let Some(kind) = ArtifactKind::from_str(kind_str) else {
+                // Forward-compat: skip unknown kinds.
+                continue;
+            };
+            let d = a.get("d").and_then(|v| v.as_usize()).context("missing d")?;
+            let k = a.get("k").and_then(|v| v.as_usize()).context("missing k")?;
+            let file = a
+                .get("file")
+                .and_then(|v| v.as_str())
+                .context("artifact missing file")?;
+            let path = dir.join(file);
+            if !path.exists() {
+                bail!("manifest references missing file {}", path.display());
+            }
+            entries.push(ArtifactEntry { name, kind, d, k, path });
+        }
+        Ok(Manifest { entries, jax_version, dir: dir.to_path_buf() })
+    }
+
+    /// Default artifacts directory: `$DEEPCA_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("DEEPCA_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// Find the artifact for `(kind, d, k)`.
+    pub fn find(&self, kind: ArtifactKind, d: usize, k: usize) -> Option<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.kind == kind && e.d == d && e.k == k)
+    }
+
+    /// All (d, k) shape pairs available for a kind.
+    pub fn shapes(&self, kind: ArtifactKind) -> Vec<(usize, usize)> {
+        self.entries
+            .iter()
+            .filter(|e| e.kind == kind)
+            .map(|e| (e.d, e.k))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    #[test]
+    fn loads_and_finds() {
+        let dir = std::env::temp_dir().join("deepca_manifest_test1");
+        let _ = std::fs::remove_dir_all(&dir);
+        write_manifest(
+            &dir,
+            r#"{"jax_version": "0.8.2", "artifacts": [
+                {"name": "power_step_d8_k2", "kind": "power_step", "d": 8, "k": 2, "file": "p.hlo.txt"},
+                {"name": "future_thing", "kind": "hologram", "d": 1, "k": 1, "file": "p.hlo.txt"}
+            ]}"#,
+        );
+        std::fs::write(dir.join("p.hlo.txt"), "HloModule x").unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.jax_version, "0.8.2");
+        assert_eq!(m.entries.len(), 1, "unknown kinds skipped");
+        assert!(m.find(ArtifactKind::PowerStep, 8, 2).is_some());
+        assert!(m.find(ArtifactKind::PowerStep, 8, 3).is_none());
+        assert_eq!(m.shapes(ArtifactKind::PowerStep), vec![(8, 2)]);
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        let dir = std::env::temp_dir().join("deepca_manifest_test2");
+        let _ = std::fs::remove_dir_all(&dir);
+        write_manifest(
+            &dir,
+            r#"{"artifacts": [{"name": "x", "kind": "gram", "d": 4, "k": 4, "file": "nope.hlo.txt"}]}"#,
+        );
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn missing_manifest_helpful_error() {
+        let dir = std::env::temp_dir().join("deepca_manifest_test3_nonexistent");
+        let err = Manifest::load(&dir).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn kind_roundtrip() {
+        for (s, k) in [
+            ("power_step", ArtifactKind::PowerStep),
+            ("deepca_step", ArtifactKind::DeepcaStep),
+            ("orthonormalize", ArtifactKind::Orthonormalize),
+            ("gram", ArtifactKind::Gram),
+        ] {
+            assert_eq!(ArtifactKind::from_str(s), Some(k));
+        }
+        assert_eq!(ArtifactKind::from_str("nope"), None);
+    }
+}

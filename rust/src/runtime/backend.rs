@@ -1,0 +1,159 @@
+//! PJRT-backed local compute: the production three-layer path.
+//!
+//! [`PjrtBackend`] implements [`PowerBackend`] by executing the
+//! `power_step_d{d}_k{k}` artifact (Layer-1 Pallas matmul lowered through
+//! the Layer-2 JAX model). [`PjrtStepEngine`] additionally drives the
+//! fused `deepca_step` tracking artifact and the `orthonormalize`
+//! (MGS + SignAdjust) artifact, so an end-to-end DeEPCA iteration's
+//! numerics run entirely inside compiled XLA — Rust only orchestrates
+//! and communicates.
+//!
+//! The local matrices `A_j` are converted to f32 literals **once** at
+//! construction and reused every iteration (they are the big operands:
+//! d² floats vs d·k for the iterate) — see EXPERIMENTS.md §Perf.
+
+use super::artifact::{ArtifactKind, Manifest};
+use super::executable::{Executable, PjrtContext};
+use crate::algo::backend::PowerBackend;
+use crate::linalg::Mat;
+use anyhow::{Context, Result};
+use std::rc::Rc;
+
+/// PJRT implementation of the power-step backend.
+pub struct PjrtBackend {
+    power_step: Executable,
+    locals_lit: Vec<xla::Literal>,
+    m: usize,
+    d: usize,
+    k: usize,
+}
+
+fn mat_to_f32_literal(m: &Mat) -> Result<xla::Literal> {
+    let data: Vec<f32> = m.data().iter().map(|&x| x as f32).collect();
+    xla::Literal::vec1(&data)
+        .reshape(&[m.rows() as i64, m.cols() as i64])
+        .context("reshaping literal")
+}
+
+impl PjrtBackend {
+    /// Load the `(d, k)` power-step artifact and pre-upload the locals.
+    pub fn new(
+        ctx: &Rc<PjrtContext>,
+        manifest: &Manifest,
+        locals: &[Mat],
+        k: usize,
+    ) -> Result<Self> {
+        anyhow::ensure!(!locals.is_empty());
+        let d = locals[0].rows();
+        let entry = manifest
+            .find(ArtifactKind::PowerStep, d, k)
+            .with_context(|| {
+                format!(
+                    "no power_step artifact for d={d}, k={k}; available: {:?}",
+                    manifest.shapes(ArtifactKind::PowerStep)
+                )
+            })?;
+        let power_step = ctx.load_hlo(&entry.path)?;
+        let locals_lit = locals
+            .iter()
+            .map(mat_to_f32_literal)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(PjrtBackend { power_step, locals_lit, m: locals.len(), d, k })
+    }
+
+    /// Execute `A_j · w` through the artifact.
+    fn product(&self, agent: usize, w: &Mat) -> Result<Mat> {
+        assert_eq!(w.shape(), (self.d, self.k), "iterate shape mismatch");
+        let w_lit = mat_to_f32_literal(w)?;
+        let inputs: Vec<&xla::Literal> = vec![&self.locals_lit[agent], &w_lit];
+        let result = self
+            .power_step
+            .run_literals(&inputs)
+            .context("power_step execution")?;
+        anyhow::ensure!(result.len() == 1, "power_step must return 1 output");
+        Ok(result.into_iter().next().unwrap())
+    }
+}
+
+impl PowerBackend for PjrtBackend {
+    fn m(&self) -> usize {
+        self.m
+    }
+
+    fn local_product(&self, agent: usize, w: &Mat) -> Mat {
+        self.product(agent, w)
+            .expect("PJRT power_step execution failed")
+    }
+
+    fn label(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+/// Full PJRT iteration engine: fused tracking step + orthonormalize.
+pub struct PjrtStepEngine {
+    deepca_step: Executable,
+    orthonormalize: Executable,
+    locals_lit: Vec<xla::Literal>,
+    d: usize,
+    k: usize,
+}
+
+impl PjrtStepEngine {
+    /// Load the fused artifacts for `(d, k)`.
+    pub fn new(
+        ctx: &Rc<PjrtContext>,
+        manifest: &Manifest,
+        locals: &[Mat],
+        k: usize,
+    ) -> Result<Self> {
+        anyhow::ensure!(!locals.is_empty());
+        let d = locals[0].rows();
+        let step_entry = manifest
+            .find(ArtifactKind::DeepcaStep, d, k)
+            .with_context(|| format!("no deepca_step artifact for d={d}, k={k}"))?;
+        let orth_entry = manifest
+            .find(ArtifactKind::Orthonormalize, d, k)
+            .with_context(|| format!("no orthonormalize artifact for d={d}, k={k}"))?;
+        Ok(PjrtStepEngine {
+            deepca_step: ctx.load_hlo(&step_entry.path)?,
+            orthonormalize: ctx.load_hlo(&orth_entry.path)?,
+            locals_lit: locals.iter().map(mat_to_f32_literal).collect::<Result<_>>()?,
+            d,
+            k,
+        })
+    }
+
+    /// Number of agents.
+    pub fn m(&self) -> usize {
+        self.locals_lit.len()
+    }
+
+    /// Eqn. 3.1 fused: `S + A_j(W − W_prev)` for agent j.
+    pub fn tracking_update(&self, agent: usize, s: &Mat, w: &Mat, w_prev: &Mat) -> Result<Mat> {
+        assert_eq!(s.shape(), (self.d, self.k));
+        let s_lit = mat_to_f32_literal(s)?;
+        let w_lit = mat_to_f32_literal(w)?;
+        let wp_lit = mat_to_f32_literal(w_prev)?;
+        let inputs: Vec<&xla::Literal> =
+            vec![&s_lit, &self.locals_lit[agent], &w_lit, &wp_lit];
+        let out = self.deepca_step.run_literals(&inputs)?;
+        anyhow::ensure!(out.len() == 1);
+        Ok(out.into_iter().next().unwrap())
+    }
+
+    /// Eqn. 3.3: `SignAdjust(MGS(S), W0)` through the artifact.
+    pub fn orthonormalize(&self, s: &Mat, w0: &Mat) -> Result<Mat> {
+        let s_lit = mat_to_f32_literal(s)?;
+        let w0_lit = mat_to_f32_literal(w0)?;
+        let inputs: Vec<&xla::Literal> = vec![&s_lit, &w0_lit];
+        let out = self.orthonormalize.run_literals(&inputs)?;
+        anyhow::ensure!(out.len() == 1);
+        Ok(out.into_iter().next().unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Needs built artifacts — exercised in rust/tests/pjrt_integration.rs.
+}

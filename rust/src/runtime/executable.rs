@@ -1,0 +1,138 @@
+//! HLO-text → PJRT executable, with `Mat`-level execute helpers.
+//!
+//! All artifacts are lowered with `return_tuple=True`, so outputs are
+//! N-tuples of f32 arrays; inputs are f32 arrays. The boundary converts
+//! the crate's `f64` [`Mat`] to f32 on the way in and back on the way
+//! out (artifact numerics are validated against the Rust backend to
+//! ~1e-4 relative in the integration tests — single precision, not a
+//! bug).
+
+use crate::linalg::Mat;
+use anyhow::{Context, Result};
+use std::path::Path;
+use std::rc::Rc;
+
+/// Shared PJRT CPU client (single-threaded; the client is `Rc`-based).
+pub struct PjrtContext {
+    client: xla::PjRtClient,
+}
+
+impl PjrtContext {
+    /// Create a CPU client.
+    pub fn cpu() -> Result<Rc<Self>> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Rc::new(PjrtContext { client }))
+    }
+
+    /// Platform string for reports.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load HLO text from `path` and compile it.
+    pub fn load_hlo(self: &Rc<Self>, path: &Path) -> Result<Executable> {
+        let path_str = path
+            .to_str()
+            .context("artifact path is not valid UTF-8")?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable { _ctx: Rc::clone(self), exe, name: path.display().to_string() })
+    }
+}
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    _ctx: Rc<PjrtContext>,
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+impl Executable {
+    /// Execute with `Mat` inputs; returns the tuple elements as `Mat`s.
+    ///
+    /// Every input is converted to a f32 literal of its exact shape;
+    /// outputs are read back as f32 and widened to f64.
+    pub fn run(&self, inputs: &[&Mat]) -> Result<Vec<Mat>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|m| mat_to_literal(m))
+            .collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.name))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let parts = out.to_tuple().context("decomposing result tuple")?;
+        parts.into_iter().map(|l| literal_to_mat(&l)).collect()
+    }
+
+    /// Execute with pre-built literals (lets callers cache the big,
+    /// iteration-invariant operands like `A_j`); returns tuple elements
+    /// as `Mat`s.
+    pub fn run_literals(&self, inputs: &[&xla::Literal]) -> Result<Vec<Mat>> {
+        let result = self
+            .exe
+            .execute::<&xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.name))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let parts = out.to_tuple().context("decomposing result tuple")?;
+        parts.into_iter().map(|l| literal_to_mat(&l)).collect()
+    }
+
+    /// Execute expecting exactly one output.
+    pub fn run1(&self, inputs: &[&Mat]) -> Result<Mat> {
+        let mut outs = self.run(inputs)?;
+        anyhow::ensure!(outs.len() == 1, "{}: expected 1 output, got {}", self.name, outs.len());
+        Ok(outs.pop().unwrap())
+    }
+}
+
+/// `Mat` (f64) → f32 literal with shape `[rows, cols]`.
+fn mat_to_literal(m: &Mat) -> Result<xla::Literal> {
+    let f32data: Vec<f32> = m.data().iter().map(|&x| x as f32).collect();
+    let lit = xla::Literal::vec1(&f32data);
+    lit.reshape(&[m.rows() as i64, m.cols() as i64])
+        .context("reshaping input literal")
+}
+
+/// f32 literal → `Mat` (f64).
+fn literal_to_mat(l: &xla::Literal) -> Result<Mat> {
+    let shape = l.array_shape().context("output shape")?;
+    let dims = shape.dims();
+    anyhow::ensure!(dims.len() == 2, "expected rank-2 output, got {:?}", dims);
+    let data: Vec<f32> = l.to_vec().context("reading output literal")?;
+    let (r, c) = (dims[0] as usize, dims[1] as usize);
+    anyhow::ensure!(data.len() == r * c, "output size mismatch");
+    Ok(Mat::from_vec(r, c, data.into_iter().map(|x| x as f64).collect()))
+}
+
+#[cfg(test)]
+mod tests {
+    // Compile/execute tests live in `rust/tests/pjrt_integration.rs` —
+    // they need the artifacts built by `make artifacts`. Here we only
+    // test the pure conversion helpers.
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn mat_literal_roundtrip() {
+        let mut rng = Rng::seed_from(231);
+        let m = Mat::randn(5, 3, &mut rng);
+        let lit = mat_to_literal(&m).unwrap();
+        let back = literal_to_mat(&lit).unwrap();
+        assert_eq!(back.shape(), (5, 3));
+        // f32 round trip: 1e-6 relative.
+        for (a, b) in m.data().iter().zip(back.data()) {
+            assert!((a - b).abs() <= 1e-6 * (1.0 + a.abs()));
+        }
+    }
+}

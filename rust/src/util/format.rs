@@ -1,0 +1,108 @@
+//! Human-readable number / table formatting for experiment reports.
+
+/// Format seconds adaptively (ns/µs/ms/s).
+pub fn secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.2}s", s)
+    }
+}
+
+/// Format a byte count adaptively.
+pub fn bytes(b: u64) -> String {
+    const KIB: f64 = 1024.0;
+    let b = b as f64;
+    if b < KIB {
+        format!("{b:.0}B")
+    } else if b < KIB * KIB {
+        format!("{:.1}KiB", b / KIB)
+    } else if b < KIB * KIB * KIB {
+        format!("{:.1}MiB", b / KIB / KIB)
+    } else {
+        format!("{:.2}GiB", b / KIB / KIB / KIB)
+    }
+}
+
+/// Format a float in scientific notation with 3 significant digits.
+pub fn sci(x: f64) -> String {
+    if x == 0.0 {
+        "0".into()
+    } else {
+        format!("{x:.2e}")
+    }
+}
+
+/// Render a simple aligned text table: `header` then `rows`.
+pub fn table(header: &[&str], rows: &[Vec<String>]) -> String {
+    let ncol = header.len();
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncol) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        cells
+            .iter()
+            .zip(widths)
+            .map(|(c, w)| format!("{c:>w$}", w = w))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    let hdr: Vec<String> = header.iter().map(|s| s.to_string()).collect();
+    out.push_str(&fmt_row(&hdr, &widths));
+    out.push('\n');
+    out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncol - 1)));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn secs_units() {
+        assert!(secs(5e-9).ends_with("ns"));
+        assert!(secs(5e-6).ends_with("µs"));
+        assert!(secs(5e-3).ends_with("ms"));
+        assert!(secs(5.0).ends_with('s'));
+    }
+
+    #[test]
+    fn bytes_units() {
+        assert_eq!(bytes(512), "512B");
+        assert!(bytes(2048).contains("KiB"));
+        assert!(bytes(3 * 1024 * 1024).contains("MiB"));
+    }
+
+    #[test]
+    fn sci_zero_and_value() {
+        assert_eq!(sci(0.0), "0");
+        assert!(sci(1234.0).contains('e'));
+    }
+
+    #[test]
+    fn table_aligns() {
+        let t = table(
+            &["name", "val"],
+            &[
+                vec!["a".into(), "1".into()],
+                vec!["longer".into(), "22".into()],
+            ],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert_eq!(lines[2].len(), lines[3].len());
+    }
+}

@@ -1,0 +1,8 @@
+//! Small shared utilities: PRNG, timing, and formatting helpers.
+//!
+//! The offline build image ships no `rand`/`criterion`/`log` stack, so the
+//! pieces we need are implemented here (see DESIGN.md §8).
+
+pub mod rng;
+pub mod timer;
+pub mod format;

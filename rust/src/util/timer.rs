@@ -1,0 +1,70 @@
+//! Wall-clock timing helpers used by the bench harness and experiments.
+
+use std::time::Instant;
+
+/// Measure the wall time of `f` in seconds.
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Simple accumulating stopwatch for profiling sections of a hot loop.
+#[derive(Default, Debug, Clone)]
+pub struct Stopwatch {
+    total: f64,
+    count: u64,
+}
+
+impl Stopwatch {
+    /// Time one invocation of `f`, accumulating into this stopwatch.
+    pub fn measure<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.total += t0.elapsed().as_secs_f64();
+        self.count += 1;
+        out
+    }
+
+    /// Total accumulated seconds.
+    pub fn total_secs(&self) -> f64 {
+        self.total
+    }
+
+    /// Number of measured invocations.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Mean seconds per invocation (0 if never used).
+    pub fn mean_secs(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.total / self.count as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_returns_value() {
+        let (v, secs) = time_it(|| 2 + 2);
+        assert_eq!(v, 4);
+        assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn stopwatch_accumulates() {
+        let mut sw = Stopwatch::default();
+        for _ in 0..3 {
+            sw.measure(|| std::hint::black_box(1 + 1));
+        }
+        assert_eq!(sw.count(), 3);
+        assert!(sw.total_secs() >= 0.0);
+        assert!(sw.mean_secs() <= sw.total_secs() + 1e-12);
+    }
+}

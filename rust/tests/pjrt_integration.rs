@@ -1,0 +1,199 @@
+//! Integration: the AOT-compiled JAX/Pallas artifacts executed through
+//! PJRT must agree with the pure-Rust backend.
+//!
+//! Requires `make artifacts` (skips with a notice otherwise — the
+//! Makefile `test` target always builds artifacts first).
+
+use deepca::algo::backend::{PowerBackend, RustBackend};
+use deepca::algo::deepca as deepca_algo;
+use deepca::algo::deepca::DeepcaConfig;
+use deepca::algo::metrics::RunRecorder;
+use deepca::algo::problem::Problem;
+use deepca::algo::sign_adjust::sign_adjust;
+use deepca::consensus::comm::DenseComm;
+use deepca::data::synthetic;
+use deepca::graph::topology::Topology;
+use deepca::linalg::qr::orth;
+use deepca::linalg::Mat;
+use deepca::runtime::artifact::{ArtifactKind, Manifest};
+use deepca::runtime::backend::{PjrtBackend, PjrtStepEngine};
+use deepca::runtime::executable::PjrtContext;
+use deepca::util::rng::Rng;
+use std::path::PathBuf;
+
+/// Locate artifacts/ relative to the crate root; None => skip.
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn rel_err(a: &Mat, b: &Mat) -> f64 {
+    (a - b).fro_norm() / b.fro_norm().max(1e-12)
+}
+
+#[test]
+fn manifest_covers_paper_shapes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    for (d, k) in [(300, 5), (123, 5), (64, 4), (32, 2)] {
+        assert!(m.find(ArtifactKind::PowerStep, d, k).is_some(), "power_step d={d}");
+        assert!(m.find(ArtifactKind::DeepcaStep, d, k).is_some(), "deepca_step d={d}");
+        assert!(m.find(ArtifactKind::Orthonormalize, d, k).is_some(), "orth d={d}");
+    }
+    assert!(m.find(ArtifactKind::Gram, 300, 800).is_some());
+}
+
+#[test]
+fn power_step_matches_rust_backend() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let ctx = PjrtContext::cpu().unwrap();
+
+    let mut rng = Rng::seed_from(301);
+    let (d, k, m) = (32, 2, 4);
+    let locals: Vec<Mat> = (0..m)
+        .map(|_| {
+            let g = Mat::randn(d, d, &mut rng);
+            let mut a = g.t_matmul(&g);
+            a.scale(1.0 / d as f64);
+            a.symmetrize();
+            a
+        })
+        .collect();
+    let pjrt = PjrtBackend::new(&ctx, &manifest, &locals, k).unwrap();
+    let rust = RustBackend::new(&locals);
+
+    for agent in 0..m {
+        let w = Mat::rand_orthonormal(d, k, &mut rng);
+        let got = pjrt.local_product(agent, &w);
+        let want = rust.local_product(agent, &w);
+        assert!(
+            rel_err(&got, &want) < 1e-5,
+            "agent {agent}: rel err {}",
+            rel_err(&got, &want)
+        );
+    }
+}
+
+#[test]
+fn fused_tracking_step_matches_rust() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let ctx = PjrtContext::cpu().unwrap();
+
+    let mut rng = Rng::seed_from(302);
+    let (d, k) = (64, 4);
+    let g = Mat::randn(d, d, &mut rng);
+    let mut a = g.t_matmul(&g);
+    a.scale(1.0 / d as f64);
+    a.symmetrize();
+    let locals = vec![a.clone()];
+    let engine = PjrtStepEngine::new(&ctx, &manifest, &locals, k).unwrap();
+
+    let s = Mat::randn(d, k, &mut rng);
+    let w = Mat::rand_orthonormal(d, k, &mut rng);
+    let wp = Mat::rand_orthonormal(d, k, &mut rng);
+    let got = engine.tracking_update(0, &s, &w, &wp).unwrap();
+    let want = {
+        let mut out = s.clone();
+        out.axpy(1.0, &a.matmul(&w));
+        out.axpy(-1.0, &a.matmul(&wp));
+        out
+    };
+    assert!(rel_err(&got, &want) < 1e-5, "rel err {}", rel_err(&got, &want));
+}
+
+#[test]
+fn orthonormalize_artifact_matches_rust_qr() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let ctx = PjrtContext::cpu().unwrap();
+
+    let mut rng = Rng::seed_from(303);
+    let (d, k) = (32, 2);
+    let locals = vec![Mat::eye(d)];
+    let engine = PjrtStepEngine::new(&ctx, &manifest, &locals, k).unwrap();
+
+    for _ in 0..5 {
+        let s = Mat::randn(d, k, &mut rng);
+        let w0 = Mat::rand_orthonormal(d, k, &mut rng);
+        let got = engine.orthonormalize(&s, &w0).unwrap();
+        let want = sign_adjust(&orth(&s), &w0);
+        assert!(
+            rel_err(&got, &want) < 1e-4,
+            "rel err {}",
+            rel_err(&got, &want)
+        );
+        // And genuinely orthonormal.
+        let gram = got.t_matmul(&got);
+        assert!((&gram - &Mat::eye(k)).fro_norm() < 1e-4);
+    }
+}
+
+#[test]
+fn gram_artifact_matches_rust() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let ctx = PjrtContext::cpu().unwrap();
+    let entry = manifest.find(ArtifactKind::Gram, 123, 600).unwrap();
+    let exe = ctx.load_hlo(&entry.path).unwrap();
+
+    let mut rng = Rng::seed_from(304);
+    let x = Mat::randn(600, 123, &mut rng);
+    let got = exe.run1(&[&x]).unwrap();
+    let want = x.t_matmul(&x).scaled(1.0 / 600.0);
+    assert!(rel_err(&got, &want) < 1e-4, "rel err {}", rel_err(&got, &want));
+}
+
+#[test]
+fn deepca_through_pjrt_backend_converges_and_matches() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let ctx = PjrtContext::cpu().unwrap();
+
+    // d=32, k=2 problem; scale locals so f32 stays comfortable.
+    let ds = synthetic::spiked_covariance(
+        320,
+        32,
+        &[8.0, 5.0],
+        0.2,
+        &mut Rng::seed_from(305),
+    );
+    let problem = Problem::from_dataset(&ds, 4, 2);
+    let topo = Topology::erdos_renyi(4, 0.8, &mut Rng::seed_from(306));
+    let cfg = DeepcaConfig { consensus_rounds: 8, max_iters: 40, ..Default::default() };
+
+    let pjrt = PjrtBackend::new(&ctx, &manifest, &problem.locals, 2).unwrap();
+    let comm = DenseComm::from_topology(&topo);
+    let mut rec_pjrt = RunRecorder::every_iteration();
+    let out_pjrt = deepca_algo::run_with(&problem, &pjrt, &comm, &cfg, &mut rec_pjrt);
+
+    let mut rec_rust = RunRecorder::every_iteration();
+    let out_rust = deepca_algo::run_dense(&problem, &topo, &cfg, &mut rec_rust);
+
+    assert!(!out_pjrt.diverged);
+    // f32 artifact: expect convergence to f32-level floor, matching the
+    // f64 run down to ~1e-5.
+    assert!(
+        out_pjrt.final_tan_theta < 1e-4,
+        "PJRT tanθ = {:.3e}",
+        out_pjrt.final_tan_theta
+    );
+    assert!(out_rust.final_tan_theta < 1e-10);
+    // Traces agree while above the f32 floor.
+    for (a, b) in rec_pjrt.records.iter().zip(&rec_rust.records).take(10) {
+        assert!(
+            (a.mean_tan_theta - b.mean_tan_theta).abs()
+                < 1e-3 * (1.0 + b.mean_tan_theta),
+            "iter {}: pjrt {:.3e} vs rust {:.3e}",
+            a.iter,
+            a.mean_tan_theta,
+            b.mean_tan_theta
+        );
+    }
+}

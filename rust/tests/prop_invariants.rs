@@ -1,0 +1,333 @@
+//! Property tests (crate-local harness, `deepca::testing`) over the
+//! coordinator/consensus/linalg invariants the paper's analysis rests on.
+
+use deepca::algo::problem::Problem;
+use deepca::algo::sign_adjust::sign_adjust;
+use deepca::consensus::comm::{Communicator, DenseComm};
+use deepca::consensus::metrics::CommStats;
+use deepca::consensus::AgentStack;
+use deepca::graph::gossip::GossipMatrix;
+use deepca::graph::topology::Topology;
+use deepca::linalg::angles::{subspace_angles, tan_theta};
+use deepca::linalg::eig::eig_sym;
+use deepca::linalg::norms::{pinv_norm, sigma_min, spectral_norm};
+use deepca::linalg::qr::{thin_qr, thin_qr_with};
+use deepca::linalg::Mat;
+use deepca::testing::{check, gen, PropConfig};
+use deepca::util::rng::Rng;
+
+fn cfg(cases: usize, seed: u64) -> PropConfig {
+    PropConfig { cases, seed }
+}
+
+fn random_topology(rng: &mut Rng) -> Topology {
+    let m = rng.range(3, 12);
+    match rng.below(5) {
+        0 => Topology::ring(m),
+        1 => Topology::path(m),
+        2 => Topology::star(m),
+        3 => Topology::complete(m),
+        _ => Topology::erdos_renyi(m, 0.4 + 0.4 * rng.uniform(), rng),
+    }
+}
+
+#[test]
+fn prop_gossip_matrix_assumptions() {
+    // §2.2: L symmetric, doubly stochastic, 0 ⪯ L ⪯ I, λ₂ < 1, and zero
+    // off-pattern entries.
+    check(
+        "gossip-assumptions",
+        cfg(40, 11),
+        |rng| random_topology(rng),
+        |topo| {
+            let g = GossipMatrix::from_laplacian(topo);
+            let m = topo.n();
+            for i in 0..m {
+                let row_sum: f64 = g.weights.row(i).iter().sum();
+                if (row_sum - 1.0).abs() > 1e-9 {
+                    return Err(format!("row {i} sums to {row_sum}"));
+                }
+                for j in 0..m {
+                    if (g.weights[(i, j)] - g.weights[(j, i)]).abs() > 1e-9 {
+                        return Err("not symmetric".into());
+                    }
+                    if i != j && !topo.neighbors(i).contains(&j) && g.weights[(i, j)] != 0.0 {
+                        return Err(format!("weight on non-edge ({i},{j})"));
+                    }
+                }
+            }
+            if !(g.lambda2 < 1.0 && g.lambda_min > -1e-9) {
+                return Err(format!("spectrum: lambda2={} min={}", g.lambda2, g.lambda_min));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_fastmix_preserves_mean_and_contracts() {
+    // Proposition 1, over random topologies / shapes / round counts.
+    check(
+        "fastmix-prop1",
+        cfg(40, 13),
+        |rng| {
+            let topo = random_topology(rng);
+            let m = topo.n();
+            let d = rng.range(2, 12);
+            let k = rng.range(1, d.min(4) + 1);
+            let rounds = rng.range(1, 16);
+            let stack =
+                AgentStack::new((0..m).map(|_| Mat::randn(d, k, rng)).collect());
+            (topo, stack, rounds)
+        },
+        |(topo, stack, rounds)| {
+            let comm = DenseComm::from_topology(topo);
+            let mut mixed = stack.clone();
+            let mut stats = CommStats::default();
+            comm.fastmix(&mut mixed, *rounds, &mut stats);
+            let mean_drift = (&mixed.mean() - &stack.mean()).fro_norm();
+            if mean_drift > 1e-9 * (1.0 + stack.mean().fro_norm()) {
+                return Err(format!("mean drifted by {mean_drift}"));
+            }
+            let before = stack.deviation_from_mean();
+            let after = mixed.deviation_from_mean();
+            // Never expanding (Chebyshev iterates can transiently exceed
+            // the *asymptotic* Proposition-1 rate at tiny K, but must not
+            // grow)...
+            if after > before * 1.05 + 1e-9 {
+                return Err(format!("deviation grew: {after} > {before}"));
+            }
+            // ...and once K is moderate the asymptotic rate holds with a
+            // small constant.
+            if *rounds >= 8 {
+                let rho = comm.gossip().rho(*rounds);
+                if after > 3.0 * rho * before + 1e-9 {
+                    return Err(format!(
+                        "contraction violated at K={rounds}: {after} > 3*rho*{before}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_qr_factorization() {
+    // A = QR, Q orthonormal, R upper-triangular w/ positive diag —
+    // and the raw-sign variant still factorizes exactly.
+    check(
+        "qr-factorization",
+        cfg(60, 17),
+        |rng| gen::tall_mat(rng, 2, 40, 1, 6),
+        |a| {
+            for canonical in [true, false] {
+                let (q, r) = thin_qr_with(a, canonical);
+                let n = a.cols();
+                if (&q.matmul(&r) - a).fro_norm() > 1e-9 * (1.0 + a.fro_norm()) {
+                    return Err("A != QR".into());
+                }
+                if (&q.t_matmul(&q) - &Mat::eye(n)).fro_norm() > 1e-9 {
+                    return Err("Q not orthonormal".into());
+                }
+                for i in 0..n {
+                    if canonical && r[(i, i)] < 0.0 {
+                        return Err("canonical R has negative diagonal".into());
+                    }
+                    for j in 0..i {
+                        if r[(i, j)].abs() > 1e-9 {
+                            return Err("R not triangular".into());
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sign_adjust_idempotent_and_aligned() {
+    check(
+        "sign-adjust",
+        cfg(60, 19),
+        |rng| {
+            let d = rng.range(2, 30);
+            let k = rng.range(1, d.min(5) + 1);
+            (gen::orthonormal(rng, d, k), gen::orthonormal(rng, d, k))
+        },
+        |(w, w0)| {
+            let once = sign_adjust(w, w0);
+            let twice = sign_adjust(&once, w0);
+            if once.data() != twice.data() {
+                return Err("not idempotent".into());
+            }
+            for i in 0..w.cols() {
+                let dot: f64 = once
+                    .col(i)
+                    .iter()
+                    .zip(w0.col(i))
+                    .map(|(a, b)| a * b)
+                    .sum();
+                if dot < 0.0 {
+                    return Err(format!("column {i} misaligned after adjust"));
+                }
+            }
+            // Projector unchanged.
+            let p1 = w.matmul(&w.t());
+            let p2 = once.matmul(&once.t());
+            if (&p1 - &p2).fro_norm() > 1e-10 {
+                return Err("column space changed".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_angles_well_defined() {
+    // 0 <= cos,sin <= 1; tan invariant under right-multiplication.
+    check(
+        "angles",
+        cfg(40, 23),
+        |rng| {
+            let d = rng.range(3, 25);
+            let k = rng.range(1, d.min(4));
+            let u = gen::orthonormal(rng, d, k);
+            let x = Mat::randn(d, k, rng);
+            let t = Mat::randn(k, k, rng);
+            (u, x, t)
+        },
+        |(u, x, t)| {
+            let a = subspace_angles(u, x);
+            if !(0.0..=1.0 + 1e-9).contains(&a.cos) {
+                return Err(format!("cos out of range: {}", a.cos));
+            }
+            if !(0.0..=1.0 + 1e-9).contains(&a.sin) {
+                return Err(format!("sin out of range: {}", a.sin));
+            }
+            let t1 = tan_theta(u, x);
+            let t2 = tan_theta(u, &x.matmul(t));
+            if t1.is_finite() && t2.is_finite() {
+                let rel = (t1 - t2).abs() / (1.0 + t1);
+                if rel > 1e-6 {
+                    return Err(format!("tan not invariant: {t1} vs {t2}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_eig_reconstructs() {
+    check(
+        "eig-reconstruction",
+        cfg(30, 29),
+        |rng| gen::psd(rng, 2, 16),
+        |a| {
+            let e = eig_sym(a);
+            let d = Mat::diag(&e.values);
+            let recon = e.vectors.matmul(&d).matmul(&e.vectors.t());
+            if (&recon - a).fro_norm() > 1e-8 * (1.0 + a.fro_norm()) {
+                return Err("V*L*Vt != A".into());
+            }
+            for w in e.values.windows(2) {
+                if w[1] > w[0] + 1e-12 {
+                    return Err("eigenvalues not sorted".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_norms_consistent() {
+    // spectral <= frobenius; sigma_min * pinv_norm = 1; R preserves
+    // singular values of A.
+    check(
+        "norms",
+        cfg(40, 31),
+        |rng| gen::tall_mat(rng, 2, 25, 1, 5),
+        |a| {
+            let s2 = spectral_norm(a);
+            if s2 > a.fro_norm() + 1e-9 {
+                return Err("spectral > frobenius".into());
+            }
+            let smin = sigma_min(a);
+            if smin > 0.0 {
+                let p = pinv_norm(a);
+                if (p * smin - 1.0).abs() > 1e-9 {
+                    return Err("pinv_norm*sigma_min != 1".into());
+                }
+            }
+            let (_q, r) = thin_qr(a);
+            let sr = spectral_norm(&r);
+            if (sr - s2).abs() > 1e-8 * (1.0 + s2) {
+                return Err(format!("norm(R) {sr} != norm(A) {s2}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_deepca_lemma1_consensus_decay() {
+    // Lemma 1's second claim: the consensus error of the tracked variable
+    // decays to ~0 when K is generous, across random small problems.
+    check(
+        "deepca-consensus-decay",
+        cfg(8, 37),
+        |rng| {
+            let m = rng.range(3, 7);
+            let d = rng.range(6, 14);
+            let k = rng.range(1, 3);
+            let basis = Mat::rand_orthonormal(d, d, rng);
+            let spectrum: Vec<f64> = (0..d)
+                .map(|i| if i < k { 8.0 - i as f64 } else { 0.3 / (1.0 + i as f64) })
+                .collect();
+            let base = basis.matmul(&Mat::diag(&spectrum)).matmul(&basis.t());
+            let mut locals = Vec::new();
+            let mut sum_e = Mat::zeros(d, d);
+            for j in 0..m {
+                let e = if j + 1 == m {
+                    sum_e.scaled(-1.0)
+                } else {
+                    let g = Mat::randn(d, d, rng);
+                    let mut e = &g + &g.t();
+                    e.scale(0.1);
+                    sum_e.axpy(1.0, &e);
+                    e
+                };
+                let mut a = base.clone();
+                a.axpy(1.0, &e);
+                a.symmetrize();
+                locals.push(a);
+            }
+            let topo = Topology::erdos_renyi(m, 0.7, rng);
+            (locals, k, topo)
+        },
+        |(locals, k, topo)| {
+            let problem = Problem::new(locals.clone(), *k, "prop");
+            let cfg = deepca::algo::deepca::DeepcaConfig {
+                consensus_rounds: 16,
+                max_iters: 60,
+                ..Default::default()
+            };
+            let mut rec = deepca::algo::metrics::RunRecorder::every_iteration();
+            let out = deepca::algo::deepca::run_dense(&problem, topo, &cfg, &mut rec);
+            if out.diverged {
+                return Err("diverged".into());
+            }
+            let last = rec.records.last().unwrap();
+            if last.s_deviation > 1e-7 {
+                return Err(format!("S consensus error {:.3e}", last.s_deviation));
+            }
+            if last.mean_tan_theta > 1e-7 {
+                return Err(format!("tan {:.3e}", last.mean_tan_theta));
+            }
+            Ok(())
+        },
+    );
+}
