@@ -17,9 +17,11 @@
 //!    DePCA baseline at the same budget, recorded in EXPERIMENTS.md.
 
 use anyhow::{Context, Result};
-use deepca::algo::depca::{self, DepcaConfig, KPolicy};
-use deepca::algo::metrics::{RunRecorder, RunOutput};
+use deepca::algo::depca::{DepcaConfig, KPolicy};
+use deepca::algo::metrics::{RunOutput, RunRecorder};
 use deepca::algo::problem::Problem;
+use deepca::algo::solver::Algo;
+use deepca::coordinator::session::Session;
 use deepca::consensus::comm::{Communicator, DenseComm};
 use deepca::consensus::metrics::CommStats;
 use deepca::consensus::AgentStack;
@@ -121,17 +123,14 @@ fn main() -> Result<()> {
 
     // ------------------------------------------ 3. headline metric table
     println!("\nrounds to reach ε (DeEPCA constant K={ROUNDS} vs DePCA fixed K={ROUNDS}):");
-    let mut rec_depca = RunRecorder::every_iteration();
-    let _ = depca::run_dense(
-        &problem,
-        &topo,
-        &DepcaConfig {
+    let depca_run = Session::on(&problem, &topo)
+        .algo(Algo::Depca(DepcaConfig {
             k_policy: KPolicy::Fixed(ROUNDS),
             max_iters: ITERS,
             ..Default::default()
-        },
-        &mut rec_depca,
-    );
+        }))
+        .solve();
+    let rec_depca = depca_run.trace;
     println!("  {:<8} {:>14} {:>14}", "ε", "DeEPCA", "DePCA");
     for eps in [1e-2, 1e-3, 1e-4, 1e-5] {
         let a = rec

@@ -7,7 +7,9 @@
 //! Ten agents on a random network each hold 200 rows of a sparse binary
 //! dataset; DeEPCA recovers the global top-5 principal subspace with a
 //! constant 8 gossip rounds per power iteration, matching the
-//! centralized power method's convergence rate.
+//! centralized power method's convergence rate. Everything runs through
+//! the unified `Session` builder — swap the algorithm or engine without
+//! touching the rest of the pipeline.
 
 use deepca::prelude::*;
 
@@ -42,41 +44,44 @@ fn main() {
         gossip.gap()
     );
 
-    // 4. Run DeEPCA (Algorithm 1).
-    let cfg = DeepcaConfig {
-        consensus_rounds: 8,
-        max_iters: 400,
-        tol: 1e-10,
-        ..Default::default()
-    };
-    let mut rec = RunRecorder::every_iteration();
-    let out = deepca_algo::run_dense(&problem, &net, &cfg, &mut rec);
+    // 4. Run DeEPCA (Algorithm 1) through the session builder, with the
+    //    Remark-4 eigenvalue estimation composed as a post-step.
+    let report = Session::on(&problem, &net)
+        .algo(Algo::Deepca(DeepcaConfig { consensus_rounds: 8, ..Default::default() }))
+        .stop(StopCriteria::max_iters(400).with_tol(1e-10))
+        .eigenvalues(20)
+        .solve();
 
     println!("\niter  comm   ‖S−S̄⊗1‖      ‖W−W̄⊗1‖      mean tanθ");
-    for r in rec.records.iter().step_by(25) {
+    for r in report.trace.records.iter().step_by(25) {
         println!(
             "{:>4}  {:>4}   {:>10.3e}   {:>10.3e}   {:>10.3e}",
             r.iter, r.comm_rounds, r.s_deviation, r.w_deviation, r.mean_tan_theta
         );
     }
     println!(
-        "\nDeEPCA: tanθ = {:.3e} after {} iterations ({})",
-        out.final_tan_theta, out.iters, out.comm
+        "\nDeEPCA: tanθ = {:.3e} after {} iterations ({:?}, {})",
+        report.final_tan_theta, report.iters, report.reason, report.comm
     );
 
-    // 5. Compare with the centralized power method — same rate.
-    let cpca = centralized::run_with_tol(&problem, 400, cfg.init_seed, 1e-10);
+    // 5. Compare with the centralized power method — same rate, same
+    //    builder, same report shape.
+    let cpca = Session::on(&problem, &net)
+        .algo(Algo::Centralized(CentralizedConfig {
+            max_iters: 400,
+            tol: 1e-10,
+            ..Default::default()
+        }))
+        .solve();
     println!(
         "CPCA reference: tanθ = {:.3e} after {} iterations (no network!)",
-        cpca.tan_trace.last().unwrap(),
-        cpca.iters
+        cpca.final_tan_theta, cpca.iters
     );
-    assert!(out.final_tan_theta < 1e-8, "quickstart failed to converge");
+    assert!(report.final_tan_theta < 1e-8, "quickstart failed to converge");
 
-    // 6. Bonus (paper Remark 4): decentralized eigenvalue estimation —
-    // one extra k×k consensus round-trip on top of the converged basis.
-    let comm = deepca::consensus::comm::DenseComm::from_topology(&net);
-    let est = deepca::algo::rayleigh::estimate_eigenvalues(&problem, &out, &comm, 20);
+    // 6. Bonus (paper Remark 4): the decentralized eigenvalue estimates
+    //    from the post-step — one extra k×k consensus round-trip.
+    let est = report.eigenvalues.as_ref().expect("eigenvalue post-step ran");
     println!("\ndecentralized eigenvalue estimates vs truth:");
     for (i, (got, want)) in est
         .values()

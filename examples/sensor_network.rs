@@ -13,7 +13,6 @@
 //! then each sensor projects its measurements — all without any node
 //! ever seeing another node's raw data.
 
-use deepca::consensus::comm::ThreadedNetwork;
 use deepca::prelude::*;
 
 fn main() {
@@ -64,21 +63,28 @@ fn main() {
     let k_rounds = gossip.rounds_for_rho(1e-3);
     println!("consensus rounds per iteration: K = {k_rounds} (from ρ target 1e-3)");
 
-    let cfg = DeepcaConfig {
-        consensus_rounds: k_rounds,
-        max_iters: 60,
-        tol: 1e-9,
-        ..Default::default()
-    };
-    // Real message-passing engine: one thread per sensor.
-    let backend = deepca::algo::backend::RustBackend::new(&problem.locals);
-    let comm = ThreadedNetwork::from_topology(&net);
-    let mut rec = RunRecorder::every_iteration();
-    let out = deepca_algo::run_with(&problem, &backend, &comm, &cfg, &mut rec);
+    // Real message-passing engine (one thread per sensor, per-edge
+    // channels) selected with a single builder call; the observer prints
+    // live progress from the shared driver loop.
+    let out = Session::on(&problem, &net)
+        .algo(Algo::Deepca(DeepcaConfig {
+            consensus_rounds: k_rounds,
+            ..Default::default()
+        }))
+        .engine(Engine::Threaded)
+        .stop(StopCriteria::max_iters(60).with_tol(1e-9))
+        .observe(|step| {
+            if step.iter % 15 == 0 {
+                if let Some(err) = step.mean_tan_theta {
+                    println!("  [live] iter {:>3}: mean tanθ = {err:.3e}", step.iter);
+                }
+            }
+        })
+        .solve();
 
     println!(
-        "\nDeEPCA over the radio grid: tanθ = {:.3e} after {} iters",
-        out.final_tan_theta, out.iters
+        "\nDeEPCA over the radio grid: tanθ = {:.3e} after {} iters ({:?})",
+        out.final_tan_theta, out.iters, out.reason
     );
     println!("traffic: {}", out.comm);
     println!(

@@ -80,9 +80,10 @@ fn main() {
     );
 
     let net = Topology::erdos_renyi(m, 0.5, &mut Rng::seed_from(32));
-    let cfg = DeepcaConfig { consensus_rounds: 12, max_iters: 120, tol: 1e-9, ..Default::default() };
-    let mut rec = RunRecorder::every_iteration();
-    let out = deepca_algo::run_dense(&problem, &net, &cfg, &mut rec);
+    let out = Session::on(&problem, &net)
+        .algo(Algo::Deepca(DeepcaConfig { consensus_rounds: 12, ..Default::default() }))
+        .stop(StopCriteria::max_iters(120).with_tol(1e-9))
+        .solve();
     println!(
         "DeEPCA spectral embedding: tanθ = {:.3e} after {} iters ({})",
         out.final_tan_theta, out.iters, out.comm

@@ -18,9 +18,10 @@ use deepca::data::synthetic;
 use deepca::graph::topology::Topology;
 use deepca::linalg::angles::tan_theta;
 use deepca::linalg::eig::eig_sym;
+use deepca::coordinator::session::Session;
 use deepca::linalg::qr::thin_qr;
 use deepca::linalg::Mat;
-use deepca::prelude::deepca_algo;
+use deepca::prelude::Algo;
 use deepca::util::rng::Rng;
 
 fn main() {
@@ -88,12 +89,15 @@ fn main() {
     section("end-to-end DeEPCA iteration cost (m=50, d=300, k=5, K=8)");
     let cfg = DeepcaConfig { consensus_rounds: 8, max_iters: 10, ..Default::default() };
     Bench::new(1, 5).run("10 iterations, metrics ON (stride 1)", || {
-        let mut rec = RunRecorder::every_iteration();
-        deepca_algo::run_dense(&problem, &topo, &cfg, &mut rec)
+        Session::on(&problem, &topo)
+            .algo(Algo::Deepca(cfg.clone()))
+            .solve()
     });
     Bench::new(1, 5).run("10 iterations, metrics strided (10)", || {
-        let mut rec = RunRecorder::with_stride(10);
-        deepca_algo::run_dense(&problem, &topo, &cfg, &mut rec)
+        Session::on(&problem, &topo)
+            .algo(Algo::Deepca(cfg.clone()))
+            .record(RunRecorder::with_stride(10))
+            .solve()
     });
 
     println!("\nmicrobench OK");

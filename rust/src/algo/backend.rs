@@ -38,6 +38,25 @@ pub trait PowerBackend {
     fn label(&self) -> &'static str;
 }
 
+// Forwarding impl so a borrowed backend can be boxed into a solver
+// (the deprecated `run_with` shims hand `&dyn PowerBackend` through the
+// step-wise API). `local_products` is forwarded explicitly to preserve
+// implementations' parallel overrides.
+impl PowerBackend for &dyn PowerBackend {
+    fn m(&self) -> usize {
+        (**self).m()
+    }
+    fn local_product(&self, agent: usize, w: &Mat) -> Mat {
+        (**self).local_product(agent, w)
+    }
+    fn local_products(&self, ws: &AgentStack) -> AgentStack {
+        (**self).local_products(ws)
+    }
+    fn label(&self) -> &'static str {
+        (**self).label()
+    }
+}
+
 /// Sequential in-process backend over dense local matrices.
 pub struct RustBackend<'a> {
     locals: &'a [Mat],

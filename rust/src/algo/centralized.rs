@@ -3,14 +3,89 @@
 //! The paper's figures include centralized PCA as the convergence-rate
 //! yardstick: DeEPCA with sufficient K should match its linear rate.
 //! `W ← QR(A·W)` on the aggregate, with per-iteration tan θ records.
+//!
+//! [`CentralizedSolver`] implements the step-wise [`Solver`] API over a
+//! single-slice iterate stack, so CPCA runs through the same driver,
+//! recorder, and builder as the decentralized algorithms.
 
 use super::problem::Problem;
-use crate::linalg::angles::tan_theta;
+use super::solver::{drive, Solver, SolverState, StepReport, StopCriteria};
+use crate::algo::metrics::RunRecorder;
+use crate::consensus::AgentStack;
 use crate::linalg::qr::orth;
 use crate::linalg::Mat;
 use std::time::Instant;
 
-/// Output of a centralized run.
+/// Centralized power-method knobs.
+#[derive(Clone, Debug)]
+pub struct CentralizedConfig {
+    /// Maximum power iterations.
+    pub max_iters: usize,
+    /// Early stop once tan θ ≤ tol (0 disables).
+    pub tol: f64,
+    /// Seed for the initial `W⁰` (same initializer as the decentralized
+    /// runs for fair comparison).
+    pub init_seed: u64,
+}
+
+impl Default for CentralizedConfig {
+    fn default() -> Self {
+        CentralizedConfig { max_iters: 100, tol: 0.0, init_seed: 2021 }
+    }
+}
+
+/// Step-wise centralized power method on the aggregate matrix.
+pub struct CentralizedSolver<'a> {
+    problem: &'a Problem,
+    state: SolverState,
+}
+
+impl<'a> CentralizedSolver<'a> {
+    /// Build from the problem's aggregate.
+    pub fn new(problem: &'a Problem, cfg: CentralizedConfig) -> Self {
+        let w0 = problem.initial_w(cfg.init_seed);
+        CentralizedSolver {
+            problem,
+            state: SolverState::init(AgentStack::replicate(1, &w0), false),
+        }
+    }
+}
+
+impl Solver for CentralizedSolver<'_> {
+    fn name(&self) -> &'static str {
+        "centralized"
+    }
+
+    fn problem(&self) -> &Problem {
+        self.problem
+    }
+
+    fn step(&mut self) -> StepReport {
+        let t = self.state.iter;
+        let next = orth(&self.problem.aggregate.matmul(self.state.w.slice(0)));
+        *self.state.w.slice_mut(0) = next;
+        self.state.iter = t + 1;
+        StepReport {
+            iter: t,
+            comm: self.state.stats.clone(),
+            finite: self.state.w.is_finite(),
+            mean_tan_theta: None,
+        }
+    }
+
+    fn state(&self) -> &SolverState {
+        &self.state
+    }
+
+    fn warm_start(&mut self, w: &AgentStack) {
+        // Accept any per-agent stack: centralized PCA restarts from the
+        // (orthonormalized) mean iterate.
+        let mean = orth(&w.mean());
+        self.state = SolverState::init(AgentStack::replicate(1, &mean), false);
+    }
+}
+
+/// Output of a centralized run (legacy shape).
 #[derive(Clone, Debug)]
 pub struct CentralizedOutput {
     /// Final orthonormal iterate.
@@ -36,21 +111,22 @@ pub fn run_with_tol(
     init_seed: u64,
     tol: f64,
 ) -> CentralizedOutput {
-    let u = problem.u();
-    let mut w = problem.initial_w(init_seed);
     let t0 = Instant::now();
-    let mut tan_trace = Vec::with_capacity(iters);
-    let mut done = 0;
-    for t in 0..iters {
-        w = orth(&problem.aggregate.matmul(&w));
-        let tan = tan_theta(&u, &w);
-        tan_trace.push(tan);
-        done = t + 1;
-        if tol > 0.0 && tan <= tol {
-            break;
-        }
+    let cfg = CentralizedConfig { max_iters: iters, tol, init_seed };
+    let mut solver = CentralizedSolver::new(problem, cfg);
+    let mut rec = RunRecorder::every_iteration();
+    let outcome = drive(
+        &mut solver,
+        &StopCriteria::max_iters(iters).with_tol(tol),
+        &mut rec,
+        None,
+    );
+    CentralizedOutput {
+        w: solver.state().w.slice(0).clone(),
+        tan_trace: rec.records.iter().map(|r| r.mean_tan_theta).collect(),
+        iters: outcome.iters,
+        elapsed_secs: t0.elapsed().as_secs_f64(),
     }
-    CentralizedOutput { w, tan_trace, iters: done, elapsed_secs: t0.elapsed().as_secs_f64() }
 }
 
 #[cfg(test)]
@@ -118,5 +194,15 @@ mod tests {
         let out = run_with_tol(&p, 500, 3, 1e-6);
         assert!(out.iters < 500);
         assert!(*out.tan_trace.last().unwrap() <= 1e-6);
+    }
+
+    #[test]
+    fn solver_single_slice_state() {
+        let p = problem(185);
+        let mut solver = CentralizedSolver::new(&p, CentralizedConfig::default());
+        assert_eq!(solver.state().w.m(), 1);
+        let rep = solver.step();
+        assert!(rep.finite);
+        assert_eq!(rep.comm.rounds, 0, "CPCA never communicates");
     }
 }

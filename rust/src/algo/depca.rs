@@ -14,17 +14,20 @@
 //! (paper Figures 1–2, middle series), and reaching precision ε needs
 //! `K_t = O(log 1/ε)` rounds per iteration (Eqn. 3.12). Both schedules
 //! are implemented so the figure benches can show the contrast.
+//!
+//! [`DepcaSolver`] implements the step-wise [`Solver`] API; the old
+//! [`run_with`]/[`run_dense`] free functions remain as deprecated shims.
 
 use super::backend::{PowerBackend, RustBackend};
 use super::metrics::{RunOutput, RunRecorder};
 use super::problem::Problem;
 use super::sign_adjust::sign_adjust;
+use super::solver::{drive_to_run_output, Solver, SolverState, StepReport, StopCriteria};
 use crate::consensus::comm::{Communicator, DenseComm};
-use crate::consensus::metrics::CommStats;
 use crate::consensus::AgentStack;
 use crate::graph::topology::Topology;
 use crate::linalg::qr::orth;
-use std::time::Instant;
+use crate::linalg::Mat;
 
 /// Consensus-rounds schedule for DePCA.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -79,7 +82,104 @@ impl Default for DepcaConfig {
     }
 }
 
+/// Step-wise DePCA: local power step + K_t-round consensus + QR.
+pub struct DepcaSolver<'a> {
+    problem: &'a Problem,
+    backend: Box<dyn PowerBackend + 'a>,
+    comm: Box<dyn Communicator + 'a>,
+    cfg: DepcaConfig,
+    /// Sign-adjust anchor.
+    w0: Mat,
+    state: SolverState,
+}
+
+impl<'a> DepcaSolver<'a> {
+    /// Solver over an explicit backend and communicator.
+    pub fn new(
+        problem: &'a Problem,
+        backend: Box<dyn PowerBackend + 'a>,
+        comm: Box<dyn Communicator + 'a>,
+        cfg: DepcaConfig,
+    ) -> Self {
+        let m = problem.m();
+        assert_eq!(backend.m(), m, "backend/problem agent count mismatch");
+        assert_eq!(comm.m(), m, "communicator/problem agent count mismatch");
+        let w0 = problem.initial_w(cfg.init_seed);
+        let w = AgentStack::replicate(m, &w0);
+        DepcaSolver {
+            problem,
+            backend,
+            comm,
+            cfg,
+            state: SolverState::init(w, false),
+            w0,
+        }
+    }
+
+    /// Convenience: Rust backend + dense FastMix over `topo`.
+    pub fn dense(problem: &'a Problem, topo: &Topology, cfg: DepcaConfig) -> Self {
+        let backend = Box::new(RustBackend::new(&problem.locals));
+        let comm = Box::new(DenseComm::from_topology(topo));
+        Self::new(problem, backend, comm, cfg)
+    }
+}
+
+impl Solver for DepcaSolver<'_> {
+    fn name(&self) -> &'static str {
+        "depca"
+    }
+
+    fn problem(&self) -> &Problem {
+        self.problem
+    }
+
+    fn step(&mut self) -> StepReport {
+        let t = self.state.iter;
+        let m = self.state.w.m();
+
+        // Local power step on the iterate itself (no tracking).
+        let mut p = self.backend.local_products(&self.state.w);
+        // Multi-consensus with the schedule's rounds for this iteration.
+        self.comm
+            .fastmix(&mut p, self.cfg.k_policy.rounds(t), &mut self.state.stats);
+        // Local orthonormalization.
+        for j in 0..m {
+            let q = orth(p.slice(j));
+            *self.state.w.slice_mut(j) = if self.cfg.sign_adjust {
+                sign_adjust(&q, &self.w0)
+            } else {
+                q
+            };
+        }
+        // Expose the pre-QR mixed variable as this algorithm's consensus
+        // state (the recorder's s_deviation analogue; DePCA has no
+        // tracked S).
+        self.state.s = Some(p);
+
+        self.state.iter = t + 1;
+        let finite = self.state.w.is_finite();
+        StepReport {
+            iter: t,
+            comm: self.state.stats.clone(),
+            finite,
+            mean_tan_theta: None,
+        }
+    }
+
+    fn state(&self) -> &SolverState {
+        &self.state
+    }
+
+    fn warm_start(&mut self, w: &AgentStack) {
+        assert_eq!(w.m(), self.problem.m(), "warm-start agent count mismatch");
+        assert_eq!(w.slice_shape(), self.w0.shape(), "warm-start shape mismatch");
+        self.w0 = w.slice(0).clone();
+        self.state = SolverState::init(w.clone(), false);
+    }
+}
+
 /// Run DePCA with explicit backend and communicator.
+#[deprecated(note = "use `DepcaSolver` + `algo::solver::drive`, or the `Session` builder")]
 pub fn run_with(
     problem: &Problem,
     backend: &dyn PowerBackend,
@@ -87,72 +187,27 @@ pub fn run_with(
     cfg: &DepcaConfig,
     recorder: &mut RunRecorder,
 ) -> RunOutput {
-    let m = problem.m();
-    assert_eq!(backend.m(), m);
-    assert_eq!(comm.m(), m);
-    let u = problem.u();
-    let w0 = problem.initial_w(cfg.init_seed);
-
-    let mut w = AgentStack::replicate(m, &w0);
-    let mut stats = CommStats::default();
-    let t0 = Instant::now();
-    let mut iters = 0;
-    let mut diverged = false;
-
-    for t in 0..cfg.max_iters {
-        // Local power step on the iterate itself (no tracking).
-        let mut p = backend.local_products(&w);
-        // Multi-consensus.
-        comm.fastmix(&mut p, cfg.k_policy.rounds(t), &mut stats);
-        // Local orthonormalization.
-        for j in 0..m {
-            let q = orth(p.slice(j));
-            *w.slice_mut(j) = if cfg.sign_adjust {
-                sign_adjust(&q, &w0)
-            } else {
-                q
-            };
-        }
-
-        iters = t + 1;
-        if !w.is_finite() {
-            diverged = true;
-            break;
-        }
-        if recorder.should_record(t) {
-            // DePCA has no tracked S; report the pre-QR consensus variable
-            // deviation as its s_deviation analogue (the paper's first
-            // column plots ‖S−S̄⊗1‖ for DeEPCA only).
-            recorder.record(t, &u, &w, Some(&p), &stats, t0.elapsed().as_secs_f64());
-        }
-        if cfg.tol > 0.0 && recorder.final_tan_theta() <= cfg.tol {
-            break;
-        }
-    }
-
-    RunOutput {
-        iters,
-        final_tan_theta: recorder.final_tan_theta(),
-        comm: stats,
-        final_w: w,
-        elapsed_secs: t0.elapsed().as_secs_f64(),
-        diverged,
-    }
+    let mut solver = DepcaSolver::new(problem, Box::new(backend), Box::new(comm), cfg.clone());
+    let stop = StopCriteria::max_iters(cfg.max_iters).with_tol(cfg.tol);
+    drive_to_run_output(&mut solver, &stop, recorder)
 }
 
 /// Convenience runner with Rust backend + dense FastMix.
+#[deprecated(note = "use `DepcaSolver::dense` + `algo::solver::drive`, or the `Session` builder")]
 pub fn run_dense(
     problem: &Problem,
     topo: &Topology,
     cfg: &DepcaConfig,
     recorder: &mut RunRecorder,
 ) -> RunOutput {
-    let backend = RustBackend::new(&problem.locals);
-    let comm = DenseComm::from_topology(topo);
-    run_with(problem, &backend, &comm, cfg, recorder)
+    let mut solver = DepcaSolver::dense(problem, topo, cfg.clone());
+    let stop = StopCriteria::max_iters(cfg.max_iters).with_tol(cfg.tol);
+    drive_to_run_output(&mut solver, &stop, recorder)
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // shim coverage: the unchanged seed tests run
+                     // through the deprecated wrappers on purpose.
 mod tests {
     use super::*;
     use crate::algo::deepca::{self, DeepcaConfig};
@@ -300,5 +355,23 @@ mod tests {
         // K_t = 2+ceil(t): 2,3,4,5,6 → 20 rounds.
         assert_eq!(out.comm.rounds, 20);
         assert_eq!(out.comm.mixes, 5);
+    }
+
+    #[test]
+    fn solver_schedule_uses_internal_iteration() {
+        // The K-schedule must key off the solver's own iteration counter,
+        // not an external loop variable.
+        let (p, topo) = heterogeneous_problem(175);
+        let cfg = DepcaConfig {
+            k_policy: KPolicy::Increasing { base: 2, slope: 1.0 },
+            max_iters: 5,
+            ..Default::default()
+        };
+        let mut solver = DepcaSolver::dense(&p, &topo, cfg);
+        for _ in 0..5 {
+            solver.step();
+        }
+        assert_eq!(solver.state().stats.rounds, 20);
+        assert_eq!(solver.state().stats.mixes, 5);
     }
 }

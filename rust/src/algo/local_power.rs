@@ -6,13 +6,91 @@
 //! multi-consensus in the first place. We implement it to (a) quantify
 //! that gap in the ablation bench and (b) measure the heterogeneity
 //! floor `(1/m)Σ tanθ_k(U, U_j)` of a given partition.
+//!
+//! [`LocalPowerSolver`] implements the step-wise [`Solver`] API so the
+//! strawman runs through the same driver/builder as everything else.
 
+use super::backend::{PowerBackend, RustBackend};
 use super::problem::Problem;
+use super::solver::{drive, mean_tan_theta, Solver, SolverState, StepReport, StopCriteria};
+use crate::algo::metrics::RunRecorder;
 use crate::consensus::AgentStack;
-use crate::linalg::angles::tan_theta;
 use crate::linalg::qr::orth;
 
-/// Output of the local-only baseline.
+/// Local-only power method knobs.
+#[derive(Clone, Debug)]
+pub struct LocalPowerConfig {
+    /// Power iterations to run.
+    pub max_iters: usize,
+    /// Seed for the shared initial `W⁰`.
+    pub init_seed: u64,
+}
+
+impl Default for LocalPowerConfig {
+    fn default() -> Self {
+        LocalPowerConfig { max_iters: 60, init_seed: 2021 }
+    }
+}
+
+/// Step-wise local-only power method (no communication at all).
+pub struct LocalPowerSolver<'a> {
+    problem: &'a Problem,
+    backend: Box<dyn PowerBackend + 'a>,
+    state: SolverState,
+}
+
+impl<'a> LocalPowerSolver<'a> {
+    /// Solver over an explicit backend.
+    pub fn new(problem: &'a Problem, backend: Box<dyn PowerBackend + 'a>, cfg: LocalPowerConfig) -> Self {
+        assert_eq!(backend.m(), problem.m(), "backend/problem agent count mismatch");
+        let w0 = problem.initial_w(cfg.init_seed);
+        let w = AgentStack::replicate(problem.m(), &w0);
+        LocalPowerSolver { problem, backend, state: SolverState::init(w, false) }
+    }
+
+    /// Convenience: sequential Rust backend.
+    pub fn dense(problem: &'a Problem, cfg: LocalPowerConfig) -> Self {
+        let backend = Box::new(RustBackend::new(&problem.locals));
+        Self::new(problem, backend, cfg)
+    }
+}
+
+impl Solver for LocalPowerSolver<'_> {
+    fn name(&self) -> &'static str {
+        "local-power"
+    }
+
+    fn problem(&self) -> &Problem {
+        self.problem
+    }
+
+    fn step(&mut self) -> StepReport {
+        let t = self.state.iter;
+        let m = self.state.w.m();
+        let p = self.backend.local_products(&self.state.w);
+        for j in 0..m {
+            *self.state.w.slice_mut(j) = orth(p.slice(j));
+        }
+        self.state.iter = t + 1;
+        StepReport {
+            iter: t,
+            comm: self.state.stats.clone(),
+            finite: self.state.w.is_finite(),
+            mean_tan_theta: None,
+        }
+    }
+
+    fn state(&self) -> &SolverState {
+        &self.state
+    }
+
+    fn warm_start(&mut self, w: &AgentStack) {
+        assert_eq!(w.m(), self.problem.m(), "warm-start agent count mismatch");
+        self.state = SolverState::init(w.clone(), false);
+    }
+}
+
+/// Output of the local-only baseline (legacy shape).
 #[derive(Clone, Debug)]
 pub struct LocalPowerOutput {
     /// Final per-agent iterates (each ≈ top-k of its own A_j).
@@ -22,31 +100,30 @@ pub struct LocalPowerOutput {
 }
 
 /// Run `iters` purely-local power iterations.
+#[deprecated(note = "use `LocalPowerSolver` + `algo::solver::drive`, or the `Session` builder")]
 pub fn run(problem: &Problem, iters: usize, init_seed: u64) -> LocalPowerOutput {
-    let u = problem.u();
-    let w0 = problem.initial_w(init_seed);
-    let m = problem.m();
-    let mut w = AgentStack::replicate(m, &w0);
-    let mut mean_tan_trace = Vec::with_capacity(iters);
-    for _ in 0..iters {
-        for j in 0..m {
-            let p = problem.locals[j].matmul(w.slice(j));
-            *w.slice_mut(j) = orth(&p);
-        }
-        let mean = w.iter().map(|wj| tan_theta(&u, wj)).sum::<f64>() / m as f64;
-        mean_tan_trace.push(mean);
+    let cfg = LocalPowerConfig { max_iters: iters, init_seed };
+    let mut solver = LocalPowerSolver::dense(problem, cfg);
+    let mut rec = RunRecorder::every_iteration();
+    let _ = drive(&mut solver, &StopCriteria::max_iters(iters), &mut rec, None);
+    LocalPowerOutput {
+        final_w: solver.state().w.clone(),
+        mean_tan_trace: rec.records.iter().map(|r| r.mean_tan_theta).collect(),
     }
-    LocalPowerOutput { final_w: w, mean_tan_trace }
 }
 
 /// The heterogeneity floor of a partition: where local-only power
 /// iterations level off (mean angle between local and global top-k).
 pub fn heterogeneity_floor(problem: &Problem, iters: usize) -> f64 {
-    let out = run(problem, iters, 2021);
-    *out.mean_tan_trace.last().unwrap()
+    let mut solver = LocalPowerSolver::dense(problem, LocalPowerConfig { max_iters: iters, init_seed: 2021 });
+    for _ in 0..iters {
+        solver.step();
+    }
+    mean_tan_theta(&problem.u(), &solver.state().w)
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // the legacy `run` shim is part of what's under test.
 mod tests {
     use super::*;
     use crate::data::synthetic;
@@ -110,5 +187,18 @@ mod tests {
         let low = mk(0.1);
         let high = mk(0.9);
         assert!(high > low, "floor should grow with drift: {low} vs {high}");
+    }
+
+    #[test]
+    fn solver_reports_no_communication() {
+        let mut rng = Rng::seed_from(194);
+        let ds = synthetic::spiked_covariance(200, 8, &[6.0], 0.2, &mut rng);
+        let p = Problem::from_dataset(&ds, 4, 1);
+        let mut solver = LocalPowerSolver::dense(&p, LocalPowerConfig::default());
+        for _ in 0..10 {
+            let rep = solver.step();
+            assert_eq!(rep.comm.rounds, 0);
+            assert_eq!(rep.comm.bytes_sent, 0);
+        }
     }
 }

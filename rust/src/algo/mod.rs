@@ -1,21 +1,34 @@
-//! The paper's algorithms and baselines.
+//! The paper's algorithms and baselines, unified behind one step-wise
+//! solver API.
 //!
+//! - [`solver`] — **the** algorithm interface: the [`solver::Solver`]
+//!   trait (one power iteration per `step`), [`solver::StopCriteria`]
+//!   (max iters / tol / stall, evaluated on freshly computed errors by
+//!   the shared [`solver::drive`] loop), and the unified
+//!   [`solver::SolveReport`]. Sessions are built with
+//!   [`crate::coordinator::session::Session`].
 //! - [`problem`] — the decentralized PCA problem instance: local Grams
 //!   `A_j`, aggregate `A`, target rank k, exact ground truth `U`.
 //! - [`backend`] — where the per-agent product `A_j·W` runs: pure Rust
 //!   ([`backend::RustBackend`]), thread-parallel, or PJRT artifacts
 //!   compiled from the JAX/Pallas layers ([`crate::runtime`]).
 //! - [`sign_adjust`] — paper Algorithm 2.
-//! - [`deepca`] — paper Algorithm 1 (subspace tracking + FastMix).
-//! - [`depca`] — the Eqn. 3.4 baseline (local power + multi-consensus),
-//!   with fixed or increasing consensus schedules.
-//! - [`local_power`] — no-communication strawman (converges to local PCs).
-//! - [`centralized`] — CPCA reference (exact power method on `A`).
+//! - [`deepca`] — paper Algorithm 1 ([`deepca::DeepcaSolver`]:
+//!   subspace tracking + FastMix).
+//! - [`depca`] — the Eqn. 3.4 baseline ([`depca::DepcaSolver`]: local
+//!   power + multi-consensus, fixed or increasing schedules).
+//! - [`local_power`] — no-communication strawman
+//!   ([`local_power::LocalPowerSolver`]: converges to local PCs).
+//! - [`centralized`] — CPCA reference
+//!   ([`centralized::CentralizedSolver`]: exact power method on `A`).
+//! - [`rayleigh`] — Remark-4 eigenvalue estimation, composable as a
+//!   session post-step.
 //! - [`metrics`] — per-iteration records for the Figure 1–2 panels.
 
 pub mod problem;
 pub mod backend;
 pub mod sign_adjust;
+pub mod solver;
 pub mod deepca;
 pub mod depca;
 pub mod local_power;

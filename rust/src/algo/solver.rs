@@ -1,0 +1,428 @@
+//! The unified step-wise solver API.
+//!
+//! Every PCA algorithm in this crate — DeEPCA (paper Algorithm 1), the
+//! DePCA baseline (Eqn. 3.4), the local-only power method, and the
+//! centralized CPCA reference — implements one trait, [`Solver`]:
+//! construct it, call [`Solver::step`] to advance one power iteration,
+//! inspect [`Solver::state`] between steps. One shared driver loop
+//! ([`drive`]) owns iteration control: it evaluates [`StopCriteria`]
+//! (max iterations, tolerance, stall detection) against a **freshly
+//! computed** subspace error, feeds the [`RunRecorder`], invokes
+//! observers, and assembles a [`DriveOutcome`].
+//!
+//! This fixes a class of bugs in the previous per-algorithm run loops
+//! where the `tol` early-stop read the *recorder's* last value: with a
+//! strided recorder the check compared against a stale (or never
+//! recorded, hence infinite) error and either stopped late or never.
+//! The driver decouples stopping from recording cadence.
+//!
+//! The fluent entry point is [`crate::coordinator::session::Session`]
+//! (the `SolverBuilder`): pick an [`Algo`], an execution [`Engine`],
+//! optional observers / warm start / Rayleigh eigenvalue post-step, and
+//! get back one [`SolveReport`] shape regardless of algorithm.
+
+use super::centralized::CentralizedConfig;
+use super::deepca::DeepcaConfig;
+use super::depca::DepcaConfig;
+use super::local_power::LocalPowerConfig;
+use super::metrics::{RunOutput, RunRecorder};
+use super::problem::Problem;
+use super::rayleigh::EigenEstimate;
+use crate::consensus::metrics::CommStats;
+use crate::consensus::AgentStack;
+use crate::linalg::angles::tan_theta_orthonormal;
+use crate::linalg::Mat;
+use std::time::Instant;
+
+// ------------------------------------------------------------ selection
+
+/// Which algorithm a session runs.
+#[derive(Clone, Debug)]
+pub enum Algo {
+    /// Paper Algorithm 1: subspace tracking + FastMix + SignAdjust.
+    Deepca(DeepcaConfig),
+    /// Eqn. 3.4 baseline: local power step + multi-consensus.
+    Depca(DepcaConfig),
+    /// No-communication strawman (converges to the *local* PCs).
+    LocalPower(LocalPowerConfig),
+    /// Centralized power method on the aggregate (rate yardstick).
+    Centralized(CentralizedConfig),
+}
+
+impl Algo {
+    /// Short label for reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algo::Deepca(_) => "deepca",
+            Algo::Depca(_) => "depca",
+            Algo::LocalPower(_) => "local-power",
+            Algo::Centralized(_) => "centralized",
+        }
+    }
+
+    /// Stop criteria implied by the algorithm's config (max iterations
+    /// and tolerance); a session-level [`StopCriteria`] overrides this.
+    pub fn default_stop(&self) -> StopCriteria {
+        match self {
+            Algo::Deepca(c) => StopCriteria::max_iters(c.max_iters).with_tol(c.tol),
+            Algo::Depca(c) => StopCriteria::max_iters(c.max_iters).with_tol(c.tol),
+            Algo::LocalPower(c) => StopCriteria::max_iters(c.max_iters),
+            Algo::Centralized(c) => StopCriteria::max_iters(c.max_iters).with_tol(c.tol),
+        }
+    }
+}
+
+/// Which execution engine carries a run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Engine {
+    /// Single-process dense gossip, sequential local products.
+    Dense,
+    /// Dense gossip, thread-parallel local products.
+    DenseParallel,
+    /// Real message-passing gossip (threads + channels).
+    Threaded,
+    /// Fully distributed: the whole loop inside per-agent threads
+    /// (DeEPCA only; other algorithms fall back to `Threaded`).
+    Distributed,
+}
+
+// ----------------------------------------------------------- state/step
+
+/// Observable solver state between steps.
+#[derive(Clone, Debug)]
+pub struct SolverState {
+    /// Power iterations completed so far.
+    pub iter: usize,
+    /// Per-agent iterates `W_j` (orthonormal after every step). The
+    /// centralized solver uses a single-slice stack.
+    pub w: AgentStack,
+    /// The algorithm's consensus variable, if it has one: DeEPCA's
+    /// tracked `S`, DePCA's pre-QR mixed iterate `P`.
+    pub s: Option<AgentStack>,
+    /// Cumulative communication.
+    pub stats: CommStats,
+}
+
+impl SolverState {
+    /// Fresh state from an initial per-agent iterate.
+    pub fn init(w: AgentStack, tracked: bool) -> Self {
+        let s = tracked.then(|| w.clone());
+        SolverState { iter: 0, w, s, stats: CommStats::default() }
+    }
+}
+
+/// What one [`Solver::step`] reports back.
+#[derive(Clone, Debug)]
+pub struct StepReport {
+    /// 0-based index of the iteration just completed.
+    pub iter: usize,
+    /// Cumulative communication after this step.
+    pub comm: CommStats,
+    /// False if the step produced non-finite iterates (divergence).
+    pub finite: bool,
+    /// Mean `tan θ_k(U, W_j)` — filled in by the driver on iterations
+    /// where the error was evaluated (recording or stop checks), `None`
+    /// otherwise. Solvers return `None`; ground-truth metrics are the
+    /// driver's job.
+    pub mean_tan_theta: Option<f64>,
+}
+
+// ----------------------------------------------------------------- trait
+
+/// A step-wise PCA solver: one power iteration per [`step`](Solver::step).
+///
+/// Implementations own their full algorithm state (`S`, `W`, cached
+/// products, K-schedules) so a run can be advanced, paused, observed, or
+/// warm-started externally. Iteration control — stopping, recording,
+/// callbacks — lives in [`drive`], not in the solver.
+pub trait Solver {
+    /// Short algorithm label for reports.
+    fn name(&self) -> &'static str;
+
+    /// The problem being solved (supplies the ground truth for metrics).
+    fn problem(&self) -> &Problem;
+
+    /// Advance one power iteration.
+    fn step(&mut self) -> StepReport;
+
+    /// Current state (iterates, consensus variable, communication).
+    fn state(&self) -> &SolverState;
+
+    /// Restart from the given per-agent iterate (warm start), resetting
+    /// any derived state (tracked variable, cached products, iteration
+    /// counter). Slices must be orthonormal `d×k` with the solver's `m`.
+    fn warm_start(&mut self, w: &AgentStack);
+}
+
+// ------------------------------------------------------------- stopping
+
+/// Why a driven run ended.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StopReason {
+    /// Fresh mean tan θ dropped to `tol`.
+    Converged,
+    /// Iteration budget exhausted.
+    MaxIters,
+    /// Stall detector fired: the error stopped improving.
+    Stalled,
+    /// Non-finite iterates.
+    Diverged,
+}
+
+/// Stopping policy evaluated by [`drive`] **against freshly computed
+/// errors**, independent of the recorder's cadence.
+#[derive(Clone, Debug)]
+pub struct StopCriteria {
+    /// Maximum power iterations.
+    pub max_iters: usize,
+    /// Stop once mean tan θ ≤ tol (0 disables).
+    pub tol: f64,
+    /// Stall window in iterations (0 disables stall detection).
+    pub stall_window: usize,
+    /// Stall trigger: stalled when the current error exceeds
+    /// `stall_decay ×` the error `stall_window` iterations ago. Values
+    /// near 1.0 require barely-any progress to keep going; a genuinely
+    /// linearly-converging run shrinks far faster and never triggers.
+    pub stall_decay: f64,
+}
+
+impl Default for StopCriteria {
+    fn default() -> Self {
+        StopCriteria { max_iters: 100, tol: 0.0, stall_window: 0, stall_decay: 0.99 }
+    }
+}
+
+impl StopCriteria {
+    /// Budget-only criteria.
+    pub fn max_iters(max_iters: usize) -> Self {
+        StopCriteria { max_iters, ..Default::default() }
+    }
+
+    /// Add a tolerance (0 disables).
+    pub fn with_tol(mut self, tol: f64) -> Self {
+        self.tol = tol;
+        self
+    }
+
+    /// Enable stall detection over a window of iterations.
+    pub fn with_stall(mut self, window: usize, decay: f64) -> Self {
+        self.stall_window = window;
+        self.stall_decay = decay;
+        self
+    }
+
+    /// Whether any criterion needs the error evaluated every iteration.
+    pub fn needs_error(&self) -> bool {
+        self.tol > 0.0 || self.stall_window > 0
+    }
+}
+
+// --------------------------------------------------------------- driver
+
+/// Mean subspace error `(1/m) Σ_j tan θ_k(U, W_j)` for orthonormal
+/// per-agent iterates (the quantity the paper's third panel plots).
+pub fn mean_tan_theta(u: &Mat, ws: &AgentStack) -> f64 {
+    ws.iter().map(|w| tan_theta_orthonormal(u, w)).sum::<f64>() / ws.m() as f64
+}
+
+/// What [`drive`] hands back (the solver holds the final state).
+#[derive(Clone, Debug)]
+pub struct DriveOutcome {
+    /// Iterations executed.
+    pub iters: usize,
+    /// Why the loop ended.
+    pub reason: StopReason,
+    /// Mean tan θ at exit, computed fresh from the final iterate (falls
+    /// back to the last recorded value if the run diverged).
+    pub final_tan_theta: f64,
+    /// Wall time inside the loop.
+    pub elapsed_secs: f64,
+}
+
+/// The shared driver loop: step the solver until [`StopCriteria`] fire,
+/// recording into `recorder` at its own cadence and invoking `observer`
+/// after every step.
+///
+/// Stop checks always use an error computed fresh from the current
+/// iterate — never the recorder's (possibly stale) last record.
+pub fn drive<'o>(
+    solver: &mut dyn Solver,
+    stop: &StopCriteria,
+    recorder: &mut RunRecorder,
+    mut observer: Option<&mut (dyn FnMut(&StepReport) + 'o)>,
+) -> DriveOutcome {
+    let u = solver.problem().u();
+    let t0 = Instant::now();
+    let mut reason = StopReason::MaxIters;
+    let mut history: Vec<f64> = Vec::new();
+    let mut iters = 0;
+
+    for t in 0..stop.max_iters {
+        let mut report = solver.step();
+        iters = t + 1;
+        if !report.finite {
+            reason = StopReason::Diverged;
+            break;
+        }
+
+        let record_now = recorder.should_record(t);
+        if record_now {
+            recorder.record(
+                t,
+                &u,
+                &solver.state().w,
+                solver.state().s.as_ref(),
+                &report.comm,
+                t0.elapsed().as_secs_f64(),
+            );
+        }
+        // Error for the stop checks: freshly computed from the current
+        // iterate. A record written *this iteration* is that same fresh
+        // value, so reuse it instead of evaluating twice.
+        let err = if record_now {
+            recorder.records.last().map(|r| r.mean_tan_theta)
+        } else if stop.needs_error() {
+            Some(mean_tan_theta(&u, &solver.state().w))
+        } else {
+            None
+        };
+        report.mean_tan_theta = err;
+        if let Some(f) = observer.as_mut() {
+            f(&report);
+        }
+
+        if let Some(e) = err {
+            if stop.tol > 0.0 && e <= stop.tol {
+                reason = StopReason::Converged;
+                break;
+            }
+            if stop.stall_window > 0 {
+                history.push(e);
+                if history.len() > stop.stall_window {
+                    let then = history[history.len() - 1 - stop.stall_window];
+                    if e >= stop.stall_decay * then {
+                        reason = StopReason::Stalled;
+                        break;
+                    }
+                }
+            }
+        }
+    }
+
+    let final_tan_theta = if solver.state().w.is_finite() {
+        mean_tan_theta(&u, &solver.state().w)
+    } else {
+        recorder.final_tan_theta()
+    };
+    DriveOutcome { iters, reason, final_tan_theta, elapsed_secs: t0.elapsed().as_secs_f64() }
+}
+
+/// Drive a solver and package the legacy [`RunOutput`] shape — the
+/// bridge the deprecated `run_with` / `run_dense` shims stand on.
+pub(crate) fn drive_to_run_output(
+    solver: &mut dyn Solver,
+    stop: &StopCriteria,
+    recorder: &mut RunRecorder,
+) -> RunOutput {
+    let outcome = drive(solver, stop, recorder, None);
+    RunOutput {
+        iters: outcome.iters,
+        final_tan_theta: outcome.final_tan_theta,
+        comm: solver.state().stats.clone(),
+        final_w: solver.state().w.clone(),
+        elapsed_secs: outcome.elapsed_secs,
+        diverged: outcome.reason == StopReason::Diverged,
+    }
+}
+
+// --------------------------------------------------------------- report
+
+/// Unified result of a driven run — one shape for every algorithm and
+/// engine.
+#[derive(Clone, Debug)]
+pub struct SolveReport {
+    /// Algorithm label.
+    pub algo: &'static str,
+    /// Engine that carried the run.
+    pub engine: Engine,
+    /// Power iterations executed.
+    pub iters: usize,
+    /// Why the run ended.
+    pub reason: StopReason,
+    /// Convenience mirror of `reason == StopReason::Diverged`.
+    pub diverged: bool,
+    /// Mean tan θ_k(U, W_j) at exit, computed fresh from `final_w`.
+    pub final_tan_theta: f64,
+    /// Communication totals.
+    pub comm: CommStats,
+    /// Final per-agent iterates.
+    pub final_w: AgentStack,
+    /// Per-iteration trace (at the recorder's cadence).
+    pub trace: RunRecorder,
+    /// Wall time inside the algorithm.
+    pub elapsed_secs: f64,
+    /// Remark-4 Rayleigh eigenvalue estimates, when the session ran the
+    /// post-step.
+    pub eigenvalues: Option<EigenEstimate>,
+}
+
+impl SolveReport {
+    /// First iteration (and cumulative rounds) whose recorded error
+    /// drops below `eps`.
+    pub fn first_below(&self, eps: f64) -> Option<(usize, u64)> {
+        self.trace.first_below(eps)
+    }
+
+    /// Legacy [`RunOutput`] view (clones the final iterate and stats).
+    pub fn to_run_output(&self) -> RunOutput {
+        RunOutput {
+            iters: self.iters,
+            final_tan_theta: self.final_tan_theta,
+            comm: self.comm.clone(),
+            final_w: self.final_w.clone(),
+            elapsed_secs: self.elapsed_secs,
+            diverged: self.diverged,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn algo_names_and_default_stop() {
+        let a = Algo::Deepca(DeepcaConfig { max_iters: 42, tol: 1e-7, ..Default::default() });
+        assert_eq!(a.name(), "deepca");
+        let s = a.default_stop();
+        assert_eq!(s.max_iters, 42);
+        assert!((s.tol - 1e-7).abs() < 1e-20);
+        assert_eq!(s.stall_window, 0);
+
+        let c = Algo::Centralized(CentralizedConfig { max_iters: 9, ..Default::default() });
+        assert_eq!(c.name(), "centralized");
+        assert_eq!(c.default_stop().max_iters, 9);
+
+        assert_eq!(Algo::LocalPower(LocalPowerConfig::default()).name(), "local-power");
+        assert_eq!(Algo::Depca(DepcaConfig::default()).name(), "depca");
+    }
+
+    #[test]
+    fn stop_criteria_builders() {
+        let s = StopCriteria::max_iters(10);
+        assert!(!s.needs_error());
+        let s = s.with_tol(1e-6);
+        assert!(s.needs_error());
+        let s = StopCriteria::max_iters(10).with_stall(5, 0.9);
+        assert!(s.needs_error());
+        assert_eq!(s.stall_window, 5);
+    }
+
+    #[test]
+    fn mean_tan_of_truth_is_zero() {
+        let mut rng = crate::util::rng::Rng::seed_from(641);
+        let u = Mat::rand_orthonormal(10, 2, &mut rng);
+        let ws = AgentStack::replicate(4, &u);
+        assert!(mean_tan_theta(&u, &ws) < 1e-10);
+    }
+}

@@ -33,6 +33,20 @@ pub trait Communicator: Send + Sync {
     fn fastmix(&self, stack: &mut AgentStack, rounds: usize, stats: &mut CommStats);
 }
 
+// Forwarding impl so a borrowed communicator can be boxed into a solver
+// (used by the deprecated `run_with` shims).
+impl Communicator for &dyn Communicator {
+    fn m(&self) -> usize {
+        (**self).m()
+    }
+    fn gossip(&self) -> &GossipMatrix {
+        (**self).gossip()
+    }
+    fn fastmix(&self, stack: &mut AgentStack, rounds: usize, stats: &mut CommStats) {
+        (**self).fastmix(stack, rounds, stats)
+    }
+}
+
 // --------------------------------------------------------------- DenseComm
 
 /// Single-process dense engine (fast path for sweeps).

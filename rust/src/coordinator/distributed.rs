@@ -179,6 +179,7 @@ pub fn run_deepca_distributed(
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // cross-checks against the legacy shim on purpose.
 mod tests {
     use super::*;
     use crate::algo::deepca;

@@ -1,19 +1,27 @@
-//! Leader-driven orchestration: config → engine selection → run.
+//! Legacy leader-driven orchestration — superseded by
+//! [`crate::coordinator::session::Session`] (the `SolverBuilder`).
 //!
-//! The `Leader` is the programmatic entry point `main.rs`, the examples,
-//! and the experiment harness share: pick an algorithm, an execution
-//! engine, and get back a `RunOutput` plus the metric trace.
+//! [`Leader`] and [`Algorithm`] are kept for one release as thin
+//! deprecated wrappers that delegate to a `Session`, so downstream code
+//! migrates on its own schedule while running on the new step-wise
+//! driver (and therefore already gets the fresh-error stop criteria).
 
-use crate::algo::deepca::{self, DeepcaConfig};
-use crate::algo::depca::{self, DepcaConfig};
+#![allow(deprecated)] // this module *is* the deprecated surface.
+
+use crate::algo::deepca::DeepcaConfig;
+use crate::algo::depca::DepcaConfig;
 use crate::algo::metrics::{RunOutput, RunRecorder};
 use crate::algo::problem::Problem;
-use crate::algo::backend::{ParallelBackend, PowerBackend, RustBackend};
-use crate::consensus::comm::{Communicator, DenseComm, ThreadedNetwork};
+use crate::algo::solver::Algo;
+use crate::coordinator::session::Session;
 use crate::graph::topology::Topology;
 
-/// Which algorithm to run.
+/// Re-export of the unified engine enum under its historical name.
+pub use crate::algo::solver::Engine as EngineKind;
+
+/// Which algorithm to run (legacy subset of [`Algo`]).
 #[derive(Clone, Debug)]
+#[deprecated(note = "use `algo::solver::Algo` with the `Session` builder")]
 pub enum Algorithm {
     /// Paper Algorithm 1.
     Deepca(DeepcaConfig),
@@ -21,21 +29,8 @@ pub enum Algorithm {
     Depca(DepcaConfig),
 }
 
-/// Which execution engine carries the run.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum EngineKind {
-    /// Single-process dense gossip, sequential products.
-    Dense,
-    /// Dense gossip, thread-parallel local products.
-    DenseParallel,
-    /// Real message-passing gossip (threads + channels).
-    Threaded,
-    /// Fully distributed: the whole loop inside per-agent threads
-    /// (DeEPCA only; DePCA falls back to `Threaded`).
-    Distributed,
-}
-
 /// Leader: owns the problem/topology pair and dispatches runs.
+#[deprecated(note = "use `Session::on(problem, topo)` (the SolverBuilder API)")]
 pub struct Leader<'a> {
     /// Problem instance.
     pub problem: &'a Problem,
@@ -59,44 +54,18 @@ impl<'a> Leader<'a> {
 
     /// Execute `algo`, filling `recorder`.
     pub fn run(&self, algo: &Algorithm, recorder: &mut RunRecorder) -> RunOutput {
-        match (algo, self.engine) {
-            (Algorithm::Deepca(cfg), EngineKind::Distributed) => {
-                crate::coordinator::distributed::run_deepca_distributed(
-                    self.problem,
-                    self.topo,
-                    cfg,
-                    recorder,
-                )
-            }
-            (Algorithm::Deepca(cfg), engine) => {
-                let (backend, comm) = self.make_parts(engine);
-                deepca::run_with(self.problem, backend.as_ref(), comm.as_ref(), cfg, recorder)
-            }
-            (Algorithm::Depca(cfg), engine) => {
-                let engine = if engine == EngineKind::Distributed {
-                    EngineKind::Threaded
-                } else {
-                    engine
-                };
-                let (backend, comm) = self.make_parts(engine);
-                depca::run_with(self.problem, backend.as_ref(), comm.as_ref(), cfg, recorder)
-            }
-        }
-    }
-
-    fn make_parts(
-        &self,
-        engine: EngineKind,
-    ) -> (Box<dyn PowerBackend + 'a>, Box<dyn Communicator + 'a>) {
-        let backend: Box<dyn PowerBackend + 'a> = match engine {
-            EngineKind::DenseParallel => Box::new(ParallelBackend::new(&self.problem.locals, 0)),
-            _ => Box::new(RustBackend::new(&self.problem.locals)),
+        let unified = match algo {
+            Algorithm::Deepca(cfg) => Algo::Deepca(cfg.clone()),
+            Algorithm::Depca(cfg) => Algo::Depca(cfg.clone()),
         };
-        let comm: Box<dyn Communicator + 'a> = match engine {
-            EngineKind::Threaded => Box::new(ThreadedNetwork::from_topology(self.topo)),
-            _ => Box::new(DenseComm::from_topology(self.topo)),
-        };
-        (backend, comm)
+        let report = Session::on(self.problem, self.topo)
+            .engine(self.engine)
+            .algo(unified)
+            .record(std::mem::take(recorder))
+            .solve();
+        let out = report.to_run_output();
+        *recorder = report.trace;
+        out
     }
 }
 
@@ -164,5 +133,15 @@ mod tests {
             .with_engine(EngineKind::Distributed)
             .run(&Algorithm::Depca(cfg), &mut rec);
         assert_eq!(out.iters, 10);
+    }
+
+    #[test]
+    fn leader_fills_external_recorder() {
+        let (p, topo) = setup(224);
+        let cfg = DeepcaConfig { consensus_rounds: 6, max_iters: 20, ..Default::default() };
+        let mut rec = RunRecorder::with_stride(5);
+        let _ = Leader::new(&p, &topo).run(&Algorithm::Deepca(cfg), &mut rec);
+        let iters: Vec<usize> = rec.records.iter().map(|r| r.iter).collect();
+        assert_eq!(iters, vec![0, 5, 10, 15]);
     }
 }

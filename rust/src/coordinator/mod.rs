@@ -1,17 +1,21 @@
-//! L3 coordination runtime: leader/agent process topology.
+//! L3 coordination runtime: sessions, engines, and process topology.
 //!
-//! Two execution styles:
-//!
-//! - **Leader-driven** ([`leader`]) — the leader owns the loop and calls
-//!   into pluggable backends/communicators ([`crate::algo`]); the natural
-//!   mode for experiment sweeps and the PJRT artifact backend.
+//! - **Session builder** ([`session`]) — the fluent `SolverBuilder`
+//!   entry point: pick an algorithm ([`crate::algo::solver::Algo`]), an
+//!   execution engine, observers, stop criteria, warm starts, and the
+//!   Rayleigh post-step; get one unified
+//!   [`crate::algo::solver::SolveReport`]. This is what `main.rs`, the
+//!   experiments, benches, and examples drive.
 //! - **Fully distributed** ([`distributed`]) — one OS thread per agent
 //!   owning its private `A_j, S_j, W_j, G_j` state end-to-end; gossip
 //!   rounds are real channel exchanges; the leader thread only receives
 //!   per-iteration telemetry. This is the deployment-shaped runtime the
 //!   end-to-end example runs, and integration tests pin it numerically to
-//!   the leader-driven engine.
+//!   the leader-driven engines.
+//! - **Legacy leader** ([`leader`]) — deprecated `Leader`/`Algorithm`
+//!   wrappers around [`session::Session`], kept for one release.
 
 pub mod agent;
+pub mod session;
 pub mod leader;
 pub mod distributed;

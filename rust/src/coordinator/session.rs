@@ -1,0 +1,417 @@
+//! `Session` — the fluent `SolverBuilder` over the step-wise solver API.
+//!
+//! One entry point for every algorithm × engine combination:
+//!
+//! ```no_run
+//! use deepca::prelude::*;
+//!
+//! # let data = deepca::data::synthetic::w8a_like_scaled(10, 80, &mut Rng::seed_from(7));
+//! # let problem = Problem::from_dataset(&data, 10, 5);
+//! # let topo = Topology::erdos_renyi(10, 0.5, &mut Rng::seed_from(13));
+//! let report = Session::on(&problem, &topo)
+//!     .algo(Algo::Deepca(DeepcaConfig { consensus_rounds: 8, ..Default::default() }))
+//!     .engine(Engine::Threaded)
+//!     .stop(StopCriteria::max_iters(200).with_tol(1e-9))
+//!     .observe(|step| {
+//!         if let Some(err) = step.mean_tan_theta {
+//!             eprintln!("iter {}: tanθ = {err:.3e}", step.iter);
+//!         }
+//!     })
+//!     .eigenvalues(20) // Remark-4 Rayleigh post-step
+//!     .solve();
+//! println!("{}: tanθ = {:.3e} ({})", report.algo, report.final_tan_theta, report.comm);
+//! ```
+//!
+//! The session owns the plumbing the old `Leader`, experiments, benches,
+//! and CLI each re-wired by hand: engine selection (backends +
+//! communicators), the shared driver loop with fresh-error
+//! [`StopCriteria`], recording, observers, warm starts from a prior
+//! [`SolveReport`], and the Rayleigh eigenvalue post-step.
+//!
+//! Engine notes:
+//!
+//! - [`Engine::Distributed`] runs DeEPCA with one OS thread per agent
+//!   ([`crate::coordinator::distributed`]). That engine drives itself
+//!   and honors only an iteration budget (there is no global barrier to
+//!   evaluate stop criteria through); a session asking for more —
+//!   tolerance/stall stopping, observers, or a warm start — falls back
+//!   to [`Engine::Threaded`], where those features are honored (the
+//!   report's `engine` field says which engine actually ran).
+//!   Algorithms other than DeEPCA fall back to [`Engine::Threaded`] as
+//!   well.
+//! - The centralized reference ignores the engine (no communication).
+
+use crate::algo::backend::{ParallelBackend, PowerBackend, RustBackend};
+use crate::algo::centralized::CentralizedSolver;
+use crate::algo::deepca::DeepcaSolver;
+use crate::algo::depca::DepcaSolver;
+use crate::algo::local_power::LocalPowerSolver;
+use crate::algo::metrics::RunRecorder;
+use crate::algo::problem::Problem;
+use crate::algo::rayleigh::estimate_eigenvalues_from;
+use crate::algo::solver::{
+    drive, mean_tan_theta, Algo, Engine, SolveReport, Solver, StepReport, StopCriteria,
+    StopReason,
+};
+use crate::consensus::comm::{Communicator, DenseComm, ThreadedNetwork};
+use crate::consensus::AgentStack;
+use crate::graph::topology::Topology;
+
+/// Fluent builder for one solver run. See the module docs for a tour.
+pub struct Session<'a> {
+    problem: &'a Problem,
+    topo: &'a Topology,
+    engine: Engine,
+    algo: Algo,
+    stop: Option<StopCriteria>,
+    recorder: Option<RunRecorder>,
+    observer: Option<Box<dyn FnMut(&StepReport) + 'a>>,
+    warm: Option<AgentStack>,
+    eig_rounds: Option<usize>,
+}
+
+/// The issue-tracker name for [`Session`] — same type.
+pub type SolverBuilder<'a> = Session<'a>;
+
+impl<'a> Session<'a> {
+    /// Start a session on a problem/topology pair (defaults: DeEPCA with
+    /// its default config, dense engine, every-iteration recorder).
+    pub fn on(problem: &'a Problem, topo: &'a Topology) -> Self {
+        Session {
+            problem,
+            topo,
+            engine: Engine::Dense,
+            algo: Algo::Deepca(Default::default()),
+            stop: None,
+            recorder: None,
+            observer: None,
+            warm: None,
+            eig_rounds: None,
+        }
+    }
+
+    /// Select the algorithm.
+    pub fn algo(mut self, algo: Algo) -> Self {
+        self.algo = algo;
+        self
+    }
+
+    /// Select the execution engine.
+    pub fn engine(mut self, engine: Engine) -> Self {
+        self.engine = engine;
+        self
+    }
+
+    /// Override the stop criteria (default: derived from the algorithm
+    /// config's `max_iters`/`tol`).
+    pub fn stop(mut self, stop: StopCriteria) -> Self {
+        self.stop = Some(stop);
+        self
+    }
+
+    /// Use a custom recorder (e.g. [`RunRecorder::with_stride`] to make
+    /// long sweeps cheap — stop criteria stay exact regardless).
+    pub fn record(mut self, recorder: RunRecorder) -> Self {
+        self.recorder = Some(recorder);
+        self
+    }
+
+    /// Observe every step (called after recording; `mean_tan_theta` is
+    /// filled on iterations where the driver evaluated the error).
+    pub fn observe(mut self, f: impl FnMut(&StepReport) + 'a) -> Self {
+        self.observer = Some(Box::new(f));
+        self
+    }
+
+    /// Warm-start from a prior run's final iterate.
+    pub fn warm_start(self, prior: &SolveReport) -> Self {
+        self.warm_start_from(&prior.final_w)
+    }
+
+    /// Warm-start from an explicit per-agent iterate.
+    pub fn warm_start_from(mut self, w: &AgentStack) -> Self {
+        self.warm = Some(w.clone());
+        self
+    }
+
+    /// Run the Remark-4 Rayleigh eigenvalue estimation as a post-step
+    /// (`rounds` FastMix rounds over the k×k Rayleigh blocks).
+    pub fn eigenvalues(mut self, rounds: usize) -> Self {
+        self.eig_rounds = Some(rounds);
+        self
+    }
+
+    /// Build the step-wise solver for manual driving ([`Solver::step`]).
+    /// Uses the leader-driven engines; [`Engine::Distributed`] falls
+    /// back to [`Engine::Threaded`] here.
+    pub fn build_solver(&self) -> Box<dyn Solver + 'a> {
+        let engine = match self.engine {
+            Engine::Distributed => Engine::Threaded,
+            e => e,
+        };
+        self.build_solver_for(engine)
+    }
+
+    /// Execute the session and collect the unified report.
+    pub fn solve(mut self) -> SolveReport {
+        let stop = self
+            .stop
+            .clone()
+            .unwrap_or_else(|| self.algo.default_stop());
+        let mut recorder = self
+            .recorder
+            .take()
+            .unwrap_or_else(RunRecorder::every_iteration);
+        let algo_name = self.algo.name();
+
+        // The per-agent-thread engine has no global barrier to evaluate
+        // stop criteria through, so anything beyond an iteration budget
+        // (tol/stall, observers, warm starts) falls back to the
+        // leader-driven Threaded engine where those features are honored.
+        let distributed_ok = matches!(self.algo, Algo::Deepca(_))
+            && self.observer.is_none()
+            && self.warm.is_none()
+            && !stop.needs_error();
+
+        let mut report = if self.engine == Engine::Distributed && distributed_ok {
+            let Algo::Deepca(cfg) = &self.algo else { unreachable!() };
+            let mut cfg = cfg.clone();
+            cfg.max_iters = stop.max_iters;
+            let out = crate::coordinator::distributed::run_deepca_distributed(
+                self.problem,
+                self.topo,
+                &cfg,
+                &mut recorder,
+            );
+            let final_tan_theta = if out.final_w.is_finite() {
+                mean_tan_theta(&self.problem.u(), &out.final_w)
+            } else {
+                recorder.final_tan_theta()
+            };
+            SolveReport {
+                algo: algo_name,
+                engine: Engine::Distributed,
+                iters: out.iters,
+                reason: if out.diverged {
+                    StopReason::Diverged
+                } else {
+                    StopReason::MaxIters
+                },
+                diverged: out.diverged,
+                final_tan_theta,
+                comm: out.comm,
+                final_w: out.final_w,
+                trace: recorder,
+                elapsed_secs: out.elapsed_secs,
+                eigenvalues: None,
+            }
+        } else {
+            let engine = if self.engine == Engine::Distributed {
+                // Non-DeEPCA algorithms, observers, and warm starts need
+                // the leader-driven step loop.
+                Engine::Threaded
+            } else {
+                self.engine
+            };
+            let mut solver = self.build_solver_for(engine);
+            if let Some(w) = &self.warm {
+                solver.warm_start(w);
+            }
+            let outcome = drive(
+                &mut *solver,
+                &stop,
+                &mut recorder,
+                self.observer.as_deref_mut(),
+            );
+            SolveReport {
+                algo: algo_name,
+                engine,
+                iters: outcome.iters,
+                reason: outcome.reason,
+                diverged: outcome.reason == StopReason::Diverged,
+                final_tan_theta: outcome.final_tan_theta,
+                comm: solver.state().stats.clone(),
+                final_w: solver.state().w.clone(),
+                trace: recorder,
+                elapsed_secs: outcome.elapsed_secs,
+                eigenvalues: None,
+            }
+        };
+
+        if let Some(rounds) = self.eig_rounds {
+            let comm = DenseComm::from_topology(self.topo);
+            let stack = if report.final_w.m() == self.problem.m() {
+                report.final_w.clone()
+            } else {
+                // Centralized runs hold a single shared iterate; every
+                // "agent" starts the Rayleigh pass from the same W.
+                AgentStack::replicate(self.problem.m(), report.final_w.slice(0))
+            };
+            report.eigenvalues =
+                Some(estimate_eigenvalues_from(self.problem, &stack, &comm, rounds));
+        }
+        report
+    }
+
+    fn build_solver_for(&self, engine: Engine) -> Box<dyn Solver + 'a> {
+        match &self.algo {
+            Algo::Deepca(cfg) => {
+                let (backend, comm) = self.parts(engine);
+                Box::new(DeepcaSolver::new(self.problem, backend, comm, cfg.clone()))
+            }
+            Algo::Depca(cfg) => {
+                let (backend, comm) = self.parts(engine);
+                Box::new(DepcaSolver::new(self.problem, backend, comm, cfg.clone()))
+            }
+            Algo::LocalPower(cfg) => {
+                // No communication: build only the backend (skip the
+                // communicator's gossip-matrix spectral computation).
+                Box::new(LocalPowerSolver::new(self.problem, self.backend(engine), cfg.clone()))
+            }
+            Algo::Centralized(cfg) => Box::new(CentralizedSolver::new(self.problem, cfg.clone())),
+        }
+    }
+
+    fn backend(&self, engine: Engine) -> Box<dyn PowerBackend + 'a> {
+        match engine {
+            Engine::DenseParallel => Box::new(ParallelBackend::new(&self.problem.locals, 0)),
+            _ => Box::new(RustBackend::new(&self.problem.locals)),
+        }
+    }
+
+    fn parts(&self, engine: Engine) -> (Box<dyn PowerBackend + 'a>, Box<dyn Communicator + 'a>) {
+        let comm: Box<dyn Communicator + 'a> = match engine {
+            Engine::Threaded => Box::new(ThreadedNetwork::from_topology(self.topo)),
+            _ => Box::new(DenseComm::from_topology(self.topo)),
+        };
+        (self.backend(engine), comm)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::centralized::CentralizedConfig;
+    use crate::algo::deepca::DeepcaConfig;
+    use crate::algo::depca::{DepcaConfig, KPolicy};
+    use crate::algo::local_power::LocalPowerConfig;
+    use crate::data::synthetic;
+    use crate::util::rng::Rng;
+
+    fn setup(seed: u64) -> (Problem, Topology) {
+        let ds = synthetic::spiked_covariance(
+            300,
+            10,
+            &[8.0, 5.0],
+            0.3,
+            &mut Rng::seed_from(seed),
+        );
+        let p = Problem::from_dataset(&ds, 5, 1);
+        let topo = Topology::erdos_renyi(5, 0.7, &mut Rng::seed_from(seed + 1));
+        (p, topo)
+    }
+
+    #[test]
+    fn all_four_algorithms_solve() {
+        let (p, topo) = setup(611);
+        for algo in [
+            Algo::Deepca(DeepcaConfig { consensus_rounds: 8, max_iters: 40, ..Default::default() }),
+            Algo::Depca(DepcaConfig {
+                k_policy: KPolicy::Fixed(8),
+                max_iters: 40,
+                ..Default::default()
+            }),
+            Algo::LocalPower(LocalPowerConfig { max_iters: 40, ..Default::default() }),
+            Algo::Centralized(CentralizedConfig { max_iters: 40, ..Default::default() }),
+        ] {
+            let name = algo.name();
+            let report = Session::on(&p, &topo).algo(algo).solve();
+            assert_eq!(report.algo, name);
+            assert_eq!(report.iters, 40, "{name}");
+            assert!(report.final_tan_theta.is_finite(), "{name}");
+            assert_eq!(report.trace.records.len(), 40, "{name}");
+            assert!(!report.diverged, "{name}");
+        }
+    }
+
+    #[test]
+    fn observer_sees_every_step() {
+        let (p, topo) = setup(612);
+        let mut calls = 0usize;
+        let mut evaluated = 0usize;
+        let report = {
+            let counter = &mut calls;
+            let eval = &mut evaluated;
+            Session::on(&p, &topo)
+                .algo(Algo::Deepca(DeepcaConfig {
+                    consensus_rounds: 8,
+                    max_iters: 12,
+                    ..Default::default()
+                }))
+                .observe(move |step| {
+                    *counter += 1;
+                    if step.mean_tan_theta.is_some() {
+                        *eval += 1;
+                    }
+                })
+                .solve()
+        };
+        assert_eq!(report.iters, 12);
+        assert_eq!(calls, 12);
+        // Every-iteration recorder → error evaluated every step.
+        assert_eq!(evaluated, 12);
+    }
+
+    #[test]
+    fn warm_start_via_builder_continues() {
+        let (p, topo) = setup(613);
+        let cfg = DeepcaConfig { consensus_rounds: 8, max_iters: 25, ..Default::default() };
+        let first = Session::on(&p, &topo).algo(Algo::Deepca(cfg.clone())).solve();
+        let resumed = Session::on(&p, &topo)
+            .algo(Algo::Deepca(cfg))
+            .warm_start(&first)
+            .solve();
+        assert!(
+            resumed.final_tan_theta < first.final_tan_theta.max(1e-13)
+                || resumed.final_tan_theta < 1e-12,
+            "resume should not regress: {:.3e} -> {:.3e}",
+            first.final_tan_theta,
+            resumed.final_tan_theta
+        );
+    }
+
+    #[test]
+    fn centralized_eigenvalue_post_step() {
+        let (p, topo) = setup(614);
+        let report = Session::on(&p, &topo)
+            .algo(Algo::Centralized(CentralizedConfig {
+                max_iters: 120,
+                ..Default::default()
+            }))
+            .eigenvalues(25)
+            .solve();
+        let est = report.eigenvalues.as_ref().unwrap();
+        assert!(
+            (est.values()[0] - p.truth.values[0]).abs() < 1e-6 * p.truth.values[0],
+            "λ₁ estimate {} vs truth {}",
+            est.values()[0],
+            p.truth.values[0]
+        );
+    }
+
+    #[test]
+    fn manual_stepping_through_build_solver() {
+        let (p, topo) = setup(615);
+        let session = Session::on(&p, &topo).algo(Algo::Deepca(DeepcaConfig {
+            consensus_rounds: 8,
+            max_iters: 10,
+            ..Default::default()
+        }));
+        let mut solver = session.build_solver();
+        for t in 0..10 {
+            let rep = solver.step();
+            assert_eq!(rep.iter, t);
+        }
+        assert_eq!(solver.state().iter, 10);
+    }
+}

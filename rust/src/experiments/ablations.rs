@@ -12,9 +12,10 @@
 
 use super::report;
 use super::Scale;
-use crate::algo::deepca::{self, DeepcaConfig};
-use crate::algo::metrics::RunRecorder;
+use crate::algo::deepca::DeepcaConfig;
 use crate::algo::problem::Problem;
+use crate::algo::solver::Algo;
+use crate::coordinator::session::Session;
 use crate::data::partition::{make_non_psd, partition_gram, GramScaling};
 use crate::data::synthetic::{self, SparseBinaryParams};
 use crate::graph::gossip::GossipMatrix;
@@ -53,8 +54,7 @@ fn run_deepca_qr(
         qr_canonical,
         ..Default::default()
     };
-    let mut rec = RunRecorder::every_iteration();
-    let out = deepca::run_dense(problem, topo, &cfg, &mut rec);
+    let out = Session::on(problem, topo).algo(Algo::Deepca(cfg)).solve();
     if out.diverged {
         f64::INFINITY
     } else {

@@ -6,10 +6,11 @@
 
 use super::report;
 use super::Scale;
-use crate::algo::deepca::{self, DeepcaConfig};
-use crate::algo::depca::{self, DepcaConfig, KPolicy};
-use crate::algo::metrics::RunRecorder;
+use crate::algo::deepca::DeepcaConfig;
+use crate::algo::depca::{DepcaConfig, KPolicy};
 use crate::algo::problem::Problem;
+use crate::algo::solver::Algo;
+use crate::coordinator::session::Session;
 use crate::data::synthetic;
 use crate::graph::gossip::GossipMatrix;
 use crate::graph::topology::Topology;
@@ -45,23 +46,25 @@ pub fn run(scale: Scale) -> Result<Vec<CommRow>> {
 
     // DeEPCA: one constant-K run covers every ε (that's the point).
     let k_deepca = pick_deepca_k(&problem, &gossip);
-    let mut rec_deepca = RunRecorder::every_iteration();
-    let cfg = DeepcaConfig {
-        consensus_rounds: k_deepca,
-        max_iters: iters,
-        ..Default::default()
-    };
-    let _ = deepca::run_dense(&problem, &topo, &cfg, &mut rec_deepca);
+    let run_deepca = Session::on(&problem, &topo)
+        .algo(Algo::Deepca(DeepcaConfig {
+            consensus_rounds: k_deepca,
+            max_iters: iters,
+            ..Default::default()
+        }))
+        .solve();
+    let rec_deepca = run_deepca.trace;
 
     // DePCA: increasing schedule, also a single run (rounds grow as it
     // descends — the measured analogue of K(ε) = O(log 1/ε) per step).
-    let mut rec_depca = RunRecorder::every_iteration();
-    let dcfg = DepcaConfig {
-        k_policy: KPolicy::Increasing { base: k_deepca, slope: 1.0 },
-        max_iters: iters,
-        ..Default::default()
-    };
-    let _ = depca::run_dense(&problem, &topo, &dcfg, &mut rec_depca);
+    let run_depca = Session::on(&problem, &topo)
+        .algo(Algo::Depca(DepcaConfig {
+            k_policy: KPolicy::Increasing { base: k_deepca, slope: 1.0 },
+            max_iters: iters,
+            ..Default::default()
+        }))
+        .solve();
+    let rec_depca = run_depca.trace;
 
     let eps_grid: Vec<f64> = (1..=5).map(|i| 10f64.powi(-2 * i)).collect();
     let tan0 = 1.0_f64.max(problem.initial_w(2021).cols() as f64); // coarse tanθ₀ proxy

@@ -11,16 +11,19 @@
 //! Series: DeEPCA across several K (small K stalls — their K=3 case),
 //! DePCA with fixed K (plateaus) and an increasing schedule, and CPCA as
 //! the rate reference. We additionally run the local-only strawman to
-//! report the heterogeneity floor.
+//! report the heterogeneity floor. Every series runs through the unified
+//! [`Session`] builder — one driver, one report shape.
 
 use super::report;
 use super::Scale;
-use crate::algo::centralized;
-use crate::algo::deepca::{self, DeepcaConfig};
-use crate::algo::depca::{self, DepcaConfig, KPolicy};
-use crate::algo::local_power;
+use crate::algo::centralized::CentralizedConfig;
+use crate::algo::deepca::DeepcaConfig;
+use crate::algo::depca::{DepcaConfig, KPolicy};
+use crate::algo::local_power::LocalPowerConfig;
 use crate::algo::metrics::RunRecorder;
 use crate::algo::problem::Problem;
+use crate::algo::solver::Algo;
+use crate::coordinator::session::Session;
 use crate::data::synthetic;
 use crate::data::Dataset;
 use crate::graph::gossip::GossipMatrix;
@@ -174,18 +177,17 @@ pub fn run_figure(figure: Figure, scale: Scale) -> Result<FigureResult> {
             init_seed: spec.seeds.2,
             ..Default::default()
         };
-        let mut rec = RunRecorder::every_iteration();
-        let out = deepca::run_dense(&problem, &topo, &cfg, &mut rec);
+        let run = Session::on(&problem, &topo).algo(Algo::Deepca(cfg)).solve();
         let label = format!("DeEPCA K={k_rounds}");
         println!(
             "  {label:<16} tanθ={:.3e} after {} iters ({}) {}",
-            out.final_tan_theta,
-            out.iters,
-            out.comm,
-            if out.diverged { "[DIVERGED]" } else { "" },
+            run.final_tan_theta,
+            run.iters,
+            run.comm,
+            if run.diverged { "[DIVERGED]" } else { "" },
         );
-        report::emit_series(figure.id(), &label, &rec)?;
-        series.push(Series { label, recorder: rec });
+        report::emit_series(figure.id(), &label, &run.trace)?;
+        series.push(Series { label, recorder: run.trace });
     }
 
     // DePCA schedules.
@@ -196,27 +198,31 @@ pub fn run_figure(figure: Figure, scale: Scale) -> Result<FigureResult> {
             init_seed: spec.seeds.2,
             ..Default::default()
         };
-        let mut rec = RunRecorder::every_iteration();
-        let out = depca::run_dense(&problem, &topo, &cfg, &mut rec);
+        let run = Session::on(&problem, &topo).algo(Algo::Depca(cfg)).solve();
         println!(
             "  {label:<16} tanθ={:.3e} after {} iters ({})",
-            out.final_tan_theta, out.iters, out.comm
+            run.final_tan_theta, run.iters, run.comm
         );
-        report::emit_series(figure.id(), label, &rec)?;
-        series.push(Series { label: label.clone(), recorder: rec });
+        report::emit_series(figure.id(), label, &run.trace)?;
+        series.push(Series { label: label.clone(), recorder: run.trace });
     }
 
-    // CPCA reference.
-    let cpca = centralized::run(&problem, spec.iters, spec.seeds.2);
+    // CPCA reference — same builder, single-iterate solver.
+    let cpca = Session::on(&problem, &topo)
+        .algo(Algo::Centralized(CentralizedConfig {
+            max_iters: spec.iters,
+            init_seed: spec.seeds.2,
+            ..Default::default()
+        }))
+        .solve();
+    let cpca_tan: Vec<f64> = cpca.trace.records.iter().map(|r| r.mean_tan_theta).collect();
     println!(
         "  {:<16} tanθ={:.3e} after {} iters (centralized)",
-        "CPCA",
-        cpca.tan_trace.last().copied().unwrap_or(f64::INFINITY),
-        cpca.iters
+        "CPCA", cpca.final_tan_theta, cpca.iters
     );
     let cpca_csv: String = std::iter::once("iter,tan_theta\n".to_string())
         .chain(
-            cpca.tan_trace
+            cpca_tan
                 .iter()
                 .enumerate()
                 .map(|(i, t)| format!("{i},{t:.6e}\n")),
@@ -225,14 +231,20 @@ pub fn run_figure(figure: Figure, scale: Scale) -> Result<FigureResult> {
     report::write_result(&format!("{}_cpca.csv", figure.id()), &cpca_csv)?;
 
     // Local-only floor.
-    let local_floor = local_power::heterogeneity_floor(&problem, spec.iters.min(40));
+    let local = Session::on(&problem, &topo)
+        .algo(Algo::LocalPower(LocalPowerConfig {
+            max_iters: spec.iters.min(40),
+            init_seed: 2021,
+        }))
+        .solve();
+    let local_floor = local.final_tan_theta;
     println!("  {:<16} floor tanθ={local_floor:.3e} (no communication)", "Local-only");
 
     Ok(FigureResult {
         figure,
         summary,
         series,
-        cpca_tan: cpca.tan_trace,
+        cpca_tan,
         local_floor,
     })
 }

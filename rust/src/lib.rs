@@ -20,6 +20,10 @@
 //!
 //! ## Quick start
 //!
+//! Every algorithm runs through the step-wise [`algo::solver::Solver`]
+//! API, built and driven by the [`coordinator::session::Session`]
+//! builder:
+//!
 //! ```no_run
 //! use deepca::prelude::*;
 //!
@@ -28,11 +32,22 @@
 //! let problem = Problem::from_dataset(&data, 10, 5);
 //! let net = Topology::erdos_renyi(10, 0.5, &mut Rng::seed_from(13));
 //!
-//! let cfg = DeepcaConfig { consensus_rounds: 8, max_iters: 60, ..Default::default() };
-//! let mut rec = RunRecorder::every_iteration();
-//! let out = deepca::algo::deepca::run_dense(&problem, &net, &cfg, &mut rec);
-//! println!("tan(theta) after {} iters: {:.3e}", out.iters, out.final_tan_theta);
+//! let report = Session::on(&problem, &net)
+//!     .algo(Algo::Deepca(DeepcaConfig { consensus_rounds: 8, ..Default::default() }))
+//!     .stop(StopCriteria::max_iters(60).with_tol(1e-9))
+//!     .eigenvalues(20) // Remark-4 Rayleigh post-step
+//!     .solve();
+//! println!(
+//!     "tan(theta) after {} iters: {:.3e} ({})",
+//!     report.iters, report.final_tan_theta, report.comm
+//! );
 //! ```
+//!
+//! Swap `.algo(...)` for `Algo::Depca`, `Algo::LocalPower`, or
+//! `Algo::Centralized` to run the baselines through the identical
+//! driver, recorder, and report; swap `.engine(...)` across
+//! `Engine::Dense`, `Engine::DenseParallel`, `Engine::Threaded`, and
+//! `Engine::Distributed` to change how the same math executes.
 //!
 //! See `examples/` for runnable end-to-end drivers and `DESIGN.md` for the
 //! full system inventory.
@@ -57,14 +72,21 @@ pub mod benchkit;
 /// `centralized`) so a glob import never shadows the crate name.
 pub mod prelude {
     pub use crate::algo::centralized;
-    pub use crate::algo::centralized::CentralizedOutput;
+    pub use crate::algo::centralized::{CentralizedConfig, CentralizedOutput, CentralizedSolver};
     pub use crate::algo::deepca as deepca_algo;
-    pub use crate::algo::deepca::DeepcaConfig;
+    pub use crate::algo::deepca::{DeepcaConfig, DeepcaSolver};
     pub use crate::algo::depca as depca_algo;
-    pub use crate::algo::depca::{DepcaConfig, KPolicy};
+    pub use crate::algo::depca::{DepcaConfig, DepcaSolver, KPolicy};
+    pub use crate::algo::local_power::{LocalPowerConfig, LocalPowerSolver};
     pub use crate::algo::metrics::{IterationRecord, RunOutput, RunRecorder};
     pub use crate::algo::problem::Problem;
+    pub use crate::algo::rayleigh::EigenEstimate;
+    pub use crate::algo::solver::{
+        Algo, Engine, SolveReport, Solver, SolverState, StepReport, StopCriteria, StopReason,
+    };
     pub use crate::consensus::fastmix::FastMix;
+    pub use crate::coordinator::session::{Session, SolverBuilder};
+    #[allow(deprecated)]
     pub use crate::coordinator::leader::{Algorithm, EngineKind, Leader};
     pub use crate::graph::gossip::GossipMatrix;
     pub use crate::graph::topology::Topology;

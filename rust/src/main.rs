@@ -2,23 +2,26 @@
 //!
 //! ```text
 //! deepca experiment <fig1|fig2|comm-table|ablations|all> [--scale full|small]
-//! deepca run   [--config file.toml] [--algo deepca|depca] [--engine dense|parallel|threaded|distributed]
+//! deepca run   [--config file.toml] [--algo deepca|depca|local-power|centralized]
+//!              [--engine dense|parallel|threaded|distributed]
 //!              [--m 50] [--n 800] [--k 5] [--rounds 8] [--iters 60] [--tol 1e-9]
+//!              [--k-policy fixed|increasing] [--k-base 8] [--k-slope 1.0]
 //!              [--dataset w8a|a9a] [--data path/to/libsvm] [--topology er|ring|grid|star|complete]
 //! deepca info  [--dataset w8a|a9a] [--data path]   # spectrum / network diagnostics
 //! ```
 
 use anyhow::{bail, Context, Result};
-use deepca::algo::metrics::RunRecorder;
+use deepca::algo::centralized::CentralizedConfig;
+use deepca::algo::local_power::LocalPowerConfig;
 use deepca::algo::problem::Problem;
 use deepca::cli::Args;
 use deepca::config::ConfigMap;
-use deepca::coordinator::leader::{Algorithm, EngineKind, Leader};
+use deepca::coordinator::session::Session;
 use deepca::data::{libsvm, synthetic, Dataset};
 use deepca::experiments::{ablations, comm_table, figures, Scale};
 use deepca::graph::gossip::GossipMatrix;
 use deepca::graph::topology::Topology;
-use deepca::prelude::{DeepcaConfig, DepcaConfig, KPolicy, Rng};
+use deepca::prelude::{Algo, DeepcaConfig, DepcaConfig, Engine, KPolicy, Rng};
 use std::path::Path;
 
 fn main() {
@@ -48,11 +51,17 @@ fn print_help() {
 
 USAGE:
   deepca experiment <fig1|fig2|comm-table|ablations|all> [--scale full|small]
-  deepca run  [--config cfg.toml] [--algo deepca|depca] [--engine dense|parallel|threaded|distributed]
+  deepca run  [--config cfg.toml] [--algo deepca|depca|local-power|centralized]
+              [--engine dense|parallel|threaded|distributed]
               [--m N] [--n N] [--k N] [--rounds K] [--iters T] [--tol EPS]
+              [--k-policy fixed|increasing] [--k-base K0] [--k-slope S]
               [--dataset w8a|a9a] [--data libsvm-file] [--topology er|ring|grid|star|complete]
               [--seed S]
   deepca info [--dataset w8a|a9a] [--data libsvm-file] [--m N] [--k N]
+
+DePCA consensus schedule (--algo depca):
+  --k-policy fixed       K = --k-base (default: --rounds) every iteration
+  --k-policy increasing  K_t = --k-base + ceil(--k-slope * t)   (Eqn. 3.12)
 
 Outputs land in ./results (override with DEEPCA_RESULTS)."
     );
@@ -132,6 +141,19 @@ fn build_topology(kind: &str, m: usize, seed: u64) -> Result<Topology> {
     })
 }
 
+/// DePCA consensus schedule from CLI flags / config keys
+/// (`--k-policy/--k-base/--k-slope`, `[depca] k_policy/k_base/k_slope`).
+fn build_k_policy(args: &Args, cfg: &ConfigMap, rounds: usize) -> Result<KPolicy> {
+    let kind = args.str_or("k-policy", &cfg.str_or("depca.k_policy", "fixed"));
+    let base = args.usize_or("k-base", cfg.usize_or("depca.k_base", rounds)?)?;
+    let slope = args.f64_or("k-slope", cfg.f64_or("depca.k_slope", 1.0)?)?;
+    match kind.as_str() {
+        "fixed" => Ok(KPolicy::Fixed(base)),
+        "increasing" => Ok(KPolicy::Increasing { base, slope }),
+        other => bail!("unknown --k-policy `{other}` (fixed|increasing)"),
+    }
+}
+
 fn cmd_run(args: &Args) -> Result<()> {
     let cfg = match args.options.get("config") {
         Some(path) => ConfigMap::load(Path::new(path))?,
@@ -144,6 +166,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     let iters = args.usize_or("iters", cfg.usize_or("iters", 60)?)?;
     let tol = args.f64_or("tol", cfg.f64_or("tol", 0.0)?)?;
     let seed = args.usize_or("seed", cfg.usize_or("seed", 701)?)? as u64;
+    let init_seed = cfg.usize_or("init_seed", 2021)? as u64;
 
     let ds = load_dataset(args, &cfg, m, n)?;
     println!(
@@ -176,45 +199,55 @@ fn cmd_run(args: &Args) -> Result<()> {
     );
 
     let engine = match args.str_or("engine", &cfg.str_or("engine", "dense")).as_str() {
-        "dense" => EngineKind::Dense,
-        "parallel" => EngineKind::DenseParallel,
-        "threaded" => EngineKind::Threaded,
-        "distributed" => EngineKind::Distributed,
+        "dense" => Engine::Dense,
+        "parallel" => Engine::DenseParallel,
+        "threaded" => Engine::Threaded,
+        "distributed" => Engine::Distributed,
         other => bail!("unknown engine `{other}`"),
     };
     let algo_name = args.str_or("algo", &cfg.str_or("algo", "deepca"));
     let algo = match algo_name.as_str() {
-        "deepca" => Algorithm::Deepca(DeepcaConfig {
+        "deepca" => Algo::Deepca(DeepcaConfig {
             consensus_rounds: rounds,
             max_iters: iters,
             tol,
-            init_seed: cfg.usize_or("init_seed", 2021)? as u64,
+            init_seed,
             sign_adjust: cfg.bool_or("deepca.sign_adjust", true)?,
             qr_canonical: cfg.bool_or("deepca.qr_canonical", true)?,
         }),
-        "depca" => Algorithm::Depca(DepcaConfig {
-            k_policy: KPolicy::Fixed(rounds),
+        "depca" => Algo::Depca(DepcaConfig {
+            k_policy: build_k_policy(args, &cfg, rounds)?,
             max_iters: iters,
             tol,
-            init_seed: cfg.usize_or("init_seed", 2021)? as u64,
-            sign_adjust: true,
+            init_seed,
+            sign_adjust: cfg.bool_or("depca.sign_adjust", true)?,
         }),
-        other => bail!("unknown algo `{other}`"),
+        "local-power" | "local" => Algo::LocalPower(LocalPowerConfig {
+            max_iters: iters,
+            init_seed,
+        }),
+        "centralized" | "cpca" => Algo::Centralized(CentralizedConfig {
+            max_iters: iters,
+            tol,
+            init_seed,
+        }),
+        other => bail!("unknown algo `{other}` (deepca|depca|local-power|centralized)"),
     };
 
-    let mut rec = RunRecorder::every_iteration();
-    let out = Leader::new(&problem, &topo)
-        .with_engine(engine)
-        .run(&algo, &mut rec);
+    let report = Session::on(&problem, &topo)
+        .engine(engine)
+        .algo(algo)
+        .solve();
     println!(
-        "{algo_name} finished: {} iters, tanθ={:.3e}, {}, {:.2}s{}",
-        out.iters,
-        out.final_tan_theta,
-        out.comm,
-        out.elapsed_secs,
-        if out.diverged { " [DIVERGED]" } else { "" }
+        "{algo_name} finished: {} iters ({:?}), tanθ={:.3e}, {}, {:.2}s{}",
+        report.iters,
+        report.reason,
+        report.final_tan_theta,
+        report.comm,
+        report.elapsed_secs,
+        if report.diverged { " [DIVERGED]" } else { "" }
     );
-    deepca::experiments::report::emit_series("run", &algo_name, &rec)?;
+    deepca::experiments::report::emit_series("run", &algo_name, &report.trace)?;
     Ok(())
 }
 

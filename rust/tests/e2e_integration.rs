@@ -1,15 +1,14 @@
-//! End-to-end integration across engines, data paths, and failure modes.
+//! End-to-end integration across engines, data paths, and failure modes,
+//! all driven through the unified `Session` (SolverBuilder) API.
 
-use deepca::algo::deepca as deepca_algo;
 use deepca::algo::deepca::DeepcaConfig;
 use deepca::algo::depca::{DepcaConfig, KPolicy};
-use deepca::algo::metrics::RunRecorder;
 use deepca::algo::problem::Problem;
+use deepca::algo::solver::{Algo, Engine, StopCriteria};
 use deepca::consensus::comm::{Communicator, Fault, ThreadedNetwork};
 use deepca::consensus::metrics::CommStats;
 use deepca::consensus::AgentStack;
-use deepca::coordinator::distributed::run_deepca_distributed;
-use deepca::coordinator::leader::{Algorithm, EngineKind, Leader};
+use deepca::coordinator::session::Session;
 use deepca::data::{libsvm, synthetic};
 use deepca::graph::topology::Topology;
 use deepca::linalg::Mat;
@@ -40,14 +39,24 @@ fn full_paper_loop_small_scale() {
     let iters = 100;
 
     let run_k = |k: usize| {
-        let cfg = DeepcaConfig { consensus_rounds: k, max_iters: iters, ..Default::default() };
-        let mut rec = RunRecorder::every_iteration();
-        deepca_algo::run_dense(&p, &topo, &cfg, &mut rec).final_tan_theta
+        Session::on(&p, &topo)
+            .algo(Algo::Deepca(DeepcaConfig {
+                consensus_rounds: k,
+                max_iters: iters,
+                ..Default::default()
+            }))
+            .solve()
+            .final_tan_theta
     };
     let good = run_k(12);
     let starved = run_k(1);
-    let cpca = deepca::algo::centralized::run(&p, iters, 2021);
-    let cpca_final = *cpca.tan_trace.last().unwrap();
+    let cpca = Session::on(&p, &topo)
+        .algo(Algo::Centralized(deepca::algo::centralized::CentralizedConfig {
+            max_iters: iters,
+            ..Default::default()
+        }))
+        .solve();
+    let cpca_final = cpca.final_tan_theta;
 
     assert!(good < 1e-8, "DeEPCA K=12: {good:.3e}");
     assert!(good < 100.0 * cpca_final.max(1e-13), "not at centralized rate");
@@ -58,14 +67,16 @@ fn full_paper_loop_small_scale() {
 fn engines_cross_validate_on_heterogeneous_problem() {
     let (p, topo) = problem_and_topo(402, 6);
     let cfg = DeepcaConfig { consensus_rounds: 8, max_iters: 30, ..Default::default() };
-    let algo = Algorithm::Deepca(cfg.clone());
 
-    let mut base_rec = RunRecorder::every_iteration();
-    let base = Leader::new(&p, &topo).run(&algo, &mut base_rec);
+    let base = Session::on(&p, &topo)
+        .algo(Algo::Deepca(cfg.clone()))
+        .solve();
 
-    for engine in [EngineKind::DenseParallel, EngineKind::Threaded, EngineKind::Distributed] {
-        let mut rec = RunRecorder::every_iteration();
-        let out = Leader::new(&p, &topo).with_engine(engine).run(&algo, &mut rec);
+    for engine in [Engine::DenseParallel, Engine::Threaded, Engine::Distributed] {
+        let out = Session::on(&p, &topo)
+            .algo(Algo::Deepca(cfg.clone()))
+            .engine(engine)
+            .solve();
         assert!(
             base.final_w.distance(&out.final_w) < 1e-8,
             "{engine:?} deviates by {}",
@@ -78,11 +89,16 @@ fn engines_cross_validate_on_heterogeneous_problem() {
 #[test]
 fn distributed_engine_full_run() {
     let (p, topo) = problem_and_topo(403, 6);
-    let cfg = DeepcaConfig { consensus_rounds: 10, max_iters: 60, ..Default::default() };
-    let mut rec = RunRecorder::every_iteration();
-    let out = run_deepca_distributed(&p, &topo, &cfg, &mut rec);
+    let out = Session::on(&p, &topo)
+        .algo(Algo::Deepca(DeepcaConfig {
+            consensus_rounds: 10,
+            max_iters: 60,
+            ..Default::default()
+        }))
+        .engine(Engine::Distributed)
+        .solve();
     assert!(out.final_tan_theta < 1e-8, "tan={:.3e}", out.final_tan_theta);
-    assert_eq!(rec.records.len(), 60);
+    assert_eq!(out.trace.records.len(), 60);
     // Byte accounting: every round moves 2*edges payloads of d*k floats.
     let expect = (60 * 10 * 2 * topo.num_edges() * 36 * 2 * 8) as u64;
     assert_eq!(out.comm.bytes_sent, expect);
@@ -198,29 +214,33 @@ fn libsvm_data_end_to_end() {
     assert_eq!(ds.num_rows(), rows);
     let p = Problem::from_dataset(&ds, 6, 2);
     let topo = Topology::erdos_renyi(6, 0.5, &mut Rng::seed_from(406));
-    let cfg = DeepcaConfig { consensus_rounds: 10, max_iters: 80, ..Default::default() };
-    let mut rec = RunRecorder::every_iteration();
-    let out = deepca_algo::run_dense(&p, &topo, &cfg, &mut rec);
+    let out = Session::on(&p, &topo)
+        .algo(Algo::Deepca(DeepcaConfig {
+            consensus_rounds: 10,
+            max_iters: 80,
+            ..Default::default()
+        }))
+        .solve();
     assert!(out.final_tan_theta < 1e-7, "tan={:.3e}", out.final_tan_theta);
 }
 
 #[test]
 fn depca_increasing_beats_fixed_on_same_budget_story() {
     let (p, topo) = problem_and_topo(407, 8);
-    let mut rec_fixed = RunRecorder::every_iteration();
-    let fixed = deepca::algo::depca::run_dense(
-        &p,
-        &topo,
-        &DepcaConfig { k_policy: KPolicy::Fixed(6), max_iters: 80, ..Default::default() },
-        &mut rec_fixed,
-    );
-    let mut rec_deepca = RunRecorder::every_iteration();
-    let ours = deepca_algo::run_dense(
-        &p,
-        &topo,
-        &DeepcaConfig { consensus_rounds: 6, max_iters: 80, ..Default::default() },
-        &mut rec_deepca,
-    );
+    let fixed = Session::on(&p, &topo)
+        .algo(Algo::Depca(DepcaConfig {
+            k_policy: KPolicy::Fixed(6),
+            max_iters: 80,
+            ..Default::default()
+        }))
+        .solve();
+    let ours = Session::on(&p, &topo)
+        .algo(Algo::Deepca(DeepcaConfig {
+            consensus_rounds: 6,
+            max_iters: 80,
+            ..Default::default()
+        }))
+        .solve();
     // Identical communication budget (same K, same iterations)...
     assert_eq!(fixed.comm.rounds, ours.comm.rounds);
     // ...but orders of magnitude different precision.
@@ -235,11 +255,16 @@ fn depca_increasing_beats_fixed_on_same_budget_story() {
 #[test]
 fn recorder_stride_subsamples() {
     let (p, topo) = problem_and_topo(408, 5);
-    let cfg = DeepcaConfig { consensus_rounds: 8, max_iters: 20, ..Default::default() };
-    let mut rec = RunRecorder::with_stride(5);
-    let _ = deepca_algo::run_dense(&p, &topo, &cfg, &mut rec);
-    assert_eq!(rec.records.len(), 4); // iters 0,5,10,15
-    let mat: Vec<usize> = rec.records.iter().map(|r| r.iter).collect();
+    let out = Session::on(&p, &topo)
+        .algo(Algo::Deepca(DeepcaConfig {
+            consensus_rounds: 8,
+            max_iters: 20,
+            ..Default::default()
+        }))
+        .record(deepca::algo::metrics::RunRecorder::with_stride(5))
+        .solve();
+    assert_eq!(out.trace.records.len(), 4); // iters 0,5,10,15
+    let mat: Vec<usize> = out.trace.records.iter().map(|r| r.iter).collect();
     assert_eq!(mat, vec![0, 5, 10, 15]);
 }
 
@@ -249,9 +274,10 @@ fn quickstart_snippet_compiles_and_runs() {
     let data = synthetic::w8a_like_scaled(6, 40, &mut Rng::seed_from(7));
     let problem = Problem::from_dataset(&data, 6, 3);
     let net = Topology::erdos_renyi(6, 0.5, &mut Rng::seed_from(13));
-    let cfg = DeepcaConfig { consensus_rounds: 8, max_iters: 60, ..Default::default() };
-    let mut rec = RunRecorder::every_iteration();
-    let out = deepca_algo::run_dense(&problem, &net, &cfg, &mut rec);
-    assert!(out.final_tan_theta.is_finite());
+    let report = Session::on(&problem, &net)
+        .algo(Algo::Deepca(DeepcaConfig { consensus_rounds: 8, ..Default::default() }))
+        .stop(StopCriteria::max_iters(60))
+        .solve();
+    assert!(report.final_tan_theta.is_finite());
     assert!(Mat::eye(2).is_finite()); // exercise the re-exported type
 }

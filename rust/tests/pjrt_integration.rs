@@ -4,6 +4,10 @@
 //! Requires `make artifacts` (skips with a notice otherwise — the
 //! Makefile `test` target always builds artifacts first).
 
+// The PJRT backend is cross-checked against the legacy run shims on
+// purpose (they exercise the identical solver underneath).
+#![allow(deprecated)]
+
 use deepca::algo::backend::{PowerBackend, RustBackend};
 use deepca::algo::deepca as deepca_algo;
 use deepca::algo::deepca::DeepcaConfig;

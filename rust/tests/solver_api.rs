@@ -1,0 +1,276 @@
+//! Integration tests for the unified step-wise Solver / Session API:
+//! the sparse-recorder tolerance regression, cross-engine report parity
+//! through the builder, stall detection, and the composed post-steps.
+
+use deepca::algo::centralized::CentralizedConfig;
+use deepca::algo::deepca::DeepcaConfig;
+use deepca::algo::depca::{DepcaConfig, KPolicy};
+use deepca::algo::local_power::LocalPowerConfig;
+use deepca::algo::metrics::RunRecorder;
+use deepca::algo::problem::Problem;
+use deepca::algo::solver::{Algo, Engine, StopCriteria, StopReason};
+use deepca::coordinator::session::Session;
+use deepca::data::synthetic;
+use deepca::graph::topology::Topology;
+use deepca::util::rng::Rng;
+
+fn spiked(seed: u64, m: usize) -> (Problem, Topology) {
+    let ds = synthetic::spiked_covariance(
+        400,
+        16,
+        &[12.0, 8.0, 5.0],
+        0.3,
+        &mut Rng::seed_from(seed),
+    );
+    let p = Problem::from_dataset(&ds, m, 2);
+    let topo = Topology::erdos_renyi(m, 0.5, &mut Rng::seed_from(seed + 1));
+    (p, topo)
+}
+
+fn drifted(seed: u64, m: usize) -> (Problem, Topology) {
+    let ds = synthetic::sparse_binary(
+        &synthetic::SparseBinaryParams {
+            rows: m * 200,
+            dim: 40,
+            density: 0.15,
+            popularity_exponent: 0.9,
+            blocks: m,
+            drift: 0.8,
+        },
+        &mut Rng::seed_from(seed),
+    );
+    let p = Problem::from_dataset(&ds, m, 2);
+    let topo = Topology::erdos_renyi(m, 0.5, &mut Rng::seed_from(seed + 1));
+    (p, topo)
+}
+
+/// Regression for the stale early-stop bug: with a recorder whose stride
+/// exceeds the run length, the old per-algorithm loops compared `tol`
+/// against the recorder's last (iteration-0) value and never stopped.
+/// The driver must evaluate the error fresh on every tol-check iteration
+/// and stop on time, regardless of recording cadence.
+#[test]
+fn sparse_recorder_does_not_break_tol_stop() {
+    let (p, topo) = spiked(801, 8);
+    for algo in [
+        Algo::Deepca(DeepcaConfig {
+            consensus_rounds: 10,
+            max_iters: 300,
+            tol: 1e-6,
+            ..Default::default()
+        }),
+        Algo::Depca(DepcaConfig {
+            k_policy: KPolicy::Increasing { base: 6, slope: 1.0 },
+            max_iters: 300,
+            tol: 1e-6,
+            ..Default::default()
+        }),
+    ] {
+        let name = algo.name();
+        let report = Session::on(&p, &topo)
+            .algo(algo)
+            // Only iteration 0 is ever recorded.
+            .record(RunRecorder::with_stride(1000))
+            .solve();
+        assert_eq!(
+            report.trace.records.len(),
+            1,
+            "{name}: stride-1000 recorder must hold just iteration 0"
+        );
+        assert_eq!(
+            report.reason,
+            StopReason::Converged,
+            "{name}: tol stop must fire with a sparse recorder"
+        );
+        assert!(
+            report.iters < 300,
+            "{name}: ran the full budget — tol check read stale data"
+        );
+        assert!(
+            report.final_tan_theta <= 1e-6,
+            "{name}: reported final error {:.3e} above tol",
+            report.final_tan_theta
+        );
+    }
+}
+
+/// The reported final error must come from the final iterate, not from
+/// whatever the recorder last saw.
+#[test]
+fn final_error_is_fresh_not_recorded() {
+    let (p, topo) = spiked(802, 6);
+    let report = Session::on(&p, &topo)
+        .algo(Algo::Deepca(DeepcaConfig {
+            consensus_rounds: 10,
+            max_iters: 60,
+            ..Default::default()
+        }))
+        .record(RunRecorder::with_stride(50))
+        .solve();
+    // Recorded: iters 0 and 50 only; the run converges far beyond the
+    // iteration-50 record by iteration 60.
+    let last_recorded = report.trace.records.last().unwrap().mean_tan_theta;
+    assert!(report.final_tan_theta <= last_recorded * 1.0000001);
+    assert!(
+        report.final_tan_theta < 1e-9,
+        "fresh final error should be deep: {:.3e}",
+        report.final_tan_theta
+    );
+}
+
+/// One fixed-seed problem, four engines, one builder: dense variants are
+/// bit-identical, message-passing engines match to fp round-off
+/// (neighbor contributions accumulate in a different order).
+#[test]
+fn engine_parity_through_builder() {
+    let (p, topo) = spiked(803, 6);
+    let cfg = DeepcaConfig { consensus_rounds: 8, max_iters: 30, ..Default::default() };
+
+    let solve = |engine: Engine| {
+        Session::on(&p, &topo)
+            .algo(Algo::Deepca(cfg.clone()))
+            .engine(engine)
+            .solve()
+    };
+
+    let dense = solve(Engine::Dense);
+    let dense_par = solve(Engine::DenseParallel);
+    let threaded = solve(Engine::Threaded);
+    let distributed = solve(Engine::Distributed);
+
+    // Dense and DenseParallel run identical per-agent arithmetic —
+    // bit-wise equality, not just tolerance.
+    assert!(
+        dense.final_w == dense_par.final_w,
+        "DenseParallel must be bit-identical to Dense (distance {})",
+        dense.final_w.distance(&dense_par.final_w)
+    );
+
+    for (name, report) in [("Threaded", &threaded), ("Distributed", &distributed)] {
+        assert!(
+            dense.final_w.distance(&report.final_w) < 1e-9,
+            "{name} deviates from Dense by {}",
+            dense.final_w.distance(&report.final_w)
+        );
+    }
+
+    // Identical iteration/communication accounting everywhere.
+    for report in [&dense_par, &threaded, &distributed] {
+        assert_eq!(report.iters, dense.iters);
+        assert_eq!(report.comm.rounds, dense.comm.rounds);
+        assert_eq!(report.comm.mixes, dense.comm.mixes);
+        assert_eq!(report.trace.records.len(), dense.trace.records.len());
+    }
+
+    // And the recorded traces agree to fp round-off.
+    for other in [&dense_par, &threaded, &distributed] {
+        for (a, b) in dense.trace.records.iter().zip(&other.trace.records) {
+            assert!(
+                (a.mean_tan_theta - b.mean_tan_theta).abs() < 1e-9 * (1.0 + a.mean_tan_theta),
+                "trace mismatch at iter {} ({:?})",
+                a.iter,
+                other.engine
+            );
+        }
+    }
+}
+
+/// Stall detection: a fixed-K DePCA run on heterogeneous data plateaus
+/// at its consensus floor — the driver should cut it off — while a
+/// healthy DeEPCA run with the same stall settings converges normally.
+#[test]
+fn stall_detection_cuts_plateaus() {
+    let (p, topo) = drifted(804, 8);
+
+    let stalled = Session::on(&p, &topo)
+        .algo(Algo::Depca(DepcaConfig {
+            k_policy: KPolicy::Fixed(4),
+            max_iters: 200,
+            ..Default::default()
+        }))
+        .stop(StopCriteria::max_iters(200).with_stall(15, 0.9))
+        .solve();
+    assert_eq!(stalled.reason, StopReason::Stalled, "DePCA floor not detected");
+    assert!(
+        stalled.iters < 200,
+        "stall should end the run early, ran {}",
+        stalled.iters
+    );
+
+    let healthy = Session::on(&p, &topo)
+        .algo(Algo::Deepca(DeepcaConfig {
+            consensus_rounds: 12,
+            max_iters: 200,
+            ..Default::default()
+        }))
+        .stop(
+            StopCriteria::max_iters(200)
+                .with_tol(1e-8)
+                .with_stall(15, 0.9),
+        )
+        .solve();
+    assert_eq!(
+        healthy.reason,
+        StopReason::Converged,
+        "healthy run misdiagnosed (final {:.3e})",
+        healthy.final_tan_theta
+    );
+}
+
+/// All four algorithms produce the unified report through the builder;
+/// the Rayleigh post-step composes on top of the decentralized runs.
+#[test]
+fn unified_report_and_rayleigh_post_step() {
+    let (p, topo) = spiked(805, 6);
+    let report = Session::on(&p, &topo)
+        .algo(Algo::Deepca(DeepcaConfig {
+            consensus_rounds: 10,
+            max_iters: 120,
+            ..Default::default()
+        }))
+        .eigenvalues(30)
+        .solve();
+    assert!(report.final_tan_theta < 1e-9);
+    let est = report.eigenvalues.as_ref().expect("post-step ran");
+    for (got, want) in est.values().iter().zip(&p.truth.values[..2]) {
+        assert!(
+            (got - want).abs() < 1e-7 * want,
+            "eigenvalue {got} vs truth {want}"
+        );
+    }
+    assert!(est.max_disagreement() < 1e-8);
+
+    // The strawman and the reference run through the same API and
+    // produce the same report shape.
+    let local = Session::on(&p, &topo)
+        .algo(Algo::LocalPower(LocalPowerConfig { max_iters: 30, ..Default::default() }))
+        .solve();
+    assert_eq!(local.algo, "local-power");
+    assert_eq!(local.comm.rounds, 0, "local power never communicates");
+
+    let cpca = Session::on(&p, &topo)
+        .algo(Algo::Centralized(CentralizedConfig { max_iters: 120, ..Default::default() }))
+        .solve();
+    assert_eq!(cpca.algo, "centralized");
+    assert!(cpca.final_tan_theta < 1e-10);
+}
+
+/// Warm start through the builder: resuming from a converged report must
+/// not regress, and a warm-started short run beats a cold short run.
+#[test]
+fn warm_start_beats_cold_start() {
+    let (p, topo) = spiked(806, 6);
+    let cfg = DeepcaConfig { consensus_rounds: 10, max_iters: 20, ..Default::default() };
+
+    let cold = Session::on(&p, &topo).algo(Algo::Deepca(cfg.clone())).solve();
+    let warm = Session::on(&p, &topo)
+        .algo(Algo::Deepca(cfg))
+        .warm_start(&cold)
+        .solve();
+    assert!(
+        warm.final_tan_theta < cold.final_tan_theta.max(1e-13) || warm.final_tan_theta < 1e-12,
+        "20 warm iterations ({:.3e}) should improve on the cold result ({:.3e})",
+        warm.final_tan_theta,
+        cold.final_tan_theta
+    );
+}

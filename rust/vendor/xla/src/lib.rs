@@ -1,0 +1,188 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The real crate links the native XLA/PJRT runtime, which is not
+//! available in offline build environments. This stub keeps the API
+//! surface compiling and keeps the *pure* pieces
+//! (host-side [`Literal`] shape/data handling) fully functional, while
+//! every operation that would need the native runtime returns a clear
+//! error. Callers already gate artifact execution on the presence of
+//! built artifacts, so the stub degrades to a skip, not a crash.
+
+use std::fmt;
+
+/// Error for operations that require the native PJRT runtime.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Stub `Result`.
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: native XLA/PJRT runtime not available in this offline build \
+         (vendored stub; install the xla native bindings to execute artifacts)"
+    )))
+}
+
+/// Element types [`Literal::to_vec`] can read back.
+pub trait NativeType: Copy {
+    /// Convert from the stub's f32 storage.
+    fn from_f32(x: f32) -> Self;
+}
+
+impl NativeType for f32 {
+    fn from_f32(x: f32) -> Self {
+        x
+    }
+}
+
+impl NativeType for f64 {
+    fn from_f32(x: f32) -> Self {
+        x as f64
+    }
+}
+
+/// Host-side array literal (functional in the stub: real data + shape).
+#[derive(Clone, Debug)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+/// Array shape descriptor.
+#[derive(Clone, Debug)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    /// Dimension extents.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+impl Literal {
+    /// Rank-1 f32 literal.
+    pub fn vec1(values: &[f32]) -> Literal {
+        Literal { data: values.to_vec(), dims: vec![values.len() as i64] }
+    }
+
+    /// Reshape to `dims` (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape: {} elements cannot take shape {dims:?}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Shape of the literal.
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape { dims: self.dims.clone() })
+    }
+
+    /// Read the data back as a flat vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&x| T::from_f32(x)).collect())
+    }
+
+    /// Decompose a tuple literal (only produced by real executions).
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+}
+
+/// Stub HLO module handle.
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    /// Parsing HLO text requires the native runtime.
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        unavailable(&format!("HloModuleProto::from_text_file({path})"))
+    }
+}
+
+/// Stub computation handle.
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    /// Wrap a parsed module (unreachable through the stub, but keeps the
+    /// call site compiling).
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// Stub PJRT client.
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    /// Creating a client requires the native runtime.
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    /// Platform name for reports.
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Compilation requires the native runtime.
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+/// Stub loaded executable.
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    /// Execution requires the native runtime.
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// Stub device buffer.
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    /// Device-to-host transfer requires the native runtime.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let r = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.array_shape().unwrap().dims(), &[2, 3]);
+        let back: Vec<f32> = r.to_vec().unwrap();
+        assert_eq!(back, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(l.reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn runtime_paths_error_cleanly() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+        assert!(Literal::vec1(&[1.0]).to_tuple().is_err());
+    }
+}

@@ -1,0 +1,65 @@
+#!/usr/bin/env bash
+# Tier-1 verification gate for the deepca crate.
+#
+#   scripts/verify.sh            # build + tests + doc build, lint advisory
+#   STRICT=1 scripts/verify.sh   # additionally fail on fmt/clippy findings
+#
+# The build is fully offline (dependencies vendored under rust/vendor),
+# so this runs anywhere a Rust toolchain exists. fmt/clippy run in
+# advisory mode by default so toolchain-version drift in style lints
+# never masks a real build/test regression; CI runs them as separate
+# non-blocking jobs and STRICT=1 promotes them to hard failures.
+
+set -uo pipefail
+cd "$(dirname "$0")/.."
+
+fail=0
+warn=0
+
+step() {
+    echo
+    echo "==> $*"
+}
+
+run_required() {
+    step "$*"
+    if ! "$@"; then
+        echo "FAIL: $*"
+        fail=1
+    fi
+}
+
+run_advisory() {
+    step "$* (advisory)"
+    if ! "$@"; then
+        if [ "${STRICT:-0}" = "1" ]; then
+            echo "FAIL (strict): $*"
+            fail=1
+        else
+            echo "WARN: $* reported findings (non-blocking; STRICT=1 to enforce)"
+            warn=1
+        fi
+    fi
+}
+
+# Tier-1 gate.
+run_required cargo build --release
+run_required cargo test -q
+
+# Documentation must build cleanly with no external deps.
+run_required cargo doc --no-deps --quiet
+
+# Style / lint, advisory unless STRICT=1.
+run_advisory cargo fmt --check
+run_advisory cargo clippy --all-targets -- -D warnings
+
+echo
+if [ "$fail" -ne 0 ]; then
+    echo "verify: FAILED"
+    exit 1
+fi
+if [ "$warn" -ne 0 ]; then
+    echo "verify: OK (with advisory warnings)"
+else
+    echo "verify: OK"
+fi
