@@ -29,6 +29,7 @@ use super::metrics::{RunOutput, RunRecorder};
 use super::problem::Problem;
 use super::rayleigh::EigenEstimate;
 use crate::consensus::metrics::CommStats;
+use crate::consensus::simnet::SimConfig;
 use crate::consensus::AgentStack;
 use crate::linalg::angles::tan_theta_orthonormal;
 use crate::linalg::Mat;
@@ -73,7 +74,7 @@ impl Algo {
 }
 
 /// Which execution engine carries a run.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Engine {
     /// Single-process dense gossip, sequential local products.
     Dense,
@@ -84,6 +85,11 @@ pub enum Engine {
     /// Fully distributed: the whole loop inside per-agent threads
     /// (DeEPCA only; other algorithms fall back to `Threaded`).
     Distributed,
+    /// Deterministic unreliable-network simulator
+    /// ([`crate::consensus::simnet::SimNet`]): seeded packet drops,
+    /// per-link latency on a virtual clock, payload noise, time-varying
+    /// topologies. `SimConfig::ideal(_)` reproduces `Dense` bit-for-bit.
+    Sim(SimConfig),
 }
 
 // ----------------------------------------------------------- state/step
@@ -371,6 +377,12 @@ impl SolveReport {
     /// drops below `eps`.
     pub fn first_below(&self, eps: f64) -> Option<(usize, u64)> {
         self.trace.first_below(eps)
+    }
+
+    /// Virtual clock ticks the run consumed (SimNet engine only: one
+    /// tick per gossip round plus per-link latencies; 0 elsewhere).
+    pub fn virtual_time(&self) -> u64 {
+        self.comm.virtual_time
     }
 
     /// Legacy [`RunOutput`] view (clones the final iterate and stats).

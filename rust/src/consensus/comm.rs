@@ -92,22 +92,55 @@ pub struct Fault {
     pub round: usize,
 }
 
+/// Per-edge channel endpoints, built once per engine and reused across
+/// `fastmix` calls (constructing one mpsc channel per directed edge on
+/// every mix dominated small-problem runtimes). Safe to reuse: each
+/// round every sender pushes exactly one message per out-edge and every
+/// receiver pops exactly one per in-edge, so the queues drain by the end
+/// of each mix and no state leaks between calls.
+struct EdgeChannels {
+    /// Per agent: (destination, sender) for each out-edge.
+    outs: Vec<Vec<(usize, mpsc::Sender<Vec<f64>>)>>,
+    /// Per agent: (source, receiver) for each in-edge.
+    ins: Vec<Vec<(usize, mpsc::Receiver<Vec<f64>>)>>,
+}
+
+impl EdgeChannels {
+    fn for_topology(topo: &Topology) -> Self {
+        let m = topo.n();
+        let mut outs: Vec<Vec<(usize, mpsc::Sender<Vec<f64>>)>> =
+            (0..m).map(|_| Vec::new()).collect();
+        let mut ins: Vec<Vec<(usize, mpsc::Receiver<Vec<f64>>)>> =
+            (0..m).map(|_| Vec::new()).collect();
+        for i in 0..m {
+            for &j in topo.neighbors(i) {
+                let (tx, rx) = mpsc::channel::<Vec<f64>>();
+                outs[i].push((j, tx));
+                ins[j].push((i, rx));
+            }
+        }
+        EdgeChannels { outs, ins }
+    }
+}
+
 /// Message-passing engine: threads + per-edge channels.
 pub struct ThreadedNetwork {
     topo: Topology,
     gossip: GossipMatrix,
     eta: f64,
     fault: Option<Fault>,
+    /// Reused across mixes; the mutex also serializes concurrent
+    /// `fastmix` calls on one engine (each call needs the full set).
+    channels: std::sync::Mutex<EdgeChannels>,
 }
 
 impl ThreadedNetwork {
     /// Build with the paper's Laplacian gossip weights.
     pub fn from_topology(topo: &Topology) -> Self {
         let gossip = GossipMatrix::from_laplacian(topo);
-        let l2 = gossip.lambda2;
-        let root = (1.0 - l2 * l2).sqrt();
-        let eta = (1.0 - root) / (1.0 + root);
-        ThreadedNetwork { topo: topo.clone(), gossip, eta, fault: None }
+        let eta = gossip.chebyshev_eta();
+        let channels = std::sync::Mutex::new(EdgeChannels::for_topology(topo));
+        ThreadedNetwork { topo: topo.clone(), gossip, eta, fault: None, channels }
     }
 
     /// Enable fault injection (see [`Fault`]).
@@ -135,18 +168,27 @@ impl Communicator for ThreadedNetwork {
         assert_eq!(stack.m(), m);
         let (d, k) = stack.slice_shape();
 
-        // One channel per directed edge (i -> j). Each agent sends exactly
-        // one message per out-edge per round and receives one per in-edge,
-        // so rounds are self-synchronizing: a receiver blocks until its
-        // neighbors' round-r messages arrive.
-        let mut senders: Vec<Vec<(usize, mpsc::Sender<Vec<f64>>)>> = (0..m).map(|_| Vec::new()).collect();
-        let mut receivers: Vec<Vec<(usize, mpsc::Receiver<Vec<f64>>)>> = (0..m).map(|_| Vec::new()).collect();
-        for i in 0..m {
-            for &j in self.topo.neighbors(i) {
-                let (tx, rx) = mpsc::channel::<Vec<f64>>();
-                senders[i].push((j, tx));
-                receivers[j].push((i, rx));
-            }
+        // Channels are built once per engine (see [`EdgeChannels`]) and
+        // lent to the agent threads for this mix. Each agent sends
+        // exactly one message per out-edge per round and receives one
+        // per in-edge, so rounds are self-synchronizing — a receiver
+        // blocks until its neighbors' round-r messages arrive — and the
+        // queues are empty again when the threads join.
+        // Recover from a prior mix that panicked mid-flight: a poisoned
+        // lock or an incomplete endpoint set (only the threads joined
+        // before the panic handed their channels back, and surviving
+        // queues may hold residue) is discarded and rebuilt, so the
+        // engine stays usable for callers that caught the panic.
+        let mut guard = match self.channels.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        let mut senders = std::mem::take(&mut guard.outs);
+        let mut receivers = std::mem::take(&mut guard.ins);
+        if senders.len() != m || receivers.len() != m {
+            let fresh = EdgeChannels::for_topology(&self.topo);
+            senders = fresh.outs;
+            receivers = fresh.ins;
         }
 
         let eta = self.eta;
@@ -158,8 +200,8 @@ impl Communicator for ThreadedNetwork {
         std::thread::scope(|scope| {
             let mut handles = Vec::with_capacity(m);
             for (j, (outs, ins)) in senders
-                .drain(..)
-                .zip(receivers.drain(..))
+                .into_iter()
+                .zip(receivers)
                 .enumerate()
             {
                 let init = stack.slice(j).clone();
@@ -192,12 +234,17 @@ impl Communicator for ThreadedNetwork {
                         acc.axpy(-eta, &prev);
                         prev = std::mem::replace(&mut cur, acc);
                     }
-                    (cur, scalars_sent)
+                    (cur, scalars_sent, outs, ins)
                 });
                 handles.push(handle);
             }
             for (j, h) in handles.into_iter().enumerate() {
-                results[j] = Some(h.join().expect("agent thread panicked"));
+                let (mat, scalars, outs, ins) = h.join().expect("agent thread panicked");
+                results[j] = Some((mat, scalars));
+                // Hand the channel endpoints back for the next mix
+                // (joined in agent order, so the layout is preserved).
+                guard.outs.push(outs);
+                guard.ins.push(ins);
             }
         });
 
@@ -240,6 +287,42 @@ mod tests {
             "engines disagree: {}",
             a.distance(&b)
         );
+    }
+
+    #[test]
+    fn channel_reuse_across_consecutive_mixes() {
+        // Channels are constructed once per engine; two consecutive
+        // `fastmix` calls must leave no residue (every queue drains each
+        // mix) and match the dense engine driven the same way. Note the
+        // FastMix recursion restarts `W^{-1} = W^0` at each call, so two
+        // K-round calls are *not* the same map as one 2K-round call —
+        // the invariant is per-call parity with DenseComm plus the
+        // shared consensus limit (the mean) of the 2K-round call.
+        let topo = Topology::erdos_renyi(10, 0.4, &mut Rng::seed_from(118));
+        let dense = DenseComm::from_topology(&topo);
+        let threaded = ThreadedNetwork::from_topology(&topo);
+
+        let stack0 = random_stack(10, 5, 2, 119);
+        let mut a = stack0.clone();
+        let mut b = stack0.clone();
+        let mut stats = CommStats::default();
+        dense.fastmix(&mut a, 4, &mut CommStats::default());
+        dense.fastmix(&mut a, 4, &mut CommStats::default());
+        threaded.fastmix(&mut b, 4, &mut stats);
+        threaded.fastmix(&mut b, 4, &mut stats);
+        assert!(
+            a.distance(&b) < 1e-10,
+            "reused channels corrupted the second mix: {}",
+            a.distance(&b)
+        );
+        assert_eq!(stats.mixes, 2);
+        assert_eq!(stats.rounds, 8);
+
+        // Same total communication as a single 2x-rounds call, and the
+        // same preserved mean.
+        let mut c = stack0;
+        dense.fastmix(&mut c, 8, &mut CommStats::default());
+        assert!((&b.mean() - &c.mean()).fro_norm() < 1e-10);
     }
 
     #[test]

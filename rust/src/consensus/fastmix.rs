@@ -33,10 +33,8 @@ impl FastMix {
     /// Bind to a gossip matrix; `edges` is the physical undirected edge
     /// count of the underlying topology (for byte accounting).
     pub fn new(gossip: GossipMatrix, edges: usize) -> Self {
-        let l2 = gossip.lambda2;
         // Algorithm 3's step size uses λ₂² under the root.
-        let root = (1.0 - l2 * l2).sqrt();
-        let eta = (1.0 - root) / (1.0 + root);
+        let eta = gossip.chebyshev_eta();
         FastMix { gossip, eta, edges }
     }
 

@@ -21,6 +21,13 @@ pub struct CommStats {
     pub bytes_sent: u64,
     /// Messages (edge-transmissions) sent.
     pub messages: u64,
+    /// Virtual clock ticks elapsed (SimNet only: each gossip round costs
+    /// one tick plus the slowest delivered link's latency; the real-time
+    /// engines leave this at 0).
+    pub virtual_time: u64,
+    /// Messages lost in flight (SimNet's per-link drop model; receivers
+    /// fall back to their self-weight so gossip stays well-defined).
+    pub dropped: u64,
 }
 
 impl CommStats {
@@ -48,6 +55,8 @@ impl CommStats {
         self.scalars_sent += other.scalars_sent;
         self.bytes_sent += other.bytes_sent;
         self.messages += other.messages;
+        self.virtual_time += other.virtual_time;
+        self.dropped += other.dropped;
     }
 
     /// Mean gossip rounds per mix (the effective K actually used).
@@ -70,7 +79,14 @@ impl std::fmt::Display for CommStats {
             self.rounds_per_mix(),
             self.messages,
             crate::util::format::bytes(self.bytes_sent)
-        )
+        )?;
+        if self.dropped > 0 {
+            write!(f, ", {} dropped", self.dropped)?;
+        }
+        if self.virtual_time > 0 {
+            write!(f, ", {} vticks", self.virtual_time)?;
+        }
+        Ok(())
     }
 }
 
@@ -101,6 +117,21 @@ mod tests {
         assert_eq!(a.rounds, 3);
         assert_eq!(a.mixes, 2);
         assert!((a.rounds_per_mix() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_carries_sim_fields() {
+        let mut a = CommStats::default();
+        a.virtual_time = 5;
+        a.dropped = 2;
+        let mut b = CommStats::default();
+        b.virtual_time = 7;
+        b.dropped = 1;
+        a.merge(&b);
+        assert_eq!(a.virtual_time, 12);
+        assert_eq!(a.dropped, 3);
+        let txt = format!("{a}");
+        assert!(txt.contains("dropped") && txt.contains("vticks"));
     }
 
     #[test]

@@ -9,11 +9,16 @@
 //!   single-process engine for fast experiment sweeps, and a threaded
 //!   message-passing runtime (one thread per agent, channels per edge)
 //!   that exercises real concurrency and counts every byte on the wire.
-//! - [`metrics`] — communication accounting shared by both engines.
+//! - [`simnet`] — a deterministic discrete-event simulator of
+//!   *unreliable* networks (seeded packet drops, per-link latency on a
+//!   virtual clock, payload noise, time-varying topologies) for
+//!   reproducible fault scenarios.
+//! - [`metrics`] — communication accounting shared by all engines.
 
 pub mod stack;
 pub mod fastmix;
 pub mod comm;
+pub mod simnet;
 pub mod metrics;
 
 pub use fastmix::FastMix;

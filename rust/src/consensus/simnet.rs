@@ -1,0 +1,480 @@
+//! SimNet — deterministic simulation of unreliable, time-varying networks.
+//!
+//! A single-threaded, discrete-event [`Communicator`]: gossip rounds are
+//! barrier-synchronized events on a virtual clock, and *every* random
+//! choice — packet drops, payload noise — comes from one seeded [`Rng`]
+//! consumed in a fixed order, so a run replays bit-for-bit from its seed.
+//! This is the substrate for fault/async scenarios the threaded engines
+//! cannot reproduce deterministically:
+//!
+//! - **Per-link packet drops** — each directed message is lost with
+//!   probability [`SimConfig::drop_prob`]. The receiver substitutes its
+//!   *own* current state for the lost payload (self-weight fallback), so
+//!   each round remains a well-defined row-stochastic averaging — the
+//!   perturbation a drop injects is proportional to the current
+//!   disagreement and vanishes at consensus.
+//! - **Per-link latency** — every directed link gets a fixed latency in
+//!   `[0, max_latency]` virtual ticks (derived from the seed). A round
+//!   completes when its slowest delivered message lands; the elapsed
+//!   ticks accumulate into [`CommStats::virtual_time`], giving experiments
+//!   a wall-clock-free time axis.
+//! - **Additive payload noise** — i.i.d. Gaussian noise of std
+//!   [`SimConfig::noise_std`] on every delivered scalar (the noisy power
+//!   method regime; unlike drops, this sets a hard accuracy floor).
+//! - **Time-varying topology** — the engine consults a
+//!   [`TopologySchedule`] on every gossip round and recomputes gossip
+//!   weights (and the FastMix step size η) whenever the schedule enters a
+//!   new epoch.
+//!
+//! With `drop_prob = 0`, `max_latency = 0`, `noise_std = 0`, and a static
+//! schedule, the per-round arithmetic is the *identical* operation
+//! sequence as [`super::comm::DenseComm`]'s FastMix, so results match bit-for-bit —
+//! the parity tests in `tests/solver_api.rs` pin this.
+
+use super::comm::Communicator;
+use super::metrics::CommStats;
+use super::stack::AgentStack;
+use crate::graph::dynamic::TopologySchedule;
+use crate::graph::gossip::GossipMatrix;
+use crate::graph::topology::Topology;
+use crate::linalg::Mat;
+use crate::util::rng::Rng;
+use std::sync::Mutex;
+
+/// Fault-model knobs for one [`SimNet`] run. All zeros = ideal network.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SimConfig {
+    /// Probability each directed message is lost in flight, per round.
+    pub drop_prob: f64,
+    /// Maximum per-link latency in virtual ticks (each link's fixed
+    /// latency is derived deterministically from `seed`; 0 = instant).
+    pub max_latency: u64,
+    /// Std of i.i.d. Gaussian noise added to every delivered scalar.
+    pub noise_std: f64,
+    /// Master seed for drops and noise (and, via hashing, latencies).
+    pub seed: u64,
+}
+
+impl SimConfig {
+    /// Ideal network: no drops, no latency, no noise — bit-identical to
+    /// [`super::comm::DenseComm`] on a static topology.
+    pub fn ideal(seed: u64) -> Self {
+        SimConfig { drop_prob: 0.0, max_latency: 0, noise_std: 0.0, seed }
+    }
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig::ideal(0x51AE7)
+    }
+}
+
+/// Fixed latency of the directed link `from → to`, in virtual ticks,
+/// derived from the run seed (stable across rounds and epochs).
+fn link_latency(seed: u64, from: usize, to: usize, max_latency: u64) -> u64 {
+    if max_latency == 0 {
+        return 0;
+    }
+    let key = seed ^ ((from as u64) << 32) ^ (to as u64) ^ 0xD15C_EE7E_5EED_F00D;
+    Rng::seed_from(key).next_u64() % (max_latency + 1)
+}
+
+/// Gossip weights + FastMix step size for one schedule epoch.
+struct Epoch {
+    index: u64,
+    gossip: GossipMatrix,
+    eta: f64,
+    edges: usize,
+}
+
+fn build_epoch(schedule: &mut TopologySchedule, index: u64) -> Epoch {
+    let topo = schedule.topology_at_epoch(index);
+    let gossip = GossipMatrix::from_laplacian(&topo);
+    let eta = gossip.chebyshev_eta();
+    Epoch { index, eta, edges: topo.num_edges(), gossip }
+}
+
+/// Per-directed-link latency ticks, row-major `[from * m + to]` (empty
+/// when `max_latency == 0`). Latencies are epoch-invariant by
+/// construction, so the table is built once per engine and the
+/// per-message hot loop is a table lookup, not an Rng construction.
+fn latency_table(m: usize, cfg: &SimConfig) -> Vec<u64> {
+    if cfg.max_latency == 0 {
+        return Vec::new();
+    }
+    let mut v = vec![0u64; m * m];
+    for from in 0..m {
+        for to in 0..m {
+            v[from * m + to] = link_latency(cfg.seed, from, to, cfg.max_latency);
+        }
+    }
+    v
+}
+
+/// Mutable simulation state behind the [`Communicator`]'s `&self` API.
+struct SimState {
+    rng: Rng,
+    schedule: TopologySchedule,
+    epoch: Epoch,
+    /// Global gossip-round counter (drives the schedule's epochs).
+    round: u64,
+}
+
+/// The deterministic unreliable-network engine. See the module docs.
+pub struct SimNet {
+    cfg: SimConfig,
+    m: usize,
+    /// Epoch-0 gossip matrix, reported through [`Communicator::gossip`]
+    /// (spectral quantities of later epochs live inside the state).
+    base_gossip: GossipMatrix,
+    /// See [`latency_table`].
+    latency: Vec<u64>,
+    state: Mutex<SimState>,
+}
+
+impl SimNet {
+    /// Build over a (possibly time-varying) schedule.
+    pub fn new(mut schedule: TopologySchedule, cfg: SimConfig) -> Self {
+        assert!(
+            (0.0..=1.0).contains(&cfg.drop_prob),
+            "drop_prob must be in [0, 1]"
+        );
+        assert!(cfg.noise_std >= 0.0, "noise_std must be ≥ 0");
+        let m = schedule.n();
+        let epoch = build_epoch(&mut schedule, 0);
+        let base_gossip = epoch.gossip.clone();
+        SimNet {
+            cfg,
+            m,
+            base_gossip,
+            latency: latency_table(m, &cfg),
+            state: Mutex::new(SimState {
+                rng: Rng::seed_from(cfg.seed),
+                schedule,
+                epoch,
+                round: 0,
+            }),
+        }
+    }
+
+    /// Build over a static topology.
+    pub fn from_topology(topo: &Topology, cfg: SimConfig) -> Self {
+        Self::new(TopologySchedule::fixed(topo.clone()), cfg)
+    }
+
+    /// The fault-model configuration.
+    pub fn config(&self) -> &SimConfig {
+        &self.cfg
+    }
+}
+
+impl Communicator for SimNet {
+    fn m(&self) -> usize {
+        self.m
+    }
+
+    fn gossip(&self) -> &GossipMatrix {
+        &self.base_gossip
+    }
+
+    fn fastmix(&self, stack: &mut AgentStack, rounds: usize, stats: &mut CommStats) {
+        stats.record_mix();
+        if rounds == 0 {
+            return;
+        }
+        let m = self.m;
+        assert_eq!(stack.m(), m, "stack size != network size");
+        let (d, k) = stack.slice_shape();
+
+        let mut st = self.state.lock().expect("SimNet state poisoned");
+        let st = &mut *st;
+
+        // FastMix recursion buffers (same rotation scheme as DenseComm).
+        let mut prev: Vec<Mat> = stack.iter().cloned().collect();
+        let mut cur = prev.clone();
+        let mut next: Vec<Mat> = vec![Mat::zeros(d, k); m];
+        let mut noisy = Mat::zeros(d, k); // scratch for noised payloads
+
+        for _ in 0..rounds {
+            // Consult the schedule; rebuild weights on epoch boundaries.
+            let epoch_idx = st.schedule.epoch_of(st.round);
+            if epoch_idx != st.epoch.index {
+                st.epoch = build_epoch(&mut st.schedule, epoch_idx);
+            }
+            let eta = st.epoch.eta;
+            let one_plus_eta = 1.0 + eta;
+            let weights = &st.epoch.gossip.weights;
+
+            let mut dropped_this_round = 0u64;
+            let mut slowest_delivery = 0u64;
+            // One barrier-synchronized event per round: every directed
+            // link carries one message; the deterministic (j, then i
+            // ascending) order below fixes both the Rng consumption and
+            // the floating-point accumulation order.
+            for j in 0..m {
+                let wj = weights.row(j);
+                let acc = &mut next[j];
+                // acc = −η · prev_j (overwrite, no zero pass).
+                acc.data_mut().copy_from_slice(prev[j].data());
+                acc.scale(-eta);
+                for (i, &w) in wj.iter().enumerate() {
+                    if w == 0.0 {
+                        continue;
+                    }
+                    if i == j {
+                        acc.axpy(one_plus_eta * w, &cur[j]);
+                        continue;
+                    }
+                    // Directed link i → j: one message this round.
+                    if self.cfg.drop_prob > 0.0 && st.rng.chance(self.cfg.drop_prob) {
+                        dropped_this_round += 1;
+                        // Self-weight fallback: substitute the receiver's
+                        // own state so the row stays stochastic.
+                        acc.axpy(one_plus_eta * w, &cur[j]);
+                        continue;
+                    }
+                    if self.cfg.max_latency > 0 {
+                        slowest_delivery =
+                            slowest_delivery.max(self.latency[i * m + j]);
+                    }
+                    if self.cfg.noise_std > 0.0 {
+                        noisy.data_mut().copy_from_slice(cur[i].data());
+                        for v in noisy.data_mut() {
+                            *v += self.cfg.noise_std * st.rng.normal();
+                        }
+                        acc.axpy(one_plus_eta * w, &noisy);
+                    } else {
+                        acc.axpy(one_plus_eta * w, &cur[i]);
+                    }
+                }
+            }
+            std::mem::swap(&mut prev, &mut cur);
+            std::mem::swap(&mut cur, &mut next);
+            st.round += 1;
+            stats.record_round(st.epoch.edges, d, k);
+            stats.dropped += dropped_this_round;
+            // Discrete-event barrier: the round completes one baseline
+            // tick after its slowest delivered message lands.
+            stats.virtual_time += 1 + slowest_delivery;
+        }
+        for (dst, src) in stack.iter_mut().zip(cur) {
+            *dst = src;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::consensus::comm::DenseComm;
+
+    fn random_stack(m: usize, d: usize, k: usize, seed: u64) -> AgentStack {
+        let mut rng = Rng::seed_from(seed);
+        AgentStack::new((0..m).map(|_| Mat::randn(d, k, &mut rng)).collect())
+    }
+
+    #[test]
+    fn ideal_matches_dense() {
+        // Same topology, same rounds: the ideal SimNet executes the
+        // identical operation sequence as DenseComm — expected
+        // bit-for-bit, asserted to the issue's 1e-12.
+        let topo = Topology::erdos_renyi(12, 0.4, &mut Rng::seed_from(301));
+        let dense = DenseComm::from_topology(&topo);
+        let sim = SimNet::from_topology(&topo, SimConfig::ideal(0));
+
+        let stack0 = random_stack(12, 6, 3, 302);
+        let mut a = stack0.clone();
+        let mut b = stack0;
+        dense.fastmix(&mut a, 7, &mut CommStats::default());
+        sim.fastmix(&mut b, 7, &mut CommStats::default());
+        assert!(
+            a.distance(&b) < 1e-12,
+            "ideal SimNet deviates from DenseComm by {}",
+            a.distance(&b)
+        );
+    }
+
+    #[test]
+    fn ideal_parity_survives_consecutive_mixes() {
+        let topo = Topology::ring(8);
+        let dense = DenseComm::from_topology(&topo);
+        let sim = SimNet::from_topology(&topo, SimConfig::ideal(1));
+        let stack0 = random_stack(8, 4, 2, 303);
+        let mut a = stack0.clone();
+        let mut b = stack0;
+        for _ in 0..3 {
+            dense.fastmix(&mut a, 5, &mut CommStats::default());
+            sim.fastmix(&mut b, 5, &mut CommStats::default());
+        }
+        assert!(a.distance(&b) < 1e-12, "drift across mixes: {}", a.distance(&b));
+    }
+
+    #[test]
+    fn constant_stack_immune_to_drops() {
+        // At consensus the self-weight fallback substitutes an identical
+        // value, so even 50% drops change nothing — the property that
+        // lets DeEPCA converge *exactly* through a lossy network.
+        let topo = Topology::erdos_renyi(9, 0.5, &mut Rng::seed_from(304));
+        let sim = SimNet::from_topology(
+            &topo,
+            SimConfig { drop_prob: 0.5, ..SimConfig::ideal(7) },
+        );
+        let w = Mat::randn(5, 2, &mut Rng::seed_from(305));
+        let mut stack = AgentStack::replicate(9, &w);
+        let mut stats = CommStats::default();
+        sim.fastmix(&mut stack, 10, &mut stats);
+        assert!(stats.dropped > 0, "50% drops must actually fire");
+        for s in stack.iter() {
+            assert!((s - &w).fro_norm() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed_and_seeds_differ() {
+        let topo = Topology::ring(7);
+        let cfg = SimConfig { drop_prob: 0.3, noise_std: 0.01, ..SimConfig::ideal(41) };
+        let stack0 = random_stack(7, 4, 2, 306);
+
+        let run = |cfg: SimConfig| {
+            let sim = SimNet::from_topology(&topo, cfg);
+            let mut s = stack0.clone();
+            let mut stats = CommStats::default();
+            sim.fastmix(&mut s, 12, &mut stats);
+            (s, stats)
+        };
+
+        let (s1, st1) = run(cfg);
+        let (s2, st2) = run(cfg);
+        assert_eq!(s1, s2, "same seed must replay bit-for-bit");
+        assert_eq!(st1, st2, "stats must replay too");
+
+        let (s3, _) = run(SimConfig { seed: 42, ..cfg });
+        assert!(s1.distance(&s3) > 1e-12, "different seeds should diverge");
+    }
+
+    #[test]
+    fn drops_still_reach_consensus() {
+        let topo = Topology::complete(8);
+        let sim = SimNet::from_topology(
+            &topo,
+            SimConfig { drop_prob: 0.1, ..SimConfig::ideal(11) },
+        );
+        let mut stack = random_stack(8, 3, 2, 307);
+        let dev0 = stack.deviation_from_mean();
+        sim.fastmix(&mut stack, 30, &mut CommStats::default());
+        let dev1 = stack.deviation_from_mean();
+        assert!(stack.is_finite());
+        assert!(
+            dev1 < 1e-3 * dev0,
+            "drops should slow, not stop, consensus: {dev0} -> {dev1}"
+        );
+    }
+
+    #[test]
+    fn latency_accrues_virtual_time_deterministically() {
+        let topo = Topology::ring(6);
+        let cfg = SimConfig { max_latency: 3, ..SimConfig::ideal(13) };
+        let run = || {
+            let sim = SimNet::from_topology(&topo, cfg);
+            let mut s = random_stack(6, 3, 2, 308);
+            let mut stats = CommStats::default();
+            sim.fastmix(&mut s, 5, &mut stats);
+            stats.virtual_time
+        };
+        let vt = run();
+        assert!(vt >= 5, "at least one tick per round, got {vt}");
+        assert!(vt <= 5 * 4, "latency bounded by max_latency, got {vt}");
+        assert_eq!(vt, run(), "virtual time must be deterministic");
+    }
+
+    #[test]
+    fn zero_latency_costs_one_tick_per_round() {
+        let topo = Topology::star(5);
+        let sim = SimNet::from_topology(&topo, SimConfig::ideal(17));
+        let mut s = random_stack(5, 3, 2, 309);
+        let mut stats = CommStats::default();
+        sim.fastmix(&mut s, 9, &mut stats);
+        assert_eq!(stats.virtual_time, 9);
+    }
+
+    #[test]
+    fn noise_breaks_exact_consensus() {
+        let topo = Topology::complete(6);
+        let sim = SimNet::from_topology(
+            &topo,
+            SimConfig { noise_std: 0.1, ..SimConfig::ideal(19) },
+        );
+        let w = Mat::randn(4, 2, &mut Rng::seed_from(310));
+        let mut stack = AgentStack::replicate(6, &w);
+        sim.fastmix(&mut stack, 5, &mut CommStats::default());
+        // Additive channel noise perturbs a perfectly-agreed stack…
+        assert!(stack.deviation_from_mean() > 1e-6);
+        // …but boundedly (no blow-up).
+        assert!(stack.is_finite());
+    }
+
+    #[test]
+    fn periodic_schedule_preserves_mean() {
+        // Every epoch's gossip matrix is doubly stochastic, so switching
+        // topologies mid-mix must still preserve the stack mean exactly.
+        let sched = TopologySchedule::periodic(
+            vec![Topology::ring(6), Topology::star(6)],
+            2,
+        );
+        let sim = SimNet::new(sched, SimConfig::ideal(23));
+        let mut stack = random_stack(6, 4, 2, 311);
+        let mean0 = stack.mean();
+        sim.fastmix(&mut stack, 12, &mut CommStats::default());
+        assert!((&stack.mean() - &mean0).fro_norm() < 1e-9);
+    }
+
+    #[test]
+    fn markov_churn_still_mixes() {
+        let base = Topology::erdos_renyi(10, 0.5, &mut Rng::seed_from(312));
+        let sched = TopologySchedule::markov(base, 0.3, 0.5, 29, 1);
+        let sim = SimNet::new(
+            sched,
+            SimConfig { drop_prob: 0.05, ..SimConfig::ideal(31) },
+        );
+        let mut stack = random_stack(10, 4, 2, 313);
+        let dev0 = stack.deviation_from_mean();
+        sim.fastmix(&mut stack, 40, &mut CommStats::default());
+        assert!(stack.is_finite());
+        assert!(
+            stack.deviation_from_mean() < 0.1 * dev0,
+            "churned network failed to mix: {} -> {}",
+            dev0,
+            stack.deviation_from_mean()
+        );
+    }
+
+    #[test]
+    fn zero_rounds_noop() {
+        let topo = Topology::ring(5);
+        let sim = SimNet::from_topology(
+            &topo,
+            SimConfig { drop_prob: 0.2, ..SimConfig::ideal(37) },
+        );
+        let mut stack = random_stack(5, 3, 2, 314);
+        let before = stack.clone();
+        let mut stats = CommStats::default();
+        sim.fastmix(&mut stack, 0, &mut stats);
+        assert_eq!(stack, before);
+        assert_eq!(stats.mixes, 1);
+        assert_eq!(stats.rounds, 0);
+    }
+
+    #[test]
+    fn stats_accounting_matches_dense_shape() {
+        let topo = Topology::ring(6); // 6 edges
+        let sim = SimNet::from_topology(&topo, SimConfig::ideal(43));
+        let mut stack = random_stack(6, 3, 2, 315);
+        let mut stats = CommStats::default();
+        sim.fastmix(&mut stack, 4, &mut stats);
+        assert_eq!(stats.rounds, 4);
+        assert_eq!(stats.mixes, 1);
+        assert_eq!(stats.messages, 4 * 2 * 6);
+        assert_eq!(stats.scalars_sent, 4 * 12 * 6);
+        assert_eq!(stats.dropped, 0);
+    }
+}

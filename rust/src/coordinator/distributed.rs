@@ -46,9 +46,7 @@ pub fn run_deepca_distributed(
     let m = problem.m();
     assert_eq!(topo.n(), m, "topology/problem size mismatch");
     let gossip = GossipMatrix::from_laplacian(topo);
-    let l2 = gossip.lambda2;
-    let root = (1.0 - l2 * l2).sqrt();
-    let eta = (1.0 - root) / (1.0 + root);
+    let eta = gossip.chebyshev_eta();
 
     let w0 = problem.initial_w(cfg.init_seed);
     let (d, k) = w0.shape();

@@ -39,6 +39,11 @@
 //!   report's `engine` field says which engine actually ran).
 //!   Algorithms other than DeEPCA fall back to [`Engine::Threaded`] as
 //!   well.
+//! - [`Engine::Sim`] runs gossip through the deterministic
+//!   unreliable-network simulator ([`crate::consensus::simnet::SimNet`]):
+//!   seeded packet drops, virtual-clock latency, payload noise, and —
+//!   via [`Session::schedule`] — time-varying topologies. With an ideal
+//!   config it reproduces [`Engine::Dense`] bit-for-bit.
 //! - The centralized reference ignores the engine (no communication).
 
 use crate::algo::backend::{ParallelBackend, PowerBackend, RustBackend};
@@ -54,7 +59,9 @@ use crate::algo::solver::{
     StopReason,
 };
 use crate::consensus::comm::{Communicator, DenseComm, ThreadedNetwork};
+use crate::consensus::simnet::SimNet;
 use crate::consensus::AgentStack;
+use crate::graph::dynamic::TopologySchedule;
 use crate::graph::topology::Topology;
 
 /// Fluent builder for one solver run. See the module docs for a tour.
@@ -68,6 +75,7 @@ pub struct Session<'a> {
     observer: Option<Box<dyn FnMut(&StepReport) + 'a>>,
     warm: Option<AgentStack>,
     eig_rounds: Option<usize>,
+    schedule: Option<TopologySchedule>,
 }
 
 /// The issue-tracker name for [`Session`] — same type.
@@ -87,6 +95,7 @@ impl<'a> Session<'a> {
             observer: None,
             warm: None,
             eig_rounds: None,
+            schedule: None,
         }
     }
 
@@ -141,19 +150,53 @@ impl<'a> Session<'a> {
         self
     }
 
+    /// Time-varying topology for the [`Engine::Sim`] engine (static /
+    /// periodic / Markov churn — see [`TopologySchedule`]). Only
+    /// `Engine::Sim` can honor it, so solving any other engine with a
+    /// schedule set panics (rather than silently running the ideal
+    /// static network); the session's base `topo` is still used for the
+    /// metrics/eigenvalue post-steps. The schedule's node count must
+    /// match the problem's agent count.
+    pub fn schedule(mut self, schedule: TopologySchedule) -> Self {
+        assert_eq!(
+            schedule.n(),
+            self.problem.m(),
+            "schedule/problem agent count mismatch"
+        );
+        self.schedule = Some(schedule);
+        self
+    }
+
+    /// A schedule without the sim engine would be silently meaningless —
+    /// mirror the CLI and refuse.
+    fn check_schedule_engine(&self) {
+        assert!(
+            self.schedule.is_none() || matches!(self.engine, Engine::Sim(_)),
+            "a TopologySchedule is only honored by Engine::Sim (got {:?})",
+            self.engine
+        );
+    }
+
     /// Build the step-wise solver for manual driving ([`Solver::step`]).
     /// Uses the leader-driven engines; [`Engine::Distributed`] falls
-    /// back to [`Engine::Threaded`] here.
+    /// back to [`Engine::Threaded`] here. A configured warm start is
+    /// applied, same as in [`Session::solve`].
     pub fn build_solver(&self) -> Box<dyn Solver + 'a> {
+        self.check_schedule_engine();
         let engine = match self.engine {
             Engine::Distributed => Engine::Threaded,
             e => e,
         };
-        self.build_solver_for(engine)
+        let mut solver = self.build_solver_for(engine);
+        if let Some(w) = &self.warm {
+            solver.warm_start(w);
+        }
+        solver
     }
 
     /// Execute the session and collect the unified report.
     pub fn solve(mut self) -> SolveReport {
+        self.check_schedule_engine();
         let stop = self
             .stop
             .clone()
@@ -282,6 +325,13 @@ impl<'a> Session<'a> {
     fn parts(&self, engine: Engine) -> (Box<dyn PowerBackend + 'a>, Box<dyn Communicator + 'a>) {
         let comm: Box<dyn Communicator + 'a> = match engine {
             Engine::Threaded => Box::new(ThreadedNetwork::from_topology(self.topo)),
+            Engine::Sim(cfg) => {
+                let sched = self
+                    .schedule
+                    .clone()
+                    .unwrap_or_else(|| TopologySchedule::fixed(self.topo.clone()));
+                Box::new(SimNet::new(sched, cfg))
+            }
             _ => Box::new(DenseComm::from_topology(self.topo)),
         };
         (self.backend(engine), comm)
@@ -396,6 +446,91 @@ mod tests {
             "λ₁ estimate {} vs truth {}",
             est.values()[0],
             p.truth.values[0]
+        );
+    }
+
+    #[test]
+    fn sim_engine_through_builder() {
+        use crate::consensus::simnet::SimConfig;
+        let (p, topo) = setup(616);
+        let cfg = DeepcaConfig { consensus_rounds: 8, max_iters: 25, ..Default::default() };
+
+        // Ideal SimNet must reproduce the dense engine.
+        let dense = Session::on(&p, &topo).algo(Algo::Deepca(cfg.clone())).solve();
+        let sim = Session::on(&p, &topo)
+            .algo(Algo::Deepca(cfg.clone()))
+            .engine(Engine::Sim(SimConfig::ideal(0)))
+            .solve();
+        assert!(
+            dense.final_w.distance(&sim.final_w) < 1e-12,
+            "ideal sim vs dense: {}",
+            dense.final_w.distance(&sim.final_w)
+        );
+        // Virtual time: one tick per gossip round at zero latency.
+        assert_eq!(sim.virtual_time(), sim.comm.rounds);
+        assert_eq!(dense.virtual_time(), 0);
+
+        // Faulty SimNet still runs and drops messages.
+        let faulty = Session::on(&p, &topo)
+            .algo(Algo::Deepca(cfg))
+            .engine(Engine::Sim(SimConfig {
+                drop_prob: 0.1,
+                max_latency: 2,
+                ..SimConfig::ideal(9)
+            }))
+            .solve();
+        assert!(!faulty.diverged);
+        assert!(faulty.comm.dropped > 0, "10% drops must fire");
+        assert!(faulty.virtual_time() >= faulty.comm.rounds);
+    }
+
+    #[test]
+    fn sim_engine_with_churn_schedule() {
+        use crate::consensus::simnet::SimConfig;
+        use crate::graph::dynamic::TopologySchedule;
+        let (p, topo) = setup(617);
+        let sched = TopologySchedule::markov(topo.clone(), 0.3, 0.5, 77, 4);
+        let report = Session::on(&p, &topo)
+            .algo(Algo::Deepca(DeepcaConfig {
+                consensus_rounds: 12,
+                max_iters: 60,
+                ..Default::default()
+            }))
+            .engine(Engine::Sim(SimConfig { drop_prob: 0.02, ..SimConfig::ideal(5) }))
+            .schedule(sched)
+            .solve();
+        assert!(!report.diverged);
+        assert!(
+            report.final_tan_theta < 1e-6,
+            "churned network should still converge: {:.3e}",
+            report.final_tan_theta
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "only honored by Engine::Sim")]
+    fn schedule_without_sim_engine_panics() {
+        use crate::graph::dynamic::TopologySchedule;
+        let (p, topo) = setup(619);
+        // Default engine is Dense: a schedule there would silently run
+        // the ideal static network, so the builder must refuse.
+        let _ = Session::on(&p, &topo)
+            .schedule(TopologySchedule::fixed(topo.clone()))
+            .solve();
+    }
+
+    #[test]
+    fn build_solver_applies_warm_start() {
+        let (p, topo) = setup(618);
+        let cfg = DeepcaConfig { consensus_rounds: 8, max_iters: 20, ..Default::default() };
+        let first = Session::on(&p, &topo).algo(Algo::Deepca(cfg.clone())).solve();
+        let solver = Session::on(&p, &topo)
+            .algo(Algo::Deepca(cfg))
+            .warm_start(&first)
+            .build_solver();
+        assert!(
+            solver.state().w == first.final_w,
+            "manual solver must start from the warm iterate"
         );
     }
 

@@ -7,6 +7,7 @@
 //! | `fig2` | Figure 2 ('a9a') | [`figures`] |
 //! | `table_comm` | Remark 2 / Theorem 1 comm-to-ε comparison | [`comm_table`] |
 //! | `ablations` | sign-adjust, topology, min-K vs heterogeneity, non-PSD | [`ablations`] |
+//! | `robustness` | drop-rate × consensus-rounds sweep via SimNet | [`robustness`] |
 //!
 //! Every experiment prints CSV blocks (machine-readable, one per series)
 //! and a human summary; EXPERIMENTS.md records paper-vs-measured.
@@ -14,6 +15,7 @@
 pub mod figures;
 pub mod comm_table;
 pub mod ablations;
+pub mod robustness;
 pub mod report;
 
 /// Experiment scale: paper-sized or CI-sized.

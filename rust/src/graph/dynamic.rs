@@ -1,0 +1,331 @@
+//! Time-varying topologies: the network a gossip round actually sees.
+//!
+//! The paper's analysis assumes one fixed connected graph, but the
+//! regimes studied by the related work — decentralized eigendecomposition
+//! over *time-varying* graphs and power iterations under lossy links —
+//! need the network itself to evolve while the algorithm runs. This
+//! module provides [`TopologySchedule`], a deterministic map from the
+//! global gossip-round counter to the topology in force during that
+//! round:
+//!
+//! - **static** — one graph forever (degenerates to the paper's setup);
+//! - **periodic** — cycle through a fixed list of graphs, switching every
+//!   `rounds_per_epoch` gossip rounds;
+//! - **Markov churn** — every non-protected link of a base graph is an
+//!   independent two-state Markov chain (up → down with `p_drop`, down →
+//!   up with `p_revive` per epoch), driven by a seeded [`Rng`] so the
+//!   whole sample path replays bit-for-bit from the seed.
+//!
+//! Churn can be configured with a **connectivity floor**: a BFS spanning
+//! tree of the base graph whose edges are immune to churn, so every
+//! epoch's snapshot stays connected (gossip matrices remain well-defined;
+//! `prop_gossip.rs` asserts this property). Without the floor, epochs may
+//! disconnect — fine for studying failure, but
+//! [`crate::consensus::simnet::SimNet`] requires connected epochs to
+//! build its gossip weights.
+//!
+//! Time is counted in *gossip rounds*, not power iterations: an epoch of
+//! `rounds_per_epoch = K` with DeEPCA's `consensus_rounds = K` changes
+//! the network once per power iteration; `rounds_per_epoch = 1` churns on
+//! every single exchange.
+
+use super::topology::Topology;
+use crate::util::rng::Rng;
+
+/// Per-link Markov churn state over a base graph.
+#[derive(Clone, Debug)]
+struct MarkovChurn {
+    base: Topology,
+    /// Canonical (i < j) edges of the base graph.
+    edges: Vec<(usize, usize)>,
+    /// Edges in the connectivity floor (immune to churn), if enabled.
+    protected: Vec<bool>,
+    /// Current up/down state per base edge.
+    up: Vec<bool>,
+    p_drop: f64,
+    p_revive: f64,
+    rng: Rng,
+    /// Epoch the `up` vector corresponds to.
+    epoch: u64,
+    /// Snapshot for `epoch`.
+    snapshot: Topology,
+}
+
+impl MarkovChurn {
+    fn new(base: Topology, p_drop: f64, p_revive: f64, seed: u64, floor: bool) -> Self {
+        assert!((0.0..=1.0).contains(&p_drop), "p_drop out of [0,1]");
+        assert!((0.0..=1.0).contains(&p_revive), "p_revive out of [0,1]");
+        assert!(base.is_connected(), "churn base graph must be connected");
+        let edges = base.edges();
+        let protected = if floor {
+            spanning_tree_mask(&base, &edges)
+        } else {
+            vec![false; edges.len()]
+        };
+        let up = vec![true; edges.len()];
+        let snapshot = base.clone();
+        MarkovChurn {
+            base,
+            edges,
+            protected,
+            up,
+            p_drop,
+            p_revive,
+            rng: Rng::seed_from(seed),
+            epoch: 0,
+            snapshot,
+        }
+    }
+
+    /// Advance the per-link chains by one epoch and rebuild the snapshot.
+    fn advance_one(&mut self) {
+        for (idx, state) in self.up.iter_mut().enumerate() {
+            if self.protected[idx] {
+                continue; // floor edges never churn
+            }
+            *state = if *state {
+                !self.rng.chance(self.p_drop)
+            } else {
+                self.rng.chance(self.p_revive)
+            };
+        }
+        self.epoch += 1;
+        let live: Vec<(usize, usize)> = self
+            .edges
+            .iter()
+            .zip(self.up.iter())
+            .filter(|pair| *pair.1)
+            .map(|pair| *pair.0)
+            .collect();
+        self.snapshot = Topology::from_edges(self.base.n(), &live, "markov-churn");
+    }
+}
+
+/// Mark a BFS spanning tree of `base` inside its canonical edge list.
+fn spanning_tree_mask(base: &Topology, edges: &[(usize, usize)]) -> Vec<bool> {
+    let n = base.n();
+    let mut parent: Vec<Option<usize>> = vec![None; n];
+    let mut seen = vec![false; n];
+    seen[0] = true;
+    let mut queue = std::collections::VecDeque::from([0usize]);
+    while let Some(u) = queue.pop_front() {
+        for &v in base.neighbors(u) {
+            if !seen[v] {
+                seen[v] = true;
+                parent[v] = Some(u);
+                queue.push_back(v);
+            }
+        }
+    }
+    let mut tree: std::collections::HashSet<(usize, usize)> = std::collections::HashSet::new();
+    for (v, p) in parent.iter().enumerate() {
+        if let Some(u) = p {
+            tree.insert((v.min(*u), v.max(*u)));
+        }
+    }
+    edges.iter().map(|e| tree.contains(e)).collect()
+}
+
+#[derive(Clone, Debug)]
+enum Kind {
+    Fixed(Topology),
+    Periodic(Vec<Topology>),
+    Markov(MarkovChurn),
+}
+
+/// Deterministic round → topology map. See the module docs for the
+/// three schedule families.
+#[derive(Clone, Debug)]
+pub struct TopologySchedule {
+    rounds_per_epoch: usize,
+    kind: Kind,
+}
+
+impl TopologySchedule {
+    /// The degenerate schedule: one graph for the whole run.
+    pub fn fixed(topo: Topology) -> Self {
+        assert!(topo.is_connected(), "schedule needs a connected graph");
+        TopologySchedule { rounds_per_epoch: 1, kind: Kind::Fixed(topo) }
+    }
+
+    /// Cycle through `phases`, switching every `rounds_per_epoch` gossip
+    /// rounds. Every phase must be connected and on the same node set.
+    pub fn periodic(phases: Vec<Topology>, rounds_per_epoch: usize) -> Self {
+        assert!(!phases.is_empty(), "periodic schedule needs ≥ 1 phase");
+        assert!(rounds_per_epoch >= 1, "rounds_per_epoch must be ≥ 1");
+        let n = phases[0].n();
+        for p in &phases {
+            assert_eq!(p.n(), n, "periodic phases must share the node set");
+            assert!(p.is_connected(), "periodic phase must be connected");
+        }
+        TopologySchedule { rounds_per_epoch, kind: Kind::Periodic(phases) }
+    }
+
+    /// Seeded per-link Markov churn over `base` **with** the connectivity
+    /// floor (a spanning tree of `base` never churns, so every epoch is
+    /// connected).
+    pub fn markov(
+        base: Topology,
+        p_drop: f64,
+        p_revive: f64,
+        seed: u64,
+        rounds_per_epoch: usize,
+    ) -> Self {
+        Self::markov_with_floor(base, p_drop, p_revive, seed, rounds_per_epoch, true)
+    }
+
+    /// Markov churn with the connectivity floor made explicit. With
+    /// `floor = false`, epochs may disconnect — usable for studying the
+    /// schedule itself, but not by `SimNet` (gossip weights need a
+    /// connected graph).
+    pub fn markov_with_floor(
+        base: Topology,
+        p_drop: f64,
+        p_revive: f64,
+        seed: u64,
+        rounds_per_epoch: usize,
+        floor: bool,
+    ) -> Self {
+        assert!(rounds_per_epoch >= 1, "rounds_per_epoch must be ≥ 1");
+        TopologySchedule {
+            rounds_per_epoch,
+            kind: Kind::Markov(MarkovChurn::new(base, p_drop, p_revive, seed, floor)),
+        }
+    }
+
+    /// Number of nodes (constant across epochs).
+    pub fn n(&self) -> usize {
+        match &self.kind {
+            Kind::Fixed(t) => t.n(),
+            Kind::Periodic(ps) => ps[0].n(),
+            Kind::Markov(mc) => mc.base.n(),
+        }
+    }
+
+    /// Whether the topology ever changes (static schedules let callers
+    /// skip per-epoch gossip-weight rebuilds).
+    pub fn is_static(&self) -> bool {
+        matches!(self.kind, Kind::Fixed(_))
+    }
+
+    /// Epoch index in force during gossip round `round` (0-based global
+    /// counter). Static schedules live entirely in epoch 0.
+    pub fn epoch_of(&self, round: u64) -> u64 {
+        match self.kind {
+            Kind::Fixed(_) => 0,
+            _ => round / self.rounds_per_epoch as u64,
+        }
+    }
+
+    /// The topology in force during `epoch`.
+    ///
+    /// Markov churn is a stateful chain: epochs must be queried in
+    /// non-decreasing order (the engine's natural access pattern), and
+    /// the chain is advanced deterministically from its seed. Panics on
+    /// an out-of-order query.
+    pub fn topology_at_epoch(&mut self, epoch: u64) -> Topology {
+        match &mut self.kind {
+            Kind::Fixed(t) => t.clone(),
+            Kind::Periodic(ps) => ps[(epoch % ps.len() as u64) as usize].clone(),
+            Kind::Markov(mc) => {
+                assert!(
+                    epoch >= mc.epoch,
+                    "markov schedule queried backwards ({} after {})",
+                    epoch,
+                    mc.epoch
+                );
+                while mc.epoch < epoch {
+                    mc.advance_one();
+                }
+                mc.snapshot.clone()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_schedule_never_changes() {
+        let mut s = TopologySchedule::fixed(Topology::ring(6));
+        assert!(s.is_static());
+        assert_eq!(s.epoch_of(0), 0);
+        assert_eq!(s.epoch_of(999), 0);
+        let a = s.topology_at_epoch(0);
+        let b = s.topology_at_epoch(7);
+        assert_eq!(a.edges(), b.edges());
+    }
+
+    #[test]
+    fn periodic_cycles_phases() {
+        let mut s = TopologySchedule::periodic(
+            vec![Topology::ring(6), Topology::star(6), Topology::complete(6)],
+            4,
+        );
+        assert_eq!(s.epoch_of(0), 0);
+        assert_eq!(s.epoch_of(3), 0);
+        assert_eq!(s.epoch_of(4), 1);
+        assert_eq!(s.epoch_of(11), 2);
+        assert_eq!(s.topology_at_epoch(0).edges(), Topology::ring(6).edges());
+        assert_eq!(s.topology_at_epoch(1).edges(), Topology::star(6).edges());
+        assert_eq!(s.topology_at_epoch(3).edges(), Topology::ring(6).edges());
+    }
+
+    #[test]
+    fn markov_is_deterministic_per_seed() {
+        let base = Topology::complete(8);
+        let mut a = TopologySchedule::markov(base.clone(), 0.4, 0.3, 42, 1);
+        let mut b = TopologySchedule::markov(base, 0.4, 0.3, 42, 1);
+        for epoch in 0..25 {
+            assert_eq!(
+                a.topology_at_epoch(epoch).edges(),
+                b.topology_at_epoch(epoch).edges(),
+                "sample paths diverged at epoch {epoch}"
+            );
+        }
+    }
+
+    #[test]
+    fn markov_actually_churns() {
+        let base = Topology::complete(8);
+        let mut s = TopologySchedule::markov(base.clone(), 0.5, 0.5, 7, 1);
+        let changed = (1..20)
+            .any(|e| s.topology_at_epoch(e).edges() != base.edges());
+        assert!(changed, "no epoch differed from the base graph");
+    }
+
+    #[test]
+    fn floor_keeps_every_epoch_connected() {
+        // Aggressive drop on a sparse base: without the floor this would
+        // disconnect almost immediately.
+        let base = Topology::erdos_renyi(10, 0.3, &mut Rng::seed_from(9));
+        let mut s = TopologySchedule::markov(base, 0.7, 0.2, 11, 1);
+        for epoch in 0..50 {
+            assert!(
+                s.topology_at_epoch(epoch).is_connected(),
+                "floored churn disconnected at epoch {epoch}"
+            );
+        }
+    }
+
+    #[test]
+    fn markov_rejects_backward_queries() {
+        let mut s = TopologySchedule::markov(Topology::ring(5), 0.3, 0.3, 1, 1);
+        let _ = s.topology_at_epoch(5);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            s.topology_at_epoch(2)
+        }));
+        assert!(r.is_err(), "backward query must panic");
+    }
+
+    #[test]
+    fn epoch_of_respects_rounds_per_epoch() {
+        let s = TopologySchedule::markov(Topology::ring(5), 0.1, 0.1, 3, 8);
+        assert_eq!(s.epoch_of(0), 0);
+        assert_eq!(s.epoch_of(7), 0);
+        assert_eq!(s.epoch_of(8), 1);
+        assert_eq!(s.epoch_of(17), 2);
+    }
+}

@@ -103,6 +103,15 @@ impl GossipMatrix {
         1.0 - self.lambda2
     }
 
+    /// Algorithm 3's Chebyshev step size
+    /// `η = (1 − √(1−λ₂²)) / (1 + √(1−λ₂²))` — the single source of
+    /// truth for every engine (FastMix, threaded, distributed, SimNet),
+    /// so the cross-engine parity tests can't drift.
+    pub fn chebyshev_eta(&self) -> f64 {
+        let root = (1.0 - self.lambda2 * self.lambda2).sqrt();
+        (1.0 - root) / (1.0 + root)
+    }
+
     /// FastMix per-round contraction base `1 − √(1−λ₂)` (Proposition 1).
     pub fn fastmix_base(&self) -> f64 {
         1.0 - self.gap().sqrt()

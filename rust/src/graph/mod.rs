@@ -8,7 +8,11 @@
 //!   plus ring/path/star/grid/complete/barbell for ablations);
 //! - [`gossip`] — the paper's weight construction `L = I − M/λ_max(M)`
 //!   (M = Laplacian), Metropolis–Hastings weights as an alternative, and
-//!   the spectral quantities (λ₂, `1 − λ₂`) driving FastMix.
+//!   the spectral quantities (λ₂, `1 − λ₂`) driving FastMix;
+//! - [`dynamic`] — [`dynamic::TopologySchedule`]: time-varying networks
+//!   (static / periodic switching / seeded Markov per-link churn with a
+//!   connectivity floor) consumed by the `SimNet` engine.
 
 pub mod topology;
 pub mod gossip;
+pub mod dynamic;

@@ -19,7 +19,10 @@ pub struct Topology {
 }
 
 impl Topology {
-    fn from_edges(n: usize, edges: &[(usize, usize)], name: &str) -> Self {
+    /// Explicit edge-list constructor (used by [`crate::graph::dynamic`]
+    /// to materialize churned snapshots). Duplicate edges are collapsed;
+    /// self-loops and out-of-range endpoints panic.
+    pub fn from_edges(n: usize, edges: &[(usize, usize)], name: &str) -> Self {
         let mut adj = vec![Vec::new(); n];
         for &(a, b) in edges {
             assert!(a < n && b < n && a != b, "bad edge ({a},{b})");

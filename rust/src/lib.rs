@@ -46,8 +46,10 @@
 //! Swap `.algo(...)` for `Algo::Depca`, `Algo::LocalPower`, or
 //! `Algo::Centralized` to run the baselines through the identical
 //! driver, recorder, and report; swap `.engine(...)` across
-//! `Engine::Dense`, `Engine::DenseParallel`, `Engine::Threaded`, and
-//! `Engine::Distributed` to change how the same math executes.
+//! `Engine::Dense`, `Engine::DenseParallel`, `Engine::Threaded`,
+//! `Engine::Distributed`, and `Engine::Sim` (deterministic
+//! unreliable-network simulation: seeded drops/latency/noise and
+//! time-varying topologies) to change how the same math executes.
 //!
 //! See `examples/` for runnable end-to-end drivers and `DESIGN.md` for the
 //! full system inventory.
@@ -85,7 +87,9 @@ pub mod prelude {
         Algo, Engine, SolveReport, Solver, SolverState, StepReport, StopCriteria, StopReason,
     };
     pub use crate::consensus::fastmix::FastMix;
+    pub use crate::consensus::simnet::{SimConfig, SimNet};
     pub use crate::coordinator::session::{Session, SolverBuilder};
+    pub use crate::graph::dynamic::TopologySchedule;
     #[allow(deprecated)]
     pub use crate::coordinator::leader::{Algorithm, EngineKind, Leader};
     pub use crate::graph::gossip::GossipMatrix;

@@ -1,11 +1,12 @@
 //! `deepca` — launcher CLI for the DeEPCA reproduction.
 //!
 //! ```text
-//! deepca experiment <fig1|fig2|comm-table|ablations|all> [--scale full|small]
+//! deepca experiment <fig1|fig2|comm-table|ablations|robustness|all> [--scale full|small]
 //! deepca run   [--config file.toml] [--algo deepca|depca|local-power|centralized]
-//!              [--engine dense|parallel|threaded|distributed]
+//!              [--engine dense|parallel|threaded|distributed|sim]
 //!              [--m 50] [--n 800] [--k 5] [--rounds 8] [--iters 60] [--tol 1e-9]
 //!              [--k-policy fixed|increasing] [--k-base 8] [--k-slope 1.0]
+//!              [--drop-prob 0.05] [--latency 3] [--noise 0.01] [--churn 0.2]   # sim engine
 //!              [--dataset w8a|a9a] [--data path/to/libsvm] [--topology er|ring|grid|star|complete]
 //! deepca info  [--dataset w8a|a9a] [--data path]   # spectrum / network diagnostics
 //! ```
@@ -16,9 +17,11 @@ use deepca::algo::local_power::LocalPowerConfig;
 use deepca::algo::problem::Problem;
 use deepca::cli::Args;
 use deepca::config::ConfigMap;
+use deepca::consensus::simnet::SimConfig;
 use deepca::coordinator::session::Session;
 use deepca::data::{libsvm, synthetic, Dataset};
-use deepca::experiments::{ablations, comm_table, figures, Scale};
+use deepca::experiments::{ablations, comm_table, figures, robustness, Scale};
+use deepca::graph::dynamic::TopologySchedule;
 use deepca::graph::gossip::GossipMatrix;
 use deepca::graph::topology::Topology;
 use deepca::prelude::{Algo, DeepcaConfig, DepcaConfig, Engine, KPolicy, Rng};
@@ -50,11 +53,12 @@ fn print_help() {
         "deepca — Decentralized Exact PCA (Ye & Zhang 2021) reproduction
 
 USAGE:
-  deepca experiment <fig1|fig2|comm-table|ablations|all> [--scale full|small]
+  deepca experiment <fig1|fig2|comm-table|ablations|robustness|all> [--scale full|small]
   deepca run  [--config cfg.toml] [--algo deepca|depca|local-power|centralized]
-              [--engine dense|parallel|threaded|distributed]
+              [--engine dense|parallel|threaded|distributed|sim]
               [--m N] [--n N] [--k N] [--rounds K] [--iters T] [--tol EPS]
               [--k-policy fixed|increasing] [--k-base K0] [--k-slope S]
+              [--drop-prob P] [--latency L] [--noise STD] [--churn P]
               [--dataset w8a|a9a] [--data libsvm-file] [--topology er|ring|grid|star|complete]
               [--seed S]
   deepca info [--dataset w8a|a9a] [--data libsvm-file] [--m N] [--k N]
@@ -62,6 +66,13 @@ USAGE:
 DePCA consensus schedule (--algo depca):
   --k-policy fixed       K = --k-base (default: --rounds) every iteration
   --k-policy increasing  K_t = --k-base + ceil(--k-slope * t)   (Eqn. 3.12)
+
+SimNet fault model (--engine sim; all seeded, bit-reproducible):
+  --drop-prob P   per-link message drop probability per gossip round
+  --latency L     max per-link latency in virtual ticks (reported as vticks)
+  --noise STD     additive Gaussian payload noise (std per scalar)
+  --churn P       Markov per-link up/down churn over the base topology
+                  (connectivity-floored; epoch = --rounds gossip rounds)
 
 Outputs land in ./results (override with DEEPCA_RESULTS)."
     );
@@ -90,11 +101,15 @@ fn cmd_experiment(args: &Args) -> Result<()> {
             comm_table::run(scale)?;
         }
         "ablations" => ablations::run_all(scale)?,
+        "robustness" => {
+            robustness::run(scale)?;
+        }
         "all" => {
             figures::run_figure(figures::Figure::Fig1W8a, scale)?;
             figures::run_figure(figures::Figure::Fig2A9a, scale)?;
             comm_table::run(scale)?;
             ablations::run_all(scale)?;
+            robustness::run(scale)?;
         }
         other => bail!("unknown experiment `{other}`"),
     }
@@ -203,7 +218,48 @@ fn cmd_run(args: &Args) -> Result<()> {
         "parallel" => Engine::DenseParallel,
         "threaded" => Engine::Threaded,
         "distributed" => Engine::Distributed,
+        "sim" => {
+            let drop_prob = args.f64_or("drop-prob", cfg.f64_or("sim.drop_prob", 0.0)?)?;
+            let noise_std = args.f64_or("noise", cfg.f64_or("sim.noise_std", 0.0)?)?;
+            if !(0.0..=1.0).contains(&drop_prob) {
+                bail!("--drop-prob {drop_prob}: must be in [0, 1]");
+            }
+            if noise_std < 0.0 {
+                bail!("--noise {noise_std}: must be ≥ 0");
+            }
+            Engine::Sim(SimConfig {
+                drop_prob,
+                max_latency: args.usize_or("latency", cfg.usize_or("sim.latency", 0)?)? as u64,
+                noise_std,
+                seed,
+            })
+        }
         other => bail!("unknown engine `{other}`"),
+    };
+    // Fault-model *flags* only have meaning on the sim engine — reject
+    // rather than silently run an ideal network. (Config-file `sim.*`
+    // keys are engine defaults, not requests, so they are ignored on
+    // other engines.)
+    if !matches!(engine, Engine::Sim(_)) {
+        for key in ["drop-prob", "latency", "noise", "churn"] {
+            if args.options.contains_key(key) {
+                bail!("--{key} requires --engine sim");
+            }
+        }
+    }
+    // Markov per-link churn: one epoch per power iteration's mix. Read
+    // (and range-check) only on the sim engine, consistent with the
+    // other sim.* config keys being engine defaults.
+    let schedule = if matches!(engine, Engine::Sim(_)) {
+        let churn = args.f64_or("churn", cfg.f64_or("sim.churn", 0.0)?)?;
+        if !(0.0..=1.0).contains(&churn) {
+            bail!("--churn {churn}: must be in [0, 1]");
+        }
+        (churn > 0.0).then(|| {
+            TopologySchedule::markov(topo.clone(), churn, 0.5, seed + 2, rounds.max(1))
+        })
+    } else {
+        None
     };
     let algo_name = args.str_or("algo", &cfg.str_or("algo", "deepca"));
     let algo = match algo_name.as_str() {
@@ -234,10 +290,11 @@ fn cmd_run(args: &Args) -> Result<()> {
         other => bail!("unknown algo `{other}` (deepca|depca|local-power|centralized)"),
     };
 
-    let report = Session::on(&problem, &topo)
-        .engine(engine)
-        .algo(algo)
-        .solve();
+    let mut session = Session::on(&problem, &topo).engine(engine).algo(algo);
+    if let Some(sched) = schedule {
+        session = session.schedule(sched);
+    }
+    let report = session.solve();
     println!(
         "{algo_name} finished: {} iters ({:?}), tanθ={:.3e}, {}, {:.2}s{}",
         report.iters,

@@ -1,0 +1,133 @@
+//! Property tests over gossip-matrix well-formedness for **every**
+//! `Topology` constructor family, and over time-varying schedules:
+//! Markov churn with a connectivity floor must never disconnect the
+//! network, no matter how aggressive the drop rate.
+
+use deepca::graph::dynamic::TopologySchedule;
+use deepca::graph::gossip::GossipMatrix;
+use deepca::graph::topology::Topology;
+use deepca::linalg::Mat;
+use deepca::util::rng::Rng;
+
+/// §2.2 assumptions: symmetric, doubly stochastic, λ₂ < 1.
+fn assert_well_formed(g: &GossipMatrix, label: &str) {
+    let w: &Mat = &g.weights;
+    let m = w.rows();
+    for i in 0..m {
+        let row_sum: f64 = w.row(i).iter().sum();
+        assert!(
+            (row_sum - 1.0).abs() < 1e-9,
+            "{label}: row {i} sums to {row_sum}"
+        );
+        let col_sum: f64 = (0..m).map(|r| w[(r, i)]).sum();
+        assert!(
+            (col_sum - 1.0).abs() < 1e-9,
+            "{label}: col {i} sums to {col_sum}"
+        );
+        for j in 0..m {
+            assert!(
+                (w[(i, j)] - w[(j, i)]).abs() < 1e-9,
+                "{label}: asymmetric at ({i},{j})"
+            );
+        }
+    }
+    assert!(
+        g.lambda2 < 1.0,
+        "{label}: λ₂ = {} (≥ 1 means disconnected)",
+        g.lambda2
+    );
+    assert!(g.lambda2 >= -1e-9, "{label}: λ₂ = {} negative?", g.lambda2);
+}
+
+/// Instances of every constructor family across a spread of sizes.
+fn every_family() -> Vec<Topology> {
+    let mut topos = Vec::new();
+    for n in [3usize, 5, 8, 13] {
+        topos.push(Topology::path(n));
+        topos.push(Topology::ring(n));
+        topos.push(Topology::star(n));
+        topos.push(Topology::complete(n));
+    }
+    topos.push(Topology::grid(2, 3));
+    topos.push(Topology::grid(3, 4));
+    topos.push(Topology::grid(2, 7));
+    for seed in 0..6u64 {
+        let mut rng = Rng::seed_from(0xA0 + seed);
+        topos.push(Topology::erdos_renyi(4 + 2 * seed as usize, 0.5, &mut rng));
+    }
+    topos
+}
+
+#[test]
+fn laplacian_gossip_well_formed_for_every_family() {
+    for topo in every_family() {
+        let g = GossipMatrix::from_laplacian(&topo);
+        assert_well_formed(&g, &format!("laplacian/{} n={}", topo.name, topo.n()));
+    }
+}
+
+#[test]
+fn metropolis_gossip_well_formed_where_psd() {
+    // Metropolis weights are symmetric and doubly stochastic on any
+    // graph, but `GossipMatrix` additionally enforces the §2.2 PSD
+    // assumption (0 ⪯ L), which Metropolis violates on e.g. rings
+    // (λ_min = 1/3 + (2/3)cos(πk/n) dips to −1/3). Check the families
+    // where PSD genuinely holds: stars and complete graphs.
+    for n in [3usize, 5, 9, 14] {
+        for topo in [Topology::star(n), Topology::complete(n)] {
+            let g = GossipMatrix::metropolis(&topo);
+            assert_well_formed(&g, &format!("metropolis/{} n={n}", topo.name));
+        }
+    }
+}
+
+#[test]
+fn churn_with_floor_never_disconnects() {
+    // Sparse bases + aggressive drop rates: without the floor these
+    // disconnect almost immediately; with it, every epoch must stay
+    // connected (and therefore yield a valid gossip matrix).
+    let bases: Vec<(Topology, u64)> = vec![
+        (Topology::ring(9), 1),
+        (Topology::path(7), 2),
+        (Topology::erdos_renyi(12, 0.3, &mut Rng::seed_from(0xF1)), 3),
+        (Topology::complete(8), 4),
+        (Topology::grid(3, 4), 5),
+    ];
+    for (base, seed) in bases {
+        for p_drop in [0.3, 0.7, 0.95] {
+            let name = base.name.clone();
+            let mut sched =
+                TopologySchedule::markov(base.clone(), p_drop, 0.25, seed * 1000 + 7, 1);
+            for epoch in 0..40 {
+                let snap = sched.topology_at_epoch(epoch);
+                assert!(
+                    snap.is_connected(),
+                    "{name} p_drop={p_drop}: disconnected at epoch {epoch}"
+                );
+                // Connected snapshots always admit well-formed weights.
+                if epoch % 10 == 0 {
+                    assert_well_formed(
+                        &GossipMatrix::from_laplacian(&snap),
+                        &format!("churned {name} epoch {epoch}"),
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn churned_snapshots_stay_within_base_edges() {
+    let base = Topology::erdos_renyi(10, 0.6, &mut Rng::seed_from(0xF2));
+    let base_edges = base.edges();
+    let mut sched = TopologySchedule::markov(base, 0.5, 0.5, 99, 1);
+    for epoch in 0..30 {
+        let snap = sched.topology_at_epoch(epoch);
+        for e in snap.edges() {
+            assert!(
+                base_edges.contains(&e),
+                "churn invented edge {e:?} at epoch {epoch}"
+            );
+        }
+    }
+}

@@ -9,6 +9,7 @@ use deepca::algo::local_power::LocalPowerConfig;
 use deepca::algo::metrics::RunRecorder;
 use deepca::algo::problem::Problem;
 use deepca::algo::solver::{Algo, Engine, StopCriteria, StopReason};
+use deepca::consensus::simnet::SimConfig;
 use deepca::coordinator::session::Session;
 use deepca::data::synthetic;
 use deepca::graph::topology::Topology;
@@ -118,9 +119,11 @@ fn final_error_is_fresh_not_recorded() {
     );
 }
 
-/// One fixed-seed problem, four engines, one builder: dense variants are
+/// One fixed-seed problem, five engines, one builder: dense variants are
 /// bit-identical, message-passing engines match to fp round-off
-/// (neighbor contributions accumulate in a different order).
+/// (neighbor contributions accumulate in a different order), and the
+/// ideal SimNet matches Dense to 1e-12 (it executes the identical
+/// operation sequence).
 #[test]
 fn engine_parity_through_builder() {
     let (p, topo) = spiked(803, 6);
@@ -137,6 +140,7 @@ fn engine_parity_through_builder() {
     let dense_par = solve(Engine::DenseParallel);
     let threaded = solve(Engine::Threaded);
     let distributed = solve(Engine::Distributed);
+    let sim = solve(Engine::Sim(SimConfig::ideal(0)));
 
     // Dense and DenseParallel run identical per-agent arithmetic —
     // bit-wise equality, not just tolerance.
@@ -144,6 +148,13 @@ fn engine_parity_through_builder() {
         dense.final_w == dense_par.final_w,
         "DenseParallel must be bit-identical to Dense (distance {})",
         dense.final_w.distance(&dense_par.final_w)
+    );
+
+    // The ideal simulator replays the dense arithmetic exactly.
+    assert!(
+        dense.final_w.distance(&sim.final_w) < 1e-12,
+        "ideal SimNet deviates from Dense by {}",
+        dense.final_w.distance(&sim.final_w)
     );
 
     for (name, report) in [("Threaded", &threaded), ("Distributed", &distributed)] {
@@ -155,7 +166,7 @@ fn engine_parity_through_builder() {
     }
 
     // Identical iteration/communication accounting everywhere.
-    for report in [&dense_par, &threaded, &distributed] {
+    for report in [&dense_par, &threaded, &distributed, &sim] {
         assert_eq!(report.iters, dense.iters);
         assert_eq!(report.comm.rounds, dense.comm.rounds);
         assert_eq!(report.comm.mixes, dense.comm.mixes);
@@ -163,13 +174,55 @@ fn engine_parity_through_builder() {
     }
 
     // And the recorded traces agree to fp round-off.
-    for other in [&dense_par, &threaded, &distributed] {
+    for other in [&dense_par, &threaded, &distributed, &sim] {
         for (a, b) in dense.trace.records.iter().zip(&other.trace.records) {
             assert!(
                 (a.mean_tan_theta - b.mean_tan_theta).abs() < 1e-9 * (1.0 + a.mean_tan_theta),
                 "trace mismatch at iter {} ({:?})",
                 a.iter,
                 other.engine
+            );
+        }
+    }
+}
+
+/// SimNet with drop=0 / latency=0 / noise=0 must reproduce the dense
+/// engine to 1e-12 for **all four algorithms** (local-power and
+/// centralized never gossip, so their parity is trivial but pins that
+/// the engine selection doesn't perturb them either).
+#[test]
+fn simnet_zero_fault_parity_all_algorithms() {
+    let (p, topo) = spiked(807, 6);
+    for algo in [
+        Algo::Deepca(DeepcaConfig { consensus_rounds: 8, max_iters: 25, ..Default::default() }),
+        Algo::Depca(DepcaConfig {
+            k_policy: KPolicy::Fixed(8),
+            max_iters: 25,
+            ..Default::default()
+        }),
+        Algo::LocalPower(LocalPowerConfig { max_iters: 25, ..Default::default() }),
+        Algo::Centralized(CentralizedConfig { max_iters: 25, ..Default::default() }),
+    ] {
+        let name = algo.name();
+        let dense = Session::on(&p, &topo)
+            .algo(algo.clone())
+            .engine(Engine::Dense)
+            .solve();
+        let sim = Session::on(&p, &topo)
+            .algo(algo)
+            .engine(Engine::Sim(SimConfig::ideal(0)))
+            .solve();
+        assert_eq!(sim.iters, dense.iters, "{name}");
+        assert!(
+            dense.final_w.distance(&sim.final_w) < 1e-12,
+            "{name}: ideal SimNet deviates from Dense by {}",
+            dense.final_w.distance(&sim.final_w)
+        );
+        for (a, b) in dense.trace.records.iter().zip(&sim.trace.records) {
+            assert!(
+                (a.mean_tan_theta - b.mean_tan_theta).abs() <= 1e-12 * (1.0 + a.mean_tan_theta),
+                "{name}: trace mismatch at iter {}",
+                a.iter
             );
         }
     }

@@ -46,6 +46,9 @@ run_advisory() {
 run_required cargo build --release
 run_required cargo test -q
 
+# Examples must keep compiling (they are the documented entry points).
+run_required cargo build --release --examples
+
 # Documentation must build cleanly with no external deps.
 run_required cargo doc --no-deps --quiet
 
