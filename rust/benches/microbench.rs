@@ -5,26 +5,32 @@
 //! ```bash
 //! cargo bench --bench microbench
 //! ```
+//!
+//! Writes `BENCH_microbench.json` (machine-readable suite results) at
+//! the repo root; `scripts/bench.sh` invokes this and CI uploads the
+//! JSON as an artifact.
 
 use deepca::algo::backend::{ParallelBackend, PowerBackend, RustBackend};
 use deepca::algo::deepca::DeepcaConfig;
 use deepca::algo::metrics::RunRecorder;
 use deepca::algo::problem::Problem;
-use deepca::benchkit::{section, Bench};
+use deepca::benchkit::{section, Bench, Suite};
 use deepca::consensus::comm::{Communicator, DenseComm, ThreadedNetwork};
 use deepca::consensus::metrics::CommStats;
 use deepca::consensus::AgentStack;
+use deepca::coordinator::session::Session;
 use deepca::data::synthetic;
 use deepca::graph::topology::Topology;
 use deepca::linalg::angles::tan_theta;
 use deepca::linalg::eig::eig_sym;
-use deepca::coordinator::session::Session;
 use deepca::linalg::qr::thin_qr;
 use deepca::linalg::Mat;
 use deepca::prelude::Algo;
 use deepca::util::rng::Rng;
+use std::path::Path;
 
 fn main() {
+    let mut suite = Suite::new("microbench");
     let bench = Bench::new(2, 10);
     let mut rng = Rng::seed_from(901);
 
@@ -38,13 +44,13 @@ fn main() {
         a
     };
     let w300 = Mat::rand_orthonormal(300, 5, &mut rng);
-    bench.run("matmul A(300x300) @ W(300x5)", || a300.matmul(&w300));
+    suite.push(bench.run("matmul A(300x300) @ W(300x5)", || a300.matmul(&w300)));
     let x800 = Mat::randn(800, 300, &mut rng);
-    bench.run("gram XtX (800x300)", || x800.t_matmul(&x800));
+    suite.push(bench.run("gram XtX (800x300)", || x800.t_matmul(&x800)));
     let s300 = Mat::randn(300, 5, &mut rng);
-    bench.run("householder thin-QR (300x5)", || thin_qr(&s300));
+    suite.push(bench.run("householder thin-QR (300x5)", || thin_qr(&s300)));
     let u300 = Mat::rand_orthonormal(300, 5, &mut rng);
-    bench.run("tan_theta(U, X) (300x5)", || tan_theta(&u300, &s300));
+    suite.push(bench.run("tan_theta(U, X) (300x5)", || tan_theta(&u300, &s300)));
 
     let a64 = {
         let g = Mat::randn(64, 64, &mut rng);
@@ -52,8 +58,8 @@ fn main() {
         a.symmetrize();
         a
     };
-    Bench::new(1, 5).run("jacobi eig_sym (64x64)", || eig_sym(&a64));
-    Bench::new(1, 3).run("jacobi eig_sym (300x300)", || eig_sym(&a300));
+    suite.push(Bench::new(1, 5).run("jacobi eig_sym (64x64)", || eig_sym(&a64)));
+    suite.push(Bench::new(1, 3).run("jacobi eig_sym (300x300)", || eig_sym(&a300)));
 
     // -------------------------------------------------------- consensus
     section("consensus (m=50, ER(0.5), d=300, k=5)");
@@ -62,18 +68,18 @@ fn main() {
     let stack0 = AgentStack::new(
         (0..50).map(|_| Mat::randn(300, 5, &mut rng)).collect(),
     );
-    bench.run("FastMix K=8 (dense engine)", || {
+    suite.push(bench.run("FastMix K=8 (dense engine)", || {
         let mut s = stack0.clone();
         dense.fastmix(&mut s, 8, &mut CommStats::default());
         s
-    });
+    }));
     let threaded = ThreadedNetwork::from_topology(&topo);
-    Bench::new(1, 5).run("FastMix K=8 (threaded engine)", || {
+    suite.push(Bench::new(1, 5).run("FastMix K=8 (threaded engine)", || {
         let mut s = stack0.clone();
         threaded.fastmix(&mut s, 8, &mut CommStats::default());
         s
-    });
-    bench.run("stack deviation-from-mean", || stack0.deviation_from_mean());
+    }));
+    suite.push(bench.run("stack deviation-from-mean", || stack0.deviation_from_mean()));
 
     // --------------------------------------------------------- backends
     section("power-step backends (m=50 agents)");
@@ -81,24 +87,27 @@ fn main() {
     let problem = Problem::from_dataset(&ds, 50, 5);
     let ws = AgentStack::replicate(50, &problem.initial_w(1));
     let seq = RustBackend::new(&problem.locals);
-    bench.run("local products, sequential", || seq.local_products(&ws));
+    suite.push(bench.run("local products, sequential", || seq.local_products(&ws)));
     let par = ParallelBackend::new(&problem.locals, 0);
-    bench.run("local products, thread-parallel", || par.local_products(&ws));
+    suite.push(bench.run("local products, thread-parallel", || par.local_products(&ws)));
 
     // ------------------------------------------------------- end-to-end
     section("end-to-end DeEPCA iteration cost (m=50, d=300, k=5, K=8)");
     let cfg = DeepcaConfig { consensus_rounds: 8, max_iters: 10, ..Default::default() };
-    Bench::new(1, 5).run("10 iterations, metrics ON (stride 1)", || {
+    suite.push(Bench::new(1, 5).run("10 iterations, metrics ON (stride 1)", || {
         Session::on(&problem, &topo)
             .algo(Algo::Deepca(cfg.clone()))
             .solve()
-    });
-    Bench::new(1, 5).run("10 iterations, metrics strided (10)", || {
+    }));
+    suite.push(Bench::new(1, 5).run("10 iterations, metrics strided (10)", || {
         Session::on(&problem, &topo)
             .algo(Algo::Deepca(cfg.clone()))
             .record(RunRecorder::with_stride(10))
             .solve()
-    });
+    }));
 
-    println!("\nmicrobench OK");
+    let path = Path::new("BENCH_microbench.json");
+    suite.write_json(path).expect("write BENCH_microbench.json");
+    println!("\nwrote {}", path.display());
+    println!("microbench OK");
 }

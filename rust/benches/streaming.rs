@@ -1,0 +1,88 @@
+//! Streaming-subsystem benchmarks: per-epoch cost of the online path.
+//!
+//! ```bash
+//! cargo bench --bench streaming
+//! ```
+//!
+//! Writes `BENCH_stream.json` (machine-readable suite results) at the
+//! repo root; `scripts/bench.sh` invokes this and CI uploads the JSON
+//! as an artifact.
+
+use deepca::benchkit::{section, Bench, Suite};
+use deepca::coordinator::online::{OnlineConfig, OnlineSession};
+use deepca::graph::topology::Topology;
+use deepca::linalg::Mat;
+use deepca::prelude::{CovTracker, Drift, Forgetting, StreamParams, SyntheticStream};
+use deepca::util::rng::Rng;
+use std::path::Path;
+
+fn rotation_stream(seed: u64) -> SyntheticStream {
+    SyntheticStream::new(StreamParams {
+        m: 8,
+        dim: 16,
+        batch: 100,
+        spikes: vec![8.0, 4.0],
+        noise: 0.3,
+        drift: Drift::Rotation { rate: 0.01 },
+        seed,
+    })
+}
+
+fn online(warm: bool) -> f64 {
+    let topo = Topology::erdos_renyi(8, 0.5, &mut Rng::seed_from(77));
+    let mut src = rotation_stream(0xBE7C);
+    let report = OnlineSession::on(&topo)
+        .config(OnlineConfig {
+            epochs: 20,
+            consensus_rounds: 8,
+            power_iters: 2,
+            warm_start: warm,
+            forgetting: Forgetting::Exponential(0.6),
+            init_seed: 3,
+        })
+        .run(&mut src);
+    report.mean_oracle_after(5)
+}
+
+fn main() {
+    let mut suite = Suite::new("stream");
+    let bench = Bench::new(1, 5);
+
+    section("covariance trackers (d=64, batch=256)");
+    let mut rng = Rng::seed_from(0x7AC);
+    let batch = Mat::from_fn(256, 64, |_, _| rng.normal());
+    suite.push(bench.run("CovTracker exp-forget observe (d=64, n=256)", || {
+        let mut t = CovTracker::new(64, Forgetting::Exponential(0.7));
+        for _ in 0..8 {
+            t.observe(&batch);
+        }
+        t.covariance()
+    }));
+    suite.push(bench.run("CovTracker sliding-window observe (d=64, w=512)", || {
+        let mut t = CovTracker::new(64, Forgetting::SlidingWindow(512));
+        for _ in 0..8 {
+            t.observe(&batch); // 2048 rows through a 512-row window
+        }
+        t.covariance()
+    }));
+
+    section("stream generation (m=8, d=16, batch=100)");
+    suite.push(bench.run("SyntheticStream epoch of batches (rotation)", || {
+        let mut src = rotation_stream(0x11);
+        let mut acc = 0.0;
+        for j in 0..8 {
+            acc += src.next_batch(j).fro_norm();
+        }
+        src.advance();
+        acc
+    }));
+
+    section("online DeEPCA, 20 epochs (m=8, d=16, k=2, K=8, 2 iters/epoch)");
+    suite.push(bench.run("online warm-started", || online(true)));
+    suite.push(bench.run("online cold-start baseline", || online(false)));
+
+    let path = Path::new("BENCH_stream.json");
+    suite.write_json(path).expect("write BENCH_stream.json");
+    println!("\nwrote {}", path.display());
+    println!("streaming bench OK");
+}

@@ -23,8 +23,9 @@ use super::backend::{PowerBackend, RustBackend};
 use super::metrics::{RunOutput, RunRecorder};
 use super::problem::Problem;
 use super::sign_adjust::sign_adjust;
-use super::solver::{drive_to_run_output, Solver, SolverState, StepReport, StopCriteria};
+use super::solver::{drive_to_run_output, Algo, Solver, SolverState, StepReport, StopCriteria};
 use crate::consensus::comm::{Communicator, DenseComm};
+use crate::coordinator::session::Session;
 use crate::graph::topology::Topology;
 use crate::linalg::qr::orth;
 
@@ -201,6 +202,10 @@ pub fn run_with(
 }
 
 /// Convenience runner: Rust backend + dense FastMix over `topo`.
+///
+/// Delegates straight to the [`Session`] builder (which owns the
+/// engine/stop/record plumbing this shim used to duplicate); only the
+/// legacy signature survives.
 #[deprecated(note = "use `DeepcaSolver::dense` + `algo::solver::drive`, or the `Session` builder")]
 pub fn run_dense(
     problem: &Problem,
@@ -208,9 +213,13 @@ pub fn run_dense(
     cfg: &DeepcaConfig,
     recorder: &mut RunRecorder,
 ) -> RunOutput {
-    let mut solver = DeepcaSolver::dense(problem, topo, cfg.clone());
-    let stop = StopCriteria::max_iters(cfg.max_iters).with_tol(cfg.tol);
-    drive_to_run_output(&mut solver, &stop, recorder)
+    let report = Session::on(problem, topo)
+        .algo(Algo::Deepca(cfg.clone()))
+        .record(std::mem::take(recorder))
+        .solve();
+    let out = report.to_run_output();
+    *recorder = report.trace;
+    out
 }
 
 #[cfg(test)]

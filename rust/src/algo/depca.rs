@@ -22,9 +22,10 @@ use super::backend::{PowerBackend, RustBackend};
 use super::metrics::{RunOutput, RunRecorder};
 use super::problem::Problem;
 use super::sign_adjust::sign_adjust;
-use super::solver::{drive_to_run_output, Solver, SolverState, StepReport, StopCriteria};
+use super::solver::{drive_to_run_output, Algo, Solver, SolverState, StepReport, StopCriteria};
 use crate::consensus::comm::{Communicator, DenseComm};
 use crate::consensus::AgentStack;
+use crate::coordinator::session::Session;
 use crate::graph::topology::Topology;
 use crate::linalg::qr::orth;
 use crate::linalg::Mat;
@@ -193,6 +194,10 @@ pub fn run_with(
 }
 
 /// Convenience runner with Rust backend + dense FastMix.
+///
+/// Delegates straight to the [`Session`] builder (which owns the
+/// engine/stop/record plumbing this shim used to duplicate); only the
+/// legacy signature survives.
 #[deprecated(note = "use `DepcaSolver::dense` + `algo::solver::drive`, or the `Session` builder")]
 pub fn run_dense(
     problem: &Problem,
@@ -200,9 +205,13 @@ pub fn run_dense(
     cfg: &DepcaConfig,
     recorder: &mut RunRecorder,
 ) -> RunOutput {
-    let mut solver = DepcaSolver::dense(problem, topo, cfg.clone());
-    let stop = StopCriteria::max_iters(cfg.max_iters).with_tol(cfg.tol);
-    drive_to_run_output(&mut solver, &stop, recorder)
+    let report = Session::on(problem, topo)
+        .algo(Algo::Depca(cfg.clone()))
+        .record(std::mem::take(recorder))
+        .solve();
+    let out = report.to_run_output();
+    *recorder = report.trace;
+    out
 }
 
 #[cfg(test)]

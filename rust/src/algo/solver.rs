@@ -324,7 +324,9 @@ pub fn drive<'o>(
 }
 
 /// Drive a solver and package the legacy [`RunOutput`] shape — the
-/// bridge the deprecated `run_with` / `run_dense` shims stand on.
+/// bridge the deprecated `run_with` shims (external backend/communicator,
+/// e.g. PJRT) stand on; the `run_dense` shims delegate to the `Session`
+/// builder instead.
 pub(crate) fn drive_to_run_output(
     solver: &mut dyn Solver,
     stop: &StopCriteria,

@@ -5,8 +5,15 @@
 //! report. Used both for the §Perf microbenchmarks and as the scaffolding
 //! around the figure-regeneration benches (where the "measurement" is the
 //! experiment output itself plus its wall time).
+//!
+//! Results are machine-readable: every [`Measurement`] serializes with
+//! [`Measurement::to_json`], and a [`Suite`] collects a bench target's
+//! measurements into one JSON document (`scripts/bench.sh` writes these
+//! as `BENCH_<suite>.json` at the repo root; CI uploads them as
+//! artifacts so the bench trajectory is diffable across commits).
 
 use crate::util::format;
+use std::path::Path;
 use std::time::Instant;
 
 /// One benchmark's measured distribution (seconds).
@@ -14,16 +21,33 @@ use std::time::Instant;
 pub struct Measurement {
     /// Benchmark label.
     pub name: String,
-    /// Sorted per-iteration seconds.
+    /// Per-iteration seconds. [`Measurement::new`] sorts these; the
+    /// percentile accessors do not rely on the field being pre-sorted.
     pub samples: Vec<f64>,
 }
 
 impl Measurement {
-    /// Percentile (0..=100) by nearest-rank.
+    /// Build from raw samples (sorted on construction).
+    pub fn new(name: &str, mut samples: Vec<f64>) -> Self {
+        assert!(!samples.is_empty(), "measurement needs at least one sample");
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Measurement { name: name.to_string(), samples }
+    }
+
+    /// Percentile (0..=100) by nearest-rank. Robust to unsorted
+    /// `samples` (callers may build the struct literally): already-sorted
+    /// data (everything [`Measurement::new`] built) is indexed directly;
+    /// only unsorted literals pay for a sorted copy.
     pub fn percentile(&self, p: f64) -> f64 {
         assert!(!self.samples.is_empty());
-        let idx = ((p / 100.0) * (self.samples.len() - 1) as f64).round() as usize;
-        self.samples[idx.min(self.samples.len() - 1)]
+        let idx =
+            (((p / 100.0) * (self.samples.len() - 1) as f64).round() as usize).min(self.samples.len() - 1);
+        if self.samples.windows(2).all(|w| w[0] <= w[1]) {
+            return self.samples[idx];
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted[idx]
     }
 
     /// Median seconds.
@@ -46,6 +70,76 @@ impl Measurement {
             format::secs(self.percentile(90.0)),
             self.samples.len()
         )
+    }
+
+    /// JSON object with the summary statistics and raw samples.
+    pub fn to_json(&self) -> String {
+        let samples: Vec<String> = self.samples.iter().map(|s| format!("{s}")).collect();
+        format!(
+            "{{\"name\":\"{}\",\"n\":{},\"mean\":{},\"median\":{},\"p10\":{},\"p90\":{},\"samples\":[{}]}}",
+            json_escape(&self.name),
+            self.samples.len(),
+            self.mean(),
+            self.median(),
+            self.percentile(10.0),
+            self.percentile(90.0),
+            samples.join(",")
+        )
+    }
+}
+
+/// Minimal string escaping for the JSON emitters (labels are
+/// code-controlled; quotes/backslashes/control chars only).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// A named collection of measurements — one per bench target — with a
+/// single JSON document for the whole run.
+#[derive(Clone, Debug, Default)]
+pub struct Suite {
+    /// Suite label (becomes the `BENCH_<name>.json` stem).
+    pub name: String,
+    /// Collected measurements, in run order.
+    pub measurements: Vec<Measurement>,
+}
+
+impl Suite {
+    /// Empty suite.
+    pub fn new(name: &str) -> Self {
+        Suite { name: name.to_string(), measurements: Vec::new() }
+    }
+
+    /// Add one measurement.
+    pub fn push(&mut self, m: Measurement) {
+        self.measurements.push(m);
+    }
+
+    /// The whole suite as one JSON document.
+    pub fn to_json(&self) -> String {
+        let results: Vec<String> = self.measurements.iter().map(|m| m.to_json()).collect();
+        format!(
+            "{{\"suite\":\"{}\",\"results\":[{}]}}\n",
+            json_escape(&self.name),
+            results.join(",")
+        )
+    }
+
+    /// Write the JSON document to `path` (conventionally
+    /// `BENCH_<suite>.json` at the repo root).
+    pub fn write_json(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
     }
 }
 
@@ -79,8 +173,7 @@ impl Bench {
             std::hint::black_box(f());
             samples.push(t0.elapsed().as_secs_f64());
         }
-        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let m = Measurement { name: name.to_string(), samples };
+        let m = Measurement::new(name, samples);
         println!("{}", m.report());
         m
     }
@@ -108,6 +201,22 @@ mod tests {
     }
 
     #[test]
+    fn percentiles_survive_unsorted_samples() {
+        // Regression: callers building the struct literally used to have
+        // to pre-sort `samples` or silently get wrong percentiles.
+        let m = Measurement {
+            name: "unsorted".into(),
+            samples: vec![5.0, 1.0, 4.0, 2.0, 3.0],
+        };
+        assert_eq!(m.median(), 3.0);
+        assert_eq!(m.percentile(0.0), 1.0);
+        assert_eq!(m.percentile(100.0), 5.0);
+        // And the sorting constructor normalizes the field itself.
+        let n = Measurement::new("sorted", vec![5.0, 1.0, 4.0, 2.0, 3.0]);
+        assert_eq!(n.samples, vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+    }
+
+    #[test]
     fn bench_runs_expected_iterations() {
         let mut count = 0usize;
         let b = Bench::new(1, 5);
@@ -126,5 +235,33 @@ mod tests {
         for w in m.samples.windows(2) {
             assert!(w[0] <= w[1]);
         }
+    }
+
+    #[test]
+    fn json_roundtrip_shape() {
+        let mut suite = Suite::new("unit");
+        suite.push(Measurement::new("a \"quoted\" name", vec![2.0, 1.0, 3.0]));
+        suite.push(Measurement::new("b", vec![0.5]));
+        let json = suite.to_json();
+        assert!(json.starts_with("{\"suite\":\"unit\""));
+        assert!(json.contains("\\\"quoted\\\""));
+        assert!(json.contains("\"median\":2"));
+        assert!(json.contains("\"n\":3"));
+        // Balanced braces/brackets (cheap well-formedness check).
+        let opens = json.matches('{').count();
+        let closes = json.matches('}').count();
+        assert_eq!(opens, closes);
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+    }
+
+    #[test]
+    fn suite_write_json() {
+        let mut suite = Suite::new("disk");
+        suite.push(Measurement::new("x", vec![1.0, 2.0]));
+        let path = std::env::temp_dir().join("deepca_bench_unit.json");
+        suite.write_json(&path).unwrap();
+        let back = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(back, suite.to_json());
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -28,6 +28,11 @@ pub struct CommStats {
     /// Messages lost in flight (SimNet's per-link drop model; receivers
     /// fall back to their self-weight so gossip stays well-defined).
     pub dropped: u64,
+    /// Stream epochs this accounting spans (online runs only: the
+    /// [`crate::coordinator::online::OnlineSession`] driver counts one
+    /// per epoch when it merges the inner run's stats; batch runs leave
+    /// this at 0).
+    pub epochs: u64,
 }
 
 impl CommStats {
@@ -48,6 +53,11 @@ impl CommStats {
         self.mixes += 1;
     }
 
+    /// Record one completed stream epoch (online driver).
+    pub fn record_epoch(&mut self) {
+        self.epochs += 1;
+    }
+
     /// Merge another stats block (e.g. from a worker thread).
     pub fn merge(&mut self, other: &CommStats) {
         self.rounds += other.rounds;
@@ -57,6 +67,16 @@ impl CommStats {
         self.messages += other.messages;
         self.virtual_time += other.virtual_time;
         self.dropped += other.dropped;
+        self.epochs += other.epochs;
+    }
+
+    /// Mean gossip rounds per stream epoch (0 when not an online run).
+    pub fn rounds_per_epoch(&self) -> f64 {
+        if self.epochs == 0 {
+            0.0
+        } else {
+            self.rounds as f64 / self.epochs as f64
+        }
     }
 
     /// Mean gossip rounds per mix (the effective K actually used).
@@ -85,6 +105,9 @@ impl std::fmt::Display for CommStats {
         }
         if self.virtual_time > 0 {
             write!(f, ", {} vticks", self.virtual_time)?;
+        }
+        if self.epochs > 0 {
+            write!(f, ", {} epochs", self.epochs)?;
         }
         Ok(())
     }
@@ -132,6 +155,22 @@ mod tests {
         assert_eq!(a.dropped, 3);
         let txt = format!("{a}");
         assert!(txt.contains("dropped") && txt.contains("vticks"));
+    }
+
+    #[test]
+    fn epoch_accounting() {
+        let mut a = CommStats::default();
+        a.record_epoch();
+        a.record_round(2, 4, 1);
+        a.record_round(2, 4, 1);
+        let mut b = CommStats::default();
+        b.record_epoch();
+        b.record_round(2, 4, 1);
+        a.merge(&b);
+        assert_eq!(a.epochs, 2);
+        assert!((a.rounds_per_epoch() - 1.5).abs() < 1e-12);
+        assert!(format!("{a}").contains("epochs"));
+        assert_eq!(CommStats::default().rounds_per_epoch(), 0.0);
     }
 
     #[test]

@@ -12,10 +12,15 @@
 //!   per-iteration telemetry. This is the deployment-shaped runtime the
 //!   end-to-end example runs, and integration tests pin it numerically to
 //!   the leader-driven engines.
+//! - **Online driver** ([`online`]) — `OnlineSession`, warm-started
+//!   DeEPCA epochs over live data streams ([`crate::stream`]): per-epoch
+//!   covariance refresh, constant round budget, tracking metrics against
+//!   the drifting oracle subspace.
 //! - **Legacy leader** ([`leader`]) — deprecated `Leader`/`Algorithm`
 //!   wrappers around [`session::Session`], kept for one release.
 
 pub mod agent;
 pub mod session;
+pub mod online;
 pub mod leader;
 pub mod distributed;

@@ -8,6 +8,7 @@
 //! | `table_comm` | Remark 2 / Theorem 1 comm-to-ε comparison | [`comm_table`] |
 //! | `ablations` | sign-adjust, topology, min-K vs heterogeneity, non-PSD | [`ablations`] |
 //! | `robustness` | drop-rate × consensus-rounds sweep via SimNet | [`robustness`] |
+//! | `tracking` | online warm-start vs cold-start over drifting streams | [`tracking`] |
 //!
 //! Every experiment prints CSV blocks (machine-readable, one per series)
 //! and a human summary; EXPERIMENTS.md records paper-vs-measured.
@@ -16,6 +17,7 @@ pub mod figures;
 pub mod comm_table;
 pub mod ablations;
 pub mod robustness;
+pub mod tracking;
 pub mod report;
 
 /// Experiment scale: paper-sized or CI-sized.

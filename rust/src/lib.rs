@@ -51,6 +51,13 @@
 //! unreliable-network simulation: seeded drops/latency/noise and
 //! time-varying topologies) to change how the same math executes.
 //!
+//! For *live* data whose covariance drifts over time, the [`stream`]
+//! subsystem ([`stream::source::StreamSource`] scenarios +
+//! [`stream::cov::CovTracker`]) and the
+//! [`coordinator::online::OnlineSession`] driver run warm-started DeEPCA
+//! epochs with a constant per-epoch round budget — the paper's
+//! subspace-tracking claim made operational on drifting subspaces.
+//!
 //! See `examples/` for runnable end-to-end drivers and `DESIGN.md` for the
 //! full system inventory.
 
@@ -58,6 +65,7 @@ pub mod util;
 pub mod linalg;
 pub mod graph;
 pub mod data;
+pub mod stream;
 pub mod consensus;
 pub mod algo;
 pub mod coordinator;
@@ -88,8 +96,11 @@ pub mod prelude {
     };
     pub use crate::consensus::fastmix::FastMix;
     pub use crate::consensus::simnet::{SimConfig, SimNet};
+    pub use crate::coordinator::online::{EpochRecord, OnlineConfig, OnlineReport, OnlineSession};
     pub use crate::coordinator::session::{Session, SolverBuilder};
     pub use crate::graph::dynamic::TopologySchedule;
+    pub use crate::stream::cov::{CovTracker, Forgetting};
+    pub use crate::stream::source::{Drift, StreamParams, StreamSource, SyntheticStream};
     #[allow(deprecated)]
     pub use crate::coordinator::leader::{Algorithm, EngineKind, Leader};
     pub use crate::graph::gossip::GossipMatrix;

@@ -1,7 +1,9 @@
 //! `deepca` — launcher CLI for the DeEPCA reproduction.
 //!
 //! ```text
-//! deepca experiment <fig1|fig2|comm-table|ablations|robustness|all> [--scale full|small]
+//! deepca experiment <fig1|fig2|comm-table|ablations|robustness|tracking|all> [--scale full|small]
+//! deepca stream [--drift rate|--change-at E|--fade rate] [--window rows|--forget beta]
+//!              [--cold] [--epochs E] [--batch N] [--rounds K] [--power-iters T]
 //! deepca run   [--config file.toml] [--algo deepca|depca|local-power|centralized]
 //!              [--engine dense|parallel|threaded|distributed|sim]
 //!              [--m 50] [--n 800] [--k 5] [--rounds 8] [--iters 60] [--tol 1e-9]
@@ -18,10 +20,13 @@ use deepca::algo::problem::Problem;
 use deepca::cli::Args;
 use deepca::config::ConfigMap;
 use deepca::consensus::simnet::SimConfig;
+use deepca::coordinator::online::{OnlineConfig, OnlineSession};
 use deepca::coordinator::session::Session;
 use deepca::data::{libsvm, synthetic, Dataset};
-use deepca::experiments::{ablations, comm_table, figures, robustness, Scale};
+use deepca::experiments::{ablations, comm_table, figures, robustness, tracking, Scale};
 use deepca::graph::dynamic::TopologySchedule;
+use deepca::stream::cov::Forgetting;
+use deepca::stream::source::{Drift, StreamParams, SyntheticStream};
 use deepca::graph::gossip::GossipMatrix;
 use deepca::graph::topology::Topology;
 use deepca::prelude::{Algo, DeepcaConfig, DepcaConfig, Engine, KPolicy, Rng};
@@ -39,6 +44,7 @@ fn run() -> Result<()> {
     match args.command.as_deref() {
         Some("experiment") => cmd_experiment(&args),
         Some("run") => cmd_run(&args),
+        Some("stream") => cmd_stream(&args),
         Some("info") => cmd_info(&args),
         Some("help") | None => {
             print_help();
@@ -53,7 +59,7 @@ fn print_help() {
         "deepca — Decentralized Exact PCA (Ye & Zhang 2021) reproduction
 
 USAGE:
-  deepca experiment <fig1|fig2|comm-table|ablations|robustness|all> [--scale full|small]
+  deepca experiment <fig1|fig2|comm-table|ablations|robustness|tracking|all> [--scale full|small]
   deepca run  [--config cfg.toml] [--algo deepca|depca|local-power|centralized]
               [--engine dense|parallel|threaded|distributed|sim]
               [--m N] [--n N] [--k N] [--rounds K] [--iters T] [--tol EPS]
@@ -61,11 +67,30 @@ USAGE:
               [--drop-prob P] [--latency L] [--noise STD] [--churn P]
               [--dataset w8a|a9a] [--data libsvm-file] [--topology er|ring|grid|star|complete]
               [--seed S]
+  deepca stream [--drift RATE | --change-at E | --fade RATE]
+              [--window ROWS | --forget BETA] [--cold]
+              [--m N] [--d N] [--k N] [--batch N] [--epochs E]
+              [--rounds K] [--power-iters T] [--engine dense|parallel|threaded|sim]
+              [--drop-prob P] [--latency L] [--noise STD] [--churn P]
+              [--topology er|ring|grid|star|complete] [--seed S]
   deepca info [--dataset w8a|a9a] [--data libsvm-file] [--m N] [--k N]
 
 DePCA consensus schedule (--algo depca):
   --k-policy fixed       K = --k-base (default: --rounds) every iteration
   --k-policy increasing  K_t = --k-base + ceil(--k-slope * t)   (Eqn. 3.12)
+
+Streaming workloads (deepca stream): per epoch every agent ingests a
+fresh --batch of rows into its covariance tracker, then one short
+warm-started DeEPCA session (--power-iters × --rounds gossip rounds)
+re-tracks the drifting subspace:
+  --drift RATE      slow subspace rotation, radians per epoch
+  --change-at E     abrupt change-point at epoch E
+  --fade RATE       k-th spike fades while a challenger rises (crossing)
+  --window ROWS     sliding-window covariance (rank-1 update/downdate)
+  --forget BETA     exponential forgetting (default 0.7; 1.0 = keep all)
+  --cold            restart every epoch from random (baseline contrast)
+  --churn P         per-epoch Markov topology churn (any engine here;
+                    the other fault flags still need --engine sim)
 
 SimNet fault model (--engine sim; all seeded, bit-reproducible):
   --drop-prob P   per-link message drop probability per gossip round
@@ -104,12 +129,16 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         "robustness" => {
             robustness::run(scale)?;
         }
+        "tracking" => {
+            tracking::run(scale)?;
+        }
         "all" => {
             figures::run_figure(figures::Figure::Fig1W8a, scale)?;
             figures::run_figure(figures::Figure::Fig2A9a, scale)?;
             comm_table::run(scale)?;
             ablations::run_all(scale)?;
             robustness::run(scale)?;
+            tracking::run(scale)?;
         }
         other => bail!("unknown experiment `{other}`"),
     }
@@ -154,6 +183,47 @@ fn build_topology(kind: &str, m: usize, seed: u64) -> Result<Topology> {
         "complete" => Topology::complete(m),
         other => bail!("unknown topology `{other}`"),
     })
+}
+
+/// Execution engine from CLI flags / config keys. Fault-model *flags*
+/// only have meaning on the sim engine — reject rather than silently
+/// run an ideal network. (Config-file `sim.*` keys are engine defaults,
+/// not requests, so they are ignored on other engines.)
+fn parse_engine(args: &Args, cfg: &ConfigMap, seed: u64) -> Result<Engine> {
+    let engine = match args.str_or("engine", &cfg.str_or("engine", "dense")).as_str() {
+        "dense" => Engine::Dense,
+        "parallel" => Engine::DenseParallel,
+        "threaded" => Engine::Threaded,
+        "distributed" => Engine::Distributed,
+        "sim" => {
+            let drop_prob = args.f64_or("drop-prob", cfg.f64_or("sim.drop_prob", 0.0)?)?;
+            let noise_std = args.f64_or("noise", cfg.f64_or("sim.noise_std", 0.0)?)?;
+            if !(0.0..=1.0).contains(&drop_prob) {
+                bail!("--drop-prob {drop_prob}: must be in [0, 1]");
+            }
+            if noise_std < 0.0 {
+                bail!("--noise {noise_std}: must be ≥ 0");
+            }
+            Engine::Sim(SimConfig {
+                drop_prob,
+                max_latency: args.usize_or("latency", cfg.usize_or("sim.latency", 0)?)? as u64,
+                noise_std,
+                seed,
+            })
+        }
+        other => bail!("unknown engine `{other}`"),
+    };
+    if !matches!(engine, Engine::Sim(_)) {
+        // (--churn is validated per subcommand: `run` needs the sim
+        // engine's round-level schedule, `stream` redraws the topology
+        // per epoch on any engine.)
+        for key in ["drop-prob", "latency", "noise"] {
+            if args.options.contains_key(key) {
+                bail!("--{key} requires --engine sim");
+            }
+        }
+    }
+    Ok(engine)
 }
 
 /// DePCA consensus schedule from CLI flags / config keys
@@ -213,39 +283,10 @@ fn cmd_run(args: &Args) -> Result<()> {
         problem.heterogeneity()
     );
 
-    let engine = match args.str_or("engine", &cfg.str_or("engine", "dense")).as_str() {
-        "dense" => Engine::Dense,
-        "parallel" => Engine::DenseParallel,
-        "threaded" => Engine::Threaded,
-        "distributed" => Engine::Distributed,
-        "sim" => {
-            let drop_prob = args.f64_or("drop-prob", cfg.f64_or("sim.drop_prob", 0.0)?)?;
-            let noise_std = args.f64_or("noise", cfg.f64_or("sim.noise_std", 0.0)?)?;
-            if !(0.0..=1.0).contains(&drop_prob) {
-                bail!("--drop-prob {drop_prob}: must be in [0, 1]");
-            }
-            if noise_std < 0.0 {
-                bail!("--noise {noise_std}: must be ≥ 0");
-            }
-            Engine::Sim(SimConfig {
-                drop_prob,
-                max_latency: args.usize_or("latency", cfg.usize_or("sim.latency", 0)?)? as u64,
-                noise_std,
-                seed,
-            })
-        }
-        other => bail!("unknown engine `{other}`"),
-    };
-    // Fault-model *flags* only have meaning on the sim engine — reject
-    // rather than silently run an ideal network. (Config-file `sim.*`
-    // keys are engine defaults, not requests, so they are ignored on
-    // other engines.)
-    if !matches!(engine, Engine::Sim(_)) {
-        for key in ["drop-prob", "latency", "noise", "churn"] {
-            if args.options.contains_key(key) {
-                bail!("--{key} requires --engine sim");
-            }
-        }
+    let engine = parse_engine(args, &cfg, seed)?;
+    // Round-level churn schedules only exist on the sim engine.
+    if !matches!(engine, Engine::Sim(_)) && args.options.contains_key("churn") {
+        bail!("--churn requires --engine sim");
     }
     // Markov per-link churn: one epoch per power iteration's mix. Read
     // (and range-check) only on the sim engine, consistent with the
@@ -305,6 +346,175 @@ fn cmd_run(args: &Args) -> Result<()> {
         if report.diverged { " [DIVERGED]" } else { "" }
     );
     deepca::experiments::report::emit_series("run", &algo_name, &report.trace)?;
+    Ok(())
+}
+
+/// `deepca stream` — online DeEPCA over a drifting synthetic stream.
+fn cmd_stream(args: &Args) -> Result<()> {
+    let cfg = match args.options.get("config") {
+        Some(path) => ConfigMap::load(Path::new(path))?,
+        None => ConfigMap::default(),
+    };
+    let m = args.usize_or("m", 8)?;
+    let d = args.usize_or("d", 32)?;
+    let k = args.usize_or("k", 2)?;
+    let batch = args.usize_or("batch", 150)?;
+    let epochs = args.usize_or("epochs", 40)?;
+    let rounds = args.usize_or("rounds", 8)?;
+    let power_iters = args.usize_or("power-iters", 1)?;
+    let seed = args.usize_or("seed", 701)? as u64;
+    // Validate up front with CLI errors; the library constructors only
+    // assert.
+    if m < 2 {
+        bail!("--m {m}: need at least 2 agents");
+    }
+    if k == 0 || k >= d {
+        bail!("--k {k}: need 1 ≤ k < d (got d={d})");
+    }
+    if batch == 0 {
+        bail!("--batch {batch}: must be ≥ 1 row per epoch");
+    }
+    if epochs == 0 {
+        bail!("--epochs {epochs}: must be ≥ 1");
+    }
+    if rounds == 0 {
+        bail!("--rounds {rounds}: must be ≥ 1 gossip round per iteration");
+    }
+    if power_iters == 0 {
+        bail!("--power-iters {power_iters}: must be ≥ 1");
+    }
+
+    // Drift scenario: at most one of --drift / --change-at / --fade.
+    let drift_flags = ["drift", "change-at", "fade"]
+        .iter()
+        .filter(|f| args.options.contains_key(**f))
+        .count();
+    if drift_flags > 1 {
+        bail!("--drift, --change-at, and --fade are mutually exclusive");
+    }
+    let drift = if args.options.contains_key("change-at") {
+        Drift::ChangePoint { at: args.usize_or("change-at", 0)? as u64 }
+    } else if args.options.contains_key("fade") {
+        let rate = args.f64_or("fade", 0.05)?;
+        if rate <= 0.0 {
+            bail!("--fade {rate}: must be > 0");
+        }
+        Drift::SpikeFade { rate }
+    } else {
+        let rate = args.f64_or("drift", 0.0)?;
+        if rate < 0.0 {
+            bail!("--drift {rate}: must be ≥ 0");
+        }
+        if rate > 0.0 {
+            Drift::Rotation { rate }
+        } else {
+            Drift::Stationary
+        }
+    };
+    // Only the rotation scenario pairs each signal direction with a
+    // bulk direction, so only it constrains k against d.
+    if matches!(drift, Drift::Rotation { .. }) && 2 * k > d {
+        bail!("--drift rotation needs 2k ≤ d (got k={k}, d={d})");
+    }
+
+    // Covariance memory: --window (rows) XOR --forget (decay per epoch).
+    let forgetting = match (args.options.get("window"), args.options.get("forget")) {
+        (Some(_), Some(_)) => bail!("--window and --forget are mutually exclusive"),
+        (Some(_), None) => {
+            let rows = args.usize_or("window", 1)?;
+            if rows == 0 {
+                bail!("--window {rows}: must hold at least one row");
+            }
+            Forgetting::SlidingWindow(rows)
+        }
+        _ => {
+            let beta = args.f64_or("forget", 0.7)?;
+            if !(beta > 0.0 && beta <= 1.0) {
+                bail!("--forget {beta}: must be in (0, 1]");
+            }
+            Forgetting::Exponential(beta)
+        }
+    };
+
+    // Geometric spike profile floored above the unit bulk so every k
+    // keeps a genuine eigengap (spike_i = 1 + 9·0.55^i > noise = 1).
+    let spikes: Vec<f64> = (0..k).map(|i| 1.0 + 9.0 * 0.55f64.powi(i as i32)).collect();
+    let mut source = SyntheticStream::new(StreamParams {
+        m,
+        dim: d,
+        batch,
+        spikes,
+        noise: 1.0,
+        drift,
+        seed,
+    });
+    let topo = build_topology(&args.str_or("topology", "er"), m, seed + 1)?;
+    let engine = parse_engine(args, &cfg, seed)?;
+    // The per-agent-thread engine would run only the first (cold) epoch
+    // and silently fall back to Threaded on every warm-started one —
+    // reject rather than mix engines across epochs.
+    if engine == Engine::Distributed {
+        bail!("--engine distributed is not supported by `deepca stream` (dense|parallel|threaded|sim)");
+    }
+
+    let mut session = OnlineSession::on(&topo).engine(engine).config(OnlineConfig {
+        epochs,
+        consensus_rounds: rounds,
+        power_iters,
+        warm_start: !args.flag("cold"),
+        forgetting,
+        init_seed: args.usize_or("init-seed", 2021)? as u64,
+    });
+    // Per-epoch topology churn — honored on any engine, because the
+    // epoch's topology is materialized before each inner run starts.
+    let churn = args.f64_or("churn", 0.0)?;
+    if !(0.0..=1.0).contains(&churn) {
+        bail!("--churn {churn}: must be in [0, 1]");
+    }
+    if churn > 0.0 {
+        session = session.schedule(TopologySchedule::markov(topo.clone(), churn, 0.5, seed + 2, 1));
+    }
+
+    println!(
+        "stream {} epochs={epochs} batch={batch} K={rounds} iters/epoch={power_iters} \
+         warm={} {:?}",
+        source.label(),
+        !args.flag("cold"),
+        forgetting,
+    );
+    let report = session.run(&mut source);
+
+    let stride = (epochs / 20).max(1);
+    println!("epoch  oracle-tanθ  empirical-tanθ  rounds  vticks  dropped");
+    for r in report
+        .records
+        .iter()
+        .filter(|r| r.epoch % stride as u64 == 0 || r.epoch + 1 == epochs as u64)
+    {
+        println!(
+            "{:>5}  {:>11.3e}  {:>14.3e}  {:>6}  {:>6}  {:>7}{}",
+            r.epoch,
+            r.oracle_tan_theta,
+            r.empirical_tan_theta,
+            r.rounds,
+            r.virtual_time,
+            r.dropped,
+            if r.diverged { "  [DIVERGED]" } else { "" }
+        );
+    }
+    let burn = epochs / 4;
+    println!(
+        "tracking error after burn-in ({burn} epochs): mean {:.3e}, max {:.3e}; {}",
+        report.mean_oracle_after(burn),
+        report.max_oracle_after(burn),
+        report.comm
+    );
+    let fname = format!(
+        "stream_{}.csv",
+        report.scenario.replace(['=', ' ', '(', ')', ','], "_")
+    );
+    let path = deepca::experiments::report::write_result(&fname, &report.to_csv())?;
+    println!("wrote {}", path.display());
     Ok(())
 }
 

@@ -1,0 +1,303 @@
+//! `CovTracker` — incremental per-agent covariance maintenance.
+//!
+//! Each agent summarizes its row stream as a (weighted) second-moment
+//! matrix `C = (1/W) Σ w_i v_i v_iᵀ`, the streaming analogue of the
+//! Eqn.-5.1 local Gram `A_j = (1/n) Σ v vᵀ` built by
+//! [`crate::data::partition::partition_gram`]. Two memory policies:
+//!
+//! - [`Forgetting::Exponential`]`(β)` — every `observe` call decays the
+//!   accumulated mass by β before adding the new batch, so the tracker
+//!   follows drift with an effective memory of `β/(1−β)` batches. With
+//!   `β = 1` it is *exactly* the batch per-row covariance (the
+//!   equivalence the streaming tests pin to 1e-12).
+//! - [`Forgetting::SlidingWindow`]`(n)` — keep the most recent `n` rows:
+//!   each arriving row is a rank-1 update, each expiring row a rank-1
+//!   downdate. A window covering the whole history is again the batch
+//!   covariance.
+
+use crate::linalg::Mat;
+use std::collections::VecDeque;
+
+/// Memory policy for a [`CovTracker`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Forgetting {
+    /// Decay factor β ∈ (0, 1] applied once per `observe` call;
+    /// β = 1 keeps everything (batch covariance).
+    Exponential(f64),
+    /// Keep exactly the most recent `n` rows (rank-1 update/downdate).
+    SlidingWindow(usize),
+}
+
+/// Incremental local covariance (uncentered second moment, matching the
+/// repo-wide Gram convention).
+#[derive(Clone, Debug)]
+pub struct CovTracker {
+    d: usize,
+    mode: Forgetting,
+    /// Unnormalized weighted sum `Σ w_i v_i v_iᵀ`.
+    raw: Mat,
+    /// Total weight `Σ w_i` (exponential mode).
+    weight: f64,
+    /// Retained rows (sliding-window mode only).
+    window: VecDeque<Vec<f64>>,
+    /// Total rows ever observed.
+    seen: u64,
+}
+
+/// `acc += sign · v vᵀ`.
+fn rank_one(acc: &mut Mat, v: &[f64], sign: f64) {
+    for i in 0..v.len() {
+        let vi = sign * v[i];
+        if vi == 0.0 {
+            continue;
+        }
+        let row = acc.row_mut(i);
+        for (j, &vj) in v.iter().enumerate() {
+            row[j] += vi * vj;
+        }
+    }
+}
+
+impl CovTracker {
+    /// Empty tracker over dimension `d`.
+    pub fn new(d: usize, mode: Forgetting) -> Self {
+        match mode {
+            Forgetting::Exponential(beta) => {
+                assert!(
+                    beta > 0.0 && beta <= 1.0,
+                    "forgetting factor must be in (0, 1], got {beta}"
+                );
+            }
+            Forgetting::SlidingWindow(n) => assert!(n >= 1, "window must hold at least one row"),
+        }
+        CovTracker {
+            d,
+            mode,
+            raw: Mat::zeros(d, d),
+            weight: 0.0,
+            window: VecDeque::new(),
+            seen: 0,
+        }
+    }
+
+    /// Ambient dimension d.
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    /// The memory policy.
+    pub fn mode(&self) -> Forgetting {
+        self.mode
+    }
+
+    /// Total rows ever observed.
+    pub fn rows_seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// Current normalization mass (rows in exponential mode are decayed;
+    /// in window mode this is the retained row count).
+    pub fn weight(&self) -> f64 {
+        match self.mode {
+            Forgetting::Exponential(_) => self.weight,
+            Forgetting::SlidingWindow(_) => self.window.len() as f64,
+        }
+    }
+
+    /// Whether any data has been observed.
+    pub fn is_warm(&self) -> bool {
+        self.weight() > 0.0
+    }
+
+    /// Ingest one batch of rows (`n × d`).
+    pub fn observe(&mut self, rows: &Mat) {
+        assert_eq!(rows.cols(), self.d, "row dimension mismatch");
+        let n = rows.rows();
+        if n == 0 {
+            return;
+        }
+        self.seen += n as u64;
+        match self.mode {
+            Forgetting::Exponential(beta) => {
+                if beta < 1.0 {
+                    self.raw.scale(beta);
+                    self.weight *= beta;
+                }
+                self.raw.axpy(1.0, &rows.t_matmul(rows));
+                self.weight += n as f64;
+            }
+            Forgetting::SlidingWindow(cap) => {
+                for r in 0..n {
+                    if self.window.len() == cap {
+                        let old = self.window.pop_front().expect("window non-empty");
+                        rank_one(&mut self.raw, &old, -1.0);
+                    }
+                    let v = rows.row(r).to_vec();
+                    rank_one(&mut self.raw, &v, 1.0);
+                    self.window.push_back(v);
+                }
+            }
+        }
+    }
+
+    /// The current normalized covariance `(1/W) Σ w_i v_i v_iᵀ`
+    /// (symmetrized). Panics before any data arrives.
+    pub fn covariance(&self) -> Mat {
+        let w = self.weight();
+        assert!(w > 0.0, "covariance requested before any data");
+        let mut c = self.raw.scaled(1.0 / w);
+        c.symmetrize();
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::partition::{partition_gram, GramScaling};
+    use crate::data::Dataset;
+    use crate::testing::{check, PropConfig};
+    use crate::util::rng::Rng;
+
+    fn random_rows(n: usize, d: usize, rng: &mut Rng) -> Mat {
+        Mat::from_fn(n, d, |_, _| rng.normal())
+    }
+
+    fn batch_cov(rows: &Mat) -> Mat {
+        let mut c = rows.t_matmul(rows);
+        c.scale(1.0 / rows.rows() as f64);
+        c.symmetrize();
+        c
+    }
+
+    #[test]
+    fn no_forgetting_equals_batch_partition_covariance() {
+        let mut rng = Rng::seed_from(211);
+        let all = random_rows(120, 7, &mut rng);
+        let ds = Dataset { features: all.clone(), labels: vec![0.0; 120], name: "t".into() };
+        let batch = partition_gram(&ds, 1, GramScaling::PerRow);
+
+        let mut tracker = CovTracker::new(7, Forgetting::Exponential(1.0));
+        // Feed the same rows in 4 uneven batches.
+        for (lo, hi) in [(0usize, 10usize), (10, 50), (50, 51), (51, 120)] {
+            let chunk = Mat::from_fn(hi - lo, 7, |r, c| all[(lo + r, c)]);
+            tracker.observe(&chunk);
+        }
+        let diff = (&tracker.covariance() - &batch.locals[0]).max_abs();
+        assert!(diff < 1e-12, "exponential β=1 vs batch: {diff:.3e}");
+        assert_eq!(tracker.rows_seen(), 120);
+        assert!((tracker.weight() - 120.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn full_window_equals_batch_partition_covariance() {
+        let mut rng = Rng::seed_from(212);
+        let all = random_rows(60, 5, &mut rng);
+        let ds = Dataset { features: all.clone(), labels: vec![0.0; 60], name: "t".into() };
+        let batch = partition_gram(&ds, 1, GramScaling::PerRow);
+
+        let mut tracker = CovTracker::new(5, Forgetting::SlidingWindow(60));
+        for (lo, hi) in [(0usize, 25usize), (25, 40), (40, 60)] {
+            let chunk = Mat::from_fn(hi - lo, 5, |r, c| all[(lo + r, c)]);
+            tracker.observe(&chunk);
+        }
+        let diff = (&tracker.covariance() - &batch.locals[0]).max_abs();
+        assert!(diff < 1e-12, "full window vs batch: {diff:.3e}");
+    }
+
+    #[test]
+    fn window_downdate_matches_recompute() {
+        let mut rng = Rng::seed_from(213);
+        let all = random_rows(200, 6, &mut rng);
+        let mut tracker = CovTracker::new(6, Forgetting::SlidingWindow(48));
+        tracker.observe(&all);
+        // Recompute from the last 48 rows directly.
+        let tail = Mat::from_fn(48, 6, |r, c| all[(152 + r, c)]);
+        let diff = (&tracker.covariance() - &batch_cov(&tail)).max_abs();
+        assert!(diff < 1e-9, "window after downdates vs recompute: {diff:.3e}");
+        assert!((tracker.weight() - 48.0).abs() < 1e-12);
+        assert_eq!(tracker.rows_seen(), 200);
+    }
+
+    #[test]
+    fn exponential_forgetting_tracks_the_recent_distribution() {
+        let mut rng = Rng::seed_from(214);
+        // Phase A: variance concentrated on axis 0; phase B: axis 1.
+        let a = Mat::from_fn(300, 3, |_, c| if c == 0 { 3.0 * rng.normal() } else { 0.1 * rng.normal() });
+        let b = Mat::from_fn(300, 3, |_, c| if c == 1 { 3.0 * rng.normal() } else { 0.1 * rng.normal() });
+        let mut fading = CovTracker::new(3, Forgetting::Exponential(0.2));
+        let mut keeping = CovTracker::new(3, Forgetting::Exponential(1.0));
+        for chunk in 0..3 {
+            let sl = Mat::from_fn(100, 3, |r, c| a[(chunk * 100 + r, c)]);
+            fading.observe(&sl);
+            keeping.observe(&sl);
+        }
+        for chunk in 0..3 {
+            let sl = Mat::from_fn(100, 3, |r, c| b[(chunk * 100 + r, c)]);
+            fading.observe(&sl);
+            keeping.observe(&sl);
+        }
+        let cf = fading.covariance();
+        let ck = keeping.covariance();
+        // The forgetful tracker is dominated by phase B; the keeper
+        // still carries half its mass from phase A.
+        assert!(cf[(1, 1)] > 20.0 * cf[(0, 0)], "forgetful: {} vs {}", cf[(1, 1)], cf[(0, 0)]);
+        assert!(ck[(0, 0)] > 0.25 * ck[(1, 1)], "keeper lost phase A");
+    }
+
+    #[test]
+    fn property_stationary_stream_equivalence() {
+        // For random dims / row counts / batch splits, feeding a row
+        // stream through β=1 exponential AND a covering window both
+        // reproduce the one-shot batch covariance.
+        check(
+            "covtracker stationary equivalence",
+            PropConfig { cases: 24, seed: 0xC0F },
+            |rng| {
+                let d = rng.range(2, 9);
+                let n = rng.range(4, 80);
+                let rows = random_rows(n, d, rng);
+                // Random split points.
+                let mut cuts: Vec<usize> = (0..rng.range(0, 4)).map(|_| rng.range(1, n)).collect();
+                cuts.push(0);
+                cuts.push(n);
+                cuts.sort_unstable();
+                cuts.dedup();
+                (rows, cuts)
+            },
+            |(rows, cuts)| {
+                let d = rows.cols();
+                let expect = batch_cov(rows);
+                let mut exp = CovTracker::new(d, Forgetting::Exponential(1.0));
+                let mut win = CovTracker::new(d, Forgetting::SlidingWindow(rows.rows()));
+                for w in cuts.windows(2) {
+                    let chunk = Mat::from_fn(w[1] - w[0], d, |r, c| rows[(w[0] + r, c)]);
+                    exp.observe(&chunk);
+                    win.observe(&chunk);
+                }
+                let de = (&exp.covariance() - &expect).max_abs();
+                let dw = (&win.covariance() - &expect).max_abs();
+                if de > 1e-12 {
+                    return Err(format!("exponential deviates by {de:.3e}"));
+                }
+                if dw > 1e-12 {
+                    return Err(format!("window deviates by {dw:.3e}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "before any data")]
+    fn covariance_before_data_panics() {
+        let t = CovTracker::new(4, Forgetting::Exponential(0.9));
+        let _ = t.covariance();
+    }
+
+    #[test]
+    #[should_panic(expected = "forgetting factor")]
+    fn rejects_zero_beta() {
+        let _ = CovTracker::new(4, Forgetting::Exponential(0.0));
+    }
+}

@@ -1,0 +1,31 @@
+//! Streaming substrate: live data sources and incremental covariance.
+//!
+//! The batch pipeline solves one fixed [`crate::algo::problem::Problem`].
+//! This module opens the *online* workload class — the setting of
+//! decentralized eigendecomposition over graphs with drifting data
+//! (PAPERS.md: arXiv 2209.01257) and the noisy power method — where each
+//! agent observes a live row stream whose population covariance moves
+//! over time:
+//!
+//! - [`source`] — the [`source::StreamSource`] trait (per-agent batch
+//!   generators with an epoch clock and a ground-truth oracle) and
+//!   [`source::SyntheticStream`], a drifting spiked-covariance generator
+//!   covering four scenarios: stationary, slow subspace rotation, abrupt
+//!   change-point, and spike-strength fade.
+//! - [`cov`] — [`cov::CovTracker`], the incremental local covariance
+//!   maintainer each agent owns: exponential forgetting or a sliding
+//!   window with rank-1 update/downdate. With forgetting `1.0` (or a
+//!   window covering the whole history) it reproduces the batch
+//!   [`crate::data::partition`] covariance exactly.
+//!
+//! The online driver that runs *warm-started* DeEPCA epochs over these
+//! pieces is [`crate::coordinator::online::OnlineSession`]: the paper's
+//! subspace-tracking trick (reuse the previous `W`, spend a small
+//! constant number of FastMix rounds per epoch) made operational on
+//! drifting streams.
+
+pub mod cov;
+pub mod source;
+
+pub use cov::{CovTracker, Forgetting};
+pub use source::{Drift, StreamParams, StreamSource, SyntheticStream};

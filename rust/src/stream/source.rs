@@ -1,0 +1,400 @@
+//! Per-agent stream sources with a drifting ground-truth subspace.
+//!
+//! A [`StreamSource`] hands every agent a fresh batch of sample rows per
+//! epoch and exposes the *oracle*: the true top-k subspace of the
+//! current population covariance, against which tracking error is
+//! measured. [`SyntheticStream`] layers the drift scenarios on the same
+//! spiked-covariance machinery as [`crate::data::synthetic`]: samples
+//! are `x = B(t) · (√vals(t) ⊙ z)` with `z ~ N(0, I)`, so the population
+//! covariance is exactly `B(t) diag(vals(t)) B(t)ᵀ` and the oracle is
+//! known in closed form at every epoch.
+
+use crate::linalg::Mat;
+use crate::util::rng::Rng;
+
+/// How the population covariance evolves across epochs.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Drift {
+    /// Fixed covariance — the batch setting fed incrementally.
+    Stationary,
+    /// Slow subspace rotation: signal direction `i` rotates into the
+    /// paired bulk direction `k + i` by `rate` radians per epoch.
+    Rotation {
+        /// Radians per epoch.
+        rate: f64,
+    },
+    /// Abrupt change-point: at epoch `at` the signal subspace jumps to
+    /// an independent random frame.
+    ChangePoint {
+        /// First epoch with the new subspace.
+        at: u64,
+    },
+    /// Spike-strength fade: the k-th spike decays while a challenger
+    /// direction rises; they cross at epoch `ln 2 / rate`, flipping the
+    /// identity of the oracle's k-th direction.
+    SpikeFade {
+        /// Exponential fade rate per epoch.
+        rate: f64,
+    },
+}
+
+/// Parameters for [`SyntheticStream`].
+#[derive(Clone, Debug)]
+pub struct StreamParams {
+    /// Number of agents m.
+    pub m: usize,
+    /// Ambient dimension d.
+    pub dim: usize,
+    /// Rows each agent draws per epoch.
+    pub batch: usize,
+    /// Signal variances (strictly decreasing, all above `noise`); the
+    /// target rank is `spikes.len()`.
+    pub spikes: Vec<f64>,
+    /// Bulk variance of the non-signal directions.
+    pub noise: f64,
+    /// Drift scenario.
+    pub drift: Drift,
+    /// Master seed (basis, change-point frame, per-agent sample streams).
+    pub seed: u64,
+}
+
+/// A live data stream over m agents.
+///
+/// Protocol per epoch: call [`StreamSource::next_batch`] once for every
+/// agent, then [`StreamSource::advance`]. Implementations must be
+/// deterministic per seed so runs replay exactly.
+pub trait StreamSource {
+    /// Number of agents.
+    fn m(&self) -> usize;
+    /// Ambient dimension d.
+    fn dim(&self) -> usize;
+    /// Target subspace rank k.
+    fn k(&self) -> usize;
+    /// Current epoch (0-based).
+    fn epoch(&self) -> u64;
+    /// Agent `agent`'s fresh rows for the current epoch (`batch × d`).
+    fn next_batch(&mut self, agent: usize) -> Mat;
+    /// Advance the environment to the next epoch.
+    fn advance(&mut self);
+    /// The true top-k subspace of the current population covariance
+    /// (`d × k`, orthonormal), when the source knows it.
+    fn oracle(&self) -> Option<Mat>;
+    /// Human label for reports.
+    fn label(&self) -> String;
+}
+
+/// Per-epoch sampling state, rebuilt once per epoch rather than once
+/// per agent call (`m` agents draw from the same Σ(t)).
+struct EpochCache {
+    epoch: u64,
+    /// √vals(t), one scale per population direction.
+    scales: Vec<f64>,
+    /// `B(t)ᵀ` so a batch is one `Z · B(t)ᵀ` matmul.
+    basis_t: Mat,
+}
+
+/// Drifting spiked-covariance stream — the synthetic reference source.
+pub struct SyntheticStream {
+    p: StreamParams,
+    /// Epoch-0 orthonormal frame (d × d).
+    basis: Mat,
+    /// Independent frame the change-point scenario jumps to.
+    alt_basis: Mat,
+    /// Per-agent sample generators (forked from the master seed).
+    agent_rngs: Vec<Rng>,
+    epoch: u64,
+    cache: Option<EpochCache>,
+}
+
+impl SyntheticStream {
+    /// Build a stream from parameters (validates shapes and spectra).
+    pub fn new(p: StreamParams) -> Self {
+        let k = p.spikes.len();
+        assert!(p.m > 0, "need at least one agent");
+        assert!(p.batch > 0, "need at least one row per epoch");
+        assert!(k >= 1 && k < p.dim, "need 1 <= k < d");
+        assert!(p.noise >= 0.0, "bulk variance must be >= 0");
+        for w in p.spikes.windows(2) {
+            assert!(w[0] > w[1], "spikes must be strictly decreasing");
+        }
+        assert!(
+            p.spikes[k - 1] > p.noise,
+            "smallest spike must exceed the bulk variance"
+        );
+        if let Drift::Rotation { .. } = p.drift {
+            assert!(2 * k <= p.dim, "rotation pairs need d >= 2k");
+        }
+        let mut master = Rng::seed_from(p.seed);
+        let basis = Mat::rand_orthonormal(p.dim, p.dim, &mut master);
+        let alt_basis = Mat::rand_orthonormal(p.dim, p.dim, &mut master);
+        let agent_rngs = (0..p.m).map(|_| master.fork()).collect();
+        SyntheticStream { p, basis, alt_basis, agent_rngs, epoch: 0, cache: None }
+    }
+
+    /// Ensure `cache` describes the current epoch.
+    fn refresh_cache(&mut self) {
+        let stale = self.cache.as_ref().map(|c| c.epoch != self.epoch).unwrap_or(true);
+        if stale {
+            self.cache = Some(EpochCache {
+                epoch: self.epoch,
+                scales: self.values_at(self.epoch).iter().map(|v| v.sqrt()).collect(),
+                basis_t: self.basis_at(self.epoch).t(),
+            });
+        }
+    }
+
+    /// The population eigenvalues at epoch `t` (length d: signal spikes
+    /// first, then the bulk; the fade scenario reshuffles two of them).
+    pub fn values_at(&self, t: u64) -> Vec<f64> {
+        let k = self.p.spikes.len();
+        let mut vals = vec![self.p.noise; self.p.dim];
+        vals[..k].copy_from_slice(&self.p.spikes);
+        if let Drift::SpikeFade { rate } = self.p.drift {
+            let span = self.p.spikes[k - 1] - self.p.noise;
+            let f = (-(rate * t as f64)).exp();
+            vals[k - 1] = self.p.noise + span * f;
+            vals[k] = self.p.noise + span * (1.0 - f);
+        }
+        vals
+    }
+
+    /// The population eigenbasis at epoch `t` (d × d orthonormal; column
+    /// `i` carries variance `values_at(t)[i]`).
+    pub fn basis_at(&self, t: u64) -> Mat {
+        match self.p.drift {
+            Drift::Stationary | Drift::SpikeFade { .. } => self.basis.clone(),
+            Drift::ChangePoint { at } => {
+                if t < at {
+                    self.basis.clone()
+                } else {
+                    self.alt_basis.clone()
+                }
+            }
+            Drift::Rotation { rate } => {
+                let k = self.p.spikes.len();
+                let a = rate * t as f64;
+                let (sin, cos) = a.sin_cos();
+                let mut out = self.basis.clone();
+                for i in 0..k {
+                    for r in 0..self.p.dim {
+                        let b1 = self.basis[(r, i)];
+                        let b2 = self.basis[(r, k + i)];
+                        out[(r, i)] = cos * b1 + sin * b2;
+                        out[(r, k + i)] = cos * b2 - sin * b1;
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    /// Exact population covariance at the current epoch,
+    /// `B(t) diag(vals(t)) B(t)ᵀ` (tests and diagnostics).
+    pub fn population_covariance(&self) -> Mat {
+        let d = self.p.dim;
+        let vals = self.values_at(self.epoch);
+        let b = self.basis_at(self.epoch);
+        let mut cov = Mat::zeros(d, d);
+        for i in 0..d {
+            if vals[i] == 0.0 {
+                continue;
+            }
+            for r in 0..d {
+                let vr = vals[i] * b[(r, i)];
+                for c in 0..d {
+                    cov[(r, c)] += vr * b[(c, i)];
+                }
+            }
+        }
+        cov.symmetrize();
+        cov
+    }
+
+    fn oracle_at(&self, t: u64) -> Mat {
+        let d = self.p.dim;
+        let k = self.p.spikes.len();
+        let vals = self.values_at(t);
+        let b = self.basis_at(t);
+        // Top-k columns by current variance (stable on ties).
+        let mut idx: Vec<usize> = (0..d).collect();
+        idx.sort_by(|&x, &y| vals[y].partial_cmp(&vals[x]).unwrap().then(x.cmp(&y)));
+        Mat::from_fn(d, k, |r, c| b[(r, idx[c])])
+    }
+}
+
+impl StreamSource for SyntheticStream {
+    fn m(&self) -> usize {
+        self.p.m
+    }
+
+    fn dim(&self) -> usize {
+        self.p.dim
+    }
+
+    fn k(&self) -> usize {
+        self.p.spikes.len()
+    }
+
+    fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    fn next_batch(&mut self, agent: usize) -> Mat {
+        assert!(agent < self.p.m, "agent index out of range");
+        self.refresh_cache();
+        let d = self.p.dim;
+        let cache = self.cache.as_ref().expect("cache refreshed above");
+        let rng = &mut self.agent_rngs[agent];
+        // x = B · (scales ⊙ z), z ~ N(0, I) — the same construction as
+        // `data::synthetic::spiked_covariance`, batched as Z·Bᵀ.
+        let mut z = Mat::zeros(self.p.batch, d);
+        for r in 0..self.p.batch {
+            for i in 0..d {
+                z[(r, i)] = rng.normal() * cache.scales[i];
+            }
+        }
+        z.matmul(&cache.basis_t)
+    }
+
+    fn advance(&mut self) {
+        self.epoch += 1;
+    }
+
+    fn oracle(&self) -> Option<Mat> {
+        Some(self.oracle_at(self.epoch))
+    }
+
+    fn label(&self) -> String {
+        let drift = match self.p.drift {
+            Drift::Stationary => "stationary".to_string(),
+            Drift::Rotation { rate } => format!("rotate{rate}"),
+            Drift::ChangePoint { at } => format!("change{at}"),
+            Drift::SpikeFade { rate } => format!("fade{rate}"),
+        };
+        format!(
+            "stream-{drift}(m={},d={},k={})",
+            self.p.m,
+            self.p.dim,
+            self.p.spikes.len()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::angles::tan_theta;
+    use crate::linalg::eig::eig_sym;
+
+    fn params(drift: Drift) -> StreamParams {
+        StreamParams {
+            m: 3,
+            dim: 10,
+            batch: 20,
+            spikes: vec![8.0, 4.0],
+            noise: 0.5,
+            drift,
+            seed: 41,
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = SyntheticStream::new(params(Drift::Rotation { rate: 0.02 }));
+        let mut b = SyntheticStream::new(params(Drift::Rotation { rate: 0.02 }));
+        for _ in 0..3 {
+            for j in 0..3 {
+                assert_eq!(a.next_batch(j).data(), b.next_batch(j).data());
+            }
+            a.advance();
+            b.advance();
+        }
+    }
+
+    #[test]
+    fn oracle_is_orthonormal_top_k() {
+        let s = SyntheticStream::new(params(Drift::Stationary));
+        let u = s.oracle().unwrap();
+        assert_eq!(u.shape(), (10, 2));
+        let g = u.t_matmul(&u);
+        assert!((&g - &Mat::eye(2)).fro_norm() < 1e-10);
+        // Stationary oracle = first k basis columns.
+        let expect = Mat::from_fn(10, 2, |r, c| s.basis[(r, c)]);
+        assert!(tan_theta(&u, &expect) < 1e-12);
+    }
+
+    #[test]
+    fn rotation_moves_the_oracle_at_the_configured_rate() {
+        let mut s = SyntheticStream::new(params(Drift::Rotation { rate: 0.02 }));
+        let u0 = s.oracle().unwrap();
+        for _ in 0..10 {
+            s.advance();
+        }
+        let u10 = s.oracle().unwrap();
+        let angle = tan_theta(&u0, &u10);
+        // Each of the two planes rotated 0.2 rad: largest principal
+        // angle is 0.2, so tan θ ≈ tan(0.2).
+        assert!(
+            (angle - (0.2f64).tan()).abs() < 1e-9,
+            "tan θ after 10 epochs: {angle}"
+        );
+        // Basis stays orthonormal under rotation.
+        let b = s.basis_at(10);
+        assert!((&b.t_matmul(&b) - &Mat::eye(10)).fro_norm() < 1e-9);
+    }
+
+    #[test]
+    fn change_point_jumps_and_preserves_prefix() {
+        let mut a = SyntheticStream::new(params(Drift::ChangePoint { at: 3 }));
+        let mut b = SyntheticStream::new(params(Drift::Stationary));
+        // Before the change the two scenarios generate identical rows.
+        for _ in 0..3 {
+            assert_eq!(a.next_batch(0).data(), b.next_batch(0).data());
+            a.advance();
+            b.advance();
+        }
+        let before = a.oracle_at(2);
+        let after = a.oracle_at(3);
+        assert!(
+            tan_theta(&before, &after) > 0.5,
+            "change-point should swap the subspace"
+        );
+    }
+
+    #[test]
+    fn spike_fade_crosses_and_swaps_direction() {
+        let s = SyntheticStream::new(params(Drift::SpikeFade { rate: 0.2 }));
+        // ln 2 / 0.2 ≈ 3.5: by epoch 20 the challenger dominates.
+        let v0 = s.values_at(0);
+        assert!((v0[1] - 4.0).abs() < 1e-12 && (v0[2] - 0.5).abs() < 1e-12);
+        let v20 = s.values_at(20);
+        assert!(v20[2] > v20[1], "challenger must overtake the faded spike");
+        let early = s.oracle_at(0);
+        let late = s.oracle_at(20);
+        let expect_late = Mat::from_fn(10, 2, |r, c| s.basis[(r, if c == 0 { 0 } else { 2 })]);
+        assert!(tan_theta(&late, &expect_late) < 1e-12);
+        assert!(tan_theta(&early, &late) > 0.5);
+    }
+
+    #[test]
+    fn population_covariance_has_the_planted_spectrum() {
+        let s = SyntheticStream::new(params(Drift::Stationary));
+        let e = eig_sym(&s.population_covariance());
+        assert!((e.values[0] - 8.0).abs() < 1e-9);
+        assert!((e.values[1] - 4.0).abs() < 1e-9);
+        assert!((e.values[2] - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sample_second_moment_approaches_population() {
+        let mut p = params(Drift::Stationary);
+        p.batch = 4000;
+        let mut s = SyntheticStream::new(p);
+        let rows = s.next_batch(0);
+        let mut emp = rows.t_matmul(&rows);
+        emp.scale(1.0 / 4000.0);
+        let pop = s.population_covariance();
+        let rel = (&emp - &pop).fro_norm() / pop.fro_norm();
+        assert!(rel < 0.15, "empirical vs population covariance: {rel}");
+    }
+}

@@ -1,0 +1,279 @@
+//! Streaming-subsystem integration tests.
+//!
+//! Pins the three claims the online workload rests on:
+//!
+//! 1. **Stationary equivalence** — `CovTracker` with forgetting 1.0 (or
+//!    a covering window) reproduces the batch `data::partition`
+//!    covariance to 1e-12, and warm-started online DeEPCA on a
+//!    stationary stream lands on the batch `SolveReport` subspace.
+//! 2. **The tracking contrast** (acceptance criterion) — on a
+//!    slow-rotation stream, warm-started online DeEPCA holds the oracle
+//!    tracking error below a fixed threshold with a *constant*
+//!    per-epoch round budget, while a cold-start-every-epoch baseline
+//!    with the identical budget does not. Asserted through the same
+//!    `experiments::tracking::run_once` path that `experiment tracking`
+//!    tabulates.
+//! 3. **Drift scenarios compose with faults** — change-point recovery,
+//!    and rotation under SimNet packet drops/latency, all deterministic
+//!    per seed.
+
+use deepca::algo::solver::mean_tan_theta;
+use deepca::data::partition::{partition_gram, GramScaling};
+use deepca::data::Dataset;
+use deepca::experiments::tracking::{burn_in, run_once, TRACKING_THRESHOLD};
+use deepca::experiments::Scale;
+use deepca::prelude::*;
+
+fn stream_params(drift: Drift, seed: u64) -> StreamParams {
+    StreamParams {
+        m: 6,
+        dim: 12,
+        batch: 120,
+        spikes: vec![8.0, 4.0],
+        noise: 0.3,
+        drift,
+        seed,
+    }
+}
+
+#[test]
+fn covtracker_reproduces_batch_partition_covariance_on_a_stationary_stream() {
+    let mut src = SyntheticStream::new(StreamParams {
+        m: 3,
+        dim: 10,
+        batch: 30,
+        spikes: vec![6.0, 3.0],
+        noise: 0.4,
+        drift: Drift::Stationary,
+        seed: 0x57A7,
+    });
+    let epochs = 4;
+    let mut exp = CovTracker::new(10, Forgetting::Exponential(1.0));
+    let mut win = CovTracker::new(10, Forgetting::SlidingWindow(epochs * 30));
+    let mut all_rows: Vec<f64> = Vec::new();
+    for _ in 0..epochs {
+        for j in 0..3 {
+            let batch = src.next_batch(j);
+            if j == 0 {
+                exp.observe(&batch);
+                win.observe(&batch);
+                all_rows.extend_from_slice(batch.data());
+            }
+        }
+        src.advance();
+    }
+    // Agent 0's rows as one batch dataset, through the Eqn.-5.1 path.
+    let n = epochs * 30;
+    let ds = Dataset {
+        features: Mat::from_vec(n, 10, all_rows),
+        labels: vec![0.0; n],
+        name: "stream-agent0".into(),
+    };
+    let batch_cov = &partition_gram(&ds, 1, GramScaling::PerRow).locals[0];
+    let de = (&exp.covariance() - batch_cov).max_abs();
+    let dw = (&win.covariance() - batch_cov).max_abs();
+    assert!(de < 1e-12, "exponential β=1 vs batch partition: {de:.3e}");
+    assert!(dw < 1e-12, "covering window vs batch partition: {dw:.3e}");
+}
+
+#[test]
+fn warm_online_on_a_stationary_stream_matches_the_batch_solve() {
+    let params = stream_params(Drift::Stationary, 0xBEEF);
+    let topo = Topology::erdos_renyi(6, 0.6, &mut Rng::seed_from(91));
+    let epochs = 20;
+
+    let mut online_src = SyntheticStream::new(params.clone());
+    let report = OnlineSession::on(&topo)
+        .config(OnlineConfig {
+            epochs,
+            consensus_rounds: 8,
+            power_iters: 4,
+            warm_start: true,
+            forgetting: Forgetting::Exponential(1.0),
+            init_seed: 7,
+        })
+        .run(&mut online_src);
+
+    // Accumulate the *same* rows independently and solve the batch
+    // problem they define through the ordinary Session path.
+    let mut src2 = SyntheticStream::new(params);
+    let mut trackers: Vec<CovTracker> =
+        (0..6).map(|_| CovTracker::new(12, Forgetting::Exponential(1.0))).collect();
+    for _ in 0..epochs {
+        for (j, t) in trackers.iter_mut().enumerate() {
+            t.observe(&src2.next_batch(j));
+        }
+        src2.advance();
+    }
+    let locals: Vec<Mat> = trackers.iter().map(|t| t.covariance()).collect();
+    let problem = Problem::new(locals, 2, "stream-batch");
+    let batch = Session::on(&problem, &topo)
+        .algo(Algo::Deepca(DeepcaConfig { consensus_rounds: 8, max_iters: 80, ..Default::default() }))
+        .solve();
+    assert!(
+        batch.final_tan_theta < 1e-8,
+        "batch reference must converge: {:.3e}",
+        batch.final_tan_theta
+    );
+
+    // The online subspace equals the batch subspace.
+    let gap = mean_tan_theta(batch.final_w.slice(0), &report.final_w);
+    assert!(gap < 1e-6, "online vs batch subspace: {gap:.3e}");
+    // And the last epoch's empirical error is already deep.
+    let last = report.records.last().unwrap();
+    assert!(
+        last.empirical_tan_theta < 1e-5,
+        "final empirical error: {:.3e}",
+        last.empirical_tan_theta
+    );
+}
+
+#[test]
+fn warm_tracking_beats_cold_start_at_the_same_constant_budget() {
+    // The acceptance contrast, through the exact code path `deepca
+    // experiment tracking` tabulates: slow rotation (0.01 rad/epoch),
+    // K = 8 rounds × 1 power iteration per epoch.
+    let warm = run_once(Scale::Small, 0.01, 8, true, 0xD21F7);
+    let cold = run_once(Scale::Small, 0.01, 8, false, 0xD21F7);
+    let burn = burn_in(Scale::Small);
+
+    // Constant per-epoch budget, identical across the contrast.
+    for r in warm.records.iter().chain(cold.records.iter()) {
+        assert_eq!(r.rounds, 8, "epoch {} spent {} rounds", r.epoch, r.rounds);
+        assert!(!r.diverged);
+    }
+    assert_eq!(warm.comm.rounds, cold.comm.rounds);
+
+    let warm_max = warm.max_oracle_after(burn);
+    let cold_mean = cold.mean_oracle_after(burn);
+    assert!(
+        warm_max < TRACKING_THRESHOLD,
+        "warm-started tracking error {warm_max:.3e} ≥ threshold {TRACKING_THRESHOLD}"
+    );
+    assert!(
+        cold_mean > TRACKING_THRESHOLD,
+        "cold baseline {cold_mean:.3e} ≤ threshold {TRACKING_THRESHOLD} — contrast collapsed"
+    );
+    assert!(
+        warm.mean_oracle_after(burn) < 0.5 * cold_mean,
+        "warm {:.3e} vs cold {cold_mean:.3e}",
+        warm.mean_oracle_after(burn)
+    );
+}
+
+#[test]
+fn change_point_is_detected_and_recovered() {
+    let topo = Topology::erdos_renyi(6, 0.6, &mut Rng::seed_from(93));
+    let change_at = 6u64;
+    let epochs = 24;
+    let mut src = SyntheticStream::new(stream_params(Drift::ChangePoint { at: change_at }, 0xC0DE));
+    let report = OnlineSession::on(&topo)
+        .config(OnlineConfig {
+            epochs,
+            consensus_rounds: 8,
+            power_iters: 3,
+            warm_start: true,
+            forgetting: Forgetting::Exponential(0.4),
+            init_seed: 11,
+        })
+        .run(&mut src);
+
+    // At the change epoch the carried subspace is suddenly wrong…
+    let at_change = &report.records[change_at as usize];
+    assert!(
+        at_change.oracle_tan_theta > 0.3,
+        "change-point should spike the tracking error, got {:.3e}",
+        at_change.oracle_tan_theta
+    );
+    // …and with fast forgetting the tracker + warm solver re-lock.
+    let tail_max = report
+        .records
+        .iter()
+        .skip(epochs - 6)
+        .map(|r| r.oracle_tan_theta)
+        .fold(0.0f64, f64::max);
+    assert!(tail_max < 0.15, "post-change recovery stalled: {tail_max:.3e}");
+}
+
+#[test]
+fn rotation_under_simnet_drops_still_tracks_and_replays_exactly() {
+    let run = || {
+        let topo = Topology::ring(6);
+        let mut src = SyntheticStream::new(stream_params(Drift::Rotation { rate: 0.01 }, 0xF00D));
+        OnlineSession::on(&topo)
+            .engine(Engine::Sim(SimConfig {
+                drop_prob: 0.05,
+                max_latency: 2,
+                ..SimConfig::ideal(0x5EED)
+            }))
+            .config(OnlineConfig {
+                epochs: 24,
+                consensus_rounds: 12,
+                power_iters: 2,
+                warm_start: true,
+                forgetting: Forgetting::Exponential(0.6),
+                init_seed: 13,
+            })
+            .run(&mut src)
+    };
+    let report = run();
+    assert!(report.comm.dropped > 0, "5% drops must fire");
+    assert!(report.comm.virtual_time >= report.comm.rounds);
+    assert_eq!(report.comm.epochs, 24);
+    for r in &report.records {
+        assert_eq!(r.rounds, 24, "constant 12×2 budget per epoch");
+        assert!(!r.diverged);
+    }
+    let max_err = report.max_oracle_after(8);
+    assert!(
+        max_err < 0.5,
+        "drift + drops tracking error too high: {max_err:.3e}"
+    );
+
+    // Determinism: the whole stack (stream, tracker, SimNet faults)
+    // replays bit-for-bit from its seeds.
+    let replay = run();
+    for (a, b) in report.records.iter().zip(replay.records.iter()) {
+        assert_eq!(a.oracle_tan_theta.to_bits(), b.oracle_tan_theta.to_bits());
+        assert_eq!(a.dropped, b.dropped);
+    }
+}
+
+#[test]
+fn spike_fade_swaps_the_tracked_direction() {
+    let topo = Topology::erdos_renyi(6, 0.6, &mut Rng::seed_from(95));
+    let mut src = SyntheticStream::new(stream_params(Drift::SpikeFade { rate: 0.15 }, 0xFADE));
+    let epochs = 30;
+    let report = OnlineSession::on(&topo)
+        .config(OnlineConfig {
+            epochs,
+            consensus_rounds: 8,
+            power_iters: 3,
+            warm_start: true,
+            forgetting: Forgetting::Exponential(0.5),
+            init_seed: 17,
+        })
+        .run(&mut src);
+    // Near the crossing (ln 2 / 0.15 ≈ epoch 5) the eigengap collapses
+    // and the error transiently rises; well past it the tracker follows
+    // the swapped direction back down.
+    let cross = 5usize;
+    let transient = report
+        .records
+        .iter()
+        .skip(cross.saturating_sub(2))
+        .take(8)
+        .map(|r| r.oracle_tan_theta)
+        .fold(0.0f64, f64::max);
+    let tail_max = report
+        .records
+        .iter()
+        .skip(epochs - 5)
+        .map(|r| r.oracle_tan_theta)
+        .fold(0.0f64, f64::max);
+    assert!(tail_max < 0.35, "post-crossing tracking stalled: {tail_max:.3e}");
+    assert!(
+        transient > tail_max,
+        "crossing should be the hard part: transient {transient:.3e} vs tail {tail_max:.3e}"
+    );
+}

@@ -1,0 +1,28 @@
+#!/usr/bin/env bash
+# Run the JSON-emitting bench targets and leave their machine-readable
+# results (BENCH_<suite>.json) at the repo root.
+#
+#   scripts/bench.sh              # streaming + microbench suites
+#   scripts/bench.sh streaming    # one suite only
+#
+# Each bench binary writes its own BENCH_*.json via benchkit::Suite;
+# this script just sequences them from the repo root so the output
+# lands in a predictable place. CI uploads BENCH_*.json as artifacts.
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+targets=("$@")
+if [ ${#targets[@]} -eq 0 ]; then
+    targets=(streaming microbench)
+fi
+
+for t in "${targets[@]}"; do
+    echo
+    echo "==> cargo bench --bench $t"
+    cargo bench --bench "$t"
+done
+
+echo
+echo "==> bench artifacts:"
+ls -l BENCH_*.json

@@ -49,6 +49,10 @@ run_required cargo test -q
 # Examples must keep compiling (they are the documented entry points).
 run_required cargo build --release --examples
 
+# Bench targets must keep compiling (scripts/bench.sh runs them; this
+# stops them bit-rotting without paying their runtime here).
+run_required cargo bench --no-run
+
 # Documentation must build cleanly with no external deps.
 run_required cargo doc --no-deps --quiet
 
