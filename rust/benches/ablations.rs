@@ -1,46 +1,61 @@
 //! Bench: the DESIGN.md ablations — sign adjustment (2×2 with QR sign
 //! convention), topology sweep (K* vs 1/√(1−λ₂)), minimal K vs data
-//! heterogeneity (Remark 2), and non-PSD robustness (Remark 1).
+//! heterogeneity (Remark 2), and non-PSD robustness (Remark 1). Writes
+//! `BENCH_ablations.json` at the repo root via `benchkit::Suite`.
 
-use deepca::benchkit::{section, Bench};
+use deepca::benchkit::{section, Bench, Measurement, Suite};
 use deepca::experiments::{ablations, Scale};
+use std::path::Path;
 
 fn main() {
     let scale = match std::env::var("DEEPCA_BENCH_SCALE").as_deref() {
         Ok("small") => Scale::Small,
         _ => Scale::Full,
     };
+    let mut suite = Suite::new("ablations");
     let bench = Bench::new(0, 1);
 
     section(&format!("ablation: SignAdjust × QR sign convention, scale {scale:?}"));
     let mut sign_cells = None;
-    bench.run("abl_sign", || {
+    suite.push(bench.run("abl_sign", || {
         sign_cells = Some(ablations::sign_adjust(scale).expect("abl_sign"));
-    });
+    }));
     let cells = sign_cells.unwrap();
     assert!(
         cells[0].final_tan > 1e3 * cells[1].final_tan.max(1e-14),
         "raw QR without SignAdjust should fail"
     );
+    suite.push(Measurement::new(
+        "claim: sign-adjust 2x2 final tan_theta",
+        cells.iter().map(|c| c.final_tan).collect(),
+    ));
 
     section("ablation: topology sweep (K* vs network gap)");
-    bench.run("abl_topology", || {
+    suite.push(bench.run("abl_topology", || {
         ablations::topology(scale).expect("abl_topology");
-    });
+    }));
 
     section("ablation: minimal K vs heterogeneity (Remark 2)");
-    bench.run("abl_min_k", || {
+    suite.push(bench.run("abl_min_k", || {
         ablations::min_k_vs_heterogeneity(scale).expect("abl_min_k");
-    });
+    }));
 
     section("ablation: non-PSD locals (Remark 1)");
     let mut psd_cells = None;
-    bench.run("abl_non_psd", || {
+    suite.push(bench.run("abl_non_psd", || {
         psd_cells = Some(ablations::non_psd(scale).expect("abl_non_psd"));
-    });
-    for c in psd_cells.unwrap() {
+    }));
+    let psd_cells = psd_cells.unwrap();
+    for c in &psd_cells {
         assert!(c.final_tan < 1e-6, "{}: Remark-1 robustness violated", c.label);
     }
+    suite.push(Measurement::new(
+        "claim: non-psd final tan_theta",
+        psd_cells.iter().map(|c| c.final_tan).collect(),
+    ));
 
+    let path = Path::new("BENCH_ablations.json");
+    suite.write_json(path).expect("write BENCH_ablations.json");
+    println!("wrote {}", path.display());
     println!("ablations bench OK");
 }

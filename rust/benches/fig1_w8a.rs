@@ -5,13 +5,17 @@
 //! DEEPCA_BENCH_SCALE=small cargo bench --bench fig1_w8a
 //! ```
 //!
-//! Emits every series (CSV under results/) and self-checks the paper's
-//! qualitative claims: DeEPCA(K ok) ≈ CPCA ≪ DeEPCA(K small), fixed-K
-//! DePCA plateaus, increasing-K DePCA pays extra communication.
+//! Emits every series (CSV under results/), self-checks the paper's
+//! qualitative claims (DeEPCA(K ok) ≈ CPCA ≪ DeEPCA(K small), fixed-K
+//! DePCA plateaus, increasing-K DePCA pays extra communication), and
+//! writes `BENCH_fig1_w8a.json` at the repo root (regeneration wall time
+//! plus the claim scalars — deterministic per seed, so `bench_diff` can
+//! flag drift) via `benchkit::Suite`.
 
-use deepca::benchkit::{section, Bench};
+use deepca::benchkit::{section, Bench, Measurement, Suite};
 use deepca::experiments::figures::{self, Figure};
 use deepca::experiments::Scale;
+use std::path::Path;
 
 fn main() {
     let scale = match std::env::var("DEEPCA_BENCH_SCALE").as_deref() {
@@ -20,11 +24,12 @@ fn main() {
     };
     section(&format!("Figure 1 (w8a-like), scale {scale:?}"));
 
+    let mut suite = Suite::new("fig1_w8a");
     let bench = Bench::new(0, 1); // one full regeneration, timed
     let mut result = None;
-    bench.run("fig1 regeneration", || {
+    suite.push(bench.run("fig1 regeneration", || {
         result = Some(figures::run_figure(Figure::Fig1W8a, scale).expect("fig1"));
-    });
+    }));
     let res = result.unwrap();
     let c = figures::claims(&res);
 
@@ -40,6 +45,16 @@ fn main() {
     println!("matched-K DePCA/DeEPCA ratio  : {:.1}", c.matched_k_ratio);
     println!("local-only heterogeneity floor: {:.3e}", res.local_floor);
 
+    // Claim scalars as single-sample measurements: the runs are seeded,
+    // so these replay exactly and any drift is a real change.
+    suite.push(Measurement::new("claim: deepca_best tan_theta", vec![c.deepca_best]));
+    suite.push(Measurement::new("claim: cpca tan_theta", vec![c.cpca]));
+    suite.push(Measurement::new(
+        "claim: matched_k depca/deepca ratio",
+        vec![c.matched_k_ratio],
+    ));
+    suite.push(Measurement::new("claim: local floor", vec![res.local_floor]));
+
     let ok_rate = c.deepca_best < 200.0 * c.cpca.max(1e-14);
     let ok_small_k = c.deepca_smallest_k > 1e2 * c.deepca_best.max(1e-14);
     let ok_depca = c.matched_k_ratio > 1e2;
@@ -47,5 +62,9 @@ fn main() {
         "\nclaims: matches-CPCA-rate={ok_rate} small-K-stalls={ok_small_k} DePCA-plateaus={ok_depca}"
     );
     assert!(ok_rate && ok_small_k && ok_depca, "figure-1 shape not reproduced");
+
+    let path = Path::new("BENCH_fig1_w8a.json");
+    suite.write_json(path).expect("write BENCH_fig1_w8a.json");
+    println!("wrote {}", path.display());
     println!("fig1_w8a bench OK");
 }

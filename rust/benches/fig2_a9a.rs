@@ -1,8 +1,10 @@
-//! Bench: regenerate paper Figure 2 ('a9a'). See fig1_w8a.rs.
+//! Bench: regenerate paper Figure 2 ('a9a'). See fig1_w8a.rs; writes
+//! `BENCH_fig2_a9a.json` at the repo root.
 
-use deepca::benchkit::{section, Bench};
+use deepca::benchkit::{section, Bench, Measurement, Suite};
 use deepca::experiments::figures::{self, Figure};
 use deepca::experiments::Scale;
+use std::path::Path;
 
 fn main() {
     let scale = match std::env::var("DEEPCA_BENCH_SCALE").as_deref() {
@@ -11,11 +13,12 @@ fn main() {
     };
     section(&format!("Figure 2 (a9a-like), scale {scale:?}"));
 
+    let mut suite = Suite::new("fig2_a9a");
     let bench = Bench::new(0, 1);
     let mut result = None;
-    bench.run("fig2 regeneration", || {
+    suite.push(bench.run("fig2 regeneration", || {
         result = Some(figures::run_figure(Figure::Fig2A9a, scale).expect("fig2"));
-    });
+    }));
     let res = result.unwrap();
     let c = figures::claims(&res);
 
@@ -31,6 +34,14 @@ fn main() {
     println!("matched-K DePCA/DeEPCA ratio  : {:.1}", c.matched_k_ratio);
     println!("local-only heterogeneity floor: {:.3e}", res.local_floor);
 
+    suite.push(Measurement::new("claim: deepca_best tan_theta", vec![c.deepca_best]));
+    suite.push(Measurement::new("claim: cpca tan_theta", vec![c.cpca]));
+    suite.push(Measurement::new(
+        "claim: matched_k depca/deepca ratio",
+        vec![c.matched_k_ratio],
+    ));
+    suite.push(Measurement::new("claim: local floor", vec![res.local_floor]));
+
     let ok_rate = c.deepca_best < 200.0 * c.cpca.max(1e-14);
     let ok_small_k = c.deepca_smallest_k > 1e2 * c.deepca_best.max(1e-14);
     let ok_depca = c.matched_k_ratio > 1e2;
@@ -38,5 +49,9 @@ fn main() {
         "\nclaims: matches-CPCA-rate={ok_rate} small-K-stalls={ok_small_k} DePCA-plateaus={ok_depca}"
     );
     assert!(ok_rate && ok_small_k && ok_depca, "figure-2 shape not reproduced");
+
+    let path = Path::new("BENCH_fig2_a9a.json");
+    suite.write_json(path).expect("write BENCH_fig2_a9a.json");
+    println!("wrote {}", path.display());
     println!("fig2_a9a bench OK");
 }

@@ -23,9 +23,9 @@ use deepca::data::synthetic;
 use deepca::graph::topology::Topology;
 use deepca::linalg::angles::tan_theta;
 use deepca::linalg::eig::eig_sym;
-use deepca::linalg::qr::thin_qr;
+use deepca::linalg::qr::{qr_into, thin_qr, QrWorkspace};
 use deepca::linalg::Mat;
-use deepca::prelude::Algo;
+use deepca::prelude::{Algo, Solver};
 use deepca::util::rng::Rng;
 use std::path::Path;
 
@@ -51,6 +51,26 @@ fn main() {
     suite.push(bench.run("householder thin-QR (300x5)", || thin_qr(&s300)));
     let u300 = Mat::rand_orthonormal(300, 5, &mut rng);
     suite.push(bench.run("tan_theta(U, X) (300x5)", || tan_theta(&u300, &s300)));
+
+    // ------------------------------------------- allocating vs `_into`
+    // The workspace refactor's headline contrast: the same kernels with
+    // per-call allocation vs caller-owned buffers. `scripts/bench_diff`
+    // tracks these pairs across commits.
+    section("allocation-sensitive kernels: allocating vs _into (d=300, k=5)");
+    let mut out300 = Mat::zeros(300, 5);
+    suite.push(bench.run("matmul A@W allocating", || a300.matmul(&w300)));
+    suite.push(bench.run("matmul_into A@W (reused out)", || {
+        a300.matmul_into(&w300, &mut out300);
+        out300.data()[0]
+    }));
+    let mut qws = QrWorkspace::new(300, 5);
+    let mut qq = Mat::zeros(300, 5);
+    let mut rr = Mat::zeros(5, 5);
+    suite.push(bench.run("thin-QR allocating (300x5)", || thin_qr(&s300)));
+    suite.push(bench.run("qr_into reused workspace (300x5)", || {
+        qr_into(&s300, true, &mut qq, &mut rr, &mut qws);
+        qq.data()[0]
+    }));
 
     let a64 = {
         let g = Mat::randn(64, 64, &mut rng);
@@ -80,6 +100,14 @@ fn main() {
         s
     }));
     suite.push(bench.run("stack deviation-from-mean", || stack0.deviation_from_mean()));
+    // reduce_into: the engine's ping-pong buffers are warm and the
+    // output stack is caller-owned — one FastMix with zero allocation
+    // (contrast with the clone-per-call variant above).
+    let mut dst = stack0.clone();
+    suite.push(bench.run("FastMix K=8 reduce_into (warm buffers)", || {
+        dense.reduce_into(&stack0, &mut dst, 8, &mut CommStats::default());
+        dst.slice(0).data()[0]
+    }));
 
     // --------------------------------------------------------- backends
     section("power-step backends (m=50 agents)");
@@ -104,6 +132,15 @@ fn main() {
             .algo(Algo::Deepca(cfg.clone()))
             .record(RunRecorder::with_stride(10))
             .solve()
+    }));
+    // Bare step cost on warm buffers: no driver, no metrics, no
+    // allocation (the steady-state per-iteration floor).
+    let mut step_solver = Session::on(&problem, &topo)
+        .algo(Algo::Deepca(cfg.clone()))
+        .build_solver();
+    step_solver.step(); // warm the workspace + engine buffers
+    suite.push(bench.run("DeepcaSolver::step (warm workspace)", || {
+        step_solver.step().iter
     }));
 
     let path = Path::new("BENCH_microbench.json");

@@ -1,8 +1,10 @@
 //! Bench: the Remark-2 / Theorem-1 communication-to-ε table
-//! (DeEPCA constant-K vs DePCA increasing-K, measured).
+//! (DeEPCA constant-K vs DePCA increasing-K, measured). Writes
+//! `BENCH_table_comm.json` at the repo root via `benchkit::Suite`.
 
-use deepca::benchkit::{section, Bench};
+use deepca::benchkit::{section, Bench, Measurement, Suite};
 use deepca::experiments::{comm_table, Scale};
+use std::path::Path;
 
 fn main() {
     let scale = match std::env::var("DEEPCA_BENCH_SCALE").as_deref() {
@@ -11,11 +13,12 @@ fn main() {
     };
     section(&format!("table_comm (communication to reach ε), scale {scale:?}"));
 
+    let mut suite = Suite::new("table_comm");
     let bench = Bench::new(0, 1);
     let mut rows = None;
-    bench.run("table_comm regeneration", || {
+    suite.push(bench.run("table_comm regeneration", || {
         rows = Some(comm_table::run(scale).expect("table_comm"));
-    });
+    }));
     let rows = rows.unwrap();
 
     // Self-check: the DePCA/DeEPCA ratio must grow with precision —
@@ -33,5 +36,11 @@ fn main() {
         ratios.last().unwrap() > ratios.first().unwrap(),
         "advantage must grow with precision"
     );
+    // Deterministic per seed — bench_diff flags drift in the advantage.
+    suite.push(Measurement::new("claim: round ratios across eps grid", ratios));
+
+    let path = Path::new("BENCH_table_comm.json");
+    suite.write_json(path).expect("write BENCH_table_comm.json");
+    println!("wrote {}", path.display());
     println!("table_comm bench OK");
 }

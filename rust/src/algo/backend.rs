@@ -24,6 +24,15 @@ pub trait PowerBackend {
     fn m(&self) -> usize;
     /// `A_j · w` for agent `j`.
     fn local_product(&self, agent: usize, w: &Mat) -> Mat;
+    /// `A_j · w` into a caller-owned buffer. The default routes through
+    /// the allocating [`PowerBackend::local_product`] (external backends
+    /// like PJRT materialize device output anyway); the in-process Rust
+    /// backends override it with `matmul_into` so the solver hot loop is
+    /// allocation-free.
+    fn local_product_into(&self, agent: usize, w: &Mat, out: &mut Mat) {
+        let p = self.local_product(agent, w);
+        out.copy_from(&p);
+    }
     /// All agents' products for one iteration. Default: sequential loop;
     /// implementations may parallelize.
     fn local_products(&self, ws: &AgentStack) -> AgentStack {
@@ -34,14 +43,25 @@ pub trait PowerBackend {
                 .collect(),
         )
     }
+    /// All agents' products into a caller-owned stack (the solvers'
+    /// steady-state path: `out` is a buffer the solver keeps across
+    /// iterations). Default: sequential loop over
+    /// [`PowerBackend::local_product_into`].
+    fn local_products_into(&self, ws: &AgentStack, out: &mut AgentStack) {
+        assert_eq!(ws.m(), self.m());
+        assert_eq!(out.m(), self.m());
+        for j in 0..self.m() {
+            self.local_product_into(j, ws.slice(j), out.slice_mut(j));
+        }
+    }
     /// Short label for reports.
     fn label(&self) -> &'static str;
 }
 
 // Forwarding impl so a borrowed backend can be boxed into a solver
-// (the deprecated `run_with` shims hand `&dyn PowerBackend` through the
-// step-wise API). `local_products` is forwarded explicitly to preserve
-// implementations' parallel overrides.
+// (external backends like PJRT hand `&dyn PowerBackend` through the
+// step-wise API). The product methods are forwarded explicitly to
+// preserve implementations' parallel / in-place overrides.
 impl PowerBackend for &dyn PowerBackend {
     fn m(&self) -> usize {
         (**self).m()
@@ -49,8 +69,14 @@ impl PowerBackend for &dyn PowerBackend {
     fn local_product(&self, agent: usize, w: &Mat) -> Mat {
         (**self).local_product(agent, w)
     }
+    fn local_product_into(&self, agent: usize, w: &Mat, out: &mut Mat) {
+        (**self).local_product_into(agent, w, out)
+    }
     fn local_products(&self, ws: &AgentStack) -> AgentStack {
         (**self).local_products(ws)
+    }
+    fn local_products_into(&self, ws: &AgentStack, out: &mut AgentStack) {
+        (**self).local_products_into(ws, out)
     }
     fn label(&self) -> &'static str {
         (**self).label()
@@ -75,6 +101,9 @@ impl PowerBackend for RustBackend<'_> {
     }
     fn local_product(&self, agent: usize, w: &Mat) -> Mat {
         self.locals[agent].matmul(w)
+    }
+    fn local_product_into(&self, agent: usize, w: &Mat, out: &mut Mat) {
+        self.locals[agent].matmul_into(w, out);
     }
     fn label(&self) -> &'static str {
         "rust"
@@ -108,6 +137,39 @@ impl PowerBackend for ParallelBackend<'_> {
 
     fn local_product(&self, agent: usize, w: &Mat) -> Mat {
         self.locals[agent].matmul(w)
+    }
+
+    fn local_product_into(&self, agent: usize, w: &Mat, out: &mut Mat) {
+        self.locals[agent].matmul_into(w, out);
+    }
+
+    fn local_products_into(&self, ws: &AgentStack, out: &mut AgentStack) {
+        let m = self.m();
+        assert_eq!(ws.m(), m);
+        assert_eq!(out.m(), m);
+        let nthreads = self.threads.min(m).max(1);
+        let chunk = m.div_ceil(nthreads);
+        let locals = self.locals;
+
+        // Split the output stack into per-thread chunks so each thread
+        // writes its agents' products in place (thread spawning itself
+        // allocates — this backend trades that for parallel matmuls).
+        std::thread::scope(|scope| {
+            let mut rest = out.slices_mut();
+            let mut base = 0usize;
+            while !rest.is_empty() {
+                let take = chunk.min(rest.len());
+                let (head, tail) = std::mem::take(&mut rest).split_at_mut(take);
+                rest = tail;
+                let lo = base;
+                base += take;
+                scope.spawn(move || {
+                    for (off, o) in head.iter_mut().enumerate() {
+                        locals[lo + off].matmul_into(ws.slice(lo + off), o);
+                    }
+                });
+            }
+        });
     }
 
     fn local_products(&self, ws: &AgentStack) -> AgentStack {
@@ -184,6 +246,24 @@ mod tests {
         let a = seq.local_products(&stack);
         let b = par.local_products(&stack);
         assert!(a.distance(&b) < 1e-14);
+    }
+
+    #[test]
+    fn into_forms_match_allocating_forms() {
+        let ls = locals(5, 9, 138);
+        let seq = RustBackend::new(&ls);
+        let par = ParallelBackend::new(&ls, 3);
+        let mut rng = Rng::seed_from(139);
+        let stack = AgentStack::new((0..5).map(|_| Mat::randn(9, 2, &mut rng)).collect());
+        let want = seq.local_products(&stack);
+
+        let mut out = AgentStack::replicate(5, &Mat::zeros(9, 2));
+        seq.local_products_into(&stack, &mut out);
+        assert_eq!(want, out, "sequential into vs allocating");
+
+        let mut pout = AgentStack::replicate(5, &Mat::zeros(9, 2));
+        par.local_products_into(&stack, &mut pout);
+        assert_eq!(want, pout, "parallel into vs allocating");
     }
 
     #[test]

@@ -10,6 +10,7 @@
 
 use super::problem::Problem;
 use super::solver::{drive, Solver, SolverState, StepReport, StopCriteria};
+use super::workspace::SolverWorkspace;
 use crate::algo::metrics::RunRecorder;
 use crate::consensus::AgentStack;
 use crate::linalg::qr::orth;
@@ -37,6 +38,10 @@ impl Default for CentralizedConfig {
 /// Step-wise centralized power method on the aggregate matrix.
 pub struct CentralizedSolver<'a> {
     problem: &'a Problem,
+    /// Persistent landing buffer for `A·W`.
+    prod: Mat,
+    /// QR scratch (see [`SolverWorkspace`]).
+    workspace: SolverWorkspace,
     state: SolverState,
 }
 
@@ -44,8 +49,11 @@ impl<'a> CentralizedSolver<'a> {
     /// Build from the problem's aggregate.
     pub fn new(problem: &'a Problem, cfg: CentralizedConfig) -> Self {
         let w0 = problem.initial_w(cfg.init_seed);
+        let (d, k) = w0.shape();
         CentralizedSolver {
             problem,
+            prod: Mat::zeros(d, k),
+            workspace: SolverWorkspace::new(d, k),
             state: SolverState::init(AgentStack::replicate(1, &w0), false),
         }
     }
@@ -62,8 +70,11 @@ impl Solver for CentralizedSolver<'_> {
 
     fn step(&mut self) -> StepReport {
         let t = self.state.iter;
-        let next = orth(&self.problem.aggregate.matmul(self.state.w.slice(0)));
-        *self.state.w.slice_mut(0) = next;
+        self.problem
+            .aggregate
+            .matmul_into(self.state.w.slice(0), &mut self.prod);
+        let q = self.workspace.orth_into(&self.prod, true);
+        self.state.w.slice_mut(0).copy_from(q);
         self.state.iter = t + 1;
         StepReport {
             iter: t,
@@ -79,8 +90,10 @@ impl Solver for CentralizedSolver<'_> {
 
     fn warm_start(&mut self, w: &AgentStack) {
         // Accept any per-agent stack: centralized PCA restarts from the
-        // (orthonormalized) mean iterate.
+        // (orthonormalized) mean iterate. Refit the product buffer to
+        // the incoming shape (the workspace refits itself on use).
         let mean = orth(&w.mean());
+        self.prod = Mat::zeros(mean.rows(), mean.cols());
         self.state = SolverState::init(AgentStack::replicate(1, &mean), false);
     }
 }
@@ -194,6 +207,21 @@ mod tests {
         let out = run_with_tol(&p, 500, 3, 1e-6);
         assert!(out.iters < 500);
         assert!(*out.tan_trace.last().unwrap() <= 1e-6);
+    }
+
+    #[test]
+    fn warm_start_with_different_k_refits_buffers() {
+        // Centralized accepts any warm-start stack; a k different from
+        // the construction-time k must refit the persistent buffers
+        // rather than panic in the `_into` kernels.
+        let p = problem(186);
+        let mut solver = CentralizedSolver::new(&p, CentralizedConfig::default()); // k = 2
+        let mut rng = Rng::seed_from(99);
+        let w = Mat::rand_orthonormal(p.dim(), 1, &mut rng);
+        solver.warm_start(&AgentStack::replicate(3, &w));
+        let rep = solver.step();
+        assert!(rep.finite);
+        assert_eq!(solver.state().w.slice(0).cols(), 1);
     }
 
     #[test]

@@ -16,18 +16,19 @@
 //! [`DeepcaSolver`] implements the step-wise [`Solver`] API; iteration
 //! control (stopping, recording, observers) lives in the shared
 //! [`crate::algo::solver::drive`] loop or the
-//! [`crate::coordinator::session::Session`] builder. The old
-//! [`run_with`]/[`run_dense`] free functions remain as deprecated shims.
+//! [`crate::coordinator::session::Session`] builder. The step hot path
+//! runs entirely through the `_into` kernels and the solver's persistent
+//! buffers ([`crate::algo::workspace::SolverWorkspace`] + the product
+//! stack), so it performs **zero heap allocation after the first
+//! iteration** (audited by `rust/tests/alloc_free.rs`).
 
 use super::backend::{PowerBackend, RustBackend};
-use super::metrics::{RunOutput, RunRecorder};
 use super::problem::Problem;
-use super::sign_adjust::sign_adjust;
-use super::solver::{drive_to_run_output, Algo, Solver, SolverState, StepReport, StopCriteria};
+use super::sign_adjust::sign_adjust_into;
+use super::solver::{Solver, SolverState, StepReport};
+use super::workspace::SolverWorkspace;
 use crate::consensus::comm::{Communicator, DenseComm};
-use crate::coordinator::session::Session;
 use crate::graph::topology::Topology;
-use crate::linalg::qr::orth;
 
 /// DeEPCA hyperparameters.
 #[derive(Clone, Debug)]
@@ -79,6 +80,11 @@ pub struct DeepcaSolver<'a> {
     /// `A_j W^{-1} := W⁰` so the first tracking difference injects
     /// `A_j W⁰ − W⁰` — Algorithm 1 line 2).
     g_prev: crate::consensus::AgentStack,
+    /// Landing buffer for this iteration's products `A_j W_j^t`; swapped
+    /// with `g_prev` after the tracking update (never reallocated).
+    g_next: crate::consensus::AgentStack,
+    /// QR / sign-adjust scratch (see [`SolverWorkspace`]).
+    workspace: SolverWorkspace,
     state: SolverState,
 }
 
@@ -94,6 +100,7 @@ impl<'a> DeepcaSolver<'a> {
         assert_eq!(backend.m(), m, "backend/problem agent count mismatch");
         assert_eq!(comm.m(), m, "communicator/problem agent count mismatch");
         let w0 = problem.initial_w(cfg.init_seed);
+        let (d, k) = w0.shape();
         let w = crate::consensus::AgentStack::replicate(m, &w0);
         DeepcaSolver {
             problem,
@@ -101,6 +108,8 @@ impl<'a> DeepcaSolver<'a> {
             comm,
             cfg,
             g_prev: crate::consensus::AgentStack::replicate(m, &w0),
+            g_next: crate::consensus::AgentStack::replicate(m, &w0),
+            workspace: SolverWorkspace::new(d, k),
             state: SolverState::init(w, true),
             w0,
         }
@@ -130,34 +139,35 @@ impl Solver for DeepcaSolver<'_> {
 
     fn step(&mut self) -> StepReport {
         let t = self.state.iter;
-        let m = self.state.w.m();
+        let SolverState { w, s, stats, .. } = &mut self.state;
+        let s = s.as_mut().expect("DeEPCA tracks S");
+        let m = w.m();
 
-        // (3.1) tracking update: S_j += A_j W_j^t − G_j^t.
-        let g = self.backend.local_products(&self.state.w);
-        let s = self.state.s.as_mut().expect("DeEPCA tracks S");
+        // (3.1) tracking update: S_j += A_j W_j^t − G_j^t. The products
+        // land in the persistent `g_next` buffer, then the buffers swap —
+        // exactly one A_j·W product per agent, zero allocation.
+        self.backend.local_products_into(w, &mut self.g_next);
         for j in 0..m {
             let sj = s.slice_mut(j);
-            sj.axpy(1.0, g.slice(j));
+            sj.axpy(1.0, self.g_next.slice(j));
             sj.axpy(-1.0, self.g_prev.slice(j));
         }
-        self.g_prev = g;
+        std::mem::swap(&mut self.g_prev, &mut self.g_next);
 
-        // (3.2) multi-consensus on the tracked variable.
-        self.comm
-            .fastmix(s, self.cfg.consensus_rounds, &mut self.state.stats);
+        // (3.2) multi-consensus on the tracked variable (the engine
+        // reuses its recursion buffers across mixes).
+        self.comm.fastmix(s, self.cfg.consensus_rounds, stats);
 
-        // (3.3) local orthonormalization + sign adjustment.
+        // (3.3) local orthonormalization + sign adjustment through the
+        // workspace buffers.
         for j in 0..m {
-            let q = if self.cfg.qr_canonical {
-                orth(s.slice(j))
+            let q = self.workspace.orth_into(s.slice(j), self.cfg.qr_canonical);
+            let wj = w.slice_mut(j);
+            if self.cfg.sign_adjust {
+                sign_adjust_into(q, &self.w0, wj);
             } else {
-                crate::linalg::qr::orth_raw(s.slice(j))
-            };
-            *self.state.w.slice_mut(j) = if self.cfg.sign_adjust {
-                sign_adjust(&q, &self.w0)
-            } else {
-                q
-            };
+                wj.copy_from(q);
+            }
         }
 
         self.state.iter = t + 1;
@@ -187,48 +197,31 @@ impl Solver for DeepcaSolver<'_> {
     }
 }
 
-/// Run DeEPCA with explicit backend and communicator.
-#[deprecated(note = "use `DeepcaSolver` + `algo::solver::drive`, or the `Session` builder")]
-pub fn run_with(
-    problem: &Problem,
-    backend: &dyn PowerBackend,
-    comm: &dyn Communicator,
-    cfg: &DeepcaConfig,
-    recorder: &mut RunRecorder,
-) -> RunOutput {
-    let mut solver = DeepcaSolver::new(problem, Box::new(backend), Box::new(comm), cfg.clone());
-    let stop = StopCriteria::max_iters(cfg.max_iters).with_tol(cfg.tol);
-    drive_to_run_output(&mut solver, &stop, recorder)
-}
-
-/// Convenience runner: Rust backend + dense FastMix over `topo`.
-///
-/// Delegates straight to the [`Session`] builder (which owns the
-/// engine/stop/record plumbing this shim used to duplicate); only the
-/// legacy signature survives.
-#[deprecated(note = "use `DeepcaSolver::dense` + `algo::solver::drive`, or the `Session` builder")]
-pub fn run_dense(
-    problem: &Problem,
-    topo: &Topology,
-    cfg: &DeepcaConfig,
-    recorder: &mut RunRecorder,
-) -> RunOutput {
-    let report = Session::on(problem, topo)
-        .algo(Algo::Deepca(cfg.clone()))
-        .record(std::mem::take(recorder))
-        .solve();
-    let out = report.to_run_output();
-    *recorder = report.trace;
-    out
-}
-
 #[cfg(test)]
-#[allow(deprecated)] // the shims are exercised deliberately: unchanged
-                     // seed tests double as regression cover for them.
 mod tests {
     use super::*;
+    use crate::algo::metrics::{RunOutput, RunRecorder};
+    use crate::algo::solver::Algo;
+    use crate::coordinator::session::Session;
     use crate::data::synthetic;
     use crate::util::rng::Rng;
+
+    /// Test driver with the old shim's shape, routed through the
+    /// [`Session`] builder (the only run path since the shims' removal).
+    fn run_dense(
+        problem: &Problem,
+        topo: &Topology,
+        cfg: &DeepcaConfig,
+        recorder: &mut RunRecorder,
+    ) -> RunOutput {
+        let report = Session::on(problem, topo)
+            .algo(Algo::Deepca(cfg.clone()))
+            .record(std::mem::take(recorder))
+            .solve();
+        let out = report.to_run_output();
+        *recorder = report.trace;
+        out
+    }
 
     fn small_problem(seed: u64) -> (Problem, Topology) {
         let ds = synthetic::spiked_covariance(
@@ -425,8 +418,8 @@ mod tests {
     }
 
     #[test]
-    fn solver_steps_match_shim() {
-        // The step-wise solver driven by hand must equal the shim run.
+    fn solver_steps_match_session() {
+        // The step-wise solver driven by hand must equal the driven run.
         let (p, topo) = small_problem(171);
         let cfg = DeepcaConfig { consensus_rounds: 8, max_iters: 15, ..Default::default() };
         let mut rec = RunRecorder::every_iteration();
@@ -438,7 +431,10 @@ mod tests {
             assert!(rep.finite);
         }
         assert_eq!(solver.state().iter, 15);
-        assert!(out.final_w.distance(&solver.state().w) == 0.0, "manual steps diverge from shim");
+        assert!(
+            out.final_w.distance(&solver.state().w) == 0.0,
+            "manual steps diverge from the driven run"
+        );
     }
 
     #[test]

@@ -15,19 +15,20 @@
 //! `K_t = O(log 1/ε)` rounds per iteration (Eqn. 3.12). Both schedules
 //! are implemented so the figure benches can show the contrast.
 //!
-//! [`DepcaSolver`] implements the step-wise [`Solver`] API; the old
-//! [`run_with`]/[`run_dense`] free functions remain as deprecated shims.
+//! [`DepcaSolver`] implements the step-wise [`Solver`] API; like the
+//! other solvers its step hot path runs through the `_into` kernels and
+//! persistent buffers (the mixed variable `P` lives in `state.s` and is
+//! overwritten in place each iteration), so it allocates nothing after
+//! warm-up.
 
 use super::backend::{PowerBackend, RustBackend};
-use super::metrics::{RunOutput, RunRecorder};
 use super::problem::Problem;
-use super::sign_adjust::sign_adjust;
-use super::solver::{drive_to_run_output, Algo, Solver, SolverState, StepReport, StopCriteria};
+use super::sign_adjust::sign_adjust_into;
+use super::solver::{Solver, SolverState, StepReport};
+use super::workspace::SolverWorkspace;
 use crate::consensus::comm::{Communicator, DenseComm};
 use crate::consensus::AgentStack;
-use crate::coordinator::session::Session;
 use crate::graph::topology::Topology;
-use crate::linalg::qr::orth;
 use crate::linalg::Mat;
 
 /// Consensus-rounds schedule for DePCA.
@@ -91,6 +92,8 @@ pub struct DepcaSolver<'a> {
     cfg: DepcaConfig,
     /// Sign-adjust anchor.
     w0: Mat,
+    /// QR / sign-adjust scratch (see [`SolverWorkspace`]).
+    workspace: SolverWorkspace,
     state: SolverState,
 }
 
@@ -106,13 +109,18 @@ impl<'a> DepcaSolver<'a> {
         assert_eq!(backend.m(), m, "backend/problem agent count mismatch");
         assert_eq!(comm.m(), m, "communicator/problem agent count mismatch");
         let w0 = problem.initial_w(cfg.init_seed);
+        let (d, k) = w0.shape();
         let w = AgentStack::replicate(m, &w0);
         DepcaSolver {
             problem,
             backend,
             comm,
             cfg,
-            state: SolverState::init(w, false),
+            workspace: SolverWorkspace::new(d, k),
+            // `tracked = true`: `state.s` holds the pre-QR mixed variable
+            // `P`, overwritten in place every step (it reads as `W⁰`
+            // before the first step).
+            state: SolverState::init(w, true),
             w0,
         }
     }
@@ -136,26 +144,27 @@ impl Solver for DepcaSolver<'_> {
 
     fn step(&mut self) -> StepReport {
         let t = self.state.iter;
-        let m = self.state.w.m();
+        let SolverState { w, s, stats, .. } = &mut self.state;
+        // The pre-QR mixed variable `P` lives in `state.s` (the
+        // recorder's s_deviation analogue; DePCA has no tracked S) and
+        // doubles as the persistent product buffer — zero allocation.
+        let p = s.as_mut().expect("DePCA mixes P in place");
+        let m = w.m();
 
         // Local power step on the iterate itself (no tracking).
-        let mut p = self.backend.local_products(&self.state.w);
+        self.backend.local_products_into(w, p);
         // Multi-consensus with the schedule's rounds for this iteration.
-        self.comm
-            .fastmix(&mut p, self.cfg.k_policy.rounds(t), &mut self.state.stats);
-        // Local orthonormalization.
+        self.comm.fastmix(p, self.cfg.k_policy.rounds(t), stats);
+        // Local orthonormalization through the workspace buffers.
         for j in 0..m {
-            let q = orth(p.slice(j));
-            *self.state.w.slice_mut(j) = if self.cfg.sign_adjust {
-                sign_adjust(&q, &self.w0)
+            let q = self.workspace.orth_into(p.slice(j), true);
+            let wj = w.slice_mut(j);
+            if self.cfg.sign_adjust {
+                sign_adjust_into(q, &self.w0, wj);
             } else {
-                q
-            };
+                wj.copy_from(q);
+            }
         }
-        // Expose the pre-QR mixed variable as this algorithm's consensus
-        // state (the recorder's s_deviation analogue; DePCA has no
-        // tracked S).
-        self.state.s = Some(p);
 
         self.state.iter = t + 1;
         let finite = self.state.w.is_finite();
@@ -175,53 +184,45 @@ impl Solver for DepcaSolver<'_> {
         assert_eq!(w.m(), self.problem.m(), "warm-start agent count mismatch");
         assert_eq!(w.slice_shape(), self.w0.shape(), "warm-start shape mismatch");
         self.w0 = w.slice(0).clone();
-        self.state = SolverState::init(w.clone(), false);
+        self.state = SolverState::init(w.clone(), true);
     }
 }
 
-/// Run DePCA with explicit backend and communicator.
-#[deprecated(note = "use `DepcaSolver` + `algo::solver::drive`, or the `Session` builder")]
-pub fn run_with(
-    problem: &Problem,
-    backend: &dyn PowerBackend,
-    comm: &dyn Communicator,
-    cfg: &DepcaConfig,
-    recorder: &mut RunRecorder,
-) -> RunOutput {
-    let mut solver = DepcaSolver::new(problem, Box::new(backend), Box::new(comm), cfg.clone());
-    let stop = StopCriteria::max_iters(cfg.max_iters).with_tol(cfg.tol);
-    drive_to_run_output(&mut solver, &stop, recorder)
-}
-
-/// Convenience runner with Rust backend + dense FastMix.
-///
-/// Delegates straight to the [`Session`] builder (which owns the
-/// engine/stop/record plumbing this shim used to duplicate); only the
-/// legacy signature survives.
-#[deprecated(note = "use `DepcaSolver::dense` + `algo::solver::drive`, or the `Session` builder")]
-pub fn run_dense(
-    problem: &Problem,
-    topo: &Topology,
-    cfg: &DepcaConfig,
-    recorder: &mut RunRecorder,
-) -> RunOutput {
-    let report = Session::on(problem, topo)
-        .algo(Algo::Depca(cfg.clone()))
-        .record(std::mem::take(recorder))
-        .solve();
-    let out = report.to_run_output();
-    *recorder = report.trace;
-    out
-}
-
 #[cfg(test)]
-#[allow(deprecated)] // shim coverage: the unchanged seed tests run
-                     // through the deprecated wrappers on purpose.
 mod tests {
     use super::*;
-    use crate::algo::deepca::{self, DeepcaConfig};
+    use crate::algo::deepca::DeepcaConfig;
+    use crate::algo::metrics::{RunOutput, RunRecorder};
+    use crate::algo::solver::Algo;
+    use crate::coordinator::session::Session;
     use crate::data::synthetic;
     use crate::util::rng::Rng;
+
+    /// Test driver with the old shim's shape, routed through the
+    /// [`Session`] builder (the only run path since the shims' removal).
+    fn run_algo(
+        problem: &Problem,
+        topo: &Topology,
+        algo: Algo,
+        recorder: &mut RunRecorder,
+    ) -> RunOutput {
+        let report = Session::on(problem, topo)
+            .algo(algo)
+            .record(std::mem::take(recorder))
+            .solve();
+        let out = report.to_run_output();
+        *recorder = report.trace;
+        out
+    }
+
+    fn run_dense(
+        problem: &Problem,
+        topo: &Topology,
+        cfg: &DepcaConfig,
+        recorder: &mut RunRecorder,
+    ) -> RunOutput {
+        run_algo(problem, topo, Algo::Depca(cfg.clone()), recorder)
+    }
 
     fn heterogeneous_problem(seed: u64) -> (Problem, Topology) {
         // Block-drifted binary data → heterogeneous A_j, the regime where
@@ -270,10 +271,10 @@ mod tests {
         );
 
         let mut rec_deepca = RunRecorder::every_iteration();
-        let out_deepca = deepca::run_dense(
+        let out_deepca = run_algo(
             &p,
             &topo,
-            &DeepcaConfig { consensus_rounds: 6, max_iters: iters, ..Default::default() },
+            Algo::Deepca(DeepcaConfig { consensus_rounds: 6, max_iters: iters, ..Default::default() }),
             &mut rec_deepca,
         );
 

@@ -12,10 +12,9 @@
 
 use super::backend::{PowerBackend, RustBackend};
 use super::problem::Problem;
-use super::solver::{drive, mean_tan_theta, Solver, SolverState, StepReport, StopCriteria};
-use crate::algo::metrics::RunRecorder;
+use super::solver::{mean_tan_theta, Solver, SolverState, StepReport};
+use super::workspace::SolverWorkspace;
 use crate::consensus::AgentStack;
-use crate::linalg::qr::orth;
 
 /// Local-only power method knobs.
 #[derive(Clone, Debug)]
@@ -36,6 +35,10 @@ impl Default for LocalPowerConfig {
 pub struct LocalPowerSolver<'a> {
     problem: &'a Problem,
     backend: Box<dyn PowerBackend + 'a>,
+    /// Persistent landing buffer for the per-agent products.
+    products: AgentStack,
+    /// QR scratch (see [`SolverWorkspace`]).
+    workspace: SolverWorkspace,
     state: SolverState,
 }
 
@@ -44,8 +47,15 @@ impl<'a> LocalPowerSolver<'a> {
     pub fn new(problem: &'a Problem, backend: Box<dyn PowerBackend + 'a>, cfg: LocalPowerConfig) -> Self {
         assert_eq!(backend.m(), problem.m(), "backend/problem agent count mismatch");
         let w0 = problem.initial_w(cfg.init_seed);
+        let (d, k) = w0.shape();
         let w = AgentStack::replicate(problem.m(), &w0);
-        LocalPowerSolver { problem, backend, state: SolverState::init(w, false) }
+        LocalPowerSolver {
+            problem,
+            backend,
+            products: w.clone(),
+            workspace: SolverWorkspace::new(d, k),
+            state: SolverState::init(w, false),
+        }
     }
 
     /// Convenience: sequential Rust backend.
@@ -66,10 +76,12 @@ impl Solver for LocalPowerSolver<'_> {
 
     fn step(&mut self) -> StepReport {
         let t = self.state.iter;
-        let m = self.state.w.m();
-        let p = self.backend.local_products(&self.state.w);
+        let w = &mut self.state.w;
+        let m = w.m();
+        self.backend.local_products_into(w, &mut self.products);
         for j in 0..m {
-            *self.state.w.slice_mut(j) = orth(p.slice(j));
+            let q = self.workspace.orth_into(self.products.slice(j), true);
+            w.slice_mut(j).copy_from(q);
         }
         self.state.iter = t + 1;
         StepReport {
@@ -86,29 +98,10 @@ impl Solver for LocalPowerSolver<'_> {
 
     fn warm_start(&mut self, w: &AgentStack) {
         assert_eq!(w.m(), self.problem.m(), "warm-start agent count mismatch");
+        // Refit the product buffer to the incoming shape (the workspace
+        // refits itself on use).
+        self.products = w.clone();
         self.state = SolverState::init(w.clone(), false);
-    }
-}
-
-/// Output of the local-only baseline (legacy shape).
-#[derive(Clone, Debug)]
-pub struct LocalPowerOutput {
-    /// Final per-agent iterates (each ≈ top-k of its own A_j).
-    pub final_w: AgentStack,
-    /// Mean tan θ_k(U, W_j) vs the *global* U per iteration.
-    pub mean_tan_trace: Vec<f64>,
-}
-
-/// Run `iters` purely-local power iterations.
-#[deprecated(note = "use `LocalPowerSolver` + `algo::solver::drive`, or the `Session` builder")]
-pub fn run(problem: &Problem, iters: usize, init_seed: u64) -> LocalPowerOutput {
-    let cfg = LocalPowerConfig { max_iters: iters, init_seed };
-    let mut solver = LocalPowerSolver::dense(problem, cfg);
-    let mut rec = RunRecorder::every_iteration();
-    let _ = drive(&mut solver, &StopCriteria::max_iters(iters), &mut rec, None);
-    LocalPowerOutput {
-        final_w: solver.state().w.clone(),
-        mean_tan_trace: rec.records.iter().map(|r| r.mean_tan_theta).collect(),
     }
 }
 
@@ -123,11 +116,22 @@ pub fn heterogeneity_floor(problem: &Problem, iters: usize) -> f64 {
 }
 
 #[cfg(test)]
-#[allow(deprecated)] // the legacy `run` shim is part of what's under test.
 mod tests {
     use super::*;
+    use crate::algo::metrics::RunRecorder;
+    use crate::algo::solver::{drive, StopCriteria};
     use crate::data::synthetic;
     use crate::util::rng::Rng;
+
+    /// Drive `iters` purely-local power iterations and return the
+    /// per-iteration mean tan θ trace (vs the *global* U).
+    fn mean_tan_trace(problem: &Problem, iters: usize, init_seed: u64) -> Vec<f64> {
+        let cfg = LocalPowerConfig { max_iters: iters, init_seed };
+        let mut solver = LocalPowerSolver::dense(problem, cfg);
+        let mut rec = RunRecorder::every_iteration();
+        let _ = drive(&mut solver, &StopCriteria::max_iters(iters), &mut rec, None);
+        rec.records.iter().map(|r| r.mean_tan_theta).collect()
+    }
 
     #[test]
     fn converges_to_local_not_global() {
@@ -144,14 +148,14 @@ mod tests {
             &mut Rng::seed_from(191),
         );
         let p = Problem::from_dataset(&ds, 6, 2);
-        let out = run(&p, 60, 2021);
-        let floor = *out.mean_tan_trace.last().unwrap();
+        let trace = mean_tan_trace(&p, 60, 2021);
+        let floor = *trace.last().unwrap();
         assert!(
             floor > 1e-2,
             "local-only should NOT reach the global subspace, floor={floor}"
         );
         // And it stalls rather than keeps improving.
-        let mid = out.mean_tan_trace[30];
+        let mid = trace[30];
         assert!(floor > 0.3 * mid, "unexpected continued convergence");
     }
 

@@ -13,6 +13,9 @@
 //!   ([`backend::RustBackend`]), thread-parallel, or PJRT artifacts
 //!   compiled from the JAX/Pallas layers ([`crate::runtime`]).
 //! - [`sign_adjust`] — paper Algorithm 2.
+//! - [`workspace`] — per-agent scratch buffers
+//!   ([`workspace::SolverWorkspace`]) that make every solver's `step`
+//!   allocation-free after warm-up.
 //! - [`deepca`] — paper Algorithm 1 ([`deepca::DeepcaSolver`]:
 //!   subspace tracking + FastMix).
 //! - [`depca`] — the Eqn. 3.4 baseline ([`depca::DepcaSolver`]: local
@@ -28,6 +31,7 @@
 pub mod problem;
 pub mod backend;
 pub mod sign_adjust;
+pub mod workspace;
 pub mod solver;
 pub mod deepca;
 pub mod depca;

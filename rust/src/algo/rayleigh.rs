@@ -92,12 +92,12 @@ pub fn estimate_eigenvalues(
 }
 
 #[cfg(test)]
-#[allow(deprecated)] // setup runs through the legacy shims on purpose.
 mod tests {
     use super::*;
-    use crate::algo::deepca::{self, DeepcaConfig};
-    use crate::algo::metrics::RunRecorder;
+    use crate::algo::deepca::DeepcaConfig;
+    use crate::algo::solver::Algo;
     use crate::consensus::comm::DenseComm;
+    use crate::coordinator::session::Session;
     use crate::data::synthetic;
     use crate::graph::topology::Topology;
     use crate::util::rng::Rng;
@@ -113,8 +113,10 @@ mod tests {
         let p = Problem::from_dataset(&ds, 6, 3);
         let topo = Topology::erdos_renyi(6, 0.6, &mut Rng::seed_from(502));
         let cfg = DeepcaConfig { consensus_rounds: 10, max_iters: 120, ..Default::default() };
-        let mut rec = RunRecorder::every_iteration();
-        let out = deepca::run_dense(&p, &topo, &cfg, &mut rec);
+        let out = Session::on(&p, &topo)
+            .algo(Algo::Deepca(cfg))
+            .solve()
+            .to_run_output();
         assert!(out.final_tan_theta < 1e-9);
         (p, topo, out)
     }
@@ -188,8 +190,10 @@ mod tests {
             max_iters: 4, // moderate ε (big λ₃/λ₄ gap converges fast)
             ..Default::default()
         };
-        let mut rec = RunRecorder::every_iteration();
-        let out = deepca::run_dense(&p, &topo, &cfg, &mut rec);
+        let out = Session::on(&p, &topo)
+            .algo(Algo::Deepca(cfg))
+            .solve()
+            .to_run_output();
         let eps = out.final_tan_theta;
         assert!(eps > 1e-8 && eps < 1e-2, "want moderate ε, got {eps:.3e}");
         let comm = DenseComm::from_topology(&topo);

@@ -12,9 +12,26 @@ use crate::linalg::Mat;
 /// Flip columns of `w` whose inner product with the same column of
 /// `reference` is negative. Returns the adjusted matrix.
 pub fn sign_adjust(w: &Mat, reference: &Mat) -> Mat {
+    let mut out = Mat::zeros(w.rows(), w.cols());
+    sign_adjust_into(w, reference, &mut out);
+    out
+}
+
+/// Write the sign-adjusted `w` into a caller-owned buffer (the
+/// allocation-free form the solver hot loops use; `out` is fully
+/// overwritten and never reallocated). Bit-identical to [`sign_adjust`].
+pub fn sign_adjust_into(w: &Mat, reference: &Mat, out: &mut Mat) {
+    assert_eq!(w.shape(), reference.shape(), "SignAdjust shape mismatch");
+    assert_eq!(w.shape(), out.shape(), "SignAdjust output shape mismatch");
+    out.copy_from(w);
+    sign_adjust_inplace(out, reference);
+}
+
+/// In-place variant (column dots are computed before any flip, so the
+/// result equals the out-of-place forms exactly).
+pub fn sign_adjust_inplace(w: &mut Mat, reference: &Mat) {
     assert_eq!(w.shape(), reference.shape(), "SignAdjust shape mismatch");
     let (d, k) = w.shape();
-    let mut out = w.clone();
     for i in 0..k {
         let mut dot = 0.0;
         for r in 0..d {
@@ -22,17 +39,10 @@ pub fn sign_adjust(w: &Mat, reference: &Mat) -> Mat {
         }
         if dot < 0.0 {
             for r in 0..d {
-                out[(r, i)] = -out[(r, i)];
+                w[(r, i)] = -w[(r, i)];
             }
         }
     }
-    out
-}
-
-/// In-place variant.
-pub fn sign_adjust_inplace(w: &mut Mat, reference: &Mat) {
-    let adjusted = sign_adjust(w, reference);
-    *w = adjusted;
 }
 
 #[cfg(test)]
@@ -107,5 +117,16 @@ mod tests {
         let mut wm = w.clone();
         sign_adjust_inplace(&mut wm, &w0);
         assert_eq!(pure.data(), wm.data());
+    }
+
+    #[test]
+    fn into_overwrites_dirty_buffer() {
+        let mut rng = Rng::seed_from(147);
+        let w0 = Mat::rand_orthonormal(9, 3, &mut rng);
+        let w = Mat::rand_orthonormal(9, 3, &mut rng);
+        let pure = sign_adjust(&w, &w0);
+        let mut out = Mat::from_fn(9, 3, |_, _| f64::NAN);
+        sign_adjust_into(&w, &w0, &mut out);
+        assert_eq!(pure.data(), out.data());
     }
 }

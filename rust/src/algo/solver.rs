@@ -103,7 +103,10 @@ pub struct SolverState {
     /// centralized solver uses a single-slice stack.
     pub w: AgentStack,
     /// The algorithm's consensus variable, if it has one: DeEPCA's
-    /// tracked `S`, DePCA's pre-QR mixed iterate `P`.
+    /// tracked `S`, DePCA's pre-QR mixed iterate `P`. Present from
+    /// construction (it reads as the initial iterate before the first
+    /// step) and overwritten in place each step — it doubles as the
+    /// solver's persistent consensus buffer.
     pub s: Option<AgentStack>,
     /// Cumulative communication.
     pub stats: CommStats,
@@ -321,26 +324,6 @@ pub fn drive<'o>(
         recorder.final_tan_theta()
     };
     DriveOutcome { iters, reason, final_tan_theta, elapsed_secs: t0.elapsed().as_secs_f64() }
-}
-
-/// Drive a solver and package the legacy [`RunOutput`] shape — the
-/// bridge the deprecated `run_with` shims (external backend/communicator,
-/// e.g. PJRT) stand on; the `run_dense` shims delegate to the `Session`
-/// builder instead.
-pub(crate) fn drive_to_run_output(
-    solver: &mut dyn Solver,
-    stop: &StopCriteria,
-    recorder: &mut RunRecorder,
-) -> RunOutput {
-    let outcome = drive(solver, stop, recorder, None);
-    RunOutput {
-        iters: outcome.iters,
-        final_tan_theta: outcome.final_tan_theta,
-        comm: solver.state().stats.clone(),
-        final_w: solver.state().w.clone(),
-        elapsed_secs: outcome.elapsed_secs,
-        diverged: outcome.reason == StopReason::Diverged,
-    }
 }
 
 // --------------------------------------------------------------- report

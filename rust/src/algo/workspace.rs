@@ -1,0 +1,91 @@
+//! Per-agent scratch buffers for the solver hot loops.
+//!
+//! Every power iteration re-orthonormalizes each agent's d×k slice and
+//! (for DeEPCA/DePCA) sign-adjusts it against the shared `W⁰`. Before
+//! this module, each of those steps allocated fresh matrices — a QR
+//! working copy, a Q factor, an R factor, a sign-adjusted copy — per
+//! agent per iteration, thousands of times per solve. A
+//! [`SolverWorkspace`] owns those buffers once per solver; the per-agent
+//! loop runs entirely through the `_into` kernels
+//! ([`crate::linalg::qr::qr_into`],
+//! [`crate::algo::sign_adjust::sign_adjust_into`],
+//! [`crate::linalg::Mat::copy_from`]) and performs **zero heap
+//! allocation after the first iteration** (pinned by the
+//! counting-allocator audit in `rust/tests/alloc_free.rs`).
+//!
+//! The buffers are sized per agent (one d×k slice), and the sequential
+//! step loop visits agents one at a time, so a single workspace serves
+//! all m agents. Stack-shaped buffers (the backend's product stack, the
+//! FastMix ping-pong stacks) live with their owners — the solvers and
+//! the communication engines respectively.
+
+use crate::linalg::qr::{qr_into, QrWorkspace};
+use crate::linalg::Mat;
+
+/// Scratch buffers for one solver's per-iteration linalg: the
+/// Householder workspace plus landing pads for the Q and R factors.
+#[derive(Clone, Debug)]
+pub struct SolverWorkspace {
+    qr: QrWorkspace,
+    /// d×k orthonormal-factor landing buffer.
+    q: Mat,
+    /// k×k triangular factor (computed by QR, discarded by the solvers).
+    r: Mat,
+}
+
+impl SolverWorkspace {
+    /// Workspace for d×k iterates.
+    pub fn new(d: usize, k: usize) -> Self {
+        SolverWorkspace {
+            qr: QrWorkspace::new(d, k),
+            q: Mat::zeros(d, k),
+            r: Mat::zeros(k, k),
+        }
+    }
+
+    /// QR-orthonormalize `a` into the workspace's Q buffer and return
+    /// it. `canonical` selects the sign convention (see
+    /// [`crate::linalg::qr::thin_qr_with`]). The buffers refit
+    /// themselves on a shape change (e.g. a warm start with a different
+    /// k), so this is allocation-free exactly when the shape repeats —
+    /// the steady-state solver path.
+    pub fn orth_into(&mut self, a: &Mat, canonical: bool) -> &Mat {
+        let (d, k) = a.shape();
+        if self.q.shape() != (d, k) {
+            self.q = Mat::zeros(d, k);
+            self.r = Mat::zeros(k, k);
+        }
+        qr_into(a, canonical, &mut self.q, &mut self.r, &mut self.qr);
+        &self.q
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::qr::{orth, orth_raw};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn orth_into_matches_allocating_orth() {
+        let mut rng = Rng::seed_from(971);
+        let mut ws = SolverWorkspace::new(12, 3);
+        for _ in 0..4 {
+            let a = Mat::randn(12, 3, &mut rng);
+            assert_eq!(ws.orth_into(&a, true), &orth(&a));
+            assert_eq!(ws.orth_into(&a, false), &orth_raw(&a));
+        }
+    }
+
+    #[test]
+    fn orth_into_refits_on_shape_change() {
+        // A warm start may hand the solver a different shape than the
+        // workspace was built for; the buffers must refit, not panic.
+        let mut rng = Rng::seed_from(972);
+        let mut ws = SolverWorkspace::new(12, 3);
+        for (d, k) in [(12, 3), (12, 2), (20, 5), (12, 3)] {
+            let a = Mat::randn(d, k, &mut rng);
+            assert_eq!(ws.orth_into(&a, true), &orth(&a), "{d}x{k}");
+        }
+    }
+}

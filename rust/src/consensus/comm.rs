@@ -29,12 +29,30 @@ pub trait Communicator: Send + Sync {
     fn m(&self) -> usize;
     /// The gossip matrix (for spectral quantities / reporting).
     fn gossip(&self) -> &GossipMatrix;
-    /// In-place FastMix over the stack, accumulating stats.
+    /// In-place FastMix over the stack, accumulating stats. Engines keep
+    /// their recursion buffers across calls, so steady-state gossip
+    /// performs no payload cloning or allocation (Dense/Sim engines; the
+    /// threaded engines still allocate per *message*, which is the
+    /// serialization they exist to model).
     fn fastmix(&self, stack: &mut AgentStack, rounds: usize, stats: &mut CommStats);
+    /// Mean-reduce `src` into `dst` without mutating `src`: copy, then
+    /// run `rounds` FastMix rounds in place. `dst` must already have
+    /// `src`'s shape — callers keep a long-lived output stack so the
+    /// whole reduction is allocation-free in steady state.
+    fn reduce_into(
+        &self,
+        src: &AgentStack,
+        dst: &mut AgentStack,
+        rounds: usize,
+        stats: &mut CommStats,
+    ) {
+        dst.copy_from(src);
+        self.fastmix(dst, rounds, stats);
+    }
 }
 
 // Forwarding impl so a borrowed communicator can be boxed into a solver
-// (used by the deprecated `run_with` shims).
+// (external backends drive the step-wise API over `&dyn Communicator`).
 impl Communicator for &dyn Communicator {
     fn m(&self) -> usize {
         (**self).m()
@@ -44,6 +62,15 @@ impl Communicator for &dyn Communicator {
     }
     fn fastmix(&self, stack: &mut AgentStack, rounds: usize, stats: &mut CommStats) {
         (**self).fastmix(stack, rounds, stats)
+    }
+    fn reduce_into(
+        &self,
+        src: &AgentStack,
+        dst: &mut AgentStack,
+        rounds: usize,
+        stats: &mut CommStats,
+    ) {
+        (**self).reduce_into(src, dst, rounds, stats)
     }
 }
 
@@ -207,8 +234,13 @@ impl Communicator for ThreadedNetwork {
                 let init = stack.slice(j).clone();
                 let wrow: Vec<f64> = weights.row(j).to_vec();
                 let handle = scope.spawn(move || {
+                    // Three thread-local recursion buffers rotated by
+                    // swap — no per-round Mat allocation. The per-edge
+                    // payload Vecs remain: they model real serialization
+                    // and are what this engine exists to measure.
                     let mut prev = init.clone();
                     let mut cur = init;
+                    let mut next = Mat::zeros(d, k);
                     let mut scalars_sent: u64 = 0;
                     for r in 0..rounds {
                         // 1. Transmit current state to every neighbor.
@@ -223,16 +255,19 @@ impl Communicator for ThreadedNetwork {
                             scalars_sent += (d * k) as u64;
                         }
                         // 2. Collect neighbor states for this round.
-                        let mut acc = cur.scaled(wrow[j]);
+                        next.copy_from(&cur);
+                        next.scale(wrow[j]);
                         for (from, rx) in &ins {
                             let data = rx.recv().expect("sender alive");
                             let neighbor = Mat::from_vec(d, k, data);
-                            acc.axpy(wrow[*from], &neighbor);
+                            next.axpy(wrow[*from], &neighbor);
                         }
                         // 3. Chebyshev update.
-                        acc.scale(1.0 + eta);
-                        acc.axpy(-eta, &prev);
-                        prev = std::mem::replace(&mut cur, acc);
+                        next.scale(1.0 + eta);
+                        next.axpy(-eta, &prev);
+                        // Rotate: prev ← cur ← next ← (old prev, reused).
+                        std::mem::swap(&mut prev, &mut cur);
+                        std::mem::swap(&mut cur, &mut next);
                     }
                     (cur, scalars_sent, outs, ins)
                 });

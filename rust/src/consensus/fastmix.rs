@@ -19,14 +19,90 @@ use super::metrics::CommStats;
 use super::stack::AgentStack;
 use crate::graph::gossip::GossipMatrix;
 use crate::linalg::Mat;
+use std::sync::Mutex;
+
+/// Three-stack Chebyshev ping-pong buffers shared by the in-process
+/// engines ([`FastMix`] behind `DenseComm`, and
+/// [`crate::consensus::simnet::SimNet`]): allocated on first use, reused
+/// across mixes, rebuilt only when the stack shape changes. Holding them
+/// in the engine makes every steady-state gossip round allocation-free —
+/// DeEPCA mixes once per power iteration, thousands of times per solve.
+#[derive(Debug, Default)]
+pub(crate) struct PingPong {
+    pub(crate) prev: Vec<Mat>,
+    pub(crate) cur: Vec<Mat>,
+    pub(crate) next: Vec<Mat>,
+}
+
+impl PingPong {
+    /// Fit the buffers to an m-agent stack of d×k slices (no-op when
+    /// they already fit — the steady-state path).
+    pub(crate) fn ensure(&mut self, m: usize, d: usize, k: usize) {
+        let fits =
+            self.prev.len() == m && self.prev.first().map(|s| s.shape()) == Some((d, k));
+        if !fits {
+            self.prev = vec![Mat::zeros(d, k); m];
+            self.cur = vec![Mat::zeros(d, k); m];
+            self.next = vec![Mat::zeros(d, k); m];
+        }
+    }
+
+    /// Start a mix: `prev = cur = stack` (the recursion's `W⁻¹ = W⁰`).
+    pub(crate) fn load(&mut self, stack: &AgentStack) {
+        for (b, s) in self.prev.iter_mut().zip(stack.iter()) {
+            b.copy_from(s);
+        }
+        for (b, s) in self.cur.iter_mut().zip(stack.iter()) {
+            b.copy_from(s);
+        }
+    }
+
+    /// Rotate after a round: prev ← cur ← next ← (old prev, reused).
+    pub(crate) fn rotate(&mut self) {
+        std::mem::swap(&mut self.prev, &mut self.cur);
+        std::mem::swap(&mut self.cur, &mut self.next);
+    }
+
+    /// Finish a mix: copy the current stacks back into the caller's.
+    pub(crate) fn store(&self, stack: &mut AgentStack) {
+        for (dst, src) in stack.iter_mut().zip(&self.cur) {
+            dst.copy_from(src);
+        }
+    }
+}
 
 /// Reusable FastMix operator bound to one gossip matrix.
-#[derive(Clone, Debug)]
 pub struct FastMix {
     gossip: GossipMatrix,
     /// Chebyshev step size η_w.
     pub eta: f64,
     edges: usize,
+    /// See [`PingPong`]; the mutex keeps the `&self` Communicator API
+    /// (and serializes concurrent mixes on one operator).
+    buffers: Mutex<PingPong>,
+}
+
+impl Clone for FastMix {
+    fn clone(&self) -> Self {
+        // Scratch buffers are not part of the operator's value; a clone
+        // starts cold and re-warms on its first mix.
+        FastMix {
+            gossip: self.gossip.clone(),
+            eta: self.eta,
+            edges: self.edges,
+            buffers: Mutex::new(PingPong::default()),
+        }
+    }
+}
+
+impl std::fmt::Debug for FastMix {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FastMix")
+            .field("gossip", &self.gossip)
+            .field("eta", &self.eta)
+            .field("edges", &self.edges)
+            .finish_non_exhaustive()
+    }
 }
 
 impl FastMix {
@@ -35,7 +111,7 @@ impl FastMix {
     pub fn new(gossip: GossipMatrix, edges: usize) -> Self {
         // Algorithm 3's step size uses λ₂² under the root.
         let eta = gossip.chebyshev_eta();
-        FastMix { gossip, eta, edges }
+        FastMix { gossip, eta, edges, buffers: Mutex::new(PingPong::default()) }
     }
 
     /// Underlying gossip matrix.
@@ -61,36 +137,38 @@ impl FastMix {
         // With symmetric L, Σ_i w_{ij} cur_i = Σ_i w_{ji} cur_i — each
         // agent j only touches its neighbors (w_{ji} ≠ 0 ⇔ edge).
         //
-        // Perf (§Perf): the three stacks are allocated once and rotated;
-        // the Chebyshev (1+η) factor is folded into the accumulation
-        // weights so each round is pure fused multiply-adds over
-        // contiguous buffers — no per-round allocation, no scale pass.
-        let mut prev: Vec<Mat> = stack.iter().cloned().collect();
-        let mut cur = prev.clone();
-        let mut next: Vec<Mat> = vec![Mat::zeros(d, k); m];
+        // Perf (§Perf): the three ping-pong stacks persist in the
+        // operator across mixes (allocated on the first call, rotated by
+        // pointer swap every round); the Chebyshev (1+η) factor is
+        // folded into the accumulation weights so each round is pure
+        // fused multiply-adds over contiguous buffers — zero allocation
+        // in steady state, no scale pass.
+        let mut guard = match self.buffers.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        let bufs = &mut *guard;
+        bufs.ensure(m, d, k);
+        bufs.load(stack);
         let one_plus_eta = 1.0 + self.eta;
 
         for _round in 0..rounds {
             for j in 0..m {
                 let wj = self.gossip.weights.row(j);
-                let acc = &mut next[j];
+                let acc = &mut bufs.next[j];
                 // acc = −η · prev_j  (overwrite, no zero pass)
-                acc.data_mut().copy_from_slice(prev[j].data());
+                acc.data_mut().copy_from_slice(bufs.prev[j].data());
                 acc.scale(-self.eta);
                 for (i, &w) in wj.iter().enumerate() {
                     if w != 0.0 {
-                        acc.axpy(one_plus_eta * w, &cur[i]);
+                        acc.axpy(one_plus_eta * w, &bufs.cur[i]);
                     }
                 }
             }
-            // Rotate buffers: prev ← cur ← next ← (old prev, reused).
-            std::mem::swap(&mut prev, &mut cur);
-            std::mem::swap(&mut cur, &mut next);
+            bufs.rotate();
             stats.record_round(self.edges, d, k);
         }
-        for (dst, src) in stack.iter_mut().zip(cur) {
-            *dst = src;
-        }
+        bufs.store(stack);
     }
 
     /// Convenience: mix and return the implied contraction bound ρ(K).
@@ -245,6 +323,32 @@ mod tests {
         assert_eq!(stats.mixes, 1);
         assert_eq!(stats.messages, 4 * 2 * 6); // 4 rounds × 2 dir × 6 edges
         assert_eq!(stats.scalars_sent, 4 * 12 * 6);
+    }
+
+    #[test]
+    fn buffer_reuse_matches_fresh_operator_across_shapes() {
+        // One operator mixing twice (buffers warm) must equal a fresh
+        // operator per mix (buffers cold), including across a shape
+        // change that forces a buffer rebuild mid-life.
+        let fm = setup(6);
+        let a0 = random_stack(6, 5, 3, 109);
+        let b0 = random_stack(6, 2, 1, 110);
+
+        let mut a_warm = a0.clone();
+        fm.mix(&mut a_warm, 4, &mut CommStats::default());
+        let mut b_warm = b0.clone();
+        fm.mix(&mut b_warm, 4, &mut CommStats::default()); // shape change
+        let mut a_again = a0.clone();
+        fm.mix(&mut a_again, 4, &mut CommStats::default()); // change back
+
+        let mut a_cold = a0.clone();
+        setup(6).mix(&mut a_cold, 4, &mut CommStats::default());
+        let mut b_cold = b0;
+        setup(6).mix(&mut b_cold, 4, &mut CommStats::default());
+
+        assert_eq!(a_warm, a_cold, "warm buffers changed the arithmetic");
+        assert_eq!(b_warm, b_cold, "shape-changed buffers leaked state");
+        assert_eq!(a_again, a_cold, "second rebuild leaked state");
     }
 
     #[test]

@@ -32,6 +32,7 @@
 //! the parity tests in `tests/solver_api.rs` pin this.
 
 use super::comm::Communicator;
+use super::fastmix::PingPong;
 use super::metrics::CommStats;
 use super::stack::AgentStack;
 use crate::graph::dynamic::TopologySchedule;
@@ -118,6 +119,12 @@ struct SimState {
     epoch: Epoch,
     /// Global gossip-round counter (drives the schedule's epochs).
     round: u64,
+    /// FastMix recursion buffers (shared shape with the dense engine —
+    /// see [`PingPong`]), persistent across `fastmix` calls so
+    /// steady-state rounds perform zero heap allocation.
+    bufs: PingPong,
+    /// Scratch for noised payloads.
+    noisy: Mat,
 }
 
 /// The deterministic unreliable-network engine. See the module docs.
@@ -153,6 +160,8 @@ impl SimNet {
                 schedule,
                 epoch,
                 round: 0,
+                bufs: PingPong::default(),
+                noisy: Mat::zeros(0, 0),
             }),
         }
     }
@@ -189,21 +198,25 @@ impl Communicator for SimNet {
         let mut st = self.state.lock().expect("SimNet state poisoned");
         let st = &mut *st;
 
-        // FastMix recursion buffers (same rotation scheme as DenseComm).
-        let mut prev: Vec<Mat> = stack.iter().cloned().collect();
-        let mut cur = prev.clone();
-        let mut next: Vec<Mat> = vec![Mat::zeros(d, k); m];
-        let mut noisy = Mat::zeros(d, k); // scratch for noised payloads
+        // FastMix recursion buffers (same rotation scheme as DenseComm,
+        // same [`PingPong`] helper), persistent in the state across
+        // mixes — zero allocation in steady state.
+        let SimState { rng, schedule, epoch, round, bufs, noisy } = st;
+        bufs.ensure(m, d, k);
+        if noisy.shape() != (d, k) {
+            *noisy = Mat::zeros(d, k);
+        }
+        bufs.load(stack);
 
         for _ in 0..rounds {
             // Consult the schedule; rebuild weights on epoch boundaries.
-            let epoch_idx = st.schedule.epoch_of(st.round);
-            if epoch_idx != st.epoch.index {
-                st.epoch = build_epoch(&mut st.schedule, epoch_idx);
+            let epoch_idx = schedule.epoch_of(*round);
+            if epoch_idx != epoch.index {
+                *epoch = build_epoch(schedule, epoch_idx);
             }
-            let eta = st.epoch.eta;
+            let eta = epoch.eta;
             let one_plus_eta = 1.0 + eta;
-            let weights = &st.epoch.gossip.weights;
+            let weights = &epoch.gossip.weights;
 
             let mut dropped_this_round = 0u64;
             let mut slowest_delivery = 0u64;
@@ -213,24 +226,24 @@ impl Communicator for SimNet {
             // the floating-point accumulation order.
             for j in 0..m {
                 let wj = weights.row(j);
-                let acc = &mut next[j];
+                let acc = &mut bufs.next[j];
                 // acc = −η · prev_j (overwrite, no zero pass).
-                acc.data_mut().copy_from_slice(prev[j].data());
+                acc.data_mut().copy_from_slice(bufs.prev[j].data());
                 acc.scale(-eta);
                 for (i, &w) in wj.iter().enumerate() {
                     if w == 0.0 {
                         continue;
                     }
                     if i == j {
-                        acc.axpy(one_plus_eta * w, &cur[j]);
+                        acc.axpy(one_plus_eta * w, &bufs.cur[j]);
                         continue;
                     }
                     // Directed link i → j: one message this round.
-                    if self.cfg.drop_prob > 0.0 && st.rng.chance(self.cfg.drop_prob) {
+                    if self.cfg.drop_prob > 0.0 && rng.chance(self.cfg.drop_prob) {
                         dropped_this_round += 1;
                         // Self-weight fallback: substitute the receiver's
                         // own state so the row stays stochastic.
-                        acc.axpy(one_plus_eta * w, &cur[j]);
+                        acc.axpy(one_plus_eta * w, &bufs.cur[j]);
                         continue;
                     }
                     if self.cfg.max_latency > 0 {
@@ -238,28 +251,25 @@ impl Communicator for SimNet {
                             slowest_delivery.max(self.latency[i * m + j]);
                     }
                     if self.cfg.noise_std > 0.0 {
-                        noisy.data_mut().copy_from_slice(cur[i].data());
+                        noisy.data_mut().copy_from_slice(bufs.cur[i].data());
                         for v in noisy.data_mut() {
-                            *v += self.cfg.noise_std * st.rng.normal();
+                            *v += self.cfg.noise_std * rng.normal();
                         }
-                        acc.axpy(one_plus_eta * w, &noisy);
+                        acc.axpy(one_plus_eta * w, noisy);
                     } else {
-                        acc.axpy(one_plus_eta * w, &cur[i]);
+                        acc.axpy(one_plus_eta * w, &bufs.cur[i]);
                     }
                 }
             }
-            std::mem::swap(&mut prev, &mut cur);
-            std::mem::swap(&mut cur, &mut next);
-            st.round += 1;
-            stats.record_round(st.epoch.edges, d, k);
+            bufs.rotate();
+            *round += 1;
+            stats.record_round(epoch.edges, d, k);
             stats.dropped += dropped_this_round;
             // Discrete-event barrier: the round completes one baseline
             // tick after its slowest delivered message lands.
             stats.virtual_time += 1 + slowest_delivery;
         }
-        for (dst, src) in stack.iter_mut().zip(cur) {
-            *dst = src;
-        }
+        bufs.store(stack);
     }
 }
 

@@ -61,6 +61,21 @@ impl AgentStack {
         self.slices.iter_mut()
     }
 
+    /// Mutable view of all slices (for parallel writers that split the
+    /// stack across threads; the slice shapes must be preserved).
+    pub fn slices_mut(&mut self) -> &mut [Mat] {
+        &mut self.slices
+    }
+
+    /// Overwrite every slice from `other` (same m, same slice shape)
+    /// without touching the allocations — the stack-level `copy_from`.
+    pub fn copy_from(&mut self, other: &AgentStack) {
+        assert_eq!(self.m(), other.m(), "copy_from agent count mismatch");
+        for (dst, src) in self.slices.iter_mut().zip(&other.slices) {
+            dst.copy_from(src);
+        }
+    }
+
     /// The mean slice `(1/m) Σ_j W_j` (the bar variables of Eqn. 4.4).
     pub fn mean(&self) -> Mat {
         let (d, k) = self.slice_shape();

@@ -8,9 +8,9 @@
 //! byte-counted per agent and merged at join time.
 //!
 //! Integration tests pin this engine's output to the leader-driven
-//! [`crate::algo::deepca::run_dense`] to ~1e-9 (the engines accumulate
-//! neighbor contributions in different orders, so agreement is to fp
-//! round-off, not bit-for-bit).
+//! dense engine (via the `Session` builder) to ~1e-9 (the engines
+//! accumulate neighbor contributions in different orders, so agreement
+//! is to fp round-off, not bit-for-bit).
 
 use super::agent::AgentState;
 use crate::algo::deepca::DeepcaConfig;
@@ -87,28 +87,36 @@ pub fn run_deepca_distributed(
             let handle = scope.spawn(move || {
                 let mut st = AgentState::init(j, local, w0j);
                 let mut scalars: u64 = 0;
+                // Per-thread recursion buffers, reused across all
+                // iterations (payload Vecs per message remain — they
+                // model real serialization).
+                let mut prev = st.s.clone();
+                let mut cur = st.s.clone();
+                let mut next = Mat::zeros(d, k);
                 for t in 0..iters {
                     // (3.1) local tracking update.
                     st.tracking_update();
                     // (3.2) K gossip rounds on S_j (FastMix recursion).
-                    let mut prev = st.s.clone();
-                    let mut cur = st.s.clone();
+                    prev.copy_from(&st.s);
+                    cur.copy_from(&st.s);
                     for _r in 0..rounds {
                         let payload = cur.data().to_vec();
                         for (_to, tx) in &outs {
                             tx.send(payload.clone()).expect("peer alive");
                             scalars += (d * k) as u64;
                         }
-                        let mut acc = cur.scaled(wrow[j]);
+                        next.copy_from(&cur);
+                        next.scale(wrow[j]);
                         for (from, rx) in &ins {
                             let data = rx.recv().expect("peer alive");
-                            acc.axpy(wrow[*from], &Mat::from_vec(d, k, data));
+                            next.axpy(wrow[*from], &Mat::from_vec(d, k, data));
                         }
-                        acc.scale(1.0 + eta);
-                        acc.axpy(-eta, &prev);
-                        prev = std::mem::replace(&mut cur, acc);
+                        next.scale(1.0 + eta);
+                        next.axpy(-eta, &prev);
+                        std::mem::swap(&mut prev, &mut cur);
+                        std::mem::swap(&mut cur, &mut next);
                     }
-                    st.s = cur;
+                    st.s.copy_from(&cur);
                     // (3.3) orthonormalize + sign adjust.
                     st.orthonormalize(use_sign);
                     // Telemetry (leader-side metrics only; not part of the
@@ -177,10 +185,10 @@ pub fn run_deepca_distributed(
 }
 
 #[cfg(test)]
-#[allow(deprecated)] // cross-checks against the legacy shim on purpose.
 mod tests {
     use super::*;
-    use crate::algo::deepca;
+    use crate::algo::solver::Algo;
+    use crate::coordinator::session::Session;
     use crate::data::synthetic;
     use crate::util::rng::Rng;
 
@@ -214,15 +222,14 @@ mod tests {
         let cfg = DeepcaConfig { consensus_rounds: 6, max_iters: 25, ..Default::default() };
         let mut rec_a = RunRecorder::every_iteration();
         let dist = run_deepca_distributed(&p, &topo, &cfg, &mut rec_a);
-        let mut rec_b = RunRecorder::every_iteration();
-        let dense = deepca::run_dense(&p, &topo, &cfg, &mut rec_b);
+        let dense = Session::on(&p, &topo).algo(Algo::Deepca(cfg)).solve();
         assert!(
             dist.final_w.distance(&dense.final_w) < 1e-9,
             "engines disagree by {}",
             dist.final_w.distance(&dense.final_w)
         );
         // Metric traces agree too.
-        for (a, b) in rec_a.records.iter().zip(&rec_b.records) {
+        for (a, b) in rec_a.records.iter().zip(&dense.trace.records) {
             assert!((a.mean_tan_theta - b.mean_tan_theta).abs() < 1e-9 * (1.0 + a.mean_tan_theta));
             assert!((a.s_deviation - b.s_deviation).abs() < 1e-9 * (1.0 + a.s_deviation));
         }

@@ -16,11 +16,12 @@
 //!   DeEPCA epochs over live data streams ([`crate::stream`]): per-epoch
 //!   covariance refresh, constant round budget, tracking metrics against
 //!   the drifting oracle subspace.
-//! - **Legacy leader** ([`leader`]) — deprecated `Leader`/`Algorithm`
-//!   wrappers around [`session::Session`], kept for one release.
+//!
+//! (The legacy `Leader`/`Algorithm` wrappers and the per-algorithm
+//! `run_dense`/`run_with` shims were removed once everything routed
+//! through [`session::Session`].)
 
 pub mod agent;
 pub mod session;
 pub mod online;
-pub mod leader;
 pub mod distributed;

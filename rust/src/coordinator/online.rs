@@ -240,13 +240,20 @@ impl<'a> OnlineSession<'a> {
         let mut comm = CommStats::default();
         let mut prev_w: Option<AgentStack> = None;
         let mut final_w: Option<AgentStack> = None;
+        // Epoch-persistent covariance buffers: refreshed in place each
+        // epoch (`covariance_into`), lent to the epoch's `Problem`, and
+        // reclaimed after the inner run — the refresh itself allocates
+        // nothing (the `Problem`'s ground-truth eigensolve still does).
+        let mut locals: Vec<Mat> = (0..m).map(|_| Mat::zeros(d, d)).collect();
 
         for e in 0..self.cfg.epochs {
             for (j, tracker) in trackers.iter_mut().enumerate() {
                 tracker.observe(&source.next_batch(j));
             }
-            let locals: Vec<Mat> = trackers.iter().map(|t| t.covariance()).collect();
-            let problem = Problem::new(locals, k, &scenario);
+            for (tracker, local) in trackers.iter().zip(locals.iter_mut()) {
+                tracker.covariance_into(local);
+            }
+            let problem = Problem::new(std::mem::take(&mut locals), k, &scenario);
 
             let epoch_topo = match self.schedule.as_mut() {
                 Some(s) => s.topology_at_epoch(e as u64),
@@ -302,6 +309,8 @@ impl<'a> OnlineSession<'a> {
                 prev_w = None;
             }
             final_w = Some(rep.final_w);
+            // Reclaim the covariance buffers for the next epoch.
+            locals = problem.locals;
             source.advance();
         }
 

@@ -22,8 +22,8 @@
 //! println!("{}: tanθ = {:.3e} ({})", report.algo, report.final_tan_theta, report.comm);
 //! ```
 //!
-//! The session owns the plumbing the old `Leader`, experiments, benches,
-//! and CLI each re-wired by hand: engine selection (backends +
+//! The session owns the plumbing the experiments, benches, and CLI used
+//! to re-wire by hand: engine selection (backends +
 //! communicators), the shared driver loop with fresh-error
 //! [`StopCriteria`], recording, observers, warm starts from a prior
 //! [`SolveReport`], and the Rayleigh eigenvalue post-step.
@@ -447,6 +447,21 @@ mod tests {
             est.values()[0],
             p.truth.values[0]
         );
+    }
+
+    #[test]
+    fn non_deepca_distributed_falls_back_to_threaded() {
+        // Only DeEPCA has a per-agent-thread engine; other algorithms
+        // asked to run distributed must fall back to Threaded and say so
+        // in the report (coverage inherited from the removed Leader).
+        let (p, topo) = setup(620);
+        let report = Session::on(&p, &topo)
+            .algo(Algo::Depca(DepcaConfig { max_iters: 10, ..Default::default() }))
+            .engine(Engine::Distributed)
+            .solve();
+        assert_eq!(report.engine, Engine::Threaded);
+        assert_eq!(report.iters, 10);
+        assert!(report.final_tan_theta.is_finite());
     }
 
     #[test]

@@ -94,6 +94,7 @@ pub mod prelude {
     pub use crate::algo::solver::{
         Algo, Engine, SolveReport, Solver, SolverState, StepReport, StopCriteria, StopReason,
     };
+    pub use crate::algo::workspace::SolverWorkspace;
     pub use crate::consensus::fastmix::FastMix;
     pub use crate::consensus::simnet::{SimConfig, SimNet};
     pub use crate::coordinator::online::{EpochRecord, OnlineConfig, OnlineReport, OnlineSession};
@@ -101,10 +102,9 @@ pub mod prelude {
     pub use crate::graph::dynamic::TopologySchedule;
     pub use crate::stream::cov::{CovTracker, Forgetting};
     pub use crate::stream::source::{Drift, StreamParams, StreamSource, SyntheticStream};
-    #[allow(deprecated)]
-    pub use crate::coordinator::leader::{Algorithm, EngineKind, Leader};
     pub use crate::graph::gossip::GossipMatrix;
     pub use crate::graph::topology::Topology;
+    pub use crate::linalg::qr::QrWorkspace;
     pub use crate::linalg::Mat;
     pub use crate::util::rng::Rng;
 }

@@ -145,50 +145,104 @@ impl Mat {
 
     // ----------------------------------------------------------- arithmetic
 
+    /// Overwrite `self` with `other`'s contents (shapes must match).
+    /// Never reallocates — the workhorse of the `_into` hot paths.
+    #[inline]
+    pub fn copy_from(&mut self, other: &Mat) {
+        assert_eq!(self.shape(), other.shape(), "copy_from shape mismatch");
+        self.data.copy_from_slice(&other.data);
+    }
+
     /// Transpose.
     pub fn t(&self) -> Mat {
         let mut out = Mat::zeros(self.cols, self.rows);
+        self.transpose_into(&mut out);
+        out
+    }
+
+    /// Transpose into a caller-owned buffer (`out` must be cols×rows).
+    pub fn transpose_into(&self, out: &mut Mat) {
+        assert_eq!(
+            out.shape(),
+            (self.cols, self.rows),
+            "transpose_into output shape mismatch"
+        );
         for i in 0..self.rows {
             for j in 0..self.cols {
                 out[(j, i)] = self[(i, j)];
             }
         }
-        out
     }
 
     /// Matrix product `self * other`.
     ///
+    /// Thin wrapper over [`Mat::matmul_into`] (allocates the output);
+    /// the two are bit-identical by construction.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        let mut out = Mat::zeros(self.rows, other.cols);
+        self.matmul_into(other, &mut out);
+        out
+    }
+
+    /// Matrix product into a caller-owned buffer: `out = self * other`.
+    /// `out` is fully overwritten (no need to zero it first) and never
+    /// reallocated — this is the zero-allocation hot path every solver
+    /// iteration runs on.
+    ///
     /// The DeEPCA hot path is `A(d×d) @ W(d×k)` with k ≤ 16: that case
     /// dispatches to a register-blocked kernel (`M` output accumulators
     /// live in registers, one streaming pass over the A row and the B
-    /// panel — ~8× the naive i-k-j loop, see EXPERIMENTS.md §Perf).
-    /// Wider results fall back to the cache-friendly i-k-j order.
-    pub fn matmul(&self, other: &Mat) -> Mat {
+    /// panel — ~8× the naive i-k-j loop, see EXPERIMENTS.md §Perf);
+    /// 9–16 columns run as two ≤8-wide panels directly into the output
+    /// (no column-slice materialization). Wider results fall back to the
+    /// cache-friendly i-k-j order.
+    pub fn matmul_into(&self, other: &Mat, out: &mut Mat) {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        assert_eq!(
+            out.shape(),
+            (self.rows, other.cols),
+            "matmul_into output shape mismatch"
+        );
         let m = other.cols;
         match m {
-            1 => self.matmul_thin::<1>(other),
-            2 => self.matmul_thin::<2>(other),
-            3 => self.matmul_thin::<3>(other),
-            4 => self.matmul_thin::<4>(other),
-            5 => self.matmul_thin::<5>(other),
-            6 => self.matmul_thin::<6>(other),
-            7 => self.matmul_thin::<7>(other),
-            8 => self.matmul_thin::<8>(other),
-            9..=16 => self.matmul_thin_pair(other),
-            _ => self.matmul_wide(other),
+            0 => {}
+            1..=8 => self.matmul_thin_panel_into(other, 0, m, out),
+            9..=16 => {
+                let half = m / 2;
+                self.matmul_thin_panel_into(other, 0, half, out);
+                self.matmul_thin_panel_into(other, half, m - half, out);
+            }
+            _ => self.matmul_wide_into(other, out),
         }
     }
 
-    /// Register-blocked kernel for `cols == M` (compile-time width):
-    /// `M` output accumulators live in registers, one streaming pass
-    /// over the A row per output row. (A transposed-panel dot-product
-    /// variant with 4-wide unrolling was measured 10–25% *slower* at
-    /// these shapes — see EXPERIMENTS.md §Perf — and reverted.)
-    fn matmul_thin<const M: usize>(&self, other: &Mat) -> Mat {
+    /// Dispatch one ≤8-wide panel to the monomorphized thin kernel:
+    /// B columns `col0 .. col0+width` into the same output columns.
+    fn matmul_thin_panel_into(&self, other: &Mat, col0: usize, width: usize, out: &mut Mat) {
+        match width {
+            1 => self.matmul_thin_into::<1>(other, col0, out),
+            2 => self.matmul_thin_into::<2>(other, col0, out),
+            3 => self.matmul_thin_into::<3>(other, col0, out),
+            4 => self.matmul_thin_into::<4>(other, col0, out),
+            5 => self.matmul_thin_into::<5>(other, col0, out),
+            6 => self.matmul_thin_into::<6>(other, col0, out),
+            7 => self.matmul_thin_into::<7>(other, col0, out),
+            8 => self.matmul_thin_into::<8>(other, col0, out),
+            _ => unreachable!("thin panels are 1..=8 wide"),
+        }
+    }
+
+    /// Register-blocked kernel for an `M`-wide panel (compile-time
+    /// width): `M` output accumulators live in registers, one streaming
+    /// pass over the A row per output row. (A transposed-panel
+    /// dot-product variant with 4-wide unrolling was measured 10–25%
+    /// *slower* at these shapes — see EXPERIMENTS.md §Perf — and
+    /// reverted.)
+    fn matmul_thin_into<const M: usize>(&self, other: &Mat, col0: usize, out: &mut Mat) {
         let (n, k) = (self.rows, self.cols);
-        debug_assert_eq!(other.cols, M);
-        let mut out = Mat::zeros(n, M);
+        let bn = other.cols;
+        let on = out.cols;
+        debug_assert!(col0 + M <= bn && col0 + M <= on);
         // Two A-rows per pass: 2·M independent accumulator chains hide
         // FMA latency, and each B row is loaded once for both outputs.
         let mut i = 0;
@@ -200,51 +254,44 @@ impl Mat {
             for p in 0..k {
                 let a0 = arow0[p];
                 let a1 = arow1[p];
-                let brow = &other.data[p * M..(p + 1) * M];
+                let brow = &other.data[p * bn + col0..p * bn + col0 + M];
                 for j in 0..M {
                     acc0[j] += a0 * brow[j];
                     acc1[j] += a1 * brow[j];
                 }
             }
-            out.data[i * M..(i + 1) * M].copy_from_slice(&acc0);
-            out.data[(i + 1) * M..(i + 2) * M].copy_from_slice(&acc1);
+            out.data[i * on + col0..i * on + col0 + M].copy_from_slice(&acc0);
+            out.data[(i + 1) * on + col0..(i + 1) * on + col0 + M].copy_from_slice(&acc1);
             i += 2;
         }
         if i < n {
             let arow = self.row(i);
             let mut acc = [0.0f64; M];
             for (p, &a) in arow.iter().enumerate().take(k) {
-                let brow = &other.data[p * M..(p + 1) * M];
+                let brow = &other.data[p * bn + col0..p * bn + col0 + M];
                 for j in 0..M {
                     acc[j] += a * brow[j];
                 }
             }
-            out.data[i * M..(i + 1) * M].copy_from_slice(&acc);
+            out.data[i * on + col0..i * on + col0 + M].copy_from_slice(&acc);
         }
-        out
     }
 
-    /// 9..=16 columns: split into two ≤8-wide passes (keeps accumulators
-    /// in registers without 16 monomorphized variants).
-    fn matmul_thin_pair(&self, other: &Mat) -> Mat {
-        let half = other.cols / 2;
-        let left = self.matmul(&other.cols_range(0, half));
-        let right = self.matmul(&other.cols_range(half, other.cols));
-        let mut out = Mat::zeros(self.rows, other.cols);
-        for i in 0..self.rows {
-            out.row_mut(i)[..half].copy_from_slice(left.row(i));
-            out.row_mut(i)[half..].copy_from_slice(right.row(i));
-        }
-        out
-    }
-
-    /// General i-k-j product (contiguous FMA inner loop).
+    /// General i-k-j product (contiguous FMA inner loop), allocating.
+    #[cfg(test)]
     fn matmul_wide(&self, other: &Mat) -> Mat {
+        let mut out = Mat::zeros(self.rows, other.cols);
+        self.matmul_wide_into(other, &mut out);
+        out
+    }
+
+    /// General i-k-j product into a caller-owned buffer.
+    fn matmul_wide_into(&self, other: &Mat, out: &mut Mat) {
         let (n, k, m) = (self.rows, self.cols, other.cols);
-        let mut out = Mat::zeros(n, m);
+        out.data.fill(0.0);
         for i in 0..n {
-            let arow = self.row(i);
-            let orow = out.row_mut(i);
+            let arow = &self.data[i * k..(i + 1) * k];
+            let orow = &mut out.data[i * m..(i + 1) * m];
             for (p, &a) in arow.iter().enumerate().take(k) {
                 if a == 0.0 {
                     continue; // sparse-ish operands (binary features)
@@ -255,14 +302,26 @@ impl Mat {
                 }
             }
         }
-        out
     }
 
     /// `selfᵀ * other` without materializing the transpose.
     pub fn t_matmul(&self, other: &Mat) -> Mat {
+        let mut out = Mat::zeros(self.cols, other.cols);
+        self.t_matmul_into(other, &mut out);
+        out
+    }
+
+    /// `out = selfᵀ * other` into a caller-owned buffer (`out` is fully
+    /// overwritten, never reallocated).
+    pub fn t_matmul_into(&self, other: &Mat, out: &mut Mat) {
         assert_eq!(self.rows, other.rows, "t_matmul shape mismatch");
-        let (n, k, m) = (self.rows, self.cols, other.cols);
-        let mut out = Mat::zeros(k, m);
+        assert_eq!(
+            out.shape(),
+            (self.cols, other.cols),
+            "t_matmul_into output shape mismatch"
+        );
+        let (n, m) = (self.rows, other.cols);
+        out.data.fill(0.0);
         for p in 0..n {
             let arow = self.row(p);
             let brow = other.row(p);
@@ -276,7 +335,6 @@ impl Mat {
                 }
             }
         }
-        out
     }
 
     /// Matrix-vector product.
@@ -292,6 +350,17 @@ impl Mat {
         assert_eq!(self.shape(), other.shape());
         for (a, &b) in self.data.iter_mut().zip(&other.data) {
             *a += alpha * b;
+        }
+    }
+
+    /// `out = self + alpha · other` into a caller-owned buffer (the
+    /// allocation-free form of `&a + &b` / `&a - &b`; `out` is fully
+    /// overwritten).
+    pub fn add_scaled_into(&self, alpha: f64, other: &Mat, out: &mut Mat) {
+        assert_eq!(self.shape(), other.shape(), "add_scaled shape mismatch");
+        assert_eq!(self.shape(), out.shape(), "add_scaled_into output shape mismatch");
+        for ((o, &a), &b) in out.data.iter_mut().zip(&self.data).zip(&other.data) {
+            *o = a + alpha * b;
         }
     }
 
@@ -363,8 +432,8 @@ impl std::ops::IndexMut<(usize, usize)> for Mat {
 impl Add for &Mat {
     type Output = Mat;
     fn add(self, rhs: &Mat) -> Mat {
-        let mut out = self.clone();
-        out.axpy(1.0, rhs);
+        let mut out = Mat::zeros(self.rows, self.cols);
+        self.add_scaled_into(1.0, rhs, &mut out);
         out
     }
 }
@@ -372,8 +441,8 @@ impl Add for &Mat {
 impl Sub for &Mat {
     type Output = Mat;
     fn sub(self, rhs: &Mat) -> Mat {
-        let mut out = self.clone();
-        out.axpy(-1.0, rhs);
+        let mut out = Mat::zeros(self.rows, self.cols);
+        self.add_scaled_into(-1.0, rhs, &mut out);
         out
     }
 }
@@ -539,6 +608,69 @@ mod tests {
                 "cols={m}"
             );
         }
+    }
+
+    #[test]
+    fn matmul_into_bit_identical_with_dirty_buffer() {
+        // The `_into` form must fully overwrite a garbage-filled output
+        // and agree bit-for-bit with the allocating form, across every
+        // kernel dispatch band (thin, split-panel, wide).
+        let mut r = Rng::seed_from(61);
+        for m in [1usize, 3, 8, 9, 11, 16, 17, 33] {
+            let a = Mat::randn(19, 27, &mut r);
+            let b = Mat::randn(27, m, &mut r);
+            let want = a.matmul(&b);
+            let mut out = Mat::from_fn(19, m, |_, _| f64::NAN);
+            a.matmul_into(&b, &mut out);
+            assert!(
+                want.data().iter().zip(out.data()).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "cols={m}"
+            );
+        }
+    }
+
+    #[test]
+    fn t_matmul_and_transpose_into_bit_identical() {
+        let mut r = Rng::seed_from(62);
+        let a = Mat::randn(13, 7, &mut r);
+        let b = Mat::randn(13, 4, &mut r);
+        let want = a.t_matmul(&b);
+        let mut out = Mat::from_fn(7, 4, |_, _| f64::NAN);
+        a.t_matmul_into(&b, &mut out);
+        assert_eq!(want, out);
+
+        let want_t = a.t();
+        let mut tout = Mat::from_fn(7, 13, |_, _| f64::NAN);
+        a.transpose_into(&mut tout);
+        assert_eq!(want_t, tout);
+    }
+
+    #[test]
+    fn add_scaled_into_and_copy_from() {
+        let mut r = Rng::seed_from(63);
+        let a = Mat::randn(5, 4, &mut r);
+        let b = Mat::randn(5, 4, &mut r);
+        let mut out = Mat::from_fn(5, 4, |_, _| f64::NAN);
+        a.add_scaled_into(-2.5, &b, &mut out);
+        let want = {
+            let mut w = a.clone();
+            w.axpy(-2.5, &b);
+            w
+        };
+        assert_eq!(want, out);
+
+        let mut dst = Mat::zeros(5, 4);
+        dst.copy_from(&a);
+        assert_eq!(dst, a);
+    }
+
+    #[test]
+    #[should_panic(expected = "output shape mismatch")]
+    fn matmul_into_rejects_wrong_output_shape() {
+        let a = Mat::zeros(3, 2);
+        let b = Mat::zeros(2, 4);
+        let mut out = Mat::zeros(3, 3);
+        a.matmul_into(&b, &mut out);
     }
 
     #[test]

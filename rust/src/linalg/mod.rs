@@ -8,8 +8,14 @@
 //! implements the needed kernels from scratch with care for the sizes the
 //! paper uses (d ≤ 300, k ≤ 16, m = 50):
 //!
-//! - [`Mat`] — row-major `f64` matrix with cache-blocked matmul.
-//! - [`qr`] — Householder thin QR with the positive-diagonal-R convention.
+//! - [`Mat`] — row-major `f64` matrix with cache-blocked matmul. Every
+//!   hot-path kernel has a buffer-reusing `_into` form (`matmul_into`,
+//!   `t_matmul_into`, `transpose_into`, `add_scaled_into`, `copy_from`)
+//!   that writes into a caller-owned output; the allocating methods are
+//!   thin wrappers over them, bit-identical by construction.
+//! - [`qr`] — Householder thin QR with the positive-diagonal-R
+//!   convention; `qr_into` + [`qr::QrWorkspace`] is the allocation-free
+//!   form the solver loops run on.
 //! - [`eig`] — cyclic Jacobi eigensolver for symmetric matrices.
 //! - [`solve`] — LU with partial pivoting; triangular and general solves.
 //! - [`norms`] — spectral norm / σ_min via power iteration + Jacobi.
@@ -23,3 +29,4 @@ pub mod norms;
 pub mod angles;
 
 pub use matrix::Mat;
+pub use qr::QrWorkspace;

@@ -12,6 +12,38 @@
 
 use super::matrix::Mat;
 
+/// Reusable scratch for [`qr_into`]: the compact Householder working
+/// matrix (R in the upper triangle, reflector vectors below) and the
+/// reflector scalars β.
+///
+/// One workspace serves any number of sequential factorizations; the
+/// buffers are (re)allocated only when the input shape changes, so a
+/// solver factoring the same d×k iterate every power iteration performs
+/// zero heap allocation after the first call.
+#[derive(Clone, Debug)]
+pub struct QrWorkspace {
+    h: Mat,
+    betas: Vec<f64>,
+}
+
+impl QrWorkspace {
+    /// Workspace pre-sized for `rows × cols` inputs.
+    pub fn new(rows: usize, cols: usize) -> Self {
+        QrWorkspace { h: Mat::zeros(rows, cols), betas: vec![0.0; cols] }
+    }
+
+    /// Grow/shrink to fit an `rows × cols` factorization (no-op when the
+    /// shape already matches — the steady-state path).
+    fn ensure(&mut self, rows: usize, cols: usize) {
+        if self.h.shape() != (rows, cols) {
+            self.h = Mat::zeros(rows, cols);
+        }
+        if self.betas.len() != cols {
+            self.betas = vec![0.0; cols];
+        }
+    }
+}
+
 /// Thin QR: returns (Q: m×n with orthonormal columns, R: n×n upper
 /// triangular with non-negative diagonal) such that `A = Q·R`.
 ///
@@ -33,12 +65,30 @@ pub fn thin_qr(a: &Mat) -> (Mat, Mat) {
 /// off}.
 pub fn thin_qr_with(a: &Mat, canonical: bool) -> (Mat, Mat) {
     let (m, n) = a.shape();
+    let mut q = Mat::zeros(m, n);
+    let mut r = Mat::zeros(n, n);
+    let mut ws = QrWorkspace::new(m, n);
+    qr_into(a, canonical, &mut q, &mut r, &mut ws);
+    (q, r)
+}
+
+/// Thin QR into caller-owned buffers: `q` (m×n) and `r` (n×n) are fully
+/// overwritten, `ws` holds the Householder scratch. No allocation when
+/// the workspace already fits the input shape — the form every solver
+/// iteration runs on. Bit-identical to [`thin_qr_with`] (which is a thin
+/// wrapper over this).
+pub fn qr_into(a: &Mat, canonical: bool, q: &mut Mat, r: &mut Mat, ws: &mut QrWorkspace) {
+    let (m, n) = a.shape();
     assert!(m >= n, "thin_qr needs rows >= cols, got {m}x{n}");
+    assert_eq!(q.shape(), (m, n), "qr_into Q output shape mismatch");
+    assert_eq!(r.shape(), (n, n), "qr_into R output shape mismatch");
+    ws.ensure(m, n);
 
     // Working copy that becomes R in its upper triangle; Householder
     // vectors are stored below the diagonal (classic compact form).
-    let mut h = a.clone();
-    let mut betas = vec![0.0f64; n];
+    let h = &mut ws.h;
+    h.copy_from(a);
+    let betas = &mut ws.betas;
 
     for j in 0..n {
         // Householder vector for column j, rows j..m.
@@ -86,7 +136,7 @@ pub fn thin_qr_with(a: &Mat, canonical: bool) -> (Mat, Mat) {
     }
 
     // Extract R (upper triangle).
-    let mut r = Mat::zeros(n, n);
+    r.data_mut().fill(0.0);
     for i in 0..n {
         for j in i..n {
             r[(i, j)] = h[(i, j)];
@@ -95,7 +145,7 @@ pub fn thin_qr_with(a: &Mat, canonical: bool) -> (Mat, Mat) {
 
     // Form thin Q by applying reflectors to the first n columns of I,
     // in reverse order.
-    let mut q = Mat::zeros(m, n);
+    q.data_mut().fill(0.0);
     for j in 0..n {
         q[(j, j)] = 1.0;
     }
@@ -131,8 +181,6 @@ pub fn thin_qr_with(a: &Mat, canonical: bool) -> (Mat, Mat) {
             }
         }
     }
-
-    (q, r)
 }
 
 /// Orthonormal basis of the columns of `A` (the Q factor, canonical signs).
@@ -236,6 +284,26 @@ mod tests {
         let (q, r) = thin_qr(&b);
         assert!(q.is_finite());
         assert!(r.is_finite());
+    }
+
+    #[test]
+    fn qr_into_bit_identical_and_workspace_reusable() {
+        // One workspace across shrinking/growing shapes and dirty output
+        // buffers: every factorization must agree bit-for-bit with the
+        // allocating path.
+        let mut rng = Rng::seed_from(17);
+        let mut ws = QrWorkspace::new(1, 1);
+        for &(m, n) in &[(8, 3), (30, 5), (4, 4), (30, 5), (12, 2)] {
+            let a = Mat::randn(m, n, &mut rng);
+            for canonical in [true, false] {
+                let (wq, wr) = thin_qr_with(&a, canonical);
+                let mut q = Mat::from_fn(m, n, |_, _| f64::NAN);
+                let mut r = Mat::from_fn(n, n, |_, _| f64::NAN);
+                qr_into(&a, canonical, &mut q, &mut r, &mut ws);
+                assert_eq!(wq, q, "{m}x{n} canonical={canonical}");
+                assert_eq!(wr, r, "{m}x{n} canonical={canonical}");
+            }
+        }
     }
 
     #[test]

@@ -30,6 +30,10 @@ pub enum Forgetting {
 
 /// Incremental local covariance (uncentered second moment, matching the
 /// repo-wide Gram convention).
+///
+/// Steady-state updates are allocation-free: exponential-mode batches
+/// accumulate through a persistent d×d Gram scratch, and a full sliding
+/// window recycles the expired row's buffer for the arriving row.
 #[derive(Clone, Debug)]
 pub struct CovTracker {
     d: usize,
@@ -42,6 +46,8 @@ pub struct CovTracker {
     window: VecDeque<Vec<f64>>,
     /// Total rows ever observed.
     seen: u64,
+    /// Batch-Gram scratch (exponential mode; empty in window mode).
+    gram: Mat,
 }
 
 /// `acc += sign · v vᵀ`.
@@ -70,6 +76,10 @@ impl CovTracker {
             }
             Forgetting::SlidingWindow(n) => assert!(n >= 1, "window must hold at least one row"),
         }
+        let gram = match mode {
+            Forgetting::Exponential(_) => Mat::zeros(d, d),
+            Forgetting::SlidingWindow(_) => Mat::zeros(0, 0),
+        };
         CovTracker {
             d,
             mode,
@@ -77,6 +87,7 @@ impl CovTracker {
             weight: 0.0,
             window: VecDeque::new(),
             seen: 0,
+            gram,
         }
     }
 
@@ -123,16 +134,24 @@ impl CovTracker {
                     self.raw.scale(beta);
                     self.weight *= beta;
                 }
-                self.raw.axpy(1.0, &rows.t_matmul(rows));
+                // Batch Gram through the persistent scratch (no temp).
+                rows.t_matmul_into(rows, &mut self.gram);
+                self.raw.axpy(1.0, &self.gram);
                 self.weight += n as f64;
             }
             Forgetting::SlidingWindow(cap) => {
                 for r in 0..n {
-                    if self.window.len() == cap {
-                        let old = self.window.pop_front().expect("window non-empty");
+                    let row = rows.row(r);
+                    // Recycle the expired row's buffer for the arriving
+                    // row — a full window updates with zero allocation.
+                    let v = if self.window.len() == cap {
+                        let mut old = self.window.pop_front().expect("window non-empty");
                         rank_one(&mut self.raw, &old, -1.0);
-                    }
-                    let v = rows.row(r).to_vec();
+                        old.copy_from_slice(row);
+                        old
+                    } else {
+                        row.to_vec()
+                    };
                     rank_one(&mut self.raw, &v, 1.0);
                     self.window.push_back(v);
                 }
@@ -143,11 +162,20 @@ impl CovTracker {
     /// The current normalized covariance `(1/W) Σ w_i v_i v_iᵀ`
     /// (symmetrized). Panics before any data arrives.
     pub fn covariance(&self) -> Mat {
+        let mut c = Mat::zeros(self.d, self.d);
+        self.covariance_into(&mut c);
+        c
+    }
+
+    /// Write the normalized covariance into a caller-owned d×d buffer
+    /// (the allocation-free form the per-epoch online refresh uses).
+    /// Panics before any data arrives.
+    pub fn covariance_into(&self, out: &mut Mat) {
         let w = self.weight();
         assert!(w > 0.0, "covariance requested before any data");
-        let mut c = self.raw.scaled(1.0 / w);
-        c.symmetrize();
-        c
+        out.copy_from(&self.raw);
+        out.scale(1.0 / w);
+        out.symmetrize();
     }
 }
 
@@ -286,6 +314,20 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn covariance_into_matches_allocating_form() {
+        let mut rng = Rng::seed_from(215);
+        let rows = random_rows(40, 5, &mut rng);
+        for mode in [Forgetting::Exponential(0.8), Forgetting::SlidingWindow(16)] {
+            let mut t = CovTracker::new(5, mode);
+            t.observe(&rows);
+            let want = t.covariance();
+            let mut out = Mat::from_fn(5, 5, |_, _| f64::NAN);
+            t.covariance_into(&mut out);
+            assert_eq!(want, out, "{mode:?}");
+        }
     }
 
     #[test]

@@ -1,0 +1,138 @@
+//! Zero-allocation audit for the solver hot paths.
+//!
+//! The acceptance bar of the workspace refactor: `Solver::step` for all
+//! four algorithms performs **zero heap allocation after the first
+//! iteration** (warm-up populates the workspace, engine ping-pong
+//! buffers, and product stacks; every later step runs entirely through
+//! the `_into` kernels over those buffers).
+//!
+//! Method: a counting `#[global_allocator]` wrapping `System`. This file
+//! deliberately holds a **single** `#[test]` so no sibling test thread
+//! allocates concurrently while a window is being measured (the harness
+//! main thread is blocked joining the test thread during measurement).
+//!
+//! Engines audited: `Dense` (the sweep workhorse) for all four
+//! algorithms, plus the ideal `Sim` engine for DeEPCA (pins the SimNet
+//! buffer reuse). The threaded engines are excluded by design — they
+//! allocate per *message* to model real serialization, and thread spawn
+//! itself allocates.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocations() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+use deepca::algo::centralized::CentralizedConfig;
+use deepca::algo::deepca::DeepcaConfig;
+use deepca::algo::depca::{DepcaConfig, KPolicy};
+use deepca::algo::local_power::LocalPowerConfig;
+use deepca::algo::problem::Problem;
+use deepca::algo::solver::{Algo, Engine, Solver};
+use deepca::consensus::simnet::SimConfig;
+use deepca::coordinator::session::Session;
+use deepca::data::synthetic;
+use deepca::graph::topology::Topology;
+use deepca::util::rng::Rng;
+
+/// Warm a solver with `warmup` steps, then assert that `measured`
+/// further steps allocate nothing.
+fn audit(label: &str, solver: &mut dyn Solver, warmup: usize, measured: usize) {
+    for _ in 0..warmup {
+        let rep = solver.step();
+        assert!(rep.finite, "{label}: diverged during warm-up");
+    }
+    let before = allocations();
+    let mut finite = true;
+    for _ in 0..measured {
+        finite &= solver.step().finite;
+    }
+    let delta = allocations() - before;
+    assert!(finite, "{label}: diverged during measurement");
+    assert_eq!(
+        delta, 0,
+        "{label}: {delta} heap allocations across {measured} post-warm-up steps \
+         (Solver::step must be allocation-free in steady state)"
+    );
+}
+
+#[test]
+fn solver_steps_are_allocation_free_after_warmup() {
+    let ds = synthetic::spiked_covariance(
+        400,
+        16,
+        &[12.0, 8.0, 5.0],
+        0.3,
+        &mut Rng::seed_from(931),
+    );
+    let problem = Problem::from_dataset(&ds, 8, 2);
+    let topo = Topology::erdos_renyi(8, 0.5, &mut Rng::seed_from(932));
+
+    let algos: Vec<(&str, Algo)> = vec![
+        (
+            "deepca/dense",
+            Algo::Deepca(DeepcaConfig { consensus_rounds: 8, max_iters: 64, ..Default::default() }),
+        ),
+        (
+            "depca/dense",
+            Algo::Depca(DepcaConfig {
+                k_policy: KPolicy::Fixed(8),
+                max_iters: 64,
+                ..Default::default()
+            }),
+        ),
+        (
+            "local-power/dense",
+            Algo::LocalPower(LocalPowerConfig { max_iters: 64, ..Default::default() }),
+        ),
+        (
+            "centralized",
+            Algo::Centralized(CentralizedConfig { max_iters: 64, ..Default::default() }),
+        ),
+    ];
+
+    for (label, algo) in &algos {
+        let mut solver = Session::on(&problem, &topo).algo(algo.clone()).build_solver();
+        // Two warm-up steps: the first populates lazily-built engine
+        // buffers, the second proves the steady state before measuring.
+        audit(label, &mut *solver, 2, 5);
+    }
+
+    // DeEPCA over the ideal SimNet: pins the simulator's persistent
+    // recursion buffers too.
+    let mut sim_solver = Session::on(&problem, &topo)
+        .algo(Algo::Deepca(DeepcaConfig {
+            consensus_rounds: 8,
+            max_iters: 64,
+            ..Default::default()
+        }))
+        .engine(Engine::Sim(SimConfig::ideal(0)))
+        .build_solver();
+    audit("deepca/sim-ideal", &mut *sim_solver, 2, 5);
+}

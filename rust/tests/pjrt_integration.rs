@@ -4,15 +4,12 @@
 //! Requires `make artifacts` (skips with a notice otherwise — the
 //! Makefile `test` target always builds artifacts first).
 
-// The PJRT backend is cross-checked against the legacy run shims on
-// purpose (they exercise the identical solver underneath).
-#![allow(deprecated)]
-
 use deepca::algo::backend::{PowerBackend, RustBackend};
-use deepca::algo::deepca as deepca_algo;
-use deepca::algo::deepca::DeepcaConfig;
+use deepca::algo::deepca::{DeepcaConfig, DeepcaSolver};
 use deepca::algo::metrics::RunRecorder;
 use deepca::algo::problem::Problem;
+use deepca::algo::solver::{drive, Algo, StopCriteria};
+use deepca::coordinator::session::Session;
 use deepca::algo::sign_adjust::sign_adjust;
 use deepca::consensus::comm::DenseComm;
 use deepca::data::synthetic;
@@ -172,22 +169,35 @@ fn deepca_through_pjrt_backend_converges_and_matches() {
     let topo = Topology::erdos_renyi(4, 0.8, &mut Rng::seed_from(306));
     let cfg = DeepcaConfig { consensus_rounds: 8, max_iters: 40, ..Default::default() };
 
+    // External backend: build the step-wise solver directly over the
+    // borrowed PJRT backend and drive it with the shared loop.
     let pjrt = PjrtBackend::new(&ctx, &manifest, &problem.locals, 2).unwrap();
     let comm = DenseComm::from_topology(&topo);
+    let mut solver = DeepcaSolver::new(
+        &problem,
+        Box::new(&pjrt as &dyn PowerBackend),
+        Box::new(comm),
+        cfg.clone(),
+    );
     let mut rec_pjrt = RunRecorder::every_iteration();
-    let out_pjrt = deepca_algo::run_with(&problem, &pjrt, &comm, &cfg, &mut rec_pjrt);
+    let outcome = drive(
+        &mut solver,
+        &StopCriteria::max_iters(cfg.max_iters).with_tol(cfg.tol),
+        &mut rec_pjrt,
+        None,
+    );
+    let out_pjrt_diverged = outcome.reason == deepca::algo::solver::StopReason::Diverged;
+    let out_pjrt_final = outcome.final_tan_theta;
 
-    let mut rec_rust = RunRecorder::every_iteration();
-    let out_rust = deepca_algo::run_dense(&problem, &topo, &cfg, &mut rec_rust);
+    let out_rust = Session::on(&problem, &topo)
+        .algo(Algo::Deepca(cfg.clone()))
+        .solve();
+    let rec_rust = &out_rust.trace;
 
-    assert!(!out_pjrt.diverged);
+    assert!(!out_pjrt_diverged);
     // f32 artifact: expect convergence to f32-level floor, matching the
     // f64 run down to ~1e-5.
-    assert!(
-        out_pjrt.final_tan_theta < 1e-4,
-        "PJRT tanθ = {:.3e}",
-        out_pjrt.final_tan_theta
-    );
+    assert!(out_pjrt_final < 1e-4, "PJRT tanθ = {out_pjrt_final:.3e}");
     assert!(out_rust.final_tan_theta < 1e-10);
     // Traces agree while above the f32 floor.
     for (a, b) in rec_pjrt.records.iter().zip(&rec_rust.records).take(10) {

@@ -1,10 +1,6 @@
 //! Property tests (crate-local harness, `deepca::testing`) over the
 //! coordinator/consensus/linalg invariants the paper's analysis rests on.
 
-// One property drives DeEPCA through the legacy shim on purpose (shim
-// coverage; it runs the step-wise solver underneath).
-#![allow(deprecated)]
-
 use deepca::algo::problem::Problem;
 use deepca::algo::sign_adjust::sign_adjust;
 use deepca::consensus::comm::{Communicator, DenseComm};
@@ -319,12 +315,13 @@ fn prop_deepca_lemma1_consensus_decay() {
                 max_iters: 60,
                 ..Default::default()
             };
-            let mut rec = deepca::algo::metrics::RunRecorder::every_iteration();
-            let out = deepca::algo::deepca::run_dense(&problem, topo, &cfg, &mut rec);
+            let out = deepca::coordinator::session::Session::on(&problem, topo)
+                .algo(deepca::algo::solver::Algo::Deepca(cfg))
+                .solve();
             if out.diverged {
                 return Err("diverged".into());
             }
-            let last = rec.records.last().unwrap();
+            let last = out.trace.records.last().unwrap();
             if last.s_deviation > 1e-7 {
                 return Err(format!("S consensus error {:.3e}", last.s_deviation));
             }

@@ -1,0 +1,273 @@
+//! Kernel-parity property tests for the zero-allocation refactor.
+//!
+//! Every `_into` kernel must be **bit-identical** to its allocating
+//! counterpart across random shapes, including when the output buffer
+//! starts dirty (NaN-filled) — the workspace path may never depend on a
+//! zeroed landing pad. On top of the per-kernel pins, a full DeEPCA
+//! solve through the workspace-backed `DeepcaSolver` is replayed against
+//! a straight-line reference built only from the allocating kernels:
+//! the trajectories must agree exactly (distance 0.0), which pins that
+//! threading workspaces through the solver/consensus layers changed no
+//! arithmetic at all.
+
+use deepca::algo::deepca::{DeepcaConfig, DeepcaSolver};
+use deepca::algo::problem::Problem;
+use deepca::algo::sign_adjust::{sign_adjust, sign_adjust_into};
+use deepca::algo::solver::Solver;
+use deepca::consensus::AgentStack;
+use deepca::data::synthetic;
+use deepca::graph::gossip::GossipMatrix;
+use deepca::graph::topology::Topology;
+use deepca::linalg::qr::{qr_into, thin_qr_with, QrWorkspace};
+use deepca::linalg::Mat;
+use deepca::testing::{check, PropConfig};
+use deepca::util::rng::Rng;
+
+fn bits_equal(a: &Mat, b: &Mat) -> bool {
+    a.shape() == b.shape()
+        && a.data()
+            .iter()
+            .zip(b.data())
+            .all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+fn dirty(rows: usize, cols: usize) -> Mat {
+    Mat::from_fn(rows, cols, |_, _| f64::NAN)
+}
+
+#[test]
+fn prop_matmul_into_bit_identical() {
+    check(
+        "matmul_into == matmul (all dispatch bands)",
+        PropConfig { cases: 48, seed: 0xA11 },
+        |rng| {
+            let n = rng.range(1, 40);
+            let k = rng.range(1, 40);
+            // Hit every kernel band: thin (1..=8), split (9..=16), wide.
+            let m = match rng.below(3) {
+                0 => rng.range(1, 9),
+                1 => rng.range(9, 17),
+                _ => rng.range(17, 48),
+            };
+            (Mat::randn(n, k, rng), Mat::randn(k, m, rng))
+        },
+        |(a, b)| {
+            let want = a.matmul(b);
+            let mut out = dirty(a.rows(), b.cols());
+            a.matmul_into(b, &mut out);
+            if bits_equal(&want, &out) {
+                Ok(())
+            } else {
+                Err(format!("matmul_into deviates at {:?}@{:?}", a.shape(), b.shape()))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_t_matmul_transpose_add_scaled_into_bit_identical() {
+    check(
+        "t_matmul_into / transpose_into / add_scaled_into parity",
+        PropConfig { cases: 48, seed: 0xA12 },
+        |rng| {
+            let n = rng.range(1, 30);
+            let k = rng.range(1, 20);
+            let m = rng.range(1, 20);
+            let alpha = 4.0 * rng.normal();
+            (Mat::randn(n, k, rng), Mat::randn(n, m, rng), alpha)
+        },
+        |(a, b, alpha)| {
+            let want = a.t_matmul(b);
+            let mut out = dirty(a.cols(), b.cols());
+            a.t_matmul_into(b, &mut out);
+            if !bits_equal(&want, &out) {
+                return Err("t_matmul_into deviates".into());
+            }
+
+            let want_t = a.t();
+            let mut tout = dirty(a.cols(), a.rows());
+            a.transpose_into(&mut tout);
+            if !bits_equal(&want_t, &tout) {
+                return Err("transpose_into deviates".into());
+            }
+
+            // add_scaled_into vs clone-then-axpy (the old operator path).
+            let c = Mat::randn(a.rows(), a.cols(), &mut Rng::seed_from(7));
+            let want_ax = {
+                let mut w = a.clone();
+                w.axpy(*alpha, &c);
+                w
+            };
+            let mut aout = dirty(a.rows(), a.cols());
+            a.add_scaled_into(*alpha, &c, &mut aout);
+            if !bits_equal(&want_ax, &aout) {
+                return Err("add_scaled_into deviates".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_qr_into_bit_identical_with_shared_workspace() {
+    // One workspace shared across all cases (shapes vary case to case),
+    // exercising the resize path the solvers never hit but callers may.
+    let mut ws = QrWorkspace::new(1, 1);
+    check(
+        "qr_into == thin_qr_with (both sign conventions)",
+        PropConfig { cases: 40, seed: 0xA13 },
+        |rng| {
+            let n = rng.range(1, 10);
+            let m = rng.range(n, n + 30);
+            (Mat::randn(m, n, rng), rng.below(2) == 0)
+        },
+        |(a, canonical)| {
+            let (wq, wr) = thin_qr_with(a, *canonical);
+            let (m, n) = a.shape();
+            let mut q = dirty(m, n);
+            let mut r = dirty(n, n);
+            qr_into(a, *canonical, &mut q, &mut r, &mut ws);
+            if !bits_equal(&wq, &q) {
+                return Err(format!("Q deviates ({m}x{n}, canonical={canonical})"));
+            }
+            if !bits_equal(&wr, &r) {
+                return Err(format!("R deviates ({m}x{n}, canonical={canonical})"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sign_adjust_into_bit_identical() {
+    check(
+        "sign_adjust_into == sign_adjust",
+        PropConfig { cases: 32, seed: 0xA14 },
+        |rng| {
+            let d = rng.range(2, 25);
+            let k = rng.range(1, d.min(6));
+            (Mat::rand_orthonormal(d, k, rng), Mat::rand_orthonormal(d, k, rng))
+        },
+        |(w, w0)| {
+            let want = sign_adjust(w, w0);
+            let mut out = dirty(w.rows(), w.cols());
+            sign_adjust_into(w, w0, &mut out);
+            if bits_equal(&want, &out) {
+                Ok(())
+            } else {
+                Err("sign_adjust_into deviates".into())
+            }
+        },
+    );
+}
+
+/// Straight-line DeEPCA reference built exclusively from the allocating
+/// kernels (`matmul`, fresh FastMix buffers, `thin_qr`, `sign_adjust`),
+/// mirroring the documented recursion operation for operation.
+fn reference_deepca(problem: &Problem, topo: &Topology, cfg: &DeepcaConfig, iters: usize) -> AgentStack {
+    let gossip = GossipMatrix::from_laplacian(topo);
+    let eta = gossip.chebyshev_eta();
+    let one_plus_eta = 1.0 + eta;
+    let m = problem.m();
+    let w0 = problem.initial_w(cfg.init_seed);
+
+    let mut w: Vec<Mat> = vec![w0.clone(); m];
+    let mut s: Vec<Mat> = vec![w0.clone(); m];
+    let mut g_prev: Vec<Mat> = vec![w0.clone(); m];
+
+    for _t in 0..iters {
+        // (3.1) tracking update with freshly allocated products.
+        let g: Vec<Mat> = (0..m).map(|j| problem.locals[j].matmul(&w[j])).collect();
+        for j in 0..m {
+            s[j].axpy(1.0, &g[j]);
+            s[j].axpy(-1.0, &g_prev[j]);
+        }
+        g_prev = g;
+
+        // (3.2) FastMix with fresh buffers every round.
+        let mut prev = s.clone();
+        let mut cur = s.clone();
+        for _r in 0..cfg.consensus_rounds {
+            let mut next: Vec<Mat> = Vec::with_capacity(m);
+            for j in 0..m {
+                let mut acc = prev[j].scaled(-eta);
+                for (i, &wt) in gossip.weights.row(j).iter().enumerate() {
+                    if wt != 0.0 {
+                        acc.axpy(one_plus_eta * wt, &cur[i]);
+                    }
+                }
+                next.push(acc);
+            }
+            prev = cur;
+            cur = next;
+        }
+        s = cur;
+
+        // (3.3) allocating QR + sign adjustment.
+        for j in 0..m {
+            let q = deepca::linalg::qr::orth(&s[j]);
+            w[j] = sign_adjust(&q, &w0);
+        }
+    }
+    AgentStack::new(w)
+}
+
+/// The end-to-end pin: a full workspace-backed DeEPCA solve reproduces
+/// the allocating-kernel reference trajectory exactly (distance 0.0) at
+/// several checkpoints.
+#[test]
+fn deepca_workspace_solve_matches_allocating_reference_exactly() {
+    let ds = synthetic::spiked_covariance(
+        400,
+        16,
+        &[12.0, 8.0, 5.0],
+        0.3,
+        &mut Rng::seed_from(881),
+    );
+    let problem = Problem::from_dataset(&ds, 8, 2);
+    let topo = Topology::erdos_renyi(8, 0.5, &mut Rng::seed_from(882));
+    let cfg = DeepcaConfig { consensus_rounds: 7, max_iters: 24, ..Default::default() };
+
+    let mut solver = DeepcaSolver::dense(&problem, &topo, cfg.clone());
+    for checkpoint in [1usize, 5, 24] {
+        while solver.state().iter < checkpoint {
+            let rep = solver.step();
+            assert!(rep.finite);
+        }
+        let reference = reference_deepca(&problem, &topo, &cfg, checkpoint);
+        let dist = solver.state().w.distance(&reference);
+        assert!(
+            dist == 0.0,
+            "workspace trajectory deviates from the allocating reference \
+             at iteration {checkpoint} by {dist:e}"
+        );
+    }
+}
+
+/// Seeded-determinism harness (same shape as `solver_api.rs`): two
+/// workspace-backed solves from identical seeds must be bit-identical —
+/// buffer reuse may not introduce any run-to-run state.
+#[test]
+fn deepca_workspace_solve_is_bit_deterministic() {
+    let ds = synthetic::spiked_covariance(
+        300,
+        12,
+        &[9.0, 6.0],
+        0.2,
+        &mut Rng::seed_from(883),
+    );
+    let problem = Problem::from_dataset(&ds, 6, 2);
+    let topo = Topology::ring(6);
+    let cfg = DeepcaConfig { consensus_rounds: 6, max_iters: 20, ..Default::default() };
+
+    let run = || {
+        let mut solver = DeepcaSolver::dense(&problem, &topo, cfg.clone());
+        for _ in 0..20 {
+            solver.step();
+        }
+        solver.state().w.clone()
+    };
+    let a = run();
+    let b = run();
+    assert!(a.distance(&b) == 0.0, "repeat solve differs: {}", a.distance(&b));
+}

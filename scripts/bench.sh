@@ -2,19 +2,22 @@
 # Run the JSON-emitting bench targets and leave their machine-readable
 # results (BENCH_<suite>.json) at the repo root.
 #
-#   scripts/bench.sh              # streaming + microbench suites
+#   scripts/bench.sh              # every JSON suite
 #   scripts/bench.sh streaming    # one suite only
+#   DEEPCA_BENCH_SCALE=small scripts/bench.sh   # CI-sized figure benches
 #
 # Each bench binary writes its own BENCH_*.json via benchkit::Suite;
 # this script just sequences them from the repo root so the output
-# lands in a predictable place. CI uploads BENCH_*.json as artifacts.
+# lands in a predictable place. CI uploads BENCH_*.json as artifacts and
+# diffs the microbench suite against the committed baseline with
+# scripts/bench_diff (warn-only).
 
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 targets=("$@")
 if [ ${#targets[@]} -eq 0 ]; then
-    targets=(streaming microbench)
+    targets=(streaming microbench fig1_w8a fig2_a9a table_comm ablations)
 fi
 
 for t in "${targets[@]}"; do
