@@ -1,0 +1,99 @@
+"""Tests for scripts/bench_diff (stdlib only — runs in the CI python job).
+
+Covers the three exit paths: 0 (ok / improvements / explicit
+empty-baseline skip), 1 (median regression beyond threshold), and
+2 (usage errors).
+"""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[2]
+BENCH_DIFF = REPO / "scripts" / "bench_diff"
+
+
+def suite(tmp_path, name, medians):
+    path = tmp_path / f"{name}.json"
+    path.write_text(json.dumps({
+        "suite": name,
+        "results": [{"name": k, "median": v} for k, v in medians.items()],
+    }))
+    return path
+
+
+def run(*args):
+    return subprocess.run(
+        [sys.executable, str(BENCH_DIFF), *[str(a) for a in args]],
+        capture_output=True,
+        text=True,
+    )
+
+
+def test_identical_suites_pass(tmp_path):
+    base = suite(tmp_path, "base", {"matmul": 1.0, "qr": 2.0})
+    cur = suite(tmp_path, "cur", {"matmul": 1.0, "qr": 2.0})
+    proc = run(base, cur)
+    assert proc.returncode == 0, proc.stderr
+    assert "OK" in proc.stdout
+
+
+def test_regression_beyond_threshold_fails(tmp_path):
+    base = suite(tmp_path, "base", {"matmul": 1.0})
+    cur = suite(tmp_path, "cur", {"matmul": 1.5})
+    proc = run(base, cur)
+    assert proc.returncode == 1
+    assert "REGRESSED" in proc.stdout
+
+
+def test_improvements_always_pass(tmp_path):
+    base = suite(tmp_path, "base", {"matmul": 1.0})
+    cur = suite(tmp_path, "cur", {"matmul": 0.2})
+    proc = run(base, cur)
+    assert proc.returncode == 0
+    assert "improved" in proc.stdout
+
+
+def test_empty_baseline_skips_explicitly(tmp_path):
+    # The committed-baseline-starts-empty case: must take the distinct
+    # "skipping" path (announced, exit 0), not silently pass a
+    # comparison over zero shared benchmarks.
+    base = suite(tmp_path, "base", {})
+    cur = suite(tmp_path, "cur", {"matmul": 1.0})
+    proc = run(base, cur)
+    assert proc.returncode == 0, proc.stderr
+    assert "baseline empty" in proc.stdout
+    assert "skipping" in proc.stdout
+    assert "OK" not in proc.stdout
+
+
+def test_empty_current_is_not_the_skip_path(tmp_path):
+    # Only an empty *baseline* skips; an armed baseline against an empty
+    # current run reports the missing benchmarks and passes normally.
+    base = suite(tmp_path, "base", {"matmul": 1.0})
+    cur = suite(tmp_path, "cur", {})
+    proc = run(base, cur)
+    assert proc.returncode == 0
+    assert "baseline empty" not in proc.stdout
+    assert "only in baseline" in proc.stdout
+
+
+def test_custom_threshold_both_forms(tmp_path):
+    base = suite(tmp_path, "base", {"matmul": 1.0})
+    cur = suite(tmp_path, "cur", {"matmul": 1.3})
+    assert run(base, cur, "--threshold", "0.5").returncode == 0
+    assert run(base, cur, "--threshold=0.5").returncode == 0
+    assert run(base, cur, "--threshold", "0.1").returncode == 1
+
+
+def test_unknown_flag_is_usage_error(tmp_path):
+    base = suite(tmp_path, "base", {"matmul": 1.0})
+    proc = run(base, base, "--bogus")
+    assert proc.returncode == 2
+
+
+def test_unreadable_file_is_usage_error(tmp_path):
+    base = suite(tmp_path, "base", {"matmul": 1.0})
+    proc = run(base, tmp_path / "missing.json")
+    assert proc.returncode == 2

@@ -10,7 +10,9 @@
 //! the repo root; `scripts/bench.sh` invokes this and CI uploads the
 //! JSON as an artifact.
 
-use deepca::algo::backend::{ParallelBackend, PowerBackend, RustBackend};
+use deepca::algo::backend::{PowerBackend, RustBackend};
+use deepca::exec::Executor;
+use std::sync::Arc;
 use deepca::algo::deepca::DeepcaConfig;
 use deepca::algo::metrics::RunRecorder;
 use deepca::algo::problem::Problem;
@@ -116,8 +118,38 @@ fn main() {
     let ws = AgentStack::replicate(50, &problem.initial_w(1));
     let seq = RustBackend::new(&problem.locals);
     suite.push(bench.run("local products, sequential", || seq.local_products(&ws)));
-    let par = ParallelBackend::new(&problem.locals, 0);
-    suite.push(bench.run("local products, thread-parallel", || par.local_products(&ws)));
+    let par = RustBackend::with_executor(&problem.locals, Arc::new(Executor::new(0)));
+    suite.push(bench.run("local products, executor (all cores)", || {
+        par.local_products(&ws)
+    }));
+
+    // ------------------------------------------- executor thread scaling
+    // The README §Performance thread-scaling numbers: the batched
+    // power-step products and a full warm DeEPCA step at 1/2/4/8
+    // threads (fixed names so `scripts/bench_diff` tracks each point).
+    section("executor thread scaling (m=50, d=300, k=5, K=8)");
+    let mut prod_out = AgentStack::replicate(50, &Mat::zeros(300, 5));
+    for threads in [1usize, 2, 4, 8] {
+        let be = RustBackend::with_executor(&problem.locals, Arc::new(Executor::new(threads)));
+        be.local_products_into(&ws, &mut prod_out); // warm the pool
+        let name = format!("local_products_into, {threads} thread(s)");
+        suite.push(bench.run(&name, || {
+            be.local_products_into(&ws, &mut prod_out);
+            prod_out.slice(0).data()[0]
+        }));
+    }
+    {
+        let cfg = DeepcaConfig { consensus_rounds: 8, max_iters: 10, ..Default::default() };
+        for threads in [1usize, 2, 4, 8] {
+            let mut solver = Session::on(&problem, &topo)
+                .algo(Algo::Deepca(cfg.clone()))
+                .threads(threads)
+                .build_solver();
+            solver.step(); // warm the workspace + engine + pool buffers
+            let name = format!("DeepcaSolver::step warm, {threads} thread(s)");
+            suite.push(bench.run(&name, || solver.step().iter));
+        }
+    }
 
     // ------------------------------------------------------- end-to-end
     section("end-to-end DeEPCA iteration cost (m=50, d=300, k=5, K=8)");
@@ -134,9 +166,11 @@ fn main() {
             .solve()
     }));
     // Bare step cost on warm buffers: no driver, no metrics, no
-    // allocation (the steady-state per-iteration floor).
+    // allocation (the steady-state per-iteration floor — pinned to one
+    // thread; the scaling section above covers the pooled variants).
     let mut step_solver = Session::on(&problem, &topo)
         .algo(Algo::Deepca(cfg.clone()))
+        .threads(1)
         .build_solver();
     step_solver.step(); // warm the workspace + engine buffers
     suite.push(bench.run("DeepcaSolver::step (warm workspace)", || {

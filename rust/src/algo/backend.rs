@@ -2,17 +2,24 @@
 //!
 //! The power-step product is the only numerical heavy lifting an agent
 //! does per iteration; everything else is communication and a thin QR.
-//! Three interchangeable implementations:
+//! Two interchangeable implementations:
 //!
 //! - [`RustBackend`] — in-process `Mat::matmul` (always available).
-//! - [`ParallelBackend`] — same math, agents fanned out over scoped
-//!   threads (the L3 perf path for sweeps; see EXPERIMENTS.md §Perf).
+//!   Parallelism is composed in, not baked in: give it an
+//!   [`Executor`](crate::exec::Executor) and the per-agent products fan
+//!   out over the persistent worker pool (bit-identical results for any
+//!   thread count — each agent's product is computed by exactly the
+//!   same kernel either way). This `backend × executor` composition
+//!   replaced the old `ParallelBackend`, which re-spawned scoped
+//!   threads on every call.
 //! - `PjrtBackend` (in [`crate::runtime`]) — executes the AOT-compiled
 //!   JAX/Pallas artifact through the PJRT C API. That is the production
 //!   three-layer path; the Rust backends double as its test oracle.
 
 use crate::consensus::AgentStack;
+use crate::exec::Executor;
 use crate::linalg::Mat;
+use std::sync::Arc;
 
 /// Per-agent power-step provider.
 ///
@@ -25,10 +32,10 @@ pub trait PowerBackend {
     /// `A_j · w` for agent `j`.
     fn local_product(&self, agent: usize, w: &Mat) -> Mat;
     /// `A_j · w` into a caller-owned buffer. The default routes through
-    /// the allocating [`PowerBackend::local_product`] (external backends
-    /// like PJRT materialize device output anyway); the in-process Rust
-    /// backends override it with `matmul_into` so the solver hot loop is
-    /// allocation-free.
+    /// the allocating [`PowerBackend::local_product`]; the in-process
+    /// Rust backend overrides it with `matmul_into` and the PJRT
+    /// backend lowers it through the executable path so the solver hot
+    /// loop avoids the intermediate copy.
     fn local_product_into(&self, agent: usize, w: &Mat, out: &mut Mat) {
         let p = self.local_product(agent, w);
         out.copy_from(&p);
@@ -83,15 +90,25 @@ impl PowerBackend for &dyn PowerBackend {
     }
 }
 
-/// Sequential in-process backend over dense local matrices.
+/// In-process backend over dense local matrices. Sequential by default;
+/// compose with an [`Executor`] to fan the per-agent products over the
+/// persistent worker pool.
 pub struct RustBackend<'a> {
     locals: &'a [Mat],
+    exec: Option<Arc<Executor>>,
 }
 
 impl<'a> RustBackend<'a> {
-    /// Borrow the problem's local matrices.
+    /// Borrow the problem's local matrices (sequential products).
     pub fn new(locals: &'a [Mat]) -> Self {
-        RustBackend { locals }
+        RustBackend { locals, exec: None }
+    }
+
+    /// Borrow the local matrices and run batched products on `exec`'s
+    /// worker pool (fixed per-agent partitioning; results bit-identical
+    /// to the sequential path for any thread count).
+    pub fn with_executor(locals: &'a [Mat], exec: Arc<Executor>) -> Self {
+        RustBackend { locals, exec: Some(exec) }
     }
 }
 
@@ -105,107 +122,34 @@ impl PowerBackend for RustBackend<'_> {
     fn local_product_into(&self, agent: usize, w: &Mat, out: &mut Mat) {
         self.locals[agent].matmul_into(w, out);
     }
+    fn local_products(&self, ws: &AgentStack) -> AgentStack {
+        // Allocate the output stack once, then run the batch through the
+        // (possibly pooled) in-place path — without this override a
+        // pooled backend's allocating form would silently fall back to
+        // the sequential trait default.
+        assert_eq!(ws.m(), self.m());
+        let (_, k) = ws.slice_shape();
+        let mut out = AgentStack::replicate(self.m(), &Mat::zeros(self.locals[0].rows(), k));
+        self.local_products_into(ws, &mut out);
+        out
+    }
+    fn local_products_into(&self, ws: &AgentStack, out: &mut AgentStack) {
+        assert_eq!(ws.m(), self.m());
+        assert_eq!(out.m(), self.m());
+        let locals = self.locals;
+        match &self.exec {
+            Some(exec) => exec.par_for_each_agent(out.slices_mut(), |j, o| {
+                locals[j].matmul_into(ws.slice(j), o)
+            }),
+            None => {
+                for j in 0..self.m() {
+                    locals[j].matmul_into(ws.slice(j), out.slice_mut(j));
+                }
+            }
+        }
+    }
     fn label(&self) -> &'static str {
         "rust"
-    }
-}
-
-/// Thread-parallel backend: one scoped thread per chunk of agents.
-pub struct ParallelBackend<'a> {
-    locals: &'a [Mat],
-    threads: usize,
-}
-
-impl<'a> ParallelBackend<'a> {
-    /// `threads = 0` → available_parallelism.
-    pub fn new(locals: &'a [Mat], threads: usize) -> Self {
-        let threads = if threads == 0 {
-            std::thread::available_parallelism()
-                .map(|n| n.get())
-                .unwrap_or(4)
-        } else {
-            threads
-        };
-        ParallelBackend { locals, threads }
-    }
-}
-
-impl PowerBackend for ParallelBackend<'_> {
-    fn m(&self) -> usize {
-        self.locals.len()
-    }
-
-    fn local_product(&self, agent: usize, w: &Mat) -> Mat {
-        self.locals[agent].matmul(w)
-    }
-
-    fn local_product_into(&self, agent: usize, w: &Mat, out: &mut Mat) {
-        self.locals[agent].matmul_into(w, out);
-    }
-
-    fn local_products_into(&self, ws: &AgentStack, out: &mut AgentStack) {
-        let m = self.m();
-        assert_eq!(ws.m(), m);
-        assert_eq!(out.m(), m);
-        let nthreads = self.threads.min(m).max(1);
-        let chunk = m.div_ceil(nthreads);
-        let locals = self.locals;
-
-        // Split the output stack into per-thread chunks so each thread
-        // writes its agents' products in place (thread spawning itself
-        // allocates — this backend trades that for parallel matmuls).
-        std::thread::scope(|scope| {
-            let mut rest = out.slices_mut();
-            let mut base = 0usize;
-            while !rest.is_empty() {
-                let take = chunk.min(rest.len());
-                let (head, tail) = std::mem::take(&mut rest).split_at_mut(take);
-                rest = tail;
-                let lo = base;
-                base += take;
-                scope.spawn(move || {
-                    for (off, o) in head.iter_mut().enumerate() {
-                        locals[lo + off].matmul_into(ws.slice(lo + off), o);
-                    }
-                });
-            }
-        });
-    }
-
-    fn local_products(&self, ws: &AgentStack) -> AgentStack {
-        let m = self.m();
-        assert_eq!(ws.m(), m);
-        let nthreads = self.threads.min(m).max(1);
-        let chunk = m.div_ceil(nthreads);
-        let mut out: Vec<Option<Mat>> = (0..m).map(|_| None).collect();
-
-        std::thread::scope(|scope| {
-            let mut handles = Vec::new();
-            for t in 0..nthreads {
-                let lo = t * chunk;
-                let hi = ((t + 1) * chunk).min(m);
-                if lo >= hi {
-                    break;
-                }
-                let locals = self.locals;
-                let handle = scope.spawn(move || {
-                    (lo..hi)
-                        .map(|j| locals[j].matmul(ws.slice(j)))
-                        .collect::<Vec<Mat>>()
-                });
-                handles.push((lo, handle));
-            }
-            for (lo, h) in handles {
-                for (off, mat) in h.join().expect("backend thread panicked").into_iter().enumerate() {
-                    out[lo + off] = Some(mat);
-                }
-            }
-        });
-        AgentStack::new(out.into_iter().map(Option::unwrap).collect())
-    }
-
-    fn label(&self) -> &'static str {
-        "rust-parallel"
     }
 }
 
@@ -237,22 +181,27 @@ mod tests {
     }
 
     #[test]
-    fn parallel_matches_sequential() {
+    fn executor_backend_bit_identical_to_sequential() {
         let ls = locals(7, 10, 133);
         let seq = RustBackend::new(&ls);
-        let par = ParallelBackend::new(&ls, 3);
         let mut rng = Rng::seed_from(134);
         let stack = AgentStack::new((0..7).map(|_| Mat::randn(10, 2, &mut rng)).collect());
-        let a = seq.local_products(&stack);
-        let b = par.local_products(&stack);
-        assert!(a.distance(&b) < 1e-14);
+        let mut want = AgentStack::replicate(7, &Mat::zeros(10, 2));
+        seq.local_products_into(&stack, &mut want);
+
+        for threads in [1usize, 2, 3, 16] {
+            let par = RustBackend::with_executor(&ls, Arc::new(Executor::new(threads)));
+            let mut got = AgentStack::replicate(7, &Mat::zeros(10, 2));
+            par.local_products_into(&stack, &mut got);
+            assert_eq!(want, got, "threads={threads}");
+        }
     }
 
     #[test]
     fn into_forms_match_allocating_forms() {
         let ls = locals(5, 9, 138);
         let seq = RustBackend::new(&ls);
-        let par = ParallelBackend::new(&ls, 3);
+        let par = RustBackend::with_executor(&ls, Arc::new(Executor::new(3)));
         let mut rng = Rng::seed_from(139);
         let stack = AgentStack::new((0..5).map(|_| Mat::randn(9, 2, &mut rng)).collect());
         let want = seq.local_products(&stack);
@@ -263,23 +212,22 @@ mod tests {
 
         let mut pout = AgentStack::replicate(5, &Mat::zeros(9, 2));
         par.local_products_into(&stack, &mut pout);
-        assert_eq!(want, pout, "parallel into vs allocating");
+        assert_eq!(want, pout, "pooled into vs allocating");
+
+        // The pooled allocating form routes through the in-place batch
+        // (it must not fall back to the sequential trait default).
+        assert_eq!(want, par.local_products(&stack), "pooled allocating form");
     }
 
     #[test]
-    fn parallel_more_threads_than_agents() {
+    fn pool_larger_than_agent_count() {
         let ls = locals(2, 5, 135);
-        let par = ParallelBackend::new(&ls, 16);
+        let par = RustBackend::with_executor(&ls, Arc::new(Executor::new(16)));
         let mut rng = Rng::seed_from(136);
         let stack = AgentStack::new((0..2).map(|_| Mat::randn(5, 2, &mut rng)).collect());
-        let out = par.local_products(&stack);
+        let mut out = AgentStack::replicate(2, &Mat::zeros(5, 2));
+        par.local_products_into(&stack, &mut out);
         assert_eq!(out.m(), 2);
-    }
-
-    #[test]
-    fn zero_threads_defaults() {
-        let ls = locals(3, 4, 137);
-        let par = ParallelBackend::new(&ls, 0);
-        assert!(par.threads >= 1);
+        assert!((out.slice(1) - &ls[1].matmul(stack.slice(1))).fro_norm() < 1e-14);
     }
 }

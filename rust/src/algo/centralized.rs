@@ -40,7 +40,10 @@ pub struct CentralizedSolver<'a> {
     problem: &'a Problem,
     /// Persistent landing buffer for `A·W`.
     prod: Mat,
-    /// QR scratch (see [`SolverWorkspace`]).
+    /// QR scratch (see [`SolverWorkspace`]). Deliberately no executor
+    /// hook: the single-slice iterate has no per-agent loop to fan out
+    /// (`chunk_count(1) == 1` would always run inline), so this solver
+    /// stays on the caller thread by construction.
     workspace: SolverWorkspace,
     state: SolverState,
 }

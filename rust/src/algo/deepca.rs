@@ -28,7 +28,10 @@ use super::sign_adjust::sign_adjust_into;
 use super::solver::{Solver, SolverState, StepReport};
 use super::workspace::SolverWorkspace;
 use crate::consensus::comm::{Communicator, DenseComm};
+use crate::consensus::AgentStack;
+use crate::exec::Executor;
 use crate::graph::topology::Topology;
+use std::sync::Arc;
 
 /// DeEPCA hyperparameters.
 #[derive(Clone, Debug)]
@@ -83,8 +86,13 @@ pub struct DeepcaSolver<'a> {
     /// Landing buffer for this iteration's products `A_j W_j^t`; swapped
     /// with `g_prev` after the tracking update (never reallocated).
     g_next: crate::consensus::AgentStack,
-    /// QR / sign-adjust scratch (see [`SolverWorkspace`]).
-    workspace: SolverWorkspace,
+    /// Worker pool for the per-agent loops (tracking update and
+    /// QR/sign-adjust); the sequential executor runs them inline.
+    exec: Arc<Executor>,
+    /// Per-worker QR / sign-adjust scratch: one [`SolverWorkspace`] per
+    /// executor chunk, so parallel chunks never share buffers and the
+    /// steady-state step stays allocation-free.
+    workspaces: Vec<SolverWorkspace>,
     state: SolverState,
 }
 
@@ -109,10 +117,24 @@ impl<'a> DeepcaSolver<'a> {
             cfg,
             g_prev: crate::consensus::AgentStack::replicate(m, &w0),
             g_next: crate::consensus::AgentStack::replicate(m, &w0),
-            workspace: SolverWorkspace::new(d, k),
+            exec: Arc::new(Executor::sequential()),
+            workspaces: vec![SolverWorkspace::new(d, k)],
             state: SolverState::init(w, true),
             w0,
         }
+    }
+
+    /// Run the per-agent hot loops on `exec`'s worker pool (fixed
+    /// partitioning by agent index, one workspace slot per chunk —
+    /// results bit-identical to the sequential path for any thread
+    /// count).
+    pub fn with_executor(mut self, exec: Arc<Executor>) -> Self {
+        let (d, k) = self.w0.shape();
+        self.workspaces = (0..exec.chunk_count(self.problem.m()))
+            .map(|_| SolverWorkspace::new(d, k))
+            .collect();
+        self.exec = exec;
+        self
     }
 
     /// Convenience: Rust backend + dense FastMix over `topo`.
@@ -139,18 +161,22 @@ impl Solver for DeepcaSolver<'_> {
 
     fn step(&mut self) -> StepReport {
         let t = self.state.iter;
+        let exec = Arc::clone(&self.exec);
         let SolverState { w, s, stats, .. } = &mut self.state;
         let s = s.as_mut().expect("DeEPCA tracks S");
-        let m = w.m();
 
         // (3.1) tracking update: S_j += A_j W_j^t − G_j^t. The products
         // land in the persistent `g_next` buffer, then the buffers swap —
-        // exactly one A_j·W product per agent, zero allocation.
+        // exactly one A_j·W product per agent, zero allocation. Both the
+        // product batch and the per-agent update run on the pool.
         self.backend.local_products_into(w, &mut self.g_next);
-        for j in 0..m {
-            let sj = s.slice_mut(j);
-            sj.axpy(1.0, self.g_next.slice(j));
-            sj.axpy(-1.0, self.g_prev.slice(j));
+        {
+            let g_next = &self.g_next;
+            let g_prev = &self.g_prev;
+            exec.par_for_each_agent(s.slices_mut(), |j, sj| {
+                sj.axpy(1.0, g_next.slice(j));
+                sj.axpy(-1.0, g_prev.slice(j));
+            });
         }
         std::mem::swap(&mut self.g_prev, &mut self.g_next);
 
@@ -158,16 +184,23 @@ impl Solver for DeepcaSolver<'_> {
         // reuses its recursion buffers across mixes).
         self.comm.fastmix(s, self.cfg.consensus_rounds, stats);
 
-        // (3.3) local orthonormalization + sign adjustment through the
-        // workspace buffers.
-        for j in 0..m {
-            let q = self.workspace.orth_into(s.slice(j), self.cfg.qr_canonical);
-            let wj = w.slice_mut(j);
-            if self.cfg.sign_adjust {
-                sign_adjust_into(q, &self.w0, wj);
-            } else {
-                wj.copy_from(q);
-            }
+        // (3.3) local orthonormalization + sign adjustment, chunked over
+        // the pool with one workspace slot per chunk.
+        {
+            let s: &AgentStack = s;
+            let w0 = &self.w0;
+            let sign_adjust = self.cfg.sign_adjust;
+            let canonical = self.cfg.qr_canonical;
+            exec.par_chunks_ctx(w.slices_mut(), &mut self.workspaces, |lo, chunk, ws| {
+                for (off, wj) in chunk.iter_mut().enumerate() {
+                    let q = ws.orth_into(s.slice(lo + off), canonical);
+                    if sign_adjust {
+                        sign_adjust_into(q, w0, wj);
+                    } else {
+                        wj.copy_from(q);
+                    }
+                }
+            });
         }
 
         self.state.iter = t + 1;

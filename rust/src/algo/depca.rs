@@ -28,8 +28,10 @@ use super::solver::{Solver, SolverState, StepReport};
 use super::workspace::SolverWorkspace;
 use crate::consensus::comm::{Communicator, DenseComm};
 use crate::consensus::AgentStack;
+use crate::exec::Executor;
 use crate::graph::topology::Topology;
 use crate::linalg::Mat;
+use std::sync::Arc;
 
 /// Consensus-rounds schedule for DePCA.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -92,8 +94,11 @@ pub struct DepcaSolver<'a> {
     cfg: DepcaConfig,
     /// Sign-adjust anchor.
     w0: Mat,
-    /// QR / sign-adjust scratch (see [`SolverWorkspace`]).
-    workspace: SolverWorkspace,
+    /// Worker pool for the per-agent QR/sign-adjust loop.
+    exec: Arc<Executor>,
+    /// Per-worker QR / sign-adjust scratch (one slot per executor
+    /// chunk; see [`SolverWorkspace`]).
+    workspaces: Vec<SolverWorkspace>,
     state: SolverState,
 }
 
@@ -116,13 +121,26 @@ impl<'a> DepcaSolver<'a> {
             backend,
             comm,
             cfg,
-            workspace: SolverWorkspace::new(d, k),
+            exec: Arc::new(Executor::sequential()),
+            workspaces: vec![SolverWorkspace::new(d, k)],
             // `tracked = true`: `state.s` holds the pre-QR mixed variable
             // `P`, overwritten in place every step (it reads as `W⁰`
             // before the first step).
             state: SolverState::init(w, true),
             w0,
         }
+    }
+
+    /// Run the per-agent QR/sign-adjust loop on `exec`'s worker pool
+    /// (fixed partitioning, one workspace slot per chunk — bit-identical
+    /// results for any thread count).
+    pub fn with_executor(mut self, exec: Arc<Executor>) -> Self {
+        let (d, k) = self.w0.shape();
+        self.workspaces = (0..exec.chunk_count(self.problem.m()))
+            .map(|_| SolverWorkspace::new(d, k))
+            .collect();
+        self.exec = exec;
+        self
     }
 
     /// Convenience: Rust backend + dense FastMix over `topo`.
@@ -149,21 +167,28 @@ impl Solver for DepcaSolver<'_> {
         // recorder's s_deviation analogue; DePCA has no tracked S) and
         // doubles as the persistent product buffer — zero allocation.
         let p = s.as_mut().expect("DePCA mixes P in place");
-        let m = w.m();
 
         // Local power step on the iterate itself (no tracking).
         self.backend.local_products_into(w, p);
         // Multi-consensus with the schedule's rounds for this iteration.
         self.comm.fastmix(p, self.cfg.k_policy.rounds(t), stats);
-        // Local orthonormalization through the workspace buffers.
-        for j in 0..m {
-            let q = self.workspace.orth_into(p.slice(j), true);
-            let wj = w.slice_mut(j);
-            if self.cfg.sign_adjust {
-                sign_adjust_into(q, &self.w0, wj);
-            } else {
-                wj.copy_from(q);
-            }
+        // Local orthonormalization, chunked over the pool with one
+        // workspace slot per chunk.
+        {
+            let p: &AgentStack = p;
+            let w0 = &self.w0;
+            let sign_adjust = self.cfg.sign_adjust;
+            self.exec
+                .par_chunks_ctx(w.slices_mut(), &mut self.workspaces, |lo, chunk, ws| {
+                    for (off, wj) in chunk.iter_mut().enumerate() {
+                        let q = ws.orth_into(p.slice(lo + off), true);
+                        if sign_adjust {
+                            sign_adjust_into(q, w0, wj);
+                        } else {
+                            wj.copy_from(q);
+                        }
+                    }
+                });
         }
 
         self.state.iter = t + 1;

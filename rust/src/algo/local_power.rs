@@ -15,6 +15,8 @@ use super::problem::Problem;
 use super::solver::{mean_tan_theta, Solver, SolverState, StepReport};
 use super::workspace::SolverWorkspace;
 use crate::consensus::AgentStack;
+use crate::exec::Executor;
+use std::sync::Arc;
 
 /// Local-only power method knobs.
 #[derive(Clone, Debug)]
@@ -37,8 +39,11 @@ pub struct LocalPowerSolver<'a> {
     backend: Box<dyn PowerBackend + 'a>,
     /// Persistent landing buffer for the per-agent products.
     products: AgentStack,
-    /// QR scratch (see [`SolverWorkspace`]).
-    workspace: SolverWorkspace,
+    /// Worker pool for the per-agent QR loop.
+    exec: Arc<Executor>,
+    /// Per-worker QR scratch (one slot per executor chunk; see
+    /// [`SolverWorkspace`]).
+    workspaces: Vec<SolverWorkspace>,
     state: SolverState,
 }
 
@@ -53,9 +58,22 @@ impl<'a> LocalPowerSolver<'a> {
             problem,
             backend,
             products: w.clone(),
-            workspace: SolverWorkspace::new(d, k),
+            exec: Arc::new(Executor::sequential()),
+            workspaces: vec![SolverWorkspace::new(d, k)],
             state: SolverState::init(w, false),
         }
+    }
+
+    /// Run the per-agent QR loop on `exec`'s worker pool (fixed
+    /// partitioning, one workspace slot per chunk — bit-identical
+    /// results for any thread count).
+    pub fn with_executor(mut self, exec: Arc<Executor>) -> Self {
+        let (d, k) = self.products.slice_shape();
+        self.workspaces = (0..exec.chunk_count(self.problem.m()))
+            .map(|_| SolverWorkspace::new(d, k))
+            .collect();
+        self.exec = exec;
+        self
     }
 
     /// Convenience: sequential Rust backend.
@@ -77,11 +95,16 @@ impl Solver for LocalPowerSolver<'_> {
     fn step(&mut self) -> StepReport {
         let t = self.state.iter;
         let w = &mut self.state.w;
-        let m = w.m();
         self.backend.local_products_into(w, &mut self.products);
-        for j in 0..m {
-            let q = self.workspace.orth_into(self.products.slice(j), true);
-            w.slice_mut(j).copy_from(q);
+        {
+            let products = &self.products;
+            self.exec
+                .par_chunks_ctx(w.slices_mut(), &mut self.workspaces, |lo, chunk, ws| {
+                    for (off, wj) in chunk.iter_mut().enumerate() {
+                        let q = ws.orth_into(products.slice(lo + off), true);
+                        wj.copy_from(q);
+                    }
+                });
         }
         self.state.iter = t + 1;
         StepReport {

@@ -76,9 +76,13 @@ impl Algo {
 /// Which execution engine carries a run.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Engine {
-    /// Single-process dense gossip, sequential local products.
+    /// Single-process dense gossip. Per-agent parallelism (local
+    /// products, gossip row blocks, QR loops) comes from the
+    /// session-wide executor (`Session::threads` / `DEEPCA_THREADS`),
+    /// with results bit-identical for any thread count.
     Dense,
-    /// Dense gossip, thread-parallel local products.
+    /// Legacy alias for [`Engine::Dense`]: parallelism is the
+    /// executor's job now, so both variants build identical parts.
     DenseParallel,
     /// Real message-passing gossip (threads + channels).
     Threaded,

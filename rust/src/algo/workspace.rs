@@ -13,11 +13,17 @@
 //! allocation after the first iteration** (pinned by the
 //! counting-allocator audit in `rust/tests/alloc_free.rs`).
 //!
-//! The buffers are sized per agent (one d×k slice), and the sequential
-//! step loop visits agents one at a time, so a single workspace serves
-//! all m agents. Stack-shaped buffers (the backend's product stack, the
-//! FastMix ping-pong stacks) live with their owners — the solvers and
-//! the communication engines respectively.
+//! The buffers are sized per agent (one d×k slice). A sequential step
+//! loop needs a single workspace for all m agents; with the
+//! [`crate::exec::Executor`] pool enabled, each decentralized solver
+//! holds one workspace **per worker chunk** (`Executor::chunk_count`
+//! slots) so
+//! parallel chunks never share scratch — workspace contents never
+//! influence results (QR recomputes from its input every call), which
+//! is one leg of the executor's bit-determinism contract. Stack-shaped
+//! buffers (the backend's product stack, the FastMix ping-pong stacks)
+//! live with their owners — the solvers and the communication engines
+//! respectively.
 
 use crate::linalg::qr::{qr_into, QrWorkspace};
 use crate::linalg::Mat;

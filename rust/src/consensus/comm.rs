@@ -18,10 +18,11 @@
 use super::fastmix::FastMix;
 use super::metrics::CommStats;
 use super::stack::AgentStack;
+use crate::exec::Executor;
 use crate::graph::gossip::GossipMatrix;
 use crate::graph::topology::Topology;
 use crate::linalg::Mat;
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc};
 
 /// Abstraction over "run K gossip rounds across the network".
 pub trait Communicator: Send + Sync {
@@ -92,6 +93,14 @@ impl DenseComm {
     pub fn new(gossip: GossipMatrix, edges: usize) -> Self {
         DenseComm { fm: FastMix::new(gossip, edges) }
     }
+
+    /// Run each gossip round's per-agent row blocks on `exec`'s worker
+    /// pool (bit-identical to the sequential path for any thread count
+    /// — see [`FastMix::with_executor`]).
+    pub fn with_executor(mut self, exec: Arc<Executor>) -> Self {
+        self.fm = self.fm.with_executor(exec);
+        self
+    }
 }
 
 impl Communicator for DenseComm {
@@ -150,7 +159,7 @@ impl EdgeChannels {
     }
 }
 
-/// Message-passing engine: threads + per-edge channels.
+/// Message-passing engine: persistent agent threads + per-edge channels.
 pub struct ThreadedNetwork {
     topo: Topology,
     gossip: GossipMatrix,
@@ -159,6 +168,13 @@ pub struct ThreadedNetwork {
     /// Reused across mixes; the mutex also serializes concurrent
     /// `fastmix` calls on one engine (each call needs the full set).
     channels: std::sync::Mutex<EdgeChannels>,
+    /// Hosts the agent threads on its blocking tier: one dedicated
+    /// persistent thread per agent, created on the first mix and reused
+    /// for every later one (agents park on channel `recv` mid-round, so
+    /// they need real threads, not pool slots — see
+    /// [`Executor::scoped_blocking`]). Replaces the per-call
+    /// `std::thread::scope` spawns that dominated small-problem mixes.
+    exec: Arc<Executor>,
 }
 
 impl ThreadedNetwork {
@@ -167,12 +183,26 @@ impl ThreadedNetwork {
         let gossip = GossipMatrix::from_laplacian(topo);
         let eta = gossip.chebyshev_eta();
         let channels = std::sync::Mutex::new(EdgeChannels::for_topology(topo));
-        ThreadedNetwork { topo: topo.clone(), gossip, eta, fault: None, channels }
+        ThreadedNetwork {
+            topo: topo.clone(),
+            gossip,
+            eta,
+            fault: None,
+            channels,
+            exec: Arc::new(Executor::sequential()),
+        }
     }
 
     /// Enable fault injection (see [`Fault`]).
     pub fn with_fault(mut self, fault: Fault) -> Self {
         self.fault = Some(fault);
+        self
+    }
+
+    /// Host the agent threads on a shared executor's blocking tier
+    /// (e.g. the session-wide pool) instead of a private one.
+    pub fn with_executor(mut self, exec: Arc<Executor>) -> Self {
+        self.exec = exec;
         self
     }
 }
@@ -222,19 +252,30 @@ impl Communicator for ThreadedNetwork {
         let weights = &self.gossip.weights;
         let fault = self.fault;
 
-        // Take each agent's slice out so threads own their state.
-        let mut results: Vec<Option<(Mat, u64 /*scalars sent*/)>> = (0..m).map(|_| None).collect();
-        std::thread::scope(|scope| {
-            let mut handles = Vec::with_capacity(m);
-            for (j, (outs, ins)) in senders
+        // Take each agent's slice out so agent tasks own their state.
+        // Each task runs on a dedicated persistent thread from the
+        // executor's blocking tier (agents block on `recv` mid-round;
+        // see the `exec` field) and hands its results — iterate,
+        // byte count, channel endpoints — back through its slot.
+        type AgentOutcome = (
+            Mat,
+            u64, // scalars sent
+            Vec<(usize, mpsc::Sender<Vec<f64>>)>,
+            Vec<(usize, mpsc::Receiver<Vec<f64>>)>,
+        );
+        let mut results: Vec<Option<AgentOutcome>> = (0..m).map(|_| None).collect();
+        {
+            let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(m);
+            for ((j, (outs, ins)), slot) in senders
                 .into_iter()
                 .zip(receivers)
                 .enumerate()
+                .zip(results.iter_mut())
             {
                 let init = stack.slice(j).clone();
                 let wrow: Vec<f64> = weights.row(j).to_vec();
-                let handle = scope.spawn(move || {
-                    // Three thread-local recursion buffers rotated by
+                tasks.push(Box::new(move || {
+                    // Three task-local recursion buffers rotated by
                     // swap — no per-round Mat allocation. The per-edge
                     // payload Vecs remain: they model real serialization
                     // and are what this engine exists to measure.
@@ -269,25 +310,26 @@ impl Communicator for ThreadedNetwork {
                         std::mem::swap(&mut prev, &mut cur);
                         std::mem::swap(&mut cur, &mut next);
                     }
-                    (cur, scalars_sent, outs, ins)
-                });
-                handles.push(handle);
+                    *slot = Some((cur, scalars_sent, outs, ins));
+                }));
             }
-            for (j, h) in handles.into_iter().enumerate() {
-                let (mat, scalars, outs, ins) = h.join().expect("agent thread panicked");
-                results[j] = Some((mat, scalars));
-                // Hand the channel endpoints back for the next mix
-                // (joined in agent order, so the layout is preserved).
-                guard.outs.push(outs);
-                guard.ins.push(ins);
-            }
-        });
+            // Blocks until every agent finishes; a panicking agent drops
+            // its senders, unwinding its peers, and `scoped_blocking`
+            // re-raises after all tasks end — the channel endpoints are
+            // then missing from the guard and the next mix rebuilds them
+            // (the recovery path documented above).
+            self.exec.scoped_blocking(tasks);
+        }
 
         let mut total_scalars = 0u64;
         for (j, res) in results.into_iter().enumerate() {
-            let (mat, scalars) = res.unwrap();
+            let (mat, scalars, outs, ins) = res.expect("agent task completed");
             *stack.slice_mut(j) = mat;
             total_scalars += scalars;
+            // Hand the channel endpoints back for the next mix
+            // (harvested in agent order, so the layout is preserved).
+            guard.outs.push(outs);
+            guard.ins.push(ins);
         }
         stats.rounds += rounds as u64;
         stats.messages += (rounds * 2 * self.topo.num_edges()) as u64;

@@ -17,9 +17,10 @@
 
 use super::metrics::CommStats;
 use super::stack::AgentStack;
+use crate::exec::Executor;
 use crate::graph::gossip::GossipMatrix;
 use crate::linalg::Mat;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// Three-stack Chebyshev ping-pong buffers shared by the in-process
 /// engines ([`FastMix`] behind `DenseComm`, and
@@ -71,6 +72,31 @@ impl PingPong {
     }
 }
 
+/// One Chebyshev round's update for agent `j`:
+/// `acc = (1+η) Σ_i w_{ji} cur_i − η prev_j`, accumulated in ascending
+/// `i` order. The single per-agent kernel shared by the sequential and
+/// executor-parallel paths (and by SimNet's ideal path), so every
+/// engine × thread-count combination performs the identical operation
+/// sequence — the bit-determinism contract.
+#[inline]
+pub(crate) fn chebyshev_row_update(
+    weights_row: &[f64],
+    eta: f64,
+    prev_j: &Mat,
+    cur: &[Mat],
+    acc: &mut Mat,
+) {
+    let one_plus_eta = 1.0 + eta;
+    // acc = −η · prev_j  (overwrite, no zero pass)
+    acc.data_mut().copy_from_slice(prev_j.data());
+    acc.scale(-eta);
+    for (i, &w) in weights_row.iter().enumerate() {
+        if w != 0.0 {
+            acc.axpy(one_plus_eta * w, &cur[i]);
+        }
+    }
+}
+
 /// Reusable FastMix operator bound to one gossip matrix.
 pub struct FastMix {
     gossip: GossipMatrix,
@@ -80,17 +106,24 @@ pub struct FastMix {
     /// See [`PingPong`]; the mutex keeps the `&self` Communicator API
     /// (and serializes concurrent mixes on one operator).
     buffers: Mutex<PingPong>,
+    /// Worker pool for the per-agent row blocks of each round (the
+    /// sequential executor runs them inline). Agents' row updates are
+    /// independent and each accumulates in the same fixed order, so
+    /// results are bit-identical for any thread count.
+    exec: Arc<Executor>,
 }
 
 impl Clone for FastMix {
     fn clone(&self) -> Self {
         // Scratch buffers are not part of the operator's value; a clone
-        // starts cold and re-warms on its first mix.
+        // starts cold and re-warms on its first mix. The executor is
+        // shared (it is the session-wide pool).
         FastMix {
             gossip: self.gossip.clone(),
             eta: self.eta,
             edges: self.edges,
             buffers: Mutex::new(PingPong::default()),
+            exec: Arc::clone(&self.exec),
         }
     }
 }
@@ -111,7 +144,20 @@ impl FastMix {
     pub fn new(gossip: GossipMatrix, edges: usize) -> Self {
         // Algorithm 3's step size uses λ₂² under the root.
         let eta = gossip.chebyshev_eta();
-        FastMix { gossip, eta, edges, buffers: Mutex::new(PingPong::default()) }
+        FastMix {
+            gossip,
+            eta,
+            edges,
+            buffers: Mutex::new(PingPong::default()),
+            exec: Arc::new(Executor::sequential()),
+        }
+    }
+
+    /// Run each round's per-agent row blocks on `exec`'s worker pool
+    /// (see the `exec` field for the determinism argument).
+    pub fn with_executor(mut self, exec: Arc<Executor>) -> Self {
+        self.exec = exec;
+        self
     }
 
     /// Underlying gossip matrix.
@@ -150,20 +196,17 @@ impl FastMix {
         let bufs = &mut *guard;
         bufs.ensure(m, d, k);
         bufs.load(stack);
-        let one_plus_eta = 1.0 + self.eta;
 
         for _round in 0..rounds {
-            for j in 0..m {
-                let wj = self.gossip.weights.row(j);
-                let acc = &mut bufs.next[j];
-                // acc = −η · prev_j  (overwrite, no zero pass)
-                acc.data_mut().copy_from_slice(bufs.prev[j].data());
-                acc.scale(-self.eta);
-                for (i, &w) in wj.iter().enumerate() {
-                    if w != 0.0 {
-                        acc.axpy(one_plus_eta * w, &bufs.cur[i]);
-                    }
-                }
+            {
+                let PingPong { prev, cur, next } = &mut *bufs;
+                let prev: &[Mat] = prev;
+                let cur: &[Mat] = cur;
+                let gossip = &self.gossip;
+                let eta = self.eta;
+                self.exec.par_for_each_agent(next.as_mut_slice(), |j, acc| {
+                    chebyshev_row_update(gossip.weights.row(j), eta, &prev[j], cur, acc);
+                });
             }
             bufs.rotate();
             stats.record_round(self.edges, d, k);
@@ -349,6 +392,25 @@ mod tests {
         assert_eq!(a_warm, a_cold, "warm buffers changed the arithmetic");
         assert_eq!(b_warm, b_cold, "shape-changed buffers leaked state");
         assert_eq!(a_again, a_cold, "second rebuild leaked state");
+    }
+
+    #[test]
+    fn pooled_mix_bit_identical_to_sequential() {
+        // The executor only changes which thread computes an agent's row
+        // block; the per-agent arithmetic (and its accumulation order)
+        // is the shared `chebyshev_row_update` — exact equality.
+        let topo = Topology::ring(9);
+        let g = GossipMatrix::from_laplacian(&topo);
+        let stack0 = random_stack(9, 5, 2, 111);
+        let mut want = stack0.clone();
+        FastMix::new(g.clone(), topo.num_edges()).mix(&mut want, 6, &mut CommStats::default());
+        for threads in [2usize, 4, 8] {
+            let fm = FastMix::new(g.clone(), topo.num_edges())
+                .with_executor(Arc::new(Executor::new(threads)));
+            let mut got = stack0.clone();
+            fm.mix(&mut got, 6, &mut CommStats::default());
+            assert_eq!(want, got, "threads={threads}");
+        }
     }
 
     #[test]

@@ -32,15 +32,16 @@
 //! the parity tests in `tests/solver_api.rs` pin this.
 
 use super::comm::Communicator;
-use super::fastmix::PingPong;
+use super::fastmix::{chebyshev_row_update, PingPong};
 use super::metrics::CommStats;
 use super::stack::AgentStack;
+use crate::exec::Executor;
 use crate::graph::dynamic::TopologySchedule;
 use crate::graph::gossip::GossipMatrix;
 use crate::graph::topology::Topology;
 use crate::linalg::Mat;
 use crate::util::rng::Rng;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// Fault-model knobs for one [`SimNet`] run. All zeros = ideal network.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -137,6 +138,16 @@ pub struct SimNet {
     /// See [`latency_table`].
     latency: Vec<u64>,
     state: Mutex<SimState>,
+    /// Worker pool for the per-agent row blocks of *ideal* rounds. The
+    /// seeded fault stream (drops, noise) and the latency max are
+    /// inherently sequential state — they consume one `Rng` in a fixed
+    /// (j, then i ascending) order — so only a fully ideal config
+    /// (`drop_prob = 0`, `noise_std = 0`, `max_latency = 0`) runs its
+    /// rounds in parallel; every faulty config keeps the sequential
+    /// loop. Either way results are bit-identical for every thread
+    /// count (the ideal row update is the shared
+    /// [`chebyshev_row_update`] kernel).
+    exec: Arc<Executor>,
 }
 
 impl SimNet {
@@ -163,12 +174,21 @@ impl SimNet {
                 bufs: PingPong::default(),
                 noisy: Mat::zeros(0, 0),
             }),
+            exec: Arc::new(Executor::sequential()),
         }
     }
 
     /// Build over a static topology.
     pub fn from_topology(topo: &Topology, cfg: SimConfig) -> Self {
         Self::new(TopologySchedule::fixed(topo.clone()), cfg)
+    }
+
+    /// Run ideal rounds' per-agent row blocks on `exec`'s worker pool
+    /// (see the `exec` field: faulty configs stay sequential because the
+    /// seeded fault stream is consumed in a fixed order).
+    pub fn with_executor(mut self, exec: Arc<Executor>) -> Self {
+        self.exec = exec;
+        self
     }
 
     /// The fault-model configuration.
@@ -208,6 +228,13 @@ impl Communicator for SimNet {
         }
         bufs.load(stack);
 
+        // Only a fully ideal config may parallelize its rounds — the
+        // fault stream and latency max are sequential state (see the
+        // `exec` field).
+        let ideal = self.cfg.drop_prob == 0.0
+            && self.cfg.noise_std == 0.0
+            && self.cfg.max_latency == 0;
+
         for _ in 0..rounds {
             // Consult the schedule; rebuild weights on epoch boundaries.
             let epoch_idx = schedule.epoch_of(*round);
@@ -220,6 +247,25 @@ impl Communicator for SimNet {
 
             let mut dropped_this_round = 0u64;
             let mut slowest_delivery = 0u64;
+            if ideal && self.exec.threads() > 1 {
+                // Ideal round on the pool: per-agent row blocks are
+                // independent, and each accumulates through the same
+                // fixed-order `chebyshev_row_update` kernel as the
+                // sequential branch below (whose i == j arm is exactly
+                // the generic term) — bit-identical for any thread
+                // count, and still bit-identical to DenseComm.
+                let PingPong { prev, cur, next } = &mut *bufs;
+                let prev: &[Mat] = prev;
+                let cur: &[Mat] = cur;
+                self.exec.par_for_each_agent(next.as_mut_slice(), |j, acc| {
+                    chebyshev_row_update(weights.row(j), eta, &prev[j], cur, acc);
+                });
+                bufs.rotate();
+                *round += 1;
+                stats.record_round(epoch.edges, d, k);
+                stats.virtual_time += 1;
+                continue;
+            }
             // One barrier-synchronized event per round: every directed
             // link carries one message; the deterministic (j, then i
             // ascending) order below fixes both the Rng consumption and
@@ -317,6 +363,51 @@ mod tests {
             sim.fastmix(&mut b, 5, &mut CommStats::default());
         }
         assert!(a.distance(&b) < 1e-12, "drift across mixes: {}", a.distance(&b));
+    }
+
+    #[test]
+    fn pooled_ideal_bit_identical_to_sequential_and_dense() {
+        let topo = Topology::erdos_renyi(11, 0.4, &mut Rng::seed_from(316));
+        let stack0 = random_stack(11, 5, 2, 317);
+
+        let mut seq = stack0.clone();
+        SimNet::from_topology(&topo, SimConfig::ideal(3))
+            .fastmix(&mut seq, 6, &mut CommStats::default());
+        let mut dense = stack0.clone();
+        DenseComm::from_topology(&topo).fastmix(&mut dense, 6, &mut CommStats::default());
+
+        for threads in [2usize, 4, 8] {
+            let sim = SimNet::from_topology(&topo, SimConfig::ideal(3))
+                .with_executor(Arc::new(Executor::new(threads)));
+            let mut got = stack0.clone();
+            let mut stats = CommStats::default();
+            sim.fastmix(&mut got, 6, &mut stats);
+            assert_eq!(seq, got, "threads={threads}");
+            assert_eq!(stats.virtual_time, 6, "one tick per ideal round");
+            assert!(
+                dense.distance(&got) < 1e-12,
+                "pooled ideal SimNet deviates from DenseComm (threads={threads})"
+            );
+        }
+    }
+
+    #[test]
+    fn pooled_faulty_config_stays_sequential_and_replays() {
+        // A faulty config must consume the fault Rng in the fixed
+        // sequential order no matter the executor — same bits as the
+        // executor-less engine.
+        let topo = Topology::ring(8);
+        let cfg = SimConfig { drop_prob: 0.25, noise_std: 0.01, ..SimConfig::ideal(29) };
+        let stack0 = random_stack(8, 4, 2, 318);
+
+        let mut want = stack0.clone();
+        SimNet::from_topology(&topo, cfg).fastmix(&mut want, 9, &mut CommStats::default());
+
+        let sim = SimNet::from_topology(&topo, cfg)
+            .with_executor(Arc::new(Executor::new(8)));
+        let mut got = stack0;
+        sim.fastmix(&mut got, 9, &mut CommStats::default());
+        assert_eq!(want, got, "faulty rounds must be executor-invariant");
     }
 
     #[test]

@@ -33,6 +33,8 @@ use crate::consensus::metrics::CommStats;
 use crate::consensus::simnet::SimConfig;
 use crate::consensus::AgentStack;
 use crate::coordinator::session::Session;
+use crate::exec::Executor;
+use std::sync::Arc;
 use crate::graph::dynamic::TopologySchedule;
 use crate::graph::topology::Topology;
 use crate::linalg::Mat;
@@ -174,6 +176,8 @@ pub struct OnlineSession<'a> {
     engine: Engine,
     cfg: OnlineConfig,
     schedule: Option<TopologySchedule>,
+    threads: Option<usize>,
+    exec: Option<Arc<Executor>>,
 }
 
 impl<'a> OnlineSession<'a> {
@@ -184,7 +188,26 @@ impl<'a> OnlineSession<'a> {
             engine: Engine::Dense,
             cfg: OnlineConfig::default(),
             schedule: None,
+            threads: None,
+            exec: None,
         }
+    }
+
+    /// Size the worker pool shared across every epoch: the per-agent
+    /// covariance refreshes and all inner solves run on one persistent
+    /// executor (passthrough of [`Session::threads`] — same defaults,
+    /// same bit-identical-for-any-thread-count guarantee).
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = Some(n);
+        self
+    }
+
+    /// Share an existing executor (e.g. one pool across a whole sweep
+    /// of online runs) instead of building one per run. Overrides
+    /// [`OnlineSession::threads`] — mirror of [`Session::executor`].
+    pub fn executor(mut self, exec: Arc<Executor>) -> Self {
+        self.exec = Some(exec);
+        self
     }
 
     /// Select the execution engine for the inner per-epoch runs.
@@ -245,13 +268,25 @@ impl<'a> OnlineSession<'a> {
         // reclaimed after the inner run — the refresh itself allocates
         // nothing (the `Problem`'s ground-truth eigensolve still does).
         let mut locals: Vec<Mat> = (0..m).map(|_| Mat::zeros(d, d)).collect();
+        // One persistent pool for the whole run (or for a whole sweep,
+        // when the caller shares one): per-agent covariance refreshes
+        // and every epoch's inner solve share it.
+        let exec = match &self.exec {
+            Some(e) => Arc::clone(e),
+            None => Arc::new(Executor::new(self.threads.unwrap_or(0))),
+        };
 
         for e in 0..self.cfg.epochs {
             for (j, tracker) in trackers.iter_mut().enumerate() {
                 tracker.observe(&source.next_batch(j));
             }
-            for (tracker, local) in trackers.iter().zip(locals.iter_mut()) {
-                tracker.covariance_into(local);
+            {
+                // Each agent's tracker writes only its own buffer —
+                // deterministic under the fixed per-agent partitioning.
+                let trackers = &trackers;
+                exec.par_for_each_agent(&mut locals, |j, local| {
+                    trackers[j].covariance_into(local)
+                });
             }
             let problem = Problem::new(std::mem::take(&mut locals), k, &scenario);
 
@@ -276,7 +311,8 @@ impl<'a> OnlineSession<'a> {
             };
             let mut session = Session::on(&problem, &epoch_topo)
                 .engine(engine)
-                .algo(Algo::Deepca(deepca_cfg));
+                .algo(Algo::Deepca(deepca_cfg))
+                .executor(Arc::clone(&exec));
             if self.cfg.warm_start {
                 if let Some(w) = &prev_w {
                     session = session.warm_start_from(w);
@@ -395,6 +431,36 @@ mod tests {
             .run(&mut src);
         assert!(!report.records.iter().any(|r| r.diverged));
         assert!(report.records.last().unwrap().empirical_tan_theta < 1e-2);
+    }
+
+    #[test]
+    fn online_run_is_thread_count_invariant() {
+        let topo = Topology::ring(6);
+        let run = |threads: usize| {
+            let mut src = stream(Drift::Rotation { rate: 0.05 }, 37);
+            OnlineSession::on(&topo)
+                .threads(threads)
+                .config(OnlineConfig {
+                    epochs: 6,
+                    consensus_rounds: 6,
+                    power_iters: 2,
+                    warm_start: true,
+                    forgetting: Forgetting::Exponential(0.8),
+                    init_seed: 5,
+                })
+                .run(&mut src)
+        };
+        let a = run(1);
+        let b = run(4);
+        assert_eq!(
+            a.final_w.distance(&b.final_w),
+            0.0,
+            "online runs must be bit-identical across thread counts"
+        );
+        for (ra, rb) in a.records.iter().zip(&b.records) {
+            assert_eq!(ra.oracle_tan_theta.to_bits(), rb.oracle_tan_theta.to_bits());
+            assert_eq!(ra.empirical_tan_theta.to_bits(), rb.empirical_tan_theta.to_bits());
+        }
     }
 
     #[test]

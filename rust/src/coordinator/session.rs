@@ -46,7 +46,7 @@
 //!   config it reproduces [`Engine::Dense`] bit-for-bit.
 //! - The centralized reference ignores the engine (no communication).
 
-use crate::algo::backend::{ParallelBackend, PowerBackend, RustBackend};
+use crate::algo::backend::{PowerBackend, RustBackend};
 use crate::algo::centralized::CentralizedSolver;
 use crate::algo::deepca::DeepcaSolver;
 use crate::algo::depca::DepcaSolver;
@@ -61,8 +61,10 @@ use crate::algo::solver::{
 use crate::consensus::comm::{Communicator, DenseComm, ThreadedNetwork};
 use crate::consensus::simnet::SimNet;
 use crate::consensus::AgentStack;
+use crate::exec::Executor;
 use crate::graph::dynamic::TopologySchedule;
 use crate::graph::topology::Topology;
+use std::sync::Arc;
 
 /// Fluent builder for one solver run. See the module docs for a tour.
 pub struct Session<'a> {
@@ -76,6 +78,8 @@ pub struct Session<'a> {
     warm: Option<AgentStack>,
     eig_rounds: Option<usize>,
     schedule: Option<TopologySchedule>,
+    threads: Option<usize>,
+    exec: Option<Arc<Executor>>,
 }
 
 /// The issue-tracker name for [`Session`] — same type.
@@ -96,7 +100,29 @@ impl<'a> Session<'a> {
             warm: None,
             eig_rounds: None,
             schedule: None,
+            threads: None,
+            exec: None,
         }
+    }
+
+    /// Size the deterministic worker pool shared by the power-step
+    /// backend, the communication engine, and the solver's per-agent
+    /// loops. `0` (and never calling this) resolves to `DEEPCA_THREADS`
+    /// or `available_parallelism`; `1` is the sequential fallback.
+    /// Results are **bit-identical for every value** — the pool only
+    /// changes which thread computes each agent's work (see
+    /// [`crate::exec`]).
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = Some(n);
+        self
+    }
+
+    /// Share an existing executor (e.g. across the epochs of an online
+    /// run) instead of building one per solve. Overrides
+    /// [`Session::threads`].
+    pub fn executor(mut self, exec: Arc<Executor>) -> Self {
+        self.exec = Some(exec);
+        self
     }
 
     /// Select the algorithm.
@@ -296,45 +322,77 @@ impl<'a> Session<'a> {
         report
     }
 
+    /// The session-wide executor: an explicitly shared one, or a fresh
+    /// pool sized by [`Session::threads`] (default: `DEEPCA_THREADS` /
+    /// `available_parallelism`). One pool serves the backend, the
+    /// communication engine, and the solver's per-agent loops.
+    fn make_executor(&self) -> Arc<Executor> {
+        match &self.exec {
+            Some(e) => Arc::clone(e),
+            None => Arc::new(Executor::new(self.threads.unwrap_or(0))),
+        }
+    }
+
     fn build_solver_for(&self, engine: Engine) -> Box<dyn Solver + 'a> {
         match &self.algo {
             Algo::Deepca(cfg) => {
-                let (backend, comm) = self.parts(engine);
-                Box::new(DeepcaSolver::new(self.problem, backend, comm, cfg.clone()))
+                let exec = self.make_executor();
+                let (backend, comm) = self.parts(engine, &exec);
+                Box::new(
+                    DeepcaSolver::new(self.problem, backend, comm, cfg.clone())
+                        .with_executor(exec),
+                )
             }
             Algo::Depca(cfg) => {
-                let (backend, comm) = self.parts(engine);
-                Box::new(DepcaSolver::new(self.problem, backend, comm, cfg.clone()))
+                let exec = self.make_executor();
+                let (backend, comm) = self.parts(engine, &exec);
+                Box::new(
+                    DepcaSolver::new(self.problem, backend, comm, cfg.clone())
+                        .with_executor(exec),
+                )
             }
             Algo::LocalPower(cfg) => {
                 // No communication: build only the backend (skip the
                 // communicator's gossip-matrix spectral computation).
-                Box::new(LocalPowerSolver::new(self.problem, self.backend(engine), cfg.clone()))
+                let exec = self.make_executor();
+                Box::new(
+                    LocalPowerSolver::new(self.problem, self.backend(&exec), cfg.clone())
+                        .with_executor(exec),
+                )
             }
+            // The centralized solver has a single-slice iterate — no
+            // per-agent loop to fan out — so it takes no executor and no
+            // pool is spun up for it.
             Algo::Centralized(cfg) => Box::new(CentralizedSolver::new(self.problem, cfg.clone())),
         }
     }
 
-    fn backend(&self, engine: Engine) -> Box<dyn PowerBackend + 'a> {
-        match engine {
-            Engine::DenseParallel => Box::new(ParallelBackend::new(&self.problem.locals, 0)),
-            _ => Box::new(RustBackend::new(&self.problem.locals)),
-        }
+    fn backend(&self, exec: &Arc<Executor>) -> Box<dyn PowerBackend + 'a> {
+        // Every engine composes the same in-process backend with the
+        // session executor ([`Engine::DenseParallel`] is a legacy alias
+        // for Dense now that parallelism is the executor's job).
+        Box::new(RustBackend::with_executor(&self.problem.locals, Arc::clone(exec)))
     }
 
-    fn parts(&self, engine: Engine) -> (Box<dyn PowerBackend + 'a>, Box<dyn Communicator + 'a>) {
+    fn parts(
+        &self,
+        engine: Engine,
+        exec: &Arc<Executor>,
+    ) -> (Box<dyn PowerBackend + 'a>, Box<dyn Communicator + 'a>) {
         let comm: Box<dyn Communicator + 'a> = match engine {
-            Engine::Threaded => Box::new(ThreadedNetwork::from_topology(self.topo)),
+            Engine::Threaded => Box::new(
+                ThreadedNetwork::from_topology(self.topo).with_executor(Arc::clone(exec)),
+            ),
             Engine::Sim(cfg) => {
                 let sched = self
                     .schedule
                     .clone()
                     .unwrap_or_else(|| TopologySchedule::fixed(self.topo.clone()));
-                Box::new(SimNet::new(sched, cfg))
+                Box::new(SimNet::new(sched, cfg).with_executor(Arc::clone(exec)))
             }
-            _ => Box::new(DenseComm::from_topology(self.topo)),
+            _ => Box::new(DenseComm::from_topology(self.topo).with_executor(Arc::clone(exec))),
         };
-        (self.backend(engine), comm)
+        (self.backend(exec), comm)
     }
 }
 

@@ -1,0 +1,632 @@
+//! `exec` — the deterministic persistent worker pool.
+//!
+//! One [`Executor`] is the single parallelism substrate for the whole
+//! stack: the power-step backends fan the per-agent Gram products over
+//! it, the Dense/Sim communication engines run their FastMix row blocks
+//! on it, the decentralized solvers' per-agent QR/sign-adjust loops go
+//! through it (the centralized reference has a single-slice iterate and
+//! stays inline), and the streaming driver refreshes per-agent
+//! covariances on it. The
+//! threads are long-lived — spawned once at construction and fed work
+//! through a condvar-protected job slot — so the per-iteration cost of
+//! parallelism is a wake/join handshake, not a thread spawn (the
+//! per-call `std::thread::scope` spawns this module replaces paid that
+//! cost every power iteration).
+//!
+//! ## Determinism contract
+//!
+//! Results are **bit-identical to the sequential path and invariant
+//! across thread counts**. The design makes this hold by construction:
+//!
+//! - **Fixed partitioning by index.** Work items (agents) are split into
+//!   contiguous chunks by index — never work-stealing, never
+//!   order-of-completion. Which *thread* computes an item changes with
+//!   the thread count; the arithmetic performed on each item does not.
+//! - **No cross-item reductions inside parallel regions.** Every
+//!   parallel callback writes only its own items; reductions (stack
+//!   means, stats accumulation, the SimNet fault stream) stay on the
+//!   caller thread in their original, fixed order.
+//! - **Per-worker scratch is value-irrelevant.** Workspace slots handed
+//!   to chunks ([`Executor::par_chunks_ctx`]) are pure scratch whose
+//!   prior contents never influence outputs.
+//!
+//! ## Allocation contract
+//!
+//! Dispatching a parallel region performs **zero heap allocation**: the
+//! job is published as a type-erased borrowed closure pointer through a
+//! mutex/condvar handshake (no boxing, no channel nodes), so
+//! `Solver::step` stays allocation-free in steady state with the pool
+//! enabled (pinned by `rust/tests/alloc_free.rs`).
+//!
+//! ## Blocking tier
+//!
+//! [`Executor::scoped_blocking`] is a second, independent tier for tasks
+//! that *block on each other* (the ThreadedNetwork agent threads, which
+//! park on channel `recv` mid-gossip-round). Those can deadlock on a
+//! fixed-size pool, so each gets a dedicated persistent thread, created
+//! on demand and reused across calls. This tier exists even on a
+//! `threads = 1` executor — "sequential" refers to the data-parallel
+//! tier only.
+//!
+//! Parallel regions must not be nested: a callback running on the pool
+//! must not dispatch another parallel region on the same executor (the
+//! dispatch lock is not re-entrant). Nothing in this crate nests — the
+//! solver loops, the backends, and the engines each run their regions
+//! one after another on the caller thread.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+
+/// Lock a mutex, recovering from poisoning (workers catch panics before
+/// they can leave shared state torn, so a poisoned lock is still
+/// consistent).
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// The default worker count: `DEEPCA_THREADS` when set to a positive
+/// integer, otherwise `available_parallelism`.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("DEEPCA_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+}
+
+/// Contiguous index range of `chunk` when `n` items are split into
+/// `nchunks` fixed ceil-sized chunks. Empty for `chunk >= nchunks`.
+pub fn chunk_range(chunk: usize, n: usize, nchunks: usize) -> (usize, usize) {
+    let size = n.div_ceil(nchunks);
+    ((chunk * size).min(n), ((chunk + 1) * size).min(n))
+}
+
+/// Type-erased pointer to the borrowed job closure. Only dereferenced
+/// between dispatch and the dispatcher's completion wait, during which
+/// the dispatcher is blocked inside [`Executor::run_job`] keeping the
+/// borrow alive — the same discipline as a scoped thread pool.
+#[derive(Clone, Copy)]
+struct Job {
+    f: *const (dyn Fn(usize) + Sync + 'static),
+}
+
+// SAFETY: the pointee is Sync and outlives every dereference (see Job).
+unsafe impl Send for Job {}
+
+struct State {
+    job: Option<Job>,
+    /// Chunk count of the current job; chunk 0 belongs to the caller.
+    chunks: usize,
+    /// Next unclaimed chunk index. Workers *claim* chunks under the
+    /// lock — which worker executes a chunk is arbitrary (a fast worker
+    /// may claim several), but the chunk → data mapping is a pure
+    /// function of the index, so results do not depend on the claim
+    /// order (determinism contract). Claiming also means a dispatch
+    /// wakes only as many workers as there are chunks, not the whole
+    /// pool. `next_chunk == chunks` doubles as the "no job live"
+    /// predicate between dispatches.
+    next_chunk: usize,
+    /// Chunks claimed-or-claimable by workers but not yet completed
+    /// (chunks 1..chunks of the current job).
+    remaining: usize,
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers wait here for a new epoch.
+    work: Condvar,
+    /// The dispatcher waits here for `remaining == 0`.
+    done: Condvar,
+}
+
+struct Pool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    /// Serializes dispatches from different caller threads (held for the
+    /// whole region, including the completion wait).
+    dispatch: Mutex<()>,
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let (job, chunk) = {
+            let mut st = lock(&shared.state);
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                // Claim the next chunk of the live job, if any. No
+                // missed-wakeup hazard: a worker only sleeps after
+                // checking this predicate under the lock, and a worker
+                // between jobs re-checks it before sleeping.
+                if st.next_chunk < st.chunks {
+                    let c = st.next_chunk;
+                    st.next_chunk += 1;
+                    break (st.job.expect("dispatch published no job"), c);
+                }
+                st = match shared.work.wait(st) {
+                    Ok(g) => g,
+                    Err(poisoned) => poisoned.into_inner(),
+                };
+            }
+        };
+        // SAFETY: the dispatcher blocks until `remaining == 0`, so the
+        // closure (and everything it borrows) is alive for this call.
+        let f = unsafe { &*job.f };
+        let result = catch_unwind(AssertUnwindSafe(|| f(chunk)));
+        let mut st = lock(&shared.state);
+        if result.is_err() {
+            st.panicked = true;
+        }
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            shared.done.notify_one();
+        }
+    }
+}
+
+/// One one-shot blocking task, lifetime-erased (see
+/// [`Executor::scoped_blocking`] for the discipline that makes the
+/// erasure sound).
+type BlockingJob = Box<dyn FnOnce() + Send + 'static>;
+
+struct BlockingWorker {
+    tx: mpsc::Sender<BlockingJob>,
+    handle: JoinHandle<()>,
+}
+
+impl BlockingWorker {
+    fn spawn(idx: usize) -> Self {
+        let (tx, rx) = mpsc::channel::<BlockingJob>();
+        let handle = std::thread::Builder::new()
+            .name(format!("deepca-agent-{idx}"))
+            .spawn(move || {
+                // Tasks arrive pre-wrapped in catch_unwind, so the loop
+                // survives panicking tasks and the thread stays reusable.
+                while let Ok(job) = rx.recv() {
+                    job();
+                }
+            })
+            .expect("spawn blocking worker thread");
+        BlockingWorker { tx, handle }
+    }
+}
+
+/// Persistent worker pool. See the module docs for the determinism and
+/// allocation contracts.
+pub struct Executor {
+    threads: usize,
+    /// `None` for `threads == 1`: the sequential fallback runs every
+    /// chunk inline on the caller thread.
+    pool: Option<Pool>,
+    /// Dedicated-thread tier for mutually-blocking tasks, grown on
+    /// demand and reused across calls.
+    blocking: Mutex<Vec<BlockingWorker>>,
+}
+
+impl std::fmt::Debug for Executor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Executor")
+            .field("threads", &self.threads)
+            .finish_non_exhaustive()
+    }
+}
+
+impl Executor {
+    /// Pool with `threads` total workers (the caller thread counts as
+    /// one; `threads - 1` OS threads are spawned). `0` resolves through
+    /// [`default_threads`]. `1` is the sequential fallback: no threads,
+    /// every region runs inline.
+    pub fn new(threads: usize) -> Self {
+        let threads = if threads == 0 { default_threads() } else { threads };
+        let pool = (threads > 1).then(|| {
+            let shared = Arc::new(Shared {
+                state: Mutex::new(State {
+                    job: None,
+                    chunks: 0,
+                    next_chunk: 0,
+                    remaining: 0,
+                    panicked: false,
+                    shutdown: false,
+                }),
+                work: Condvar::new(),
+                done: Condvar::new(),
+            });
+            let handles = (1..threads)
+                .map(|idx| {
+                    let shared = Arc::clone(&shared);
+                    std::thread::Builder::new()
+                        .name(format!("deepca-worker-{idx}"))
+                        .spawn(move || worker_loop(shared))
+                        .expect("spawn executor worker thread")
+                })
+                .collect();
+            Pool { shared, handles, dispatch: Mutex::new(()) }
+        });
+        Executor { threads, pool, blocking: Mutex::new(Vec::new()) }
+    }
+
+    /// The sequential fallback (`threads = 1`): no worker threads, every
+    /// parallel region runs inline. The blocking tier is still available.
+    pub fn sequential() -> Self {
+        Executor::new(1)
+    }
+
+    /// Total worker count (including the caller thread).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Number of chunks `n` items are split into: `min(threads, n)`,
+    /// at least 1. Sizes per-worker scratch banks.
+    pub fn chunk_count(&self, n: usize) -> usize {
+        n.min(self.threads).max(1)
+    }
+
+    /// Dispatch `f(chunk)` for chunks `0..nchunks` (chunk 0 on the
+    /// caller thread, the rest claimed by pool workers) and wait for
+    /// completion. Panics in any chunk propagate after every claimed
+    /// chunk has finished, so borrows never outlive the region.
+    fn run_job(&self, nchunks: usize, f: &(dyn Fn(usize) + Sync)) {
+        let Some(pool) = &self.pool else {
+            for chunk in 0..nchunks {
+                f(chunk);
+            }
+            return;
+        };
+        if nchunks <= 1 {
+            f(0);
+            return;
+        }
+        let _region = lock(&pool.dispatch);
+        let ptr: *const (dyn Fn(usize) + Sync) = f;
+        // SAFETY: lifetime erasure only; the pointer is dereferenced
+        // exclusively before this function returns (completion wait
+        // below), while the borrow of `f` is alive.
+        let job = Job { f: unsafe { std::mem::transmute(ptr) } };
+        let worker_chunks = nchunks - 1; // chunk 0 runs on this thread
+        {
+            let mut st = lock(&pool.shared.state);
+            st.job = Some(job);
+            st.chunks = nchunks;
+            st.next_chunk = 1;
+            st.remaining = worker_chunks;
+            st.panicked = false;
+            // One wakeup per worker chunk (nchunks ≤ threads, so this
+            // never exceeds the pool). Lost notifications are harmless:
+            // they only occur when a worker is between jobs, and such a
+            // worker re-checks the claim predicate before sleeping.
+            for _ in 0..worker_chunks {
+                pool.shared.work.notify_one();
+            }
+        }
+        let caller = catch_unwind(AssertUnwindSafe(|| f(0)));
+        let worker_panicked = {
+            let mut st = lock(&pool.shared.state);
+            while st.remaining > 0 {
+                st = match pool.shared.done.wait(st) {
+                    Ok(g) => g,
+                    Err(poisoned) => poisoned.into_inner(),
+                };
+            }
+            st.job = None;
+            st.panicked
+        };
+        if let Err(payload) = caller {
+            std::panic::resume_unwind(payload);
+        }
+        if worker_panicked {
+            panic!("executor worker panicked during a parallel region");
+        }
+    }
+
+    /// Run `f(j, &mut items[j])` for every item, partitioned into
+    /// contiguous per-worker chunks fixed by index. Each item is visited
+    /// by exactly one worker; `f` must not touch other items (it only
+    /// receives its own). Bit-identical to the sequential loop for any
+    /// thread count.
+    pub fn par_for_each_agent<T, F>(&self, items: &mut [T], f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut T) + Sync,
+    {
+        let n = items.len();
+        if n == 0 {
+            return;
+        }
+        let nchunks = self.chunk_count(n);
+        let base = items.as_mut_ptr() as usize;
+        let run = |chunk: usize| {
+            let (lo, hi) = chunk_range(chunk, n, nchunks);
+            let ptr = base as *mut T;
+            for j in lo..hi {
+                // SAFETY: chunks are disjoint index ranges over `items`,
+                // so each element gets exactly one &mut.
+                f(j, unsafe { &mut *ptr.add(j) });
+            }
+        };
+        self.run_job(nchunks, &run);
+    }
+
+    /// Chunked variant with one mutable context per chunk (per-worker
+    /// scratch, e.g. a QR workspace): `f(chunk_start, chunk_items,
+    /// ctx)`. `ctxs` must hold at least [`Executor::chunk_count`]`(n)`
+    /// slots; scratch contents must not influence results (determinism
+    /// contract).
+    pub fn par_chunks_ctx<T, C, F>(&self, items: &mut [T], ctxs: &mut [C], f: F)
+    where
+        T: Send,
+        C: Send,
+        F: Fn(usize, &mut [T], &mut C) + Sync,
+    {
+        let n = items.len();
+        if n == 0 {
+            return;
+        }
+        let nchunks = self.chunk_count(n);
+        assert!(
+            ctxs.len() >= nchunks,
+            "need one ctx per chunk: {} < {nchunks}",
+            ctxs.len()
+        );
+        let items_base = items.as_mut_ptr() as usize;
+        let ctx_base = ctxs.as_mut_ptr() as usize;
+        let run = |chunk: usize| {
+            let (lo, hi) = chunk_range(chunk, n, nchunks);
+            if lo >= hi {
+                return;
+            }
+            // SAFETY: chunks are disjoint ranges of `items`, and chunk
+            // indices < nchunks ≤ ctxs.len() are pairwise distinct.
+            let slice = unsafe {
+                std::slice::from_raw_parts_mut((items_base as *mut T).add(lo), hi - lo)
+            };
+            let ctx = unsafe { &mut *(ctx_base as *mut C).add(chunk) };
+            f(lo, slice, ctx);
+        };
+        self.run_job(nchunks, &run);
+    }
+
+    /// Run one-shot tasks that may *block on each other* (channel
+    /// `recv`), each on its own dedicated persistent thread. Blocks
+    /// until every task completes; a panicking task is reported (by
+    /// panicking here) only after all tasks have finished, so borrowed
+    /// captures never outlive the call — which is what makes handing
+    /// non-`'static` closures to the long-lived threads sound.
+    ///
+    /// Unlike the data-parallel tier this allocates (boxed tasks,
+    /// channel nodes) — its callers (the threaded network engines)
+    /// allocate per message by design.
+    pub fn scoped_blocking<'env>(&self, tasks: Vec<Box<dyn FnOnce() + Send + 'env>>) {
+        let count = tasks.len();
+        if count == 0 {
+            return;
+        }
+        let sync = Arc::new((Mutex::new(count), Condvar::new(), AtomicBool::new(false)));
+        {
+            let mut workers = lock(&self.blocking);
+            while workers.len() < count {
+                workers.push(BlockingWorker::spawn(workers.len()));
+            }
+            for (i, task) in tasks.into_iter().enumerate() {
+                let sync = Arc::clone(&sync);
+                let wrapped: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
+                    let result = catch_unwind(AssertUnwindSafe(task));
+                    let (left, done, panicked) = &*sync;
+                    if result.is_err() {
+                        panicked.store(true, Ordering::SeqCst);
+                    }
+                    let mut n = lock(left);
+                    *n -= 1;
+                    if *n == 0 {
+                        done.notify_all();
+                    }
+                });
+                // SAFETY: lifetime erasure only — this call blocks until
+                // every task has run, so 'env borrows stay alive.
+                let wrapped: BlockingJob = unsafe { std::mem::transmute(wrapped) };
+                workers[i].tx.send(wrapped).expect("blocking worker alive");
+            }
+        }
+        let (left, done, panicked) = &*sync;
+        let mut n = lock(left);
+        while *n > 0 {
+            n = match done.wait(n) {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+        }
+        drop(n);
+        if panicked.load(Ordering::SeqCst) {
+            panic!("executor blocking task panicked");
+        }
+    }
+}
+
+impl Drop for Executor {
+    fn drop(&mut self) {
+        if let Some(pool) = self.pool.take() {
+            {
+                let mut st = lock(&pool.shared.state);
+                st.shutdown = true;
+                pool.shared.work.notify_all();
+            }
+            for h in pool.handles {
+                let _ = h.join();
+            }
+        }
+        let workers = std::mem::take(&mut *lock(&self.blocking));
+        for BlockingWorker { tx, handle } in workers {
+            drop(tx); // disconnect: the worker's recv loop ends
+            let _ = handle.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_ranges_cover_and_are_disjoint() {
+        for n in [1usize, 2, 5, 7, 16, 100] {
+            for nchunks in 1..=8usize {
+                let nchunks = nchunks.min(n);
+                let mut covered = vec![0u8; n];
+                for c in 0..nchunks {
+                    let (lo, hi) = chunk_range(c, n, nchunks);
+                    for j in lo..hi {
+                        covered[j] += 1;
+                    }
+                }
+                assert!(covered.iter().all(|&c| c == 1), "n={n} chunks={nchunks}");
+                // Chunks past the count are empty.
+                let (lo, hi) = chunk_range(nchunks, n, nchunks);
+                assert!(lo >= hi);
+            }
+        }
+    }
+
+    #[test]
+    fn par_for_each_matches_sequential_for_every_thread_count() {
+        let base: Vec<f64> = (0..37).map(|i| i as f64 * 0.5).collect();
+        let mut want = base.clone();
+        for (j, v) in want.iter_mut().enumerate() {
+            *v = v.sin() + j as f64;
+        }
+        for threads in [1usize, 2, 3, 8, 16] {
+            let exec = Executor::new(threads);
+            let mut got = base.clone();
+            exec.par_for_each_agent(&mut got, |j, v| *v = v.sin() + j as f64);
+            assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn par_chunks_ctx_gives_each_chunk_its_own_ctx() {
+        let exec = Executor::new(4);
+        let mut items = vec![0usize; 10];
+        let nchunks = exec.chunk_count(items.len());
+        let mut ctxs: Vec<Vec<usize>> = vec![Vec::new(); nchunks];
+        exec.par_chunks_ctx(&mut items, &mut ctxs, |lo, chunk, ctx| {
+            for (off, it) in chunk.iter_mut().enumerate() {
+                *it = lo + off;
+                ctx.push(lo + off);
+            }
+        });
+        assert_eq!(items, (0..10).collect::<Vec<_>>());
+        let mut seen: Vec<usize> = ctxs.into_iter().flatten().collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pool_is_reusable_across_many_dispatches() {
+        let exec = Executor::new(4);
+        let mut acc = vec![0u64; 23];
+        for round in 0..50u64 {
+            exec.par_for_each_agent(&mut acc, |j, v| *v += round + j as u64);
+        }
+        let want: Vec<u64> = (0..23u64).map(|j| (0..50u64).map(|r| r + j).sum()).collect();
+        assert_eq!(acc, want);
+    }
+
+    #[test]
+    fn zero_resolves_to_a_positive_default() {
+        let exec = Executor::new(0);
+        assert!(exec.threads() >= 1);
+    }
+
+    #[test]
+    fn empty_input_is_a_noop() {
+        let exec = Executor::new(4);
+        let mut items: Vec<u32> = Vec::new();
+        exec.par_for_each_agent(&mut items, |_, _| panic!("must not be called"));
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        let exec = Executor::new(4);
+        let mut items = vec![0i32; 16];
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            exec.par_for_each_agent(&mut items, |j, _| {
+                if j == 13 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(result.is_err(), "panic must propagate to the dispatcher");
+        // The pool is still functional afterwards.
+        exec.par_for_each_agent(&mut items, |j, v| *v = j as i32);
+        assert_eq!(items[15], 15);
+    }
+
+    #[test]
+    fn scoped_blocking_runs_mutually_blocking_tasks() {
+        // A ring of tasks each waiting on its predecessor's message —
+        // deadlocks unless every task has a real thread.
+        let exec = Executor::sequential(); // blocking tier is independent
+        let n = 6;
+        let mut txs = Vec::new();
+        let mut rxs = Vec::new();
+        for _ in 0..n {
+            let (tx, rx) = mpsc::channel::<usize>();
+            txs.push(tx);
+            rxs.push(rx);
+        }
+        let mut results = vec![0usize; n];
+        {
+            let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+            for (i, (rx, slot)) in rxs.into_iter().zip(results.iter_mut()).enumerate() {
+                let next = txs[(i + 1) % n].clone();
+                tasks.push(Box::new(move || {
+                    next.send(i).expect("ring peer alive");
+                    *slot = rx.recv().expect("ring peer alive");
+                }));
+            }
+            exec.scoped_blocking(tasks);
+        }
+        for (i, &got) in results.iter().enumerate() {
+            assert_eq!(got, (i + n - 1) % n, "task {i} got the wrong message");
+        }
+        // Second call reuses the cached threads.
+        let flag = AtomicBool::new(false);
+        exec.scoped_blocking(vec![Box::new(|| flag.store(true, Ordering::SeqCst))]);
+        assert!(flag.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn blocking_task_panic_propagates_after_all_tasks_finish() {
+        let exec = Executor::sequential();
+        let finished = Arc::new(AtomicBool::new(false));
+        let fin = Arc::clone(&finished);
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            exec.scoped_blocking(vec![
+                Box::new(|| panic!("task boom")),
+                Box::new(move || fin.store(true, Ordering::SeqCst)),
+            ]);
+        }));
+        assert!(result.is_err());
+        assert!(finished.load(Ordering::SeqCst), "sibling task must still run");
+    }
+
+    #[test]
+    fn many_more_chunks_requested_than_items() {
+        let exec = Executor::new(16);
+        let mut items = vec![1u32, 2, 3];
+        exec.par_for_each_agent(&mut items, |_, v| *v *= 2);
+        assert_eq!(items, vec![2, 4, 6]);
+    }
+}

@@ -54,7 +54,10 @@ fn run_deepca_qr(
         qr_canonical,
         ..Default::default()
     };
-    let out = Session::on(problem, topo).algo(Algo::Deepca(cfg)).solve();
+    let out = Session::on(problem, topo)
+        .algo(Algo::Deepca(cfg))
+        .executor(super::sweep_executor())
+        .solve();
     if out.diverged {
         f64::INFINITY
     } else {

@@ -52,6 +52,7 @@ pub fn run(scale: Scale) -> Result<Vec<CommRow>> {
             max_iters: iters,
             ..Default::default()
         }))
+        .executor(super::sweep_executor())
         .solve();
     let rec_deepca = run_deepca.trace;
 
@@ -63,6 +64,7 @@ pub fn run(scale: Scale) -> Result<Vec<CommRow>> {
             max_iters: iters,
             ..Default::default()
         }))
+        .executor(super::sweep_executor())
         .solve();
     let rec_depca = run_depca.trace;
 

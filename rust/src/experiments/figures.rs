@@ -177,7 +177,10 @@ pub fn run_figure(figure: Figure, scale: Scale) -> Result<FigureResult> {
             init_seed: spec.seeds.2,
             ..Default::default()
         };
-        let run = Session::on(&problem, &topo).algo(Algo::Deepca(cfg)).solve();
+        let run = Session::on(&problem, &topo)
+            .algo(Algo::Deepca(cfg))
+            .executor(super::sweep_executor())
+            .solve();
         let label = format!("DeEPCA K={k_rounds}");
         println!(
             "  {label:<16} tanθ={:.3e} after {} iters ({}) {}",
@@ -198,7 +201,10 @@ pub fn run_figure(figure: Figure, scale: Scale) -> Result<FigureResult> {
             init_seed: spec.seeds.2,
             ..Default::default()
         };
-        let run = Session::on(&problem, &topo).algo(Algo::Depca(cfg)).solve();
+        let run = Session::on(&problem, &topo)
+            .algo(Algo::Depca(cfg))
+            .executor(super::sweep_executor())
+            .solve();
         println!(
             "  {label:<16} tanθ={:.3e} after {} iters ({})",
             run.final_tan_theta, run.iters, run.comm
@@ -236,6 +242,7 @@ pub fn run_figure(figure: Figure, scale: Scale) -> Result<FigureResult> {
             max_iters: spec.iters.min(40),
             init_seed: 2021,
         }))
+        .executor(super::sweep_executor())
         .solve();
     let local_floor = local.final_tan_theta;
     println!("  {:<16} floor tanθ={local_floor:.3e} (no communication)", "Local-only");

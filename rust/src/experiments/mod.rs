@@ -20,6 +20,19 @@ pub mod robustness;
 pub mod tracking;
 pub mod report;
 
+use crate::exec::Executor;
+use std::sync::{Arc, OnceLock};
+
+/// One worker pool shared by every experiment sweep in this process.
+/// Sweeps run hundreds of small solves from a single driver thread; a
+/// per-solve pool would pay thread spawn/teardown on each of them,
+/// while sharing is contention-free (the driver dispatches one region
+/// at a time) and changes no results (bit-identical for any pool).
+pub(crate) fn sweep_executor() -> Arc<Executor> {
+    static EXEC: OnceLock<Arc<Executor>> = OnceLock::new();
+    Arc::clone(EXEC.get_or_init(|| Arc::new(Executor::new(0))))
+}
+
 /// Experiment scale: paper-sized or CI-sized.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Scale {

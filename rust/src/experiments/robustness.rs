@@ -75,6 +75,7 @@ pub fn sweep(scale: Scale) -> Vec<Cell> {
                     max_iters: iters,
                     ..Default::default()
                 }))
+                .executor(super::sweep_executor())
                 .solve();
             cells.push(Cell {
                 drop_prob: drop,

@@ -118,6 +118,7 @@ pub fn run_once(
             forgetting: Forgetting::Exponential(0.6),
             init_seed: 2021,
         })
+        .executor(super::sweep_executor())
         .run(&mut source)
 }
 

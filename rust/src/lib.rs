@@ -50,6 +50,10 @@
 //! `Engine::Distributed`, and `Engine::Sim` (deterministic
 //! unreliable-network simulation: seeded drops/latency/noise and
 //! time-varying topologies) to change how the same math executes.
+//! Per-agent work (products, gossip row blocks, QR loops) runs on a
+//! persistent deterministic worker pool ([`exec::Executor`]), sized by
+//! `Session::threads` / `DEEPCA_THREADS` — results are bit-identical
+//! for every thread count.
 //!
 //! For *live* data whose covariance drifts over time, the [`stream`]
 //! subsystem ([`stream::source::StreamSource`] scenarios +
@@ -62,6 +66,7 @@
 //! full system inventory.
 
 pub mod util;
+pub mod exec;
 pub mod linalg;
 pub mod graph;
 pub mod data;
@@ -96,6 +101,7 @@ pub mod prelude {
     };
     pub use crate::algo::workspace::SolverWorkspace;
     pub use crate::consensus::fastmix::FastMix;
+    pub use crate::exec::Executor;
     pub use crate::consensus::simnet::{SimConfig, SimNet};
     pub use crate::coordinator::online::{EpochRecord, OnlineConfig, OnlineReport, OnlineSession};
     pub use crate::coordinator::session::{Session, SolverBuilder};

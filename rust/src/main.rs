@@ -61,7 +61,7 @@ fn print_help() {
 USAGE:
   deepca experiment <fig1|fig2|comm-table|ablations|robustness|tracking|all> [--scale full|small]
   deepca run  [--config cfg.toml] [--algo deepca|depca|local-power|centralized]
-              [--engine dense|parallel|threaded|distributed|sim]
+              [--engine dense|parallel|threaded|distributed|sim] [--threads N]
               [--m N] [--n N] [--k N] [--rounds K] [--iters T] [--tol EPS]
               [--k-policy fixed|increasing] [--k-base K0] [--k-slope S]
               [--drop-prob P] [--latency L] [--noise STD] [--churn P]
@@ -71,9 +71,15 @@ USAGE:
               [--window ROWS | --forget BETA] [--cold]
               [--m N] [--d N] [--k N] [--batch N] [--epochs E]
               [--rounds K] [--power-iters T] [--engine dense|parallel|threaded|sim]
-              [--drop-prob P] [--latency L] [--noise STD] [--churn P]
+              [--threads N] [--drop-prob P] [--latency L] [--noise STD] [--churn P]
               [--topology er|ring|grid|star|complete] [--seed S]
   deepca info [--dataset w8a|a9a] [--data libsvm-file] [--m N] [--k N]
+
+Worker pool (--threads N): per-agent products, gossip row blocks, and
+QR loops run on a persistent deterministic pool. N=0 (the default)
+resolves to DEEPCA_THREADS or all cores; results are bit-identical for
+every N (use --threads 1 for tiny problems where dispatch overhead
+dominates).
 
 DePCA consensus schedule (--algo depca):
   --k-policy fixed       K = --k-base (default: --rounds) every iteration
@@ -331,7 +337,13 @@ fn cmd_run(args: &Args) -> Result<()> {
         other => bail!("unknown algo `{other}` (deepca|depca|local-power|centralized)"),
     };
 
-    let mut session = Session::on(&problem, &topo).engine(engine).algo(algo);
+    // 0 = auto (DEEPCA_THREADS or available_parallelism); results are
+    // bit-identical for any value.
+    let threads = args.usize_or("threads", cfg.usize_or("threads", 0)?)?;
+    let mut session = Session::on(&problem, &topo)
+        .engine(engine)
+        .algo(algo)
+        .threads(threads);
     if let Some(sched) = schedule {
         session = session.schedule(sched);
     }
@@ -457,7 +469,8 @@ fn cmd_stream(args: &Args) -> Result<()> {
         bail!("--engine distributed is not supported by `deepca stream` (dense|parallel|threaded|sim)");
     }
 
-    let mut session = OnlineSession::on(&topo).engine(engine).config(OnlineConfig {
+    let threads = args.usize_or("threads", cfg.usize_or("threads", 0)?)?;
+    let mut session = OnlineSession::on(&topo).engine(engine).threads(threads).config(OnlineConfig {
         epochs,
         consensus_rounds: rounds,
         power_iters,

@@ -15,6 +15,7 @@
 use super::artifact::{ArtifactKind, Manifest};
 use super::executable::{Executable, PjrtContext};
 use crate::algo::backend::PowerBackend;
+use crate::consensus::AgentStack;
 use crate::linalg::Mat;
 use anyhow::{Context, Result};
 use std::rc::Rc;
@@ -73,6 +74,17 @@ impl PjrtBackend {
         anyhow::ensure!(result.len() == 1, "power_step must return 1 output");
         Ok(result.into_iter().next().unwrap())
     }
+
+    /// Execute `A_j · w` through the artifact, landing directly in a
+    /// caller-owned buffer (no intermediate `Mat`).
+    fn product_into(&self, agent: usize, w: &Mat, out: &mut Mat) -> Result<()> {
+        assert_eq!(w.shape(), (self.d, self.k), "iterate shape mismatch");
+        let w_lit = mat_to_f32_literal(w)?;
+        let inputs: Vec<&xla::Literal> = vec![&self.locals_lit[agent], &w_lit];
+        self.power_step
+            .run_literals_into(&inputs, out)
+            .context("power_step execution")
+    }
 }
 
 impl PowerBackend for PjrtBackend {
@@ -83,6 +95,29 @@ impl PowerBackend for PjrtBackend {
     fn local_product(&self, agent: usize, w: &Mat) -> Mat {
         self.product(agent, w)
             .expect("PJRT power_step execution failed")
+    }
+
+    fn local_product_into(&self, agent: usize, w: &Mat, out: &mut Mat) {
+        // Lowered through the executable path straight into the caller's
+        // buffer instead of inheriting the allocating trait default
+        // (which would materialize a Mat per product and copy it over).
+        self.product_into(agent, w, out)
+            .expect("PJRT power_step execution failed")
+    }
+
+    fn local_products_into(&self, ws: &AgentStack, out: &mut AgentStack) {
+        // The batched per-iteration form the solvers drive: every
+        // agent's product runs through the compiled power_step artifact,
+        // landing in the solver's persistent product stack. The PJRT
+        // client is Rc-based and single-threaded, so the batch stays on
+        // the leader thread; the per-agent A_j literals were uploaded
+        // once at construction.
+        assert_eq!(ws.m(), self.m);
+        assert_eq!(out.m(), self.m);
+        for j in 0..self.m {
+            self.product_into(j, ws.slice(j), out.slice_mut(j))
+                .expect("PJRT power_step execution failed");
+        }
     }
 
     fn label(&self) -> &'static str {

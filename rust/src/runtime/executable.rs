@@ -73,10 +73,10 @@ impl Executable {
         parts.into_iter().map(|l| literal_to_mat(&l)).collect()
     }
 
-    /// Execute with pre-built literals (lets callers cache the big,
-    /// iteration-invariant operands like `A_j`); returns tuple elements
-    /// as `Mat`s.
-    pub fn run_literals(&self, inputs: &[&xla::Literal]) -> Result<Vec<Mat>> {
+    /// Execute with pre-built literals and decompose the output tuple
+    /// (the shared execute → fetch → untuple pipeline behind both the
+    /// allocating and `_into` literal entry points).
+    fn run_literal_parts(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
         let result = self
             .exe
             .execute::<&xla::Literal>(inputs)
@@ -84,8 +84,17 @@ impl Executable {
         let out = result[0][0]
             .to_literal_sync()
             .context("fetching result literal")?;
-        let parts = out.to_tuple().context("decomposing result tuple")?;
-        parts.into_iter().map(|l| literal_to_mat(&l)).collect()
+        out.to_tuple().context("decomposing result tuple")
+    }
+
+    /// Execute with pre-built literals (lets callers cache the big,
+    /// iteration-invariant operands like `A_j`); returns tuple elements
+    /// as `Mat`s.
+    pub fn run_literals(&self, inputs: &[&xla::Literal]) -> Result<Vec<Mat>> {
+        self.run_literal_parts(inputs)?
+            .into_iter()
+            .map(|l| literal_to_mat(&l))
+            .collect()
     }
 
     /// Execute expecting exactly one output.
@@ -93,6 +102,23 @@ impl Executable {
         let mut outs = self.run(inputs)?;
         anyhow::ensure!(outs.len() == 1, "{}: expected 1 output, got {}", self.name, outs.len());
         Ok(outs.pop().unwrap())
+    }
+
+    /// Execute with pre-built literals, expecting exactly one output,
+    /// widened straight into a caller-owned buffer (shape-checked) — the
+    /// `_into` form of [`Executable::run_literals`] for hot loops that
+    /// keep their landing stacks across iterations (the batched
+    /// power-step products). Skips the intermediate `Mat` the allocating
+    /// form materializes per call.
+    pub fn run_literals_into(&self, inputs: &[&xla::Literal], out: &mut Mat) -> Result<()> {
+        let parts = self.run_literal_parts(inputs)?;
+        anyhow::ensure!(
+            parts.len() == 1,
+            "{}: expected 1 output, got {}",
+            self.name,
+            parts.len()
+        );
+        literal_into_mat(&parts[0], out)
     }
 }
 
@@ -102,6 +128,28 @@ fn mat_to_literal(m: &Mat) -> Result<xla::Literal> {
     let lit = xla::Literal::vec1(&f32data);
     lit.reshape(&[m.rows() as i64, m.cols() as i64])
         .context("reshaping input literal")
+}
+
+/// f32 literal → caller-owned `Mat` (f64), shape-checked against the
+/// buffer (the zero-extra-allocation landing used by
+/// [`Executable::run_literals_into`]; `to_vec` still materializes the
+/// f32 host copy — that is the PJRT readback, not avoidable here).
+fn literal_into_mat(l: &xla::Literal, out: &mut Mat) -> Result<()> {
+    let shape = l.array_shape().context("output shape")?;
+    let dims = shape.dims();
+    anyhow::ensure!(dims.len() == 2, "expected rank-2 output, got {:?}", dims);
+    let (r, c) = (dims[0] as usize, dims[1] as usize);
+    anyhow::ensure!(
+        out.shape() == (r, c),
+        "output buffer is {:?}, artifact produced ({r}, {c})",
+        out.shape()
+    );
+    let data: Vec<f32> = l.to_vec().context("reading output literal")?;
+    anyhow::ensure!(data.len() == r * c, "output size mismatch");
+    for (dst, src) in out.data_mut().iter_mut().zip(&data) {
+        *dst = *src as f64;
+    }
+    Ok(())
 }
 
 /// f32 literal → `Mat` (f64).

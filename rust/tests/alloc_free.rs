@@ -118,21 +118,45 @@ fn solver_steps_are_allocation_free_after_warmup() {
     ];
 
     for (label, algo) in &algos {
-        let mut solver = Session::on(&problem, &topo).algo(algo.clone()).build_solver();
+        let mut solver = Session::on(&problem, &topo)
+            .algo(algo.clone())
+            .threads(1)
+            .build_solver();
         // Two warm-up steps: the first populates lazily-built engine
         // buffers, the second proves the steady state before measuring.
         audit(label, &mut *solver, 2, 5);
     }
 
+    // The same four audits with the worker pool enabled: dispatching a
+    // parallel region is a condvar handshake over a borrowed closure
+    // pointer — no boxing, no channel nodes — so the pooled step must
+    // stay at zero steady-state allocations too (pool startup happens
+    // at build time, inside the warm-up window's exclusion).
+    for (label, algo) in &algos {
+        let mut solver = Session::on(&problem, &topo)
+            .algo(algo.clone())
+            .threads(4)
+            .build_solver();
+        audit(&format!("{label} [threads=4]"), &mut *solver, 2, 5);
+    }
+
     // DeEPCA over the ideal SimNet: pins the simulator's persistent
-    // recursion buffers too.
-    let mut sim_solver = Session::on(&problem, &topo)
-        .algo(Algo::Deepca(DeepcaConfig {
-            consensus_rounds: 8,
-            max_iters: 64,
-            ..Default::default()
-        }))
-        .engine(Engine::Sim(SimConfig::ideal(0)))
-        .build_solver();
-    audit("deepca/sim-ideal", &mut *sim_solver, 2, 5);
+    // recursion buffers too — sequential and pooled.
+    for threads in [1usize, 4] {
+        let mut sim_solver = Session::on(&problem, &topo)
+            .algo(Algo::Deepca(DeepcaConfig {
+                consensus_rounds: 8,
+                max_iters: 64,
+                ..Default::default()
+            }))
+            .engine(Engine::Sim(SimConfig::ideal(0)))
+            .threads(threads)
+            .build_solver();
+        audit(
+            &format!("deepca/sim-ideal [threads={threads}]"),
+            &mut *sim_solver,
+            2,
+            5,
+        );
+    }
 }

@@ -1,0 +1,163 @@
+//! Determinism under parallelism — the executor refactor's acceptance
+//! bar: every algorithm on the Dense and ideal-Sim engines produces
+//! **bit-identical `SolveReport` trajectories** at `threads ∈ {1, 2, 8}`.
+//!
+//! The executor guarantees this by construction (fixed partitioning by
+//! agent index, no cross-item reductions inside parallel regions,
+//! value-irrelevant per-worker scratch — see `rust/src/exec/`); this
+//! property test pins it end to end: final iterates, every recorded
+//! per-iteration metric, and the communication accounting must match
+//! the sequential run exactly, not to a tolerance.
+
+use deepca::algo::centralized::CentralizedConfig;
+use deepca::algo::deepca::DeepcaConfig;
+use deepca::algo::depca::{DepcaConfig, KPolicy};
+use deepca::algo::local_power::LocalPowerConfig;
+use deepca::algo::problem::Problem;
+use deepca::algo::solver::{Algo, Engine, SolveReport};
+use deepca::consensus::simnet::SimConfig;
+use deepca::coordinator::session::Session;
+use deepca::data::synthetic;
+use deepca::graph::topology::Topology;
+use deepca::testing::{check, PropConfig};
+use deepca::util::rng::Rng;
+
+fn random_problem(seed: u64) -> (Problem, Topology) {
+    let mut rng = Rng::seed_from(seed);
+    let m = rng.range(4, 9);
+    let d = rng.range(8, 15);
+    let ds = synthetic::spiked_covariance(40 * m, d, &[9.0, 5.0], 0.3, &mut rng);
+    let p = Problem::from_dataset(&ds, m, 2);
+    let topo = Topology::erdos_renyi(m, 0.6, &mut Rng::seed_from(seed ^ 0xA5A5));
+    (p, topo)
+}
+
+fn algos() -> Vec<Algo> {
+    vec![
+        Algo::Deepca(DeepcaConfig { consensus_rounds: 6, max_iters: 10, ..Default::default() }),
+        Algo::Depca(DepcaConfig {
+            k_policy: KPolicy::Increasing { base: 3, slope: 0.5 },
+            max_iters: 10,
+            ..Default::default()
+        }),
+        Algo::LocalPower(LocalPowerConfig { max_iters: 10, ..Default::default() }),
+        Algo::Centralized(CentralizedConfig { max_iters: 10, ..Default::default() }),
+    ]
+}
+
+fn solve(p: &Problem, topo: &Topology, algo: Algo, engine: Engine, threads: usize) -> SolveReport {
+    Session::on(p, topo)
+        .algo(algo)
+        .engine(engine)
+        .threads(threads)
+        .solve()
+}
+
+/// Exact (bit-level) trajectory comparison.
+fn compare(base: &SolveReport, other: &SolveReport, label: &str) -> Result<(), String> {
+    if base.iters != other.iters {
+        return Err(format!("{label}: iters {} vs {}", base.iters, other.iters));
+    }
+    if base.final_w != other.final_w {
+        return Err(format!(
+            "{label}: final iterates differ by {:.3e} (must be bit-identical)",
+            base.final_w.distance(&other.final_w)
+        ));
+    }
+    if base.final_tan_theta.to_bits() != other.final_tan_theta.to_bits() {
+        return Err(format!(
+            "{label}: final_tan_theta {:.17e} vs {:.17e}",
+            base.final_tan_theta, other.final_tan_theta
+        ));
+    }
+    if base.comm != other.comm {
+        return Err(format!(
+            "{label}: communication accounting differs ({} vs {})",
+            base.comm, other.comm
+        ));
+    }
+    if base.trace.records.len() != other.trace.records.len() {
+        return Err(format!(
+            "{label}: trace length {} vs {}",
+            base.trace.records.len(),
+            other.trace.records.len()
+        ));
+    }
+    for (a, b) in base.trace.records.iter().zip(&other.trace.records) {
+        for (name, x, y) in [
+            ("mean_tan_theta", a.mean_tan_theta, b.mean_tan_theta),
+            ("tan_theta_mean", a.tan_theta_mean, b.tan_theta_mean),
+            ("s_deviation", a.s_deviation, b.s_deviation),
+            ("w_deviation", a.w_deviation, b.w_deviation),
+        ] {
+            if x.to_bits() != y.to_bits() {
+                return Err(format!(
+                    "{label}: iter {} {name} {x:.17e} vs {y:.17e}",
+                    a.iter
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn every_algo_and_engine_is_bit_identical_across_thread_counts() {
+    check(
+        "thread-count invariance (algo × engine × threads)",
+        PropConfig { cases: 3, seed: 0x7EAD5 },
+        |rng| rng.next_u64(),
+        |&seed| {
+            let (p, topo) = random_problem(seed);
+            for algo in algos() {
+                for engine in [Engine::Dense, Engine::Sim(SimConfig::ideal(1))] {
+                    let name = algo.name();
+                    let base = solve(&p, &topo, algo.clone(), engine, 1);
+                    for threads in [2usize, 8] {
+                        let other = solve(&p, &topo, algo.clone(), engine, threads);
+                        compare(
+                            &base,
+                            &other,
+                            &format!("{name} × {engine:?} × threads={threads}"),
+                        )?;
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn dense_parallel_engine_is_an_alias_for_dense() {
+    // The retired ParallelBackend's Engine variant now composes the same
+    // backend with the session executor — literally the same parts.
+    let (p, topo) = random_problem(0xC0FFEE);
+    let cfg = DeepcaConfig { consensus_rounds: 8, max_iters: 12, ..Default::default() };
+    let dense = solve(&p, &topo, Algo::Deepca(cfg.clone()), Engine::Dense, 4);
+    let par = solve(&p, &topo, Algo::Deepca(cfg), Engine::DenseParallel, 4);
+    compare(&dense, &par, "DenseParallel alias").unwrap();
+}
+
+#[test]
+fn warm_started_runs_are_thread_count_invariant() {
+    // The streaming driver chains warm starts across epochs; a single
+    // warm-started resume must also be executor-invariant.
+    let (p, topo) = random_problem(0xBEEF);
+    let cfg = DeepcaConfig { consensus_rounds: 8, max_iters: 8, ..Default::default() };
+    let run = |threads: usize| {
+        let first = Session::on(&p, &topo)
+            .algo(Algo::Deepca(cfg.clone()))
+            .threads(threads)
+            .solve();
+        Session::on(&p, &topo)
+            .algo(Algo::Deepca(cfg.clone()))
+            .threads(threads)
+            .warm_start(&first)
+            .solve()
+    };
+    let base = run(1);
+    for threads in [2usize, 8] {
+        compare(&base, &run(threads), &format!("warm resume threads={threads}")).unwrap();
+    }
+}
