@@ -15,7 +15,7 @@ use crate::algo::metrics::RunRecorder;
 use crate::consensus::AgentStack;
 use crate::linalg::qr::orth;
 use crate::linalg::Mat;
-use std::time::Instant;
+use crate::util::timer::Timer;
 
 /// Centralized power-method knobs.
 #[derive(Clone, Debug)]
@@ -81,6 +81,7 @@ impl Solver for CentralizedSolver<'_> {
         self.state.iter = t + 1;
         StepReport {
             iter: t,
+            // lint: allow(alloc, per-step stats snapshot for the report struct — tiny and off the data path)
             comm: self.state.stats.clone(),
             finite: self.state.w.is_finite(),
             mean_tan_theta: None,
@@ -127,7 +128,7 @@ pub fn run_with_tol(
     init_seed: u64,
     tol: f64,
 ) -> CentralizedOutput {
-    let t0 = Instant::now();
+    let t0 = Timer::start();
     let cfg = CentralizedConfig { max_iters: iters, tol, init_seed };
     let mut solver = CentralizedSolver::new(problem, cfg);
     let mut rec = RunRecorder::every_iteration();
@@ -141,7 +142,7 @@ pub fn run_with_tol(
         w: solver.state().w.slice(0).clone(),
         tan_trace: rec.records.iter().map(|r| r.mean_tan_theta).collect(),
         iters: outcome.iters,
-        elapsed_secs: t0.elapsed().as_secs_f64(),
+        elapsed_secs: t0.elapsed_secs(),
     }
 }
 

@@ -208,6 +208,7 @@ impl Solver for DeepcaSolver<'_> {
             && self.state.s.as_ref().map(|s| s.is_finite()).unwrap_or(true);
         StepReport {
             iter: t,
+            // lint: allow(alloc, per-step stats snapshot for the report struct — tiny and off the data path)
             comm: self.state.stats.clone(),
             finite,
             mean_tan_theta: None,

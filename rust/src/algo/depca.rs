@@ -195,6 +195,7 @@ impl Solver for DepcaSolver<'_> {
         let finite = self.state.w.is_finite();
         StepReport {
             iter: t,
+            // lint: allow(alloc, per-step stats snapshot for the report struct — tiny and off the data path)
             comm: self.state.stats.clone(),
             finite,
             mean_tan_theta: None,

@@ -109,6 +109,7 @@ impl Solver for LocalPowerSolver<'_> {
         self.state.iter = t + 1;
         StepReport {
             iter: t,
+            // lint: allow(alloc, per-step stats snapshot for the report struct — tiny and off the data path)
             comm: self.state.stats.clone(),
             finite: self.state.w.is_finite(),
             mean_tan_theta: None,

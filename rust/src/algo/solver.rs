@@ -33,7 +33,7 @@ use crate::consensus::simnet::SimConfig;
 use crate::consensus::AgentStack;
 use crate::linalg::angles::tan_theta_orthonormal;
 use crate::linalg::Mat;
-use std::time::Instant;
+use crate::util::timer::Timer;
 
 // ------------------------------------------------------------ selection
 
@@ -265,7 +265,7 @@ pub fn drive<'o>(
     mut observer: Option<&mut (dyn FnMut(&StepReport) + 'o)>,
 ) -> DriveOutcome {
     let u = solver.problem().u();
-    let t0 = Instant::now();
+    let t0 = Timer::start();
     let mut reason = StopReason::MaxIters;
     let mut history: Vec<f64> = Vec::new();
     let mut iters = 0;
@@ -286,7 +286,7 @@ pub fn drive<'o>(
                 &solver.state().w,
                 solver.state().s.as_ref(),
                 &report.comm,
-                t0.elapsed().as_secs_f64(),
+                t0.elapsed_secs(),
             );
         }
         // Error for the stop checks: freshly computed from the current
@@ -327,7 +327,7 @@ pub fn drive<'o>(
     } else {
         recorder.final_tan_theta()
     };
-    DriveOutcome { iters, reason, final_tan_theta, elapsed_secs: t0.elapsed().as_secs_f64() }
+    DriveOutcome { iters, reason, final_tan_theta, elapsed_secs: t0.elapsed_secs() }
 }
 
 // --------------------------------------------------------------- report

@@ -224,6 +224,7 @@ impl Communicator for SimNet {
         let SimState { rng, schedule, epoch, round, bufs, noisy } = st;
         bufs.ensure(m, d, k);
         if noisy.shape() != (d, k) {
+            // lint: allow(alloc, one-time rebuild when the problem shape changes; steady state reuses the buffer)
             *noisy = Mat::zeros(d, k);
         }
         bufs.load(stack);

@@ -18,11 +18,12 @@ use crate::algo::metrics::{RunOutput, RunRecorder};
 use crate::algo::problem::Problem;
 use crate::consensus::metrics::CommStats;
 use crate::consensus::AgentStack;
+use crate::exec::Executor;
 use crate::graph::gossip::GossipMatrix;
 use crate::graph::topology::Topology;
 use crate::linalg::Mat;
+use crate::util::timer::Timer;
 use std::sync::mpsc;
-use std::time::Instant;
 
 /// Telemetry sample sent by an agent each iteration.
 struct Telemetry {
@@ -71,20 +72,31 @@ pub fn run_deepca_distributed(
     let (tele_tx, tele_rx) = mpsc::channel::<Telemetry>();
 
     let weights = &gossip.weights;
-    let t0 = Instant::now();
+    let t0 = Timer::start();
 
-    let mut final_slices: Vec<Option<Mat>> = (0..m).map(|_| None).collect();
-    let mut per_agent_scalars: Vec<u64> = vec![0; m];
-
-    std::thread::scope(|scope| {
-        let mut handles = Vec::with_capacity(m);
-        for (j, (outs, ins)) in senders.drain(..).zip(receivers.drain(..)).enumerate() {
+    // Agent threads come from the executor's blocking tier — one
+    // dedicated persistent thread per task (agents park on channel
+    // `recv` mid-round, so they need real threads, not pool slots).
+    // The leader's telemetry loop rides along as one more blocking
+    // task; `scoped_blocking` returns once every agent *and* the
+    // leader have finished, which is what keeps the `'env` borrows
+    // (recorder, result slots) sound.
+    let exec = Executor::sequential();
+    let mut agent_results: Vec<Option<(Mat, u64)>> = (0..m).map(|_| None).collect();
+    {
+        let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(m + 1);
+        for ((j, (outs, ins)), slot) in senders
+            .drain(..)
+            .zip(receivers.drain(..))
+            .enumerate()
+            .zip(agent_results.iter_mut())
+        {
             let local = problem.locals[j].clone();
             let w0j = w0.clone();
             let wrow: Vec<f64> = weights.row(j).to_vec();
             let tele = tele_tx.clone();
             let use_sign = cfg.sign_adjust;
-            let handle = scope.spawn(move || {
+            tasks.push(Box::new(move || {
                 let mut st = AgentState::init(j, local, w0j);
                 let mut scalars: u64 = 0;
                 // Per-thread recursion buffers, reused across all
@@ -124,48 +136,58 @@ pub fn run_deepca_distributed(
                     tele.send(Telemetry { agent: j, iter: t, s: st.s.clone(), w: st.w.clone() })
                         .ok();
                 }
-                (st.w, scalars)
-            });
-            handles.push(handle);
+                *slot = Some((st.w, scalars));
+            }));
         }
         drop(tele_tx);
 
-        // Leader: assemble per-iteration snapshots as they stream in.
-        let mut pending: Vec<Vec<Option<(Mat, Mat)>>> =
-            (0..iters).map(|_| (0..m).map(|_| None).collect()).collect();
-        let mut complete = vec![0usize; iters];
-        for tele in tele_rx.iter() {
-            let Telemetry { agent, iter, s, w } = tele;
-            pending[iter][agent] = Some((s, w));
-            complete[iter] += 1;
-            if complete[iter] == m && recorder.should_record(iter) {
-                let ss = AgentStack::new(
-                    pending[iter].iter().map(|p| p.as_ref().unwrap().0.clone()).collect(),
-                );
-                let ws = AgentStack::new(
-                    pending[iter].iter().map(|p| p.as_ref().unwrap().1.clone()).collect(),
-                );
-                // Communication to date: (iter+1) mixes of `rounds` rounds.
-                let mut stats_for_record = CommStats::default();
-                stats_for_record.mixes = (iter + 1) as u64;
-                stats_for_record.rounds = ((iter + 1) * rounds) as u64;
-                recorder.record(iter, &u, &ws, Some(&ss), &stats_for_record, t0.elapsed().as_secs_f64());
-                pending[iter].iter_mut().for_each(|p| *p = None); // free
+        // Leader task: assemble per-iteration snapshots as they stream
+        // in; `tele_rx.iter()` ends once every agent has dropped its
+        // telemetry sender.
+        let rec = &mut *recorder;
+        let u_ref = &u;
+        tasks.push(Box::new(move || {
+            let mut pending: Vec<Vec<Option<(Mat, Mat)>>> =
+                (0..iters).map(|_| (0..m).map(|_| None).collect()).collect();
+            let mut complete = vec![0usize; iters];
+            for tele in tele_rx.iter() {
+                let Telemetry { agent, iter, s, w } = tele;
+                pending[iter][agent] = Some((s, w));
+                complete[iter] += 1;
+                if complete[iter] == m && rec.should_record(iter) {
+                    let ss = AgentStack::new(
+                        pending[iter].iter().map(|p| p.as_ref().unwrap().0.clone()).collect(),
+                    );
+                    let ws = AgentStack::new(
+                        pending[iter].iter().map(|p| p.as_ref().unwrap().1.clone()).collect(),
+                    );
+                    // Communication to date: (iter+1) mixes of `rounds` rounds.
+                    let mut stats_for_record = CommStats::default();
+                    stats_for_record.mixes = (iter + 1) as u64;
+                    stats_for_record.rounds = ((iter + 1) * rounds) as u64;
+                    rec.record(iter, u_ref, &ws, Some(&ss), &stats_for_record, t0.elapsed_secs());
+                    pending[iter].iter_mut().for_each(|p| *p = None); // free
+                }
             }
-        }
+        }));
 
-        for (j, h) in handles.into_iter().enumerate() {
-            let (wj, scalars) = h.join().expect("agent thread panicked");
-            final_slices[j] = Some(wj);
-            per_agent_scalars[j] = scalars;
-        }
-    });
+        // Blocks until agents and leader all finish; an agent panic
+        // drops its channel endpoints, unwinding its peers, and is
+        // re-raised here after every task has ended.
+        exec.scoped_blocking(tasks);
+    }
 
     // Records may arrive out of iteration order; sort.
     recorder.records.sort_by_key(|r| r.iter);
 
-    let final_w = AgentStack::new(final_slices.into_iter().map(Option::unwrap).collect());
-    let total_scalars: u64 = per_agent_scalars.iter().sum();
+    let mut total_scalars = 0u64;
+    let mut final_slices = Vec::with_capacity(m);
+    for res in agent_results {
+        let (wj, scalars) = res.expect("agent task completed");
+        final_slices.push(wj);
+        total_scalars += scalars;
+    }
+    let final_w = AgentStack::new(final_slices);
     let mut comm = CommStats::default();
     comm.mixes = iters as u64;
     comm.rounds = (iters * rounds) as u64;
@@ -179,7 +201,7 @@ pub fn run_deepca_distributed(
         final_tan_theta: recorder.final_tan_theta(),
         comm,
         final_w,
-        elapsed_secs: t0.elapsed().as_secs_f64(),
+        elapsed_secs: t0.elapsed_secs(),
         diverged,
     }
 }

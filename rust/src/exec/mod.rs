@@ -53,11 +53,23 @@
 //! dispatch lock is not re-entrant). Nothing in this crate nests — the
 //! solver loops, the backends, and the engines each run their regions
 //! one after another on the caller thread.
+//!
+//! ## Model checking
+//!
+//! Every sync primitive here is imported through [`shim`] rather than
+//! `std::sync` directly; building with `--features loom` swaps in the
+//! vendored model checker, and `rust/tests/loom_exec.rs` exhaustively
+//! interleaves the dispatch, shutdown, and panic-propagation protocols
+//! (the places where a missed wakeup or double-claim would corrupt
+//! results silently rather than crash).
+
+pub mod shim;
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard};
-use std::thread::JoinHandle;
+
+use shim::sync::atomic::{AtomicBool, Ordering};
+use shim::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard};
+use shim::thread::JoinHandle;
 
 /// Lock a mutex, recovering from poisoning (workers catch panics before
 /// they can leave shared state torn, so a poisoned lock is still
@@ -139,6 +151,30 @@ struct Pool {
     dispatch: Mutex<()>,
 }
 
+/// Armed the instant a chunk is claimed: its `Drop` performs the
+/// completion accounting (decrement `remaining`, flag panics, signal
+/// `done`), so the dispatcher's completion wait terminates even if the
+/// code between claim and completion unwinds. Without it, a panic on a
+/// worker after claiming would strand `remaining > 0` and deadlock the
+/// dispatcher on the `done` condvar forever.
+struct CompletionGuard<'a> {
+    shared: &'a Shared,
+    panicked: bool,
+}
+
+impl Drop for CompletionGuard<'_> {
+    fn drop(&mut self) {
+        let mut st = lock(&self.shared.state);
+        if self.panicked || std::thread::panicking() {
+            st.panicked = true;
+        }
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            self.shared.done.notify_one();
+        }
+    }
+}
+
 fn worker_loop(shared: Arc<Shared>) {
     loop {
         let (job, chunk) = {
@@ -152,9 +188,22 @@ fn worker_loop(shared: Arc<Shared>) {
                 // checking this predicate under the lock, and a worker
                 // between jobs re-checks it before sleeping.
                 if st.next_chunk < st.chunks {
+                    let Some(job) = st.job else {
+                        // Defensively unreachable (dispatch publishes
+                        // the job before opening the claim window, under
+                        // this same lock). Close the window and report
+                        // instead of panicking while holding the lock —
+                        // a worker must never die with chunks claimed.
+                        let unclaimed = st.chunks - st.next_chunk;
+                        st.next_chunk = st.chunks;
+                        st.remaining -= unclaimed.min(st.remaining);
+                        st.panicked = true;
+                        shared.done.notify_one();
+                        continue;
+                    };
                     let c = st.next_chunk;
                     st.next_chunk += 1;
-                    break (st.job.expect("dispatch published no job"), c);
+                    break (job, c);
                 }
                 st = match shared.work.wait(st) {
                     Ok(g) => g,
@@ -162,18 +211,15 @@ fn worker_loop(shared: Arc<Shared>) {
                 };
             }
         };
+        // Completion accounting is owed from this point on, no matter
+        // how the chunk exits.
+        let mut guard = CompletionGuard { shared: &*shared, panicked: false };
         // SAFETY: the dispatcher blocks until `remaining == 0`, so the
         // closure (and everything it borrows) is alive for this call.
         let f = unsafe { &*job.f };
         let result = catch_unwind(AssertUnwindSafe(|| f(chunk)));
-        let mut st = lock(&shared.state);
-        if result.is_err() {
-            st.panicked = true;
-        }
-        st.remaining -= 1;
-        if st.remaining == 0 {
-            shared.done.notify_one();
-        }
+        guard.panicked = result.is_err();
+        drop(guard);
     }
 }
 
@@ -190,16 +236,13 @@ struct BlockingWorker {
 impl BlockingWorker {
     fn spawn(idx: usize) -> Self {
         let (tx, rx) = mpsc::channel::<BlockingJob>();
-        let handle = std::thread::Builder::new()
-            .name(format!("deepca-agent-{idx}"))
-            .spawn(move || {
-                // Tasks arrive pre-wrapped in catch_unwind, so the loop
-                // survives panicking tasks and the thread stays reusable.
-                while let Ok(job) = rx.recv() {
-                    job();
-                }
-            })
-            .expect("spawn blocking worker thread");
+        let handle = shim::thread::spawn_named(format!("deepca-agent-{idx}"), move || {
+            // Tasks arrive pre-wrapped in catch_unwind, so the loop
+            // survives panicking tasks and the thread stays reusable.
+            while let Ok(job) = rx.recv() {
+                job();
+            }
+        });
         BlockingWorker { tx, handle }
     }
 }
@@ -247,10 +290,9 @@ impl Executor {
             let handles = (1..threads)
                 .map(|idx| {
                     let shared = Arc::clone(&shared);
-                    std::thread::Builder::new()
-                        .name(format!("deepca-worker-{idx}"))
-                        .spawn(move || worker_loop(shared))
-                        .expect("spawn executor worker thread")
+                    shim::thread::spawn_named(format!("deepca-worker-{idx}"), move || {
+                        worker_loop(shared)
+                    })
                 })
                 .collect();
             Pool { shared, handles, dispatch: Mutex::new(()) }
@@ -313,6 +355,32 @@ impl Executor {
             }
         }
         let caller = catch_unwind(AssertUnwindSafe(|| f(0)));
+        // Help-drain: claim any chunks no worker has picked up yet and
+        // run them here. The chunk → data mapping is a pure function of
+        // the index, so results are identical whether a worker or the
+        // dispatcher executes a chunk (determinism contract); this both
+        // load-balances (the dispatcher never idles while work is
+        // unclaimed) and makes completion independent of worker
+        // availability. Skipped if the caller chunk panicked — the
+        // region is already failing, so only the claimed chunks are
+        // drained before propagating.
+        if caller.is_ok() {
+            loop {
+                let chunk = {
+                    let mut st = lock(&pool.shared.state);
+                    if st.next_chunk >= st.chunks {
+                        break;
+                    }
+                    let c = st.next_chunk;
+                    st.next_chunk += 1;
+                    c
+                };
+                let mut guard = CompletionGuard { shared: &*pool.shared, panicked: false };
+                let result = catch_unwind(AssertUnwindSafe(|| f(chunk)));
+                guard.panicked = result.is_err();
+                drop(guard);
+            }
+        }
         let worker_panicked = {
             let mut st = lock(&pool.shared.state);
             while st.remaining > 0 {
@@ -388,11 +456,13 @@ impl Executor {
             if lo >= hi {
                 return;
             }
-            // SAFETY: chunks are disjoint ranges of `items`, and chunk
-            // indices < nchunks ≤ ctxs.len() are pairwise distinct.
+            // SAFETY: chunks are disjoint index ranges of `items`, so
+            // each element is inside exactly one reconstituted slice.
             let slice = unsafe {
                 std::slice::from_raw_parts_mut((items_base as *mut T).add(lo), hi - lo)
             };
+            // SAFETY: chunk indices < nchunks ≤ ctxs.len() are pairwise
+            // distinct, so each ctx slot gets exactly one &mut.
             let ctx = unsafe { &mut *(ctx_base as *mut C).add(chunk) };
             f(lo, slice, ctx);
         };
@@ -534,12 +604,16 @@ mod tests {
 
     #[test]
     fn pool_is_reusable_across_many_dispatches() {
+        // Scaled down under Miri: the interpreter runs every dispatch
+        // handshake ~3 orders of magnitude slower than native.
+        let rounds: u64 = if cfg!(miri) { 6 } else { 50 };
         let exec = Executor::new(4);
         let mut acc = vec![0u64; 23];
-        for round in 0..50u64 {
+        for round in 0..rounds {
             exec.par_for_each_agent(&mut acc, |j, v| *v += round + j as u64);
         }
-        let want: Vec<u64> = (0..23u64).map(|j| (0..50u64).map(|r| r + j).sum()).collect();
+        let want: Vec<u64> =
+            (0..23u64).map(|j| (0..rounds).map(|r| r + j).sum()).collect();
         assert_eq!(acc, want);
     }
 
@@ -571,6 +645,59 @@ mod tests {
         // The pool is still functional afterwards.
         exec.par_for_each_agent(&mut items, |j, v| *v = j as i32);
         assert_eq!(items[15], 15);
+    }
+
+    #[test]
+    fn caller_chunk_panic_propagates_and_pool_survives() {
+        // Chunk 0 runs on the dispatcher thread itself; a panic there
+        // takes a different path (resume_unwind after the completion
+        // wait) than a worker-chunk panic.
+        let exec = Executor::new(4);
+        let mut items = vec![0i32; 16];
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            exec.par_for_each_agent(&mut items, |j, _| {
+                if j == 0 {
+                    panic!("caller boom");
+                }
+            });
+        }));
+        assert!(result.is_err(), "caller-chunk panic must propagate");
+        exec.par_for_each_agent(&mut items, |j, v| *v = j as i32);
+        assert_eq!(items[15], 15);
+    }
+
+    #[test]
+    fn panic_in_every_chunk_still_propagates_once() {
+        let exec = Executor::new(4);
+        let mut items = vec![0i32; 16];
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            exec.par_for_each_agent(&mut items, |j, _| panic!("chunk {j} boom"));
+        }));
+        assert!(result.is_err());
+        exec.par_for_each_agent(&mut items, |j, v| *v = j as i32);
+        assert_eq!(items, (0..16).collect::<Vec<i32>>());
+    }
+
+    #[test]
+    fn repeated_panics_never_wedge_the_pool() {
+        // The regression this pins: completion accounting must survive
+        // arbitrarily many panicking regions (a stranded `remaining`
+        // count would deadlock the *next* dispatch's completion wait).
+        let rounds = if cfg!(miri) { 3 } else { 10 };
+        let exec = Executor::new(3);
+        let mut items = vec![0u32; 9];
+        for round in 0..rounds {
+            let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                exec.par_for_each_agent(&mut items, |j, _| {
+                    if j % 3 == round % 3 {
+                        panic!("round {round} boom");
+                    }
+                });
+            }));
+            assert!(result.is_err(), "round {round}");
+        }
+        exec.par_for_each_agent(&mut items, |j, v| *v = j as u32 + 1);
+        assert_eq!(items, (1..=9).collect::<Vec<u32>>());
     }
 
     #[test]

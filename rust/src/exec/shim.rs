@@ -1,0 +1,63 @@
+//! Sync-primitive shim: `std::sync` by default, `loom::sync` under the
+//! `loom` feature.
+//!
+//! The executor's dispatch protocol (job-slot publish → chunk claim →
+//! completion signal) is exactly the kind of code where a missed wakeup
+//! or double-claim corrupts results silently instead of crashing. To
+//! make it model-checkable, every primitive the executor touches is
+//! imported from here rather than from `std` directly. Building with
+//! `--features loom` swaps in the vendored model checker's dual-mode
+//! primitives (`rust/vendor/loom`): inside `loom::model` each operation
+//! becomes an explorable scheduling decision, outside it they degrade
+//! to plain `std` behavior, so the ordinary test suite is unaffected by
+//! the feature being enabled.
+//!
+//! `rust/tests/loom_exec.rs` (a `required-features = ["loom"]` test
+//! target) is the consumer; `scripts/verify.sh` and CI run it as the
+//! blocking loom gate.
+
+#[cfg(not(feature = "loom"))]
+pub mod sync {
+    pub use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard};
+
+    pub mod atomic {
+        pub use std::sync::atomic::{AtomicBool, Ordering};
+    }
+}
+
+#[cfg(feature = "loom")]
+pub mod sync {
+    pub use loom::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard};
+
+    pub mod atomic {
+        pub use loom::sync::atomic::{AtomicBool, Ordering};
+    }
+}
+
+pub mod thread {
+    #[cfg(not(feature = "loom"))]
+    pub type JoinHandle<T> = std::thread::JoinHandle<T>;
+    #[cfg(feature = "loom")]
+    pub type JoinHandle<T> = loom::thread::JoinHandle<T>;
+
+    /// Spawn a named worker thread. The name is diagnostic only; the
+    /// modeled path drops it (loom threads are identified by id).
+    pub fn spawn_named<F, T>(name: String, f: F) -> JoinHandle<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        #[cfg(not(feature = "loom"))]
+        {
+            std::thread::Builder::new()
+                .name(name)
+                .spawn(f)
+                .expect("spawn executor thread")
+        }
+        #[cfg(feature = "loom")]
+        {
+            let _ = name;
+            loom::thread::spawn(f)
+        }
+    }
+}

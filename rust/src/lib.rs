@@ -65,6 +65,18 @@
 //! See `examples/` for runnable end-to-end drivers and `DESIGN.md` for the
 //! full system inventory.
 
+// Every unsafe operation must sit in an explicit `unsafe {}` block with
+// its own `// SAFETY:` justification (the latter enforced by
+// `cargo xtask lint`), even inside `unsafe fn`.
+#![deny(unsafe_op_in_unsafe_fn)]
+// Deliberate house style, allowed crate-wide so `clippy -D warnings`
+// (blocking in CI) polices real defects instead:
+// - indexed `for j in 0..m` loops mirror the paper's per-agent index
+//   notation and frequently index several stacks at once;
+// - stats structs are built as `default()` + field assignments because
+//   most call sites set a different sparse subset of counters.
+#![allow(clippy::needless_range_loop, clippy::field_reassign_with_default)]
+
 pub mod util;
 pub mod exec;
 pub mod linalg;

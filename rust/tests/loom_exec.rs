@@ -1,0 +1,155 @@
+//! Model-checked executor protocols (`--features loom`).
+//!
+//! Each test wraps an executor scenario in `loom::model`, which re-runs
+//! the closure under every thread interleaving reachable within the
+//! preemption bound (see `rust/vendor/loom`). Assertions therefore hold
+//! for *every* explored schedule, and any reachable missed-wakeup or
+//! lost-completion state fails as a detected deadlock instead of a CI
+//! hang — this is the static counterpart of the dynamic
+//! `thread_determinism` suite, aimed at the three protocols where a
+//! race would corrupt results silently: job-slot publish → chunk claim
+//! → completion signal, shutdown, and panic propagation.
+//!
+//! Scenarios are deliberately tiny (two or three modeled threads, a
+//! handful of items): model-checking cost is exponential in decision
+//! points, and the protocol logic is identical at any scale.
+
+#![cfg(feature = "loom")]
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use deepca::exec::Executor;
+
+/// Silence the default panic hook while `f` runs: the panic-propagation
+/// models deliberately panic in hundreds of explored schedules, and
+/// each would otherwise print a full "thread panicked" banner.
+fn with_quiet_panics<R>(f: impl FnOnce() -> R) -> R {
+    let hook = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {}));
+    let r = f();
+    std::panic::set_hook(hook);
+    r
+}
+
+#[test]
+fn dispatch_completes_in_every_interleaving() {
+    loom::model(|| {
+        let exec = Executor::new(2);
+        let mut items = vec![0u32; 4];
+        exec.par_for_each_agent(&mut items, |j, v| *v = j as u32 + 10);
+        assert_eq!(items, vec![10, 11, 12, 13]);
+    });
+}
+
+#[test]
+fn consecutive_dispatches_reuse_the_job_slot_safely() {
+    // Two regions back to back: the second publish must never race the
+    // first region's completion accounting (a stale `next_chunk` or
+    // `remaining` from round one would corrupt round two).
+    loom::model(|| {
+        let exec = Executor::new(2);
+        let mut items = vec![0u32; 2];
+        exec.par_for_each_agent(&mut items, |j, v| *v += j as u32 + 1);
+        exec.par_for_each_agent(&mut items, |_, v| *v *= 10);
+        assert_eq!(items, vec![10, 20]);
+    });
+}
+
+#[test]
+fn shutdown_joins_workers_in_every_interleaving() {
+    // Drop immediately after construction: the shutdown flag + wakeup
+    // must reach a worker no matter where it is in its claim loop.
+    loom::model(|| {
+        let exec = Executor::new(2);
+        drop(exec);
+    });
+}
+
+#[test]
+fn shutdown_after_work_joins_cleanly() {
+    loom::model(|| {
+        let exec = Executor::new(2);
+        let mut items = vec![0u8; 2];
+        exec.par_for_each_agent(&mut items, |_, v| *v = 1);
+        drop(exec);
+        assert_eq!(items, vec![1, 1]);
+    });
+}
+
+#[test]
+fn three_thread_dispatch_completes() {
+    loom::model(|| {
+        let exec = Executor::new(3);
+        let mut items = vec![0u32; 3];
+        exec.par_for_each_agent(&mut items, |j, v| *v = j as u32);
+        assert_eq!(items, vec![0, 1, 2]);
+    });
+}
+
+#[test]
+fn worker_chunk_panic_propagates_in_every_interleaving() {
+    with_quiet_panics(|| {
+        loom::model(|| {
+            let exec = Executor::new(2);
+            let mut items = vec![0u32; 4];
+            let result = catch_unwind(AssertUnwindSafe(|| {
+                // Items 2..4 form chunk 1 (worker side; the dispatcher
+                // may also help-drain it — both paths are explored).
+                exec.par_for_each_agent(&mut items, |j, _| {
+                    if j == 3 {
+                        panic!("boom");
+                    }
+                });
+            }));
+            assert!(result.is_err(), "worker-chunk panic must propagate");
+            // The pool must remain usable: completion accounting may
+            // not be stranded by the unwound chunk.
+            exec.par_for_each_agent(&mut items, |j, v| *v = j as u32);
+            assert_eq!(items, vec![0, 1, 2, 3]);
+        });
+    });
+}
+
+#[test]
+fn caller_chunk_panic_propagates_in_every_interleaving() {
+    with_quiet_panics(|| {
+        loom::model(|| {
+            let exec = Executor::new(2);
+            let mut items = vec![0u32; 4];
+            let result = catch_unwind(AssertUnwindSafe(|| {
+                exec.par_for_each_agent(&mut items, |j, _| {
+                    if j == 0 {
+                        panic!("caller boom");
+                    }
+                });
+            }));
+            assert!(result.is_err(), "caller-chunk panic must propagate");
+            exec.par_for_each_agent(&mut items, |j, v| *v = j as u32);
+            assert_eq!(items, vec![0, 1, 2, 3]);
+        });
+    });
+}
+
+#[test]
+fn scoped_blocking_handshake_completes_in_every_interleaving() {
+    // Two mutually-blocking tasks: a send/recv pair that deadlocks
+    // unless both get real concurrent threads. Exercises the blocking
+    // tier's completion latch (count + condvar + panicked flag).
+    loom::model(|| {
+        let exec = Executor::sequential();
+        let (tx, rx) = deepca::exec::shim::sync::mpsc::channel::<u32>();
+        let mut got = 0u32;
+        {
+            let got = &mut got;
+            exec.scoped_blocking(vec![
+                Box::new(move || {
+                    tx.send(5).expect("receiver alive");
+                }),
+                Box::new(move || {
+                    *got = rx.recv().expect("sender alive");
+                }),
+            ]);
+        }
+        assert_eq!(got, 5);
+    });
+}

@@ -35,11 +35,22 @@ fn dirty(rows: usize, cols: usize) -> Mat {
     Mat::from_fn(rows, cols, |_, _| f64::NAN)
 }
 
+/// Miri runs orders of magnitude slower than native; scale the property
+/// case counts down so the CI Miri job finishes while still hitting
+/// every kernel dispatch band a few times.
+fn cases(native: usize) -> usize {
+    if cfg!(miri) {
+        native.div_ceil(8)
+    } else {
+        native
+    }
+}
+
 #[test]
 fn prop_matmul_into_bit_identical() {
     check(
         "matmul_into == matmul (all dispatch bands)",
-        PropConfig { cases: 48, seed: 0xA11 },
+        PropConfig { cases: cases(48), seed: 0xA11 },
         |rng| {
             let n = rng.range(1, 40);
             let k = rng.range(1, 40);
@@ -68,7 +79,7 @@ fn prop_matmul_into_bit_identical() {
 fn prop_t_matmul_transpose_add_scaled_into_bit_identical() {
     check(
         "t_matmul_into / transpose_into / add_scaled_into parity",
-        PropConfig { cases: 48, seed: 0xA12 },
+        PropConfig { cases: cases(48), seed: 0xA12 },
         |rng| {
             let n = rng.range(1, 30);
             let k = rng.range(1, 20);
@@ -115,7 +126,7 @@ fn prop_qr_into_bit_identical_with_shared_workspace() {
     let mut ws = QrWorkspace::new(1, 1);
     check(
         "qr_into == thin_qr_with (both sign conventions)",
-        PropConfig { cases: 40, seed: 0xA13 },
+        PropConfig { cases: cases(40), seed: 0xA13 },
         |rng| {
             let n = rng.range(1, 10);
             let m = rng.range(n, n + 30);
@@ -142,7 +153,7 @@ fn prop_qr_into_bit_identical_with_shared_workspace() {
 fn prop_sign_adjust_into_bit_identical() {
     check(
         "sign_adjust_into == sign_adjust",
-        PropConfig { cases: 32, seed: 0xA14 },
+        PropConfig { cases: cases(32), seed: 0xA14 },
         |rng| {
             let d = rng.range(2, 25);
             let k = rng.range(1, d.min(6));
@@ -217,19 +228,29 @@ fn reference_deepca(problem: &Problem, topo: &Topology, cfg: &DeepcaConfig, iter
 /// several checkpoints.
 #[test]
 fn deepca_workspace_solve_matches_allocating_reference_exactly() {
+    // Scaled down under Miri (same trajectory-pin logic, smaller run).
+    let (n, d, agents, rounds, checkpoints) = if cfg!(miri) {
+        (80, 10, 4, 4, [1usize, 3, 6])
+    } else {
+        (400, 16, 8, 7, [1usize, 5, 24])
+    };
     let ds = synthetic::spiked_covariance(
-        400,
-        16,
+        n,
+        d,
         &[12.0, 8.0, 5.0],
         0.3,
         &mut Rng::seed_from(881),
     );
-    let problem = Problem::from_dataset(&ds, 8, 2);
-    let topo = Topology::erdos_renyi(8, 0.5, &mut Rng::seed_from(882));
-    let cfg = DeepcaConfig { consensus_rounds: 7, max_iters: 24, ..Default::default() };
+    let problem = Problem::from_dataset(&ds, agents, 2);
+    let topo = Topology::erdos_renyi(agents, 0.5, &mut Rng::seed_from(882));
+    let cfg = DeepcaConfig {
+        consensus_rounds: rounds,
+        max_iters: checkpoints[2],
+        ..Default::default()
+    };
 
     let mut solver = DeepcaSolver::dense(&problem, &topo, cfg.clone());
-    for checkpoint in [1usize, 5, 24] {
+    for checkpoint in checkpoints {
         while solver.state().iter < checkpoint {
             let rep = solver.step();
             assert!(rep.finite);
@@ -249,20 +270,23 @@ fn deepca_workspace_solve_matches_allocating_reference_exactly() {
 /// buffer reuse may not introduce any run-to-run state.
 #[test]
 fn deepca_workspace_solve_is_bit_deterministic() {
+    // Scaled down under Miri (same bit-identity pin, smaller run).
+    let (n, d, agents, rounds, iters) =
+        if cfg!(miri) { (60, 8, 3, 3, 5) } else { (300, 12, 6, 6, 20) };
     let ds = synthetic::spiked_covariance(
-        300,
-        12,
+        n,
+        d,
         &[9.0, 6.0],
         0.2,
         &mut Rng::seed_from(883),
     );
-    let problem = Problem::from_dataset(&ds, 6, 2);
-    let topo = Topology::ring(6);
-    let cfg = DeepcaConfig { consensus_rounds: 6, max_iters: 20, ..Default::default() };
+    let problem = Problem::from_dataset(&ds, agents, 2);
+    let topo = Topology::ring(agents);
+    let cfg = DeepcaConfig { consensus_rounds: rounds, max_iters: iters, ..Default::default() };
 
     let run = || {
         let mut solver = DeepcaSolver::dense(&problem, &topo, cfg.clone());
-        for _ in 0..20 {
+        for _ in 0..iters {
             solver.step();
         }
         solver.state().w.clone()

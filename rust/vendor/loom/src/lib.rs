@@ -1,0 +1,223 @@
+//! Vendored miniature model checker with a loom-compatible API.
+//!
+//! The real [loom](https://docs.rs/loom) crate cannot be used offline,
+//! so this vendored stand-in implements the same *shape* of tool for
+//! the subset of `std::sync` the `deepca` executor uses: `model(f)`
+//! runs `f` repeatedly, exhaustively enumerating thread interleavings
+//! (up to a preemption bound) by scheduling modeled threads one at a
+//! time from a decision tape. Assertions inside `f` therefore hold for
+//! *every* explored interleaving, and a state where all live threads
+//! are blocked is reported as a deadlock with the stuck thread list —
+//! the two failure modes (corruption and missed wakeup) that dynamic
+//! stress tests can only hit probabilistically.
+//!
+//! What is modeled: `sync::Mutex` / `sync::Condvar` (FIFO wakeups,
+//! std-compatible poisoning), `sync::atomic` (SeqCst), `sync::mpsc`,
+//! and `thread::spawn`/`join`. Everything is **dual-mode**: outside
+//! `model()` the primitives degrade to plain `std` behavior, so a
+//! crate compiled with its loom feature enabled still runs its
+//! ordinary test suite unchanged.
+//!
+//! Knobs (environment): `LOOM_MAX_PREEMPTIONS` (default 2) bounds
+//! forced preemptions per schedule (CHESS-style — voluntary blocking
+//! is always free); `LOOM_MAX_SCHEDULES` (default 100 000) caps the
+//! exploration and panics if exceeded rather than silently truncating.
+
+mod sched;
+pub mod sync;
+pub mod thread;
+
+pub use sched::{explore_count, model};
+
+#[cfg(test)]
+mod tests {
+    use super::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+    use super::sync::{Arc, Condvar, Mutex};
+    use super::{explore_count, model, thread};
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+        if let Some(s) = payload.downcast_ref::<String>() {
+            s.clone()
+        } else if let Some(s) = payload.downcast_ref::<&str>() {
+            (*s).to_string()
+        } else {
+            String::from("<non-string panic payload>")
+        }
+    }
+
+    #[test]
+    fn mutex_guarded_increments_are_consistent_in_every_interleaving() {
+        model(|| {
+            let counter = Arc::new(Mutex::new(0u32));
+            let handles: Vec<_> = (0..2)
+                .map(|_| {
+                    let counter = Arc::clone(&counter);
+                    thread::spawn(move || {
+                        let mut g = counter.lock().expect("unpoisoned");
+                        *g += 1;
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().expect("no panic");
+            }
+            assert_eq!(*counter.lock().expect("unpoisoned"), 2);
+        });
+    }
+
+    #[test]
+    fn atomic_lost_update_is_found() {
+        // Unsynchronized read-modify-write: some interleaving loses an
+        // increment, and the model must find it and fail the final
+        // assertion (the counterexample propagates as a panic).
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            model(|| {
+                let counter = Arc::new(AtomicUsize::new(0));
+                let handles: Vec<_> = (0..2)
+                    .map(|_| {
+                        let counter = Arc::clone(&counter);
+                        thread::spawn(move || {
+                            let v = counter.load(Ordering::SeqCst);
+                            counter.store(v + 1, Ordering::SeqCst);
+                        })
+                    })
+                    .collect();
+                for h in handles {
+                    h.join().expect("no panic");
+                }
+                assert_eq!(counter.load(Ordering::SeqCst), 2, "lost update");
+            });
+        }));
+        let payload = result.expect_err("model must find the lost update");
+        assert!(
+            panic_message(payload).contains("lost update"),
+            "failure must be the counterexample assertion"
+        );
+    }
+
+    #[test]
+    fn missed_wakeup_deadlock_is_detected() {
+        // Classic bug: the flag lives outside the mutex, so the waiter
+        // can check it, get preempted, miss the (lost) notify, and wait
+        // forever. The model must report a deadlock.
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            model(|| {
+                let flag = Arc::new(AtomicBool::new(false));
+                let pair = Arc::new((Mutex::new(()), Condvar::new()));
+                let waiter = {
+                    let flag = Arc::clone(&flag);
+                    let pair = Arc::clone(&pair);
+                    thread::spawn(move || {
+                        if !flag.load(Ordering::SeqCst) {
+                            let g = pair.0.lock().expect("unpoisoned");
+                            let _g = pair.1.wait(g).expect("unpoisoned");
+                        }
+                    })
+                };
+                flag.store(true, Ordering::SeqCst);
+                pair.1.notify_one();
+                waiter.join().expect("no panic");
+            });
+        }));
+        let payload = result.expect_err("model must find the missed wakeup");
+        assert!(
+            panic_message(payload).contains("deadlock"),
+            "failure must be reported as a deadlock"
+        );
+    }
+
+    #[test]
+    fn correct_condvar_handshake_passes_every_interleaving() {
+        // The fixed version of the test above: the flag lives *inside*
+        // the mutex and the waiter re-checks it under the lock, so no
+        // interleaving can lose the wakeup.
+        model(|| {
+            let pair = Arc::new((Mutex::new(false), Condvar::new()));
+            let waiter = {
+                let pair = Arc::clone(&pair);
+                thread::spawn(move || {
+                    let mut g = pair.0.lock().expect("unpoisoned");
+                    while !*g {
+                        g = pair.1.wait(g).expect("unpoisoned");
+                    }
+                })
+            };
+            {
+                let mut g = pair.0.lock().expect("unpoisoned");
+                *g = true;
+            }
+            pair.1.notify_one();
+            waiter.join().expect("no panic");
+        });
+    }
+
+    #[test]
+    fn exploration_visits_more_than_one_schedule() {
+        let n = explore_count(|| {
+            let v = Arc::new(AtomicUsize::new(0));
+            let v2 = Arc::clone(&v);
+            let h = thread::spawn(move || v2.store(1, Ordering::SeqCst));
+            v.store(2, Ordering::SeqCst);
+            h.join().expect("no panic");
+        });
+        assert!(n > 1, "two racing stores must yield multiple schedules, got {n}");
+    }
+
+    #[test]
+    fn modeled_mutex_poisoning_matches_std() {
+        model(|| {
+            let m = Arc::new(Mutex::new(0u32));
+            let m2 = Arc::clone(&m);
+            let h = thread::spawn(move || {
+                let _g = m2.lock().expect("first lock is clean");
+                panic!("poison it");
+            });
+            assert!(h.join().is_err(), "panic must surface through join");
+            match m.lock() {
+                Err(poisoned) => assert_eq!(*poisoned.into_inner(), 0),
+                Ok(_) => panic!("lock after a holder panicked must report poison"),
+            }
+        });
+    }
+
+    #[test]
+    fn mpsc_delivers_in_order_under_the_model() {
+        model(|| {
+            let (tx, rx) = super::sync::mpsc::channel::<u32>();
+            let consumer = thread::spawn(move || {
+                let a = rx.recv().expect("sender alive");
+                let b = rx.recv().expect("sender alive");
+                (a, b)
+            });
+            tx.send(1).expect("receiver alive");
+            tx.send(2).expect("receiver alive");
+            drop(tx);
+            assert_eq!(consumer.join().expect("no panic"), (1, 2));
+        });
+    }
+
+    #[test]
+    fn mpsc_disconnect_is_observed() {
+        model(|| {
+            let (tx, rx) = super::sync::mpsc::channel::<u32>();
+            drop(tx);
+            assert!(rx.recv().is_err(), "recv after last sender drop must error");
+        });
+    }
+
+    #[test]
+    fn primitives_degrade_to_std_outside_model() {
+        // Dual-mode contract: no model() frame, plain blocking behavior.
+        let (tx, rx) = super::sync::mpsc::channel::<u32>();
+        let m = Arc::new(Mutex::new(0u32));
+        let m2 = Arc::clone(&m);
+        let h = thread::spawn(move || {
+            *m2.lock().expect("unpoisoned") = 7;
+            tx.send(42).expect("receiver alive");
+        });
+        assert_eq!(rx.recv().expect("sender alive"), 42);
+        h.join().expect("no panic");
+        assert_eq!(*m.lock().expect("unpoisoned"), 7);
+    }
+}

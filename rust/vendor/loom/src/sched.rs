@@ -1,0 +1,545 @@
+//! The exploration scheduler: token-passing over real OS threads.
+//!
+//! Exactly one modeled thread runs at a time. Every synchronization
+//! operation is a *yield point*: the running thread enters the
+//! scheduler, the set of schedulable threads is recorded as a decision
+//! point on a tape, and one of them is handed the token. Iterating the
+//! tape depth-first (advance the deepest decision with an untried
+//! option, replay the prefix, run fresh from there) enumerates every
+//! interleaving reachable within the preemption bound.
+//!
+//! ## Preemption bounding
+//!
+//! Unbounded exploration is exponential in program length. Following
+//! CHESS, schedules are bounded by the number of *preemptions* —
+//! switches away from a thread that could have kept running. Voluntary
+//! switches (the running thread blocked) are free. Most concurrency
+//! bugs manifest within two preemptions; the bound is configurable via
+//! `LOOM_MAX_PREEMPTIONS` (default 2). The schedule count itself is
+//! capped by `LOOM_MAX_SCHEDULES` (default 100 000) — exceeding the cap
+//! panics rather than silently truncating coverage.
+//!
+//! ## Blocking and deadlock
+//!
+//! Threads block only inside the model (mutex acquire, condvar wait,
+//! join); the scheduler knows every blocked thread's wake condition. If
+//! no thread is schedulable and not all threads have finished, the
+//! iteration is a deadlock: the model fails with a panic describing the
+//! stuck threads. Failed iterations intentionally leak their parked OS
+//! threads — the process is already panicking out of `model()`.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar as StdCondvar, Mutex as StdMutex, MutexGuard as StdMutexGuard};
+
+/// Per-thread handle to the live exploration, set for the duration of a
+/// modeled thread's run. `None` means "not inside `model()`" and every
+/// primitive degrades to its plain `std` behavior.
+#[derive(Clone)]
+pub(crate) struct Ctx {
+    pub(crate) sched: Arc<Scheduler>,
+    pub(crate) tid: usize,
+}
+
+thread_local! {
+    static CTX: std::cell::RefCell<Option<Ctx>> = const { std::cell::RefCell::new(None) };
+}
+
+/// The current modeled-thread context, if this OS thread is running
+/// inside a `model()` exploration.
+pub(crate) fn current() -> Option<Ctx> {
+    CTX.with(|c| c.borrow().clone())
+}
+
+fn set_ctx(ctx: Ctx) {
+    CTX.with(|c| *c.borrow_mut() = Some(ctx));
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum ThState {
+    Runnable,
+    /// Waiting to acquire the modeled mutex with this id.
+    BlockedMutex(usize),
+    /// Waiting on the modeled condvar with this id.
+    BlockedCv(usize),
+    /// Waiting for the thread with this id to finish.
+    BlockedJoin(usize),
+    Finished,
+}
+
+#[derive(Default)]
+struct MxState {
+    locked: bool,
+    owner: Option<usize>,
+}
+
+#[derive(Default)]
+struct CvState {
+    /// FIFO wait queue: (thread id, mutex id to re-acquire on wake).
+    queue: VecDeque<(usize, usize)>,
+}
+
+/// One decision point: the schedulable threads that were available and
+/// which one was taken. The DFS driver advances `taken` through
+/// `options` to enumerate schedules.
+struct Choice {
+    options: Vec<usize>,
+    taken: usize,
+}
+
+struct Sched {
+    /// Iteration number, starting at 1 (0 marks unregistered objects).
+    iter: u32,
+    threads: Vec<ThState>,
+    active: usize,
+    preemptions: u32,
+    max_preemptions: u32,
+    tape: Vec<Choice>,
+    /// Position in `tape`: decisions before `pos` replay, after append.
+    pos: usize,
+    mutexes: Vec<MxState>,
+    condvars: Vec<CvState>,
+    failed: Option<String>,
+    all_done: bool,
+    os_handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+pub(crate) struct Scheduler {
+    mx: StdMutex<Sched>,
+    cv: StdCondvar,
+}
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.trim().parse().ok())
+        .unwrap_or(default)
+}
+
+impl Scheduler {
+    fn new(max_preemptions: u32) -> Self {
+        Scheduler {
+            mx: StdMutex::new(Sched {
+                iter: 0,
+                threads: Vec::new(),
+                active: 0,
+                preemptions: 0,
+                max_preemptions,
+                tape: Vec::new(),
+                pos: 0,
+                mutexes: Vec::new(),
+                condvars: Vec::new(),
+                failed: None,
+                all_done: false,
+                os_handles: Vec::new(),
+            }),
+            cv: StdCondvar::new(),
+        }
+    }
+
+    fn guard(&self) -> StdMutexGuard<'_, Sched> {
+        // The scheduler's own lock is only ever held briefly and never
+        // across user code; poisoning can only come from a bug in this
+        // crate, where continuing is still the best diagnostic.
+        match self.mx.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        }
+    }
+
+    /// Park this OS thread forever: the exploration has failed and the
+    /// orchestrator is panicking out of `model()`. Never returns.
+    fn park_forever(&self, mut s: StdMutexGuard<'_, Sched>) -> ! {
+        loop {
+            s = match self.cv.wait(s) {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+        }
+    }
+
+    fn fail(&self, s: &mut Sched, msg: String) {
+        if s.failed.is_none() {
+            s.failed = Some(msg);
+        }
+        self.cv.notify_all();
+    }
+
+    fn schedulable(s: &Sched) -> Vec<usize> {
+        (0..s.threads.len())
+            .filter(|&t| match s.threads[t] {
+                ThState::Runnable => true,
+                ThState::BlockedMutex(m) => !s.mutexes[m].locked,
+                _ => false,
+            })
+            .collect()
+    }
+
+    /// Pick the next thread to run (tape-driven), hand it the token,
+    /// and wake everyone to re-check. Called with the lock held by the
+    /// current token holder after updating its own state. On deadlock
+    /// or replay divergence, records the failure instead of picking.
+    fn pick_next(&self, s: &mut Sched, my: usize) {
+        if s.failed.is_some() {
+            return;
+        }
+        let mut options = Self::schedulable(s);
+        if options.is_empty() {
+            if s.threads.iter().all(|t| *t == ThState::Finished) {
+                s.all_done = true;
+                self.cv.notify_all();
+                return;
+            }
+            let stuck: Vec<String> = s
+                .threads
+                .iter()
+                .enumerate()
+                .filter(|(_, t)| **t != ThState::Finished)
+                .map(|(i, t)| format!("thread {i}: {t:?}"))
+                .collect();
+            self.fail(
+                s,
+                format!(
+                    "loom: deadlock detected — every live thread is blocked [{}]",
+                    stuck.join(", ")
+                ),
+            );
+            return;
+        }
+        let my_runnable = options.contains(&my);
+        if my_runnable && s.preemptions >= s.max_preemptions {
+            // Preemption budget spent: the running thread must continue.
+            options = vec![my];
+        }
+        let taken = if s.pos < s.tape.len() {
+            let c = &s.tape[s.pos];
+            if c.options != options {
+                self.fail(
+                    s,
+                    format!(
+                        "loom: schedule replay diverged at decision {} \
+                         (recorded {:?}, live {:?}) — the model closure must be \
+                         deterministic apart from thread interleaving",
+                        s.pos, c.options, options
+                    ),
+                );
+                return;
+            }
+            c.taken
+        } else {
+            s.tape.push(Choice { options: options.clone(), taken: 0 });
+            0
+        };
+        s.pos += 1;
+        let pick = options[taken];
+        if my_runnable && pick != my {
+            s.preemptions += 1;
+        }
+        if let ThState::BlockedMutex(m) = s.threads[pick] {
+            // Granting the token to a mutex-waiter acquires atomically,
+            // so a waiter is never scheduled just to re-block.
+            s.mutexes[m].locked = true;
+            s.mutexes[m].owner = Some(pick);
+            s.threads[pick] = ThState::Runnable;
+        }
+        s.active = pick;
+        self.cv.notify_all();
+    }
+
+    /// Block until this thread holds the token again. Parks forever if
+    /// the exploration has failed (the orchestrator is already
+    /// panicking; see module docs).
+    fn wait_for_token<'a>(
+        &'a self,
+        mut s: StdMutexGuard<'a, Sched>,
+        my: usize,
+    ) -> StdMutexGuard<'a, Sched> {
+        loop {
+            if s.failed.is_some() {
+                self.park_forever(s);
+            }
+            if s.active == my && s.threads[my] == ThState::Runnable {
+                return s;
+            }
+            s = match self.cv.wait(s) {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+        }
+    }
+
+    /// A plain preemptible yield point: record a decision, possibly
+    /// switch, return when this thread runs again.
+    pub(crate) fn yield_point(&self, my: usize) {
+        let mut s = self.guard();
+        self.pick_next(&mut s, my);
+        let s = self.wait_for_token(s, my);
+        drop(s);
+    }
+
+    /// Register (or re-register after an iteration reset) a modeled
+    /// object. `stamp` packs `(iter + 0-based id)`; 0 means unassigned.
+    fn register(&self, stamp: &AtomicU64, kind_len: impl Fn(&mut Sched) -> usize) -> usize {
+        let mut s = self.guard();
+        let cur = stamp.load(Ordering::Relaxed);
+        let (it, id) = ((cur >> 32) as u32, (cur & 0xffff_ffff) as usize);
+        if cur != 0 && it == s.iter {
+            return id;
+        }
+        let id = kind_len(&mut s);
+        stamp.store(((s.iter as u64) << 32) | id as u64, Ordering::Relaxed);
+        id
+    }
+
+    pub(crate) fn register_mutex(&self, stamp: &AtomicU64) -> usize {
+        self.register(stamp, |s| {
+            s.mutexes.push(MxState::default());
+            s.mutexes.len() - 1
+        })
+    }
+
+    pub(crate) fn register_condvar(&self, stamp: &AtomicU64) -> usize {
+        self.register(stamp, |s| {
+            s.condvars.push(CvState::default());
+            s.condvars.len() - 1
+        })
+    }
+
+    /// Acquire modeled mutex `m`: yield first (someone else may race to
+    /// it), then take it or block until granted.
+    pub(crate) fn acquire_mutex(&self, my: usize, m: usize) {
+        self.yield_point(my);
+        let mut s = self.guard();
+        if !s.mutexes[m].locked {
+            s.mutexes[m].locked = true;
+            s.mutexes[m].owner = Some(my);
+            return;
+        }
+        s.threads[my] = ThState::BlockedMutex(m);
+        self.pick_next(&mut s, my);
+        let s = self.wait_for_token(s, my);
+        debug_assert_eq!(s.mutexes[m].owner, Some(my));
+        drop(s);
+    }
+
+    /// Release modeled mutex `m`. Not itself a yield point — the next
+    /// operation of this thread is one, which is when waiters can win.
+    pub(crate) fn release_mutex(&self, m: usize) {
+        let mut s = self.guard();
+        s.mutexes[m].locked = false;
+        s.mutexes[m].owner = None;
+        // Waiters become schedulable; they are picked at the next
+        // decision point (no wakeup needed — nobody sleeps on the OS
+        // condvar without the scheduler knowing their model state).
+    }
+
+    /// Full condvar-wait protocol: atomically enqueue on `cv_id` and
+    /// release `m`, block until notified, then re-acquire `m` (the
+    /// grant happens when the scheduler picks this thread).
+    pub(crate) fn condvar_wait(&self, my: usize, cv_id: usize, m: usize) {
+        let mut s = self.guard();
+        s.condvars[cv_id].queue.push_back((my, m));
+        s.mutexes[m].locked = false;
+        s.mutexes[m].owner = None;
+        s.threads[my] = ThState::BlockedCv(cv_id);
+        self.pick_next(&mut s, my);
+        let s = self.wait_for_token(s, my);
+        debug_assert_eq!(s.mutexes[m].owner, Some(my));
+        drop(s);
+    }
+
+    /// FIFO notify: move the oldest waiter (if any) to the
+    /// mutex-reacquire state. A notify with no waiter is lost, exactly
+    /// like the real primitive.
+    pub(crate) fn notify_one(&self, my: usize, cv_id: usize) {
+        self.yield_point(my);
+        let mut s = self.guard();
+        if let Some((t, m)) = s.condvars[cv_id].queue.pop_front() {
+            s.threads[t] = ThState::BlockedMutex(m);
+        }
+    }
+
+    pub(crate) fn notify_all(&self, my: usize, cv_id: usize) {
+        self.yield_point(my);
+        let mut s = self.guard();
+        while let Some((t, m)) = s.condvars[cv_id].queue.pop_front() {
+            s.threads[t] = ThState::BlockedMutex(m);
+        }
+    }
+
+    /// Register a new modeled thread (spawned by the token holder).
+    pub(crate) fn register_thread(&self) -> usize {
+        let mut s = self.guard();
+        s.threads.push(ThState::Runnable);
+        s.threads.len() - 1
+    }
+
+    pub(crate) fn adopt_os_handle(&self, h: std::thread::JoinHandle<()>) {
+        let mut s = self.guard();
+        s.os_handles.push(h);
+    }
+
+    /// Block until `target` finishes.
+    pub(crate) fn join_thread(&self, my: usize, target: usize) {
+        loop {
+            self.yield_point(my);
+            let mut s = self.guard();
+            if s.threads[target] == ThState::Finished {
+                return;
+            }
+            s.threads[my] = ThState::BlockedJoin(target);
+            self.pick_next(&mut s, my);
+            let s2 = self.wait_for_token(s, my);
+            drop(s2);
+        }
+    }
+
+    /// Mark `my` finished, wake its joiners, and hand off the token.
+    /// The calling OS thread exits afterwards.
+    pub(crate) fn finish_thread(&self, my: usize) {
+        let mut s = self.guard();
+        s.threads[my] = ThState::Finished;
+        for t in 0..s.threads.len() {
+            if s.threads[t] == ThState::BlockedJoin(my) {
+                s.threads[t] = ThState::Runnable;
+            }
+        }
+        self.pick_next(&mut s, my);
+    }
+}
+
+/// Entry point of every modeled OS thread: install the context, wait
+/// for the first token grant, run the payload under `catch_unwind`
+/// (a panicking modeled thread is a *result*, observable via join, not
+/// a model failure), then hand off.
+pub(crate) fn run_modeled<T: Send + 'static>(
+    sched: Arc<Scheduler>,
+    tid: usize,
+    slot: Arc<StdMutex<Option<std::thread::Result<T>>>>,
+    f: impl FnOnce() -> T + Send + 'static,
+) {
+    set_ctx(Ctx { sched: Arc::clone(&sched), tid });
+    {
+        let s = sched.guard();
+        let s = sched.wait_for_token(s, tid);
+        drop(s);
+    }
+    let result = catch_unwind(AssertUnwindSafe(f));
+    *slot.lock().unwrap_or_else(|p| p.into_inner()) = Some(result);
+    sched.finish_thread(tid);
+}
+
+/// Exhaustively explore every interleaving of `f` reachable within the
+/// preemption bound. `f` runs once per schedule; a panic on the root
+/// thread (assertion failure) aborts exploration and propagates — the
+/// failing schedule is the counterexample. A state where every live
+/// thread is blocked fails the model with a deadlock panic.
+pub fn model<F>(f: F)
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    let max_preemptions = env_u64("LOOM_MAX_PREEMPTIONS", 2) as u32;
+    let max_schedules = env_u64("LOOM_MAX_SCHEDULES", 100_000);
+    let sched = Arc::new(Scheduler::new(max_preemptions));
+    let f = Arc::new(f);
+    let mut schedules: u64 = 0;
+    loop {
+        schedules += 1;
+        if schedules > max_schedules {
+            panic!(
+                "loom: exceeded LOOM_MAX_SCHEDULES={max_schedules} without \
+                 exhausting the interleaving space — raise the cap or shrink the model"
+            );
+        }
+        // Reset per-iteration state; the tape (and the replay cursor's
+        // home position) survives across iterations to drive the DFS.
+        {
+            let mut s = sched.guard();
+            s.iter += 1;
+            s.threads.clear();
+            s.threads.push(ThState::Runnable);
+            s.active = 0;
+            s.preemptions = 0;
+            s.pos = 0;
+            s.mutexes.clear();
+            s.condvars.clear();
+            s.failed = None;
+            s.all_done = false;
+        }
+        let slot: Arc<StdMutex<Option<std::thread::Result<()>>>> = Arc::new(StdMutex::new(None));
+        let root = {
+            let sched = Arc::clone(&sched);
+            let slot = Arc::clone(&slot);
+            let f = Arc::clone(&f);
+            std::thread::Builder::new()
+                .name("loom-root".into())
+                .spawn(move || run_modeled(sched, 0, slot, move || f()))
+                .expect("spawn loom root thread")
+        };
+        sched.adopt_os_handle(root);
+        // Wait for the iteration to complete or fail.
+        let failed = {
+            let mut s = sched.guard();
+            while !s.all_done && s.failed.is_none() {
+                s = match sched.cv.wait(s) {
+                    Ok(g) => g,
+                    Err(p) => p.into_inner(),
+                };
+            }
+            s.failed.clone()
+        };
+        if let Some(msg) = failed {
+            // Parked threads (and their handles) are intentionally
+            // leaked: the model has failed and we are panicking out.
+            panic!("{msg} [schedule {schedules}]");
+        }
+        let handles = {
+            let mut s = sched.guard();
+            std::mem::take(&mut s.os_handles)
+        };
+        for h in handles {
+            let _ = h.join();
+        }
+        let root_result = slot.lock().unwrap_or_else(|p| p.into_inner()).take();
+        if let Some(Err(payload)) = root_result {
+            // Counterexample: re-raise the root thread's panic.
+            std::panic::resume_unwind(payload);
+        }
+        // Depth-first advance: bump the deepest decision that still has
+        // untried options; drop everything after it.
+        let exhausted = {
+            let mut s = sched.guard();
+            loop {
+                match s.tape.last_mut() {
+                    None => break true,
+                    Some(c) if c.taken + 1 < c.options.len() => {
+                        c.taken += 1;
+                        break false;
+                    }
+                    Some(_) => {
+                        s.tape.pop();
+                    }
+                }
+            }
+        };
+        if exhausted {
+            break;
+        }
+    }
+}
+
+/// Number of schedules a model explores — handy for meta-tests. Runs
+/// the full exploration and counts iterations.
+pub fn explore_count<F>(f: F) -> u64
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    let count = Arc::new(AtomicU64::new(0));
+    let c = Arc::clone(&count);
+    model(move || {
+        c.fetch_add(1, Ordering::SeqCst);
+        f();
+    });
+    count.load(Ordering::SeqCst)
+}

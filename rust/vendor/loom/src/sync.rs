@@ -1,0 +1,332 @@
+//! Dual-mode synchronization primitives.
+//!
+//! Inside `model()` every operation is a scheduler yield point and the
+//! blocking semantics (mutex acquisition order, condvar FIFO wakeups,
+//! channel parking) are interpreted by the explorer, so all
+//! interleavings are enumerable. Outside `model()` each primitive
+//! degrades to its plain `std` counterpart — a crate built with the
+//! loom feature still behaves normally in ordinary tests.
+//!
+//! Data lives in a real `std::sync::Mutex` inside the modeled one: the
+//! std layer is always uncontended under the scheduler token, and std's
+//! poisoning carries through unchanged (a modeled thread panicking
+//! while holding a guard poisons the std mutex during unwind, so
+//! `lock()` faithfully returns `Err(PoisonError)` afterwards).
+
+use std::sync::atomic::AtomicU64;
+use std::sync::{
+    Condvar as StdCondvar, Mutex as StdMutex, MutexGuard as StdMutexGuard, TryLockError,
+};
+
+pub use std::sync::{Arc, LockResult, PoisonError};
+
+use crate::sched::{self, Scheduler};
+
+fn yield_if_modeled() {
+    if let Some(ctx) = sched::current() {
+        ctx.sched.yield_point(ctx.tid);
+    }
+}
+
+/// Mutex with explorer-visible blocking. API subset of
+/// `std::sync::Mutex` (new / lock), identical poisoning behavior.
+pub struct Mutex<T> {
+    /// Packed `(iteration, model id)` registration stamp; 0 = none.
+    stamp: AtomicU64,
+    inner: StdMutex<T>,
+}
+
+/// Guard for [`Mutex`]: wraps the std guard and, when modeled, releases
+/// the scheduler-side lock on drop (including during unwind, which is
+/// what lets poisoning propagate without wedging the explorer).
+pub struct MutexGuard<'a, T> {
+    inner: Option<StdMutexGuard<'a, T>>,
+    model: Option<(Arc<Scheduler>, usize)>,
+    lock: &'a Mutex<T>,
+}
+
+impl<T> Mutex<T> {
+    pub const fn new(t: T) -> Self {
+        Mutex { stamp: AtomicU64::new(0), inner: StdMutex::new(t) }
+    }
+
+    fn wrap<'a>(
+        &'a self,
+        std_result: Result<StdMutexGuard<'a, T>, TryLockError<StdMutexGuard<'a, T>>>,
+        model: Option<(Arc<Scheduler>, usize)>,
+    ) -> LockResult<MutexGuard<'a, T>> {
+        match std_result {
+            Ok(g) => Ok(MutexGuard { inner: Some(g), model, lock: self }),
+            Err(TryLockError::Poisoned(p)) => Err(PoisonError::new(MutexGuard {
+                inner: Some(p.into_inner()),
+                model,
+                lock: self,
+            })),
+            Err(TryLockError::WouldBlock) => {
+                unreachable!("loom: modeled mutex contended at the std layer")
+            }
+        }
+    }
+
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        match sched::current() {
+            Some(ctx) => {
+                let m = ctx.sched.register_mutex(&self.stamp);
+                ctx.sched.acquire_mutex(ctx.tid, m);
+                let model = Some((Arc::clone(&ctx.sched), m));
+                self.wrap(self.inner.try_lock(), model)
+            }
+            None => self.wrap(self.inner.lock().map_err(TryLockError::Poisoned), None),
+        }
+    }
+}
+
+impl<T> std::ops::Deref for MutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("guard holds the std layer")
+    }
+}
+
+impl<T> std::ops::DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_mut().expect("guard holds the std layer")
+    }
+}
+
+impl<T> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        // Std layer first (so a re-acquirer's try_lock succeeds), then
+        // the modeled release. Runs during unwind too.
+        drop(self.inner.take());
+        if let Some((sched, m)) = self.model.take() {
+            sched.release_mutex(m);
+        }
+    }
+}
+
+/// Condvar with FIFO, explorer-visible wakeups.
+pub struct Condvar {
+    stamp: AtomicU64,
+    inner: StdCondvar,
+}
+
+impl Default for Condvar {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Condvar {
+    pub const fn new() -> Self {
+        Condvar { stamp: AtomicU64::new(0), inner: StdCondvar::new() }
+    }
+
+    pub fn wait<'a, T>(&self, mut guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+        match sched::current() {
+            Some(ctx) => {
+                let cv = ctx.sched.register_condvar(&self.stamp);
+                let (sched, m) = guard
+                    .model
+                    .take()
+                    .expect("loom: condvar wait on a mutex created outside model()");
+                let lock = guard.lock;
+                drop(guard.inner.take());
+                drop(guard); // nothing left to release
+                sched.condvar_wait(ctx.tid, cv, m);
+                // The scheduler granted the modeled mutex back to this
+                // thread; re-take the (uncontended) std layer.
+                lock.wrap(lock.inner.try_lock(), Some((sched, m)))
+            }
+            None => {
+                let lock = guard.lock;
+                let std_guard = guard.inner.take().expect("guard holds the std layer");
+                drop(guard);
+                lock.wrap(
+                    self.inner.wait(std_guard).map_err(TryLockError::Poisoned),
+                    None,
+                )
+            }
+        }
+    }
+
+    pub fn notify_one(&self) {
+        match sched::current() {
+            Some(ctx) => {
+                let cv = ctx.sched.register_condvar(&self.stamp);
+                ctx.sched.notify_one(ctx.tid, cv);
+            }
+            None => self.inner.notify_one(),
+        }
+    }
+
+    pub fn notify_all(&self) {
+        match sched::current() {
+            Some(ctx) => {
+                let cv = ctx.sched.register_condvar(&self.stamp);
+                ctx.sched.notify_all(ctx.tid, cv);
+            }
+            None => self.inner.notify_all(),
+        }
+    }
+}
+
+pub mod atomic {
+    //! Atomics whose every operation is a yield point under the model.
+    //! Orderings are accepted for API compatibility but upgraded to
+    //! SeqCst — strictly more conservative than what callers request.
+
+    pub use std::sync::atomic::Ordering;
+
+    use super::yield_if_modeled;
+    use std::sync::atomic::{
+        AtomicBool as StdAtomicBool, AtomicUsize as StdAtomicUsize, Ordering::SeqCst,
+    };
+
+    #[derive(Default, Debug)]
+    pub struct AtomicBool {
+        inner: StdAtomicBool,
+    }
+
+    impl AtomicBool {
+        pub const fn new(v: bool) -> Self {
+            AtomicBool { inner: StdAtomicBool::new(v) }
+        }
+        pub fn load(&self, _order: Ordering) -> bool {
+            yield_if_modeled();
+            self.inner.load(SeqCst)
+        }
+        pub fn store(&self, v: bool, _order: Ordering) {
+            yield_if_modeled();
+            self.inner.store(v, SeqCst)
+        }
+        pub fn swap(&self, v: bool, _order: Ordering) -> bool {
+            yield_if_modeled();
+            self.inner.swap(v, SeqCst)
+        }
+    }
+
+    #[derive(Default, Debug)]
+    pub struct AtomicUsize {
+        inner: StdAtomicUsize,
+    }
+
+    impl AtomicUsize {
+        pub const fn new(v: usize) -> Self {
+            AtomicUsize { inner: StdAtomicUsize::new(v) }
+        }
+        pub fn load(&self, _order: Ordering) -> usize {
+            yield_if_modeled();
+            self.inner.load(SeqCst)
+        }
+        pub fn store(&self, v: usize, _order: Ordering) {
+            yield_if_modeled();
+            self.inner.store(v, SeqCst)
+        }
+        pub fn fetch_add(&self, v: usize, _order: Ordering) -> usize {
+            yield_if_modeled();
+            self.inner.fetch_add(v, SeqCst)
+        }
+    }
+}
+
+pub mod mpsc {
+    //! Multi-producer single-consumer channel built on the modeled
+    //! [`Mutex`]/[`Condvar`], so it is dual-mode for free: a real
+    //! blocking queue outside `model()`, fully interleaved inside.
+
+    pub use std::sync::mpsc::{RecvError, SendError};
+
+    use super::{Arc, Condvar, Mutex, MutexGuard};
+    use std::collections::VecDeque;
+
+    struct Chan<T> {
+        queue: VecDeque<T>,
+        senders: usize,
+        rx_alive: bool,
+    }
+
+    struct Shared<T> {
+        chan: Mutex<Chan<T>>,
+        ready: Condvar,
+    }
+
+    fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+        match m.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        }
+    }
+
+    pub struct Sender<T> {
+        sh: Arc<Shared<T>>,
+    }
+
+    pub struct Receiver<T> {
+        sh: Arc<Shared<T>>,
+    }
+
+    pub fn channel<T>() -> (Sender<T>, Receiver<T>) {
+        let sh = Arc::new(Shared {
+            chan: Mutex::new(Chan { queue: VecDeque::new(), senders: 1, rx_alive: true }),
+            ready: Condvar::new(),
+        });
+        (Sender { sh: Arc::clone(&sh) }, Receiver { sh })
+    }
+
+    impl<T> Sender<T> {
+        pub fn send(&self, t: T) -> Result<(), SendError<T>> {
+            let mut ch = lock(&self.sh.chan);
+            if !ch.rx_alive {
+                return Err(SendError(t));
+            }
+            ch.queue.push_back(t);
+            drop(ch);
+            self.sh.ready.notify_one();
+            Ok(())
+        }
+    }
+
+    impl<T> Clone for Sender<T> {
+        fn clone(&self) -> Self {
+            lock(&self.sh.chan).senders += 1;
+            Sender { sh: Arc::clone(&self.sh) }
+        }
+    }
+
+    impl<T> Drop for Sender<T> {
+        fn drop(&mut self) {
+            let mut ch = lock(&self.sh.chan);
+            ch.senders -= 1;
+            let disconnected = ch.senders == 0;
+            drop(ch);
+            if disconnected {
+                self.sh.ready.notify_all();
+            }
+        }
+    }
+
+    impl<T> Receiver<T> {
+        pub fn recv(&self) -> Result<T, RecvError> {
+            let mut ch = lock(&self.sh.chan);
+            loop {
+                if let Some(v) = ch.queue.pop_front() {
+                    return Ok(v);
+                }
+                if ch.senders == 0 {
+                    return Err(RecvError);
+                }
+                ch = match self.sh.ready.wait(ch) {
+                    Ok(g) => g,
+                    Err(p) => p.into_inner(),
+                };
+            }
+        }
+    }
+
+    impl<T> Drop for Receiver<T> {
+        fn drop(&mut self) {
+            lock(&self.sh.chan).rx_alive = false;
+        }
+    }
+}

@@ -1,0 +1,81 @@
+//! Modeled threads: `spawn`/`join` that the scheduler can interleave.
+//!
+//! Dual-mode: inside `model()` a spawn registers a modeled thread (a
+//! real OS thread that runs only while it holds the scheduler token);
+//! outside, it is a plain `std::thread::spawn`. `join` mirrors std's
+//! signature, returning `Err(payload)` when the thread panicked.
+
+use std::sync::{Arc, Mutex as StdMutex};
+
+use crate::sched::{self, run_modeled};
+
+enum Inner<T> {
+    Std(std::thread::JoinHandle<T>),
+    Model {
+        sched: Arc<sched::Scheduler>,
+        tid: usize,
+        slot: Arc<StdMutex<Option<std::thread::Result<T>>>>,
+    },
+}
+
+/// Handle to a spawned (possibly modeled) thread.
+pub struct JoinHandle<T> {
+    inner: Inner<T>,
+}
+
+impl<T> JoinHandle<T> {
+    /// Wait for the thread to finish; `Err` carries its panic payload.
+    pub fn join(self) -> std::thread::Result<T> {
+        match self.inner {
+            Inner::Std(h) => h.join(),
+            Inner::Model { sched, tid, slot } => {
+                let my = sched::current()
+                    .expect("loom: JoinHandle::join on a modeled thread called outside model()")
+                    .tid;
+                sched.join_thread(my, tid);
+                slot.lock()
+                    .unwrap_or_else(|p| p.into_inner())
+                    .take()
+                    .expect("loom: joined thread has no result")
+            }
+        }
+    }
+}
+
+/// Spawn a thread. Modeled (schedulable by the explorer) inside
+/// `model()`, a real detached-lifecycle `std` thread otherwise.
+pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+where
+    F: FnOnce() -> T + Send + 'static,
+    T: Send + 'static,
+{
+    match sched::current() {
+        Some(ctx) => {
+            let tid = ctx.sched.register_thread();
+            let slot: Arc<StdMutex<Option<std::thread::Result<T>>>> =
+                Arc::new(StdMutex::new(None));
+            let os = {
+                let sched = Arc::clone(&ctx.sched);
+                let slot = Arc::clone(&slot);
+                std::thread::Builder::new()
+                    .name(format!("loom-{tid}"))
+                    .spawn(move || run_modeled(sched, tid, slot, f))
+                    .expect("spawn loom modeled thread")
+            };
+            ctx.sched.adopt_os_handle(os);
+            // Spawning is a decision point: the child may run first.
+            ctx.sched.yield_point(ctx.tid);
+            JoinHandle { inner: Inner::Model { sched: ctx.sched, tid, slot } }
+        }
+        None => JoinHandle { inner: Inner::Std(std::thread::spawn(f)) },
+    }
+}
+
+/// A pure yield point inside `model()`; `std::thread::yield_now`
+/// otherwise.
+pub fn yield_now() {
+    match sched::current() {
+        Some(ctx) => ctx.sched.yield_point(ctx.tid),
+        None => std::thread::yield_now(),
+    }
+}

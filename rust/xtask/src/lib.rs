@@ -1,0 +1,751 @@
+//! Source-level invariant lint for the deepca repo.
+//!
+//! The crate's headline contracts — zero steady-state allocation in
+//! `Solver::step`, bit-identical results across thread counts — are
+//! pinned dynamically by `alloc_free.rs` and `thread_determinism.rs`.
+//! This lint enforces the *source patterns* behind those contracts, so
+//! violations are caught at review time with a file:line, not as a
+//! counter regression two layers away:
+//!
+//! 1. **`alloc`** — no allocating kernel calls (`.matmul(`, `qr::qr(`,
+//!    `vec![`, `.clone()`, `Mat::zeros(`, …) inside the registered
+//!    hot-path regions (all four `Solver::step` impls, the FastMix
+//!    recursion and its engine callers, exec dispatch) unless the line
+//!    carries `// lint: allow(alloc, <reason>)`.
+//! 2. **`hash-iter`** — no iteration over `HashMap`/`HashSet` anywhere
+//!    in result-producing code: iteration order is nondeterministic
+//!    across runs and would silently break the bit-identity contract.
+//!    (Keyed lookup and membership tests are fine.)
+//! 3. **`thread-spawn`** — no `thread::spawn`/`thread::scope`/
+//!    `thread::Builder` outside `exec/`: the executor is the single
+//!    parallelism substrate, and ad-hoc threads bypass its determinism
+//!    and reuse discipline.
+//! 4. **`timing`** — no `Instant::now`/`SystemTime` outside
+//!    `util/timer.rs` and `benchkit.rs`, so wall-clock reads stay
+//!    behind one auditable seam.
+//! 5. **`safety`** — every `unsafe` token is immediately preceded by
+//!    (or carries) a `// SAFETY:` comment.
+//!
+//! The hot-region table is *closed over the repo*: if a registered
+//! region stops matching (file renamed, fn renamed, impl moved), the
+//! lint fails with `region-missing` rather than silently linting
+//! nothing — table rot is itself a lint error.
+//!
+//! Deliberately line-based (comment- and string-stripped, brace-depth
+//! tracked) rather than AST-based: the repo vendors no parser crates,
+//! and every enforced pattern is lexically recognizable. The trade-off
+//! is that the lint is advisory-grade precise, not compiler-grade; the
+//! fixtures under `tests/fixtures/` pin its behavior on both sides.
+
+use std::path::{Path, PathBuf};
+
+/// Which invariant a finding violates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rule {
+    /// Allocating call inside a registered hot region.
+    HotAlloc,
+    /// HashMap/HashSet iteration (nondeterministic order).
+    HashIter,
+    /// Thread primitives outside `exec/`.
+    ThreadSpawn,
+    /// Wall-clock reads outside the timing seam.
+    Timing,
+    /// `unsafe` without an immediately-preceding `// SAFETY:` comment.
+    Safety,
+    /// A registered hot region no longer matches any source.
+    RegionMissing,
+    /// Malformed `// lint: allow(...)` annotation.
+    AllowSyntax,
+}
+
+impl Rule {
+    pub fn name(self) -> &'static str {
+        match self {
+            Rule::HotAlloc => "alloc",
+            Rule::HashIter => "hash-iter",
+            Rule::ThreadSpawn => "thread-spawn",
+            Rule::Timing => "timing",
+            Rule::Safety => "safety",
+            Rule::RegionMissing => "region-missing",
+            Rule::AllowSyntax => "allow-syntax",
+        }
+    }
+}
+
+/// One lint violation, formatted as `file:line: [rule] message`.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub rule: Rule,
+    pub message: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}",
+            self.file,
+            self.line,
+            self.rule.name(),
+            self.message
+        )
+    }
+}
+
+/// A registered hot-path region: the body of `fn_name` in any file
+/// whose repo-relative path ends with `file_suffix`, optionally
+/// restricted to the `impl` block whose header contains `impl_context`.
+#[derive(Debug, Clone)]
+pub struct Region {
+    pub file_suffix: &'static str,
+    pub impl_context: Option<&'static str>,
+    pub fn_name: &'static str,
+}
+
+/// The repo's hot-region table. Every entry must match exactly one fn
+/// in the tree (checked by `lint_tree`); see module docs for why
+/// table rot is an error.
+pub fn repo_regions() -> Vec<Region> {
+    vec![
+        Region {
+            file_suffix: "algo/deepca.rs",
+            impl_context: Some("Solver for DeepcaSolver"),
+            fn_name: "step",
+        },
+        Region {
+            file_suffix: "algo/depca.rs",
+            impl_context: Some("Solver for DepcaSolver"),
+            fn_name: "step",
+        },
+        Region {
+            file_suffix: "algo/local_power.rs",
+            impl_context: Some("Solver for LocalPowerSolver"),
+            fn_name: "step",
+        },
+        Region {
+            file_suffix: "algo/centralized.rs",
+            impl_context: Some("Solver for CentralizedSolver"),
+            fn_name: "step",
+        },
+        Region {
+            file_suffix: "consensus/fastmix.rs",
+            impl_context: None,
+            fn_name: "chebyshev_row_update",
+        },
+        Region { file_suffix: "consensus/fastmix.rs", impl_context: None, fn_name: "mix" },
+        Region {
+            file_suffix: "consensus/simnet.rs",
+            impl_context: Some("Communicator for SimNet"),
+            fn_name: "fastmix",
+        },
+        Region {
+            file_suffix: "consensus/comm.rs",
+            impl_context: Some("Communicator for DenseComm"),
+            fn_name: "fastmix",
+        },
+        Region { file_suffix: "exec/mod.rs", impl_context: None, fn_name: "run_job" },
+        Region {
+            file_suffix: "exec/mod.rs",
+            impl_context: None,
+            fn_name: "par_for_each_agent",
+        },
+        Region { file_suffix: "exec/mod.rs", impl_context: None, fn_name: "par_chunks_ctx" },
+    ]
+}
+
+/// Call patterns that allocate (directly or via an allocating kernel)
+/// and are therefore banned inside hot regions. Substring matches over
+/// comment- and string-stripped code; the `_into` kernels do not match
+/// their allocating counterparts (`matmul_into(` contains no `.matmul(`).
+const ALLOC_PATTERNS: &[&str] = &[
+    ".matmul(",
+    ".t_matmul(",
+    "qr::qr(",
+    "thin_qr(",
+    "thin_qr_with(",
+    "orth(",
+    "vec![",
+    "Vec::new(",
+    "Vec::with_capacity(",
+    ".to_vec()",
+    ".collect()",
+    ".clone()",
+    "Mat::zeros(",
+    "Mat::from_vec(",
+    "Mat::from_fn(",
+    "Mat::randn(",
+    "AgentStack::new(",
+    "AgentStack::replicate(",
+    "Box::new(",
+    "format!(",
+    ".to_string()",
+    "String::new(",
+];
+
+const HASH_ITER_METHODS: &[&str] = &[".iter()", ".keys()", ".values()", ".drain(", ".into_iter()"];
+
+const THREAD_PATTERNS: &[&str] = &["thread::spawn(", "thread::scope(", "thread::Builder"];
+
+const TIMING_PATTERNS: &[&str] = &["Instant::now(", "SystemTime"];
+
+const KNOWN_ALLOW_RULES: &[&str] = &["alloc", "hash-iter", "thread-spawn", "timing"];
+
+/// One source line after lexical preprocessing.
+struct Line {
+    /// The line with comments removed and string/char literal contents
+    /// blanked — what the pattern rules scan.
+    code: String,
+    /// The comment text (if any) — where annotations live.
+    comment: String,
+    /// True when `code` is all whitespace (comment-only or blank line).
+    comment_only: bool,
+    /// Inside a `#[cfg(test)] mod` block.
+    in_test_mod: bool,
+}
+
+/// Strip comments and blank out string/char literals, line by line,
+/// carrying block-comment state across lines. Rust raw strings are
+/// handled for the common `r"…"`/`r#"…"#` forms.
+fn preprocess(src: &str) -> Vec<Line> {
+    let mut lines = Vec::new();
+    let mut in_block_comment = false;
+    for raw in src.lines() {
+        let mut code = String::with_capacity(raw.len());
+        let mut comment = String::new();
+        let bytes: Vec<char> = raw.chars().collect();
+        let mut i = 0;
+        while i < bytes.len() {
+            if in_block_comment {
+                if bytes[i] == '*' && i + 1 < bytes.len() && bytes[i + 1] == '/' {
+                    in_block_comment = false;
+                    i += 2;
+                } else {
+                    comment.push(bytes[i]);
+                    i += 1;
+                }
+                continue;
+            }
+            match bytes[i] {
+                '/' if i + 1 < bytes.len() && bytes[i + 1] == '/' => {
+                    comment.extend(bytes[i..].iter().copied());
+                    break;
+                }
+                '/' if i + 1 < bytes.len() && bytes[i + 1] == '*' => {
+                    in_block_comment = true;
+                    i += 2;
+                }
+                '"' => {
+                    // Blank the string literal body.
+                    code.push('"');
+                    i += 1;
+                    while i < bytes.len() {
+                        if bytes[i] == '\\' && i + 1 < bytes.len() {
+                            code.push(' ');
+                            code.push(' ');
+                            i += 2;
+                        } else if bytes[i] == '"' {
+                            code.push('"');
+                            i += 1;
+                            break;
+                        } else {
+                            code.push(' ');
+                            i += 1;
+                        }
+                    }
+                }
+                'r' if i + 1 < bytes.len() && (bytes[i + 1] == '"' || bytes[i + 1] == '#') => {
+                    // Raw string r"…" or r#"…"#: blank to the matching
+                    // terminator.
+                    let mut hashes = 0;
+                    let mut j = i + 1;
+                    while j < bytes.len() && bytes[j] == '#' {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if j < bytes.len() && bytes[j] == '"' {
+                        code.push('r');
+                        for _ in 0..hashes {
+                            code.push('#');
+                        }
+                        code.push('"');
+                        j += 1;
+                        'raw: while j < bytes.len() {
+                            if bytes[j] == '"' {
+                                let mut k = 0;
+                                while k < hashes
+                                    && j + 1 + k < bytes.len()
+                                    && bytes[j + 1 + k] == '#'
+                                {
+                                    k += 1;
+                                }
+                                if k == hashes {
+                                    code.push('"');
+                                    for _ in 0..hashes {
+                                        code.push('#');
+                                    }
+                                    j += 1 + hashes;
+                                    break 'raw;
+                                }
+                            }
+                            code.push(' ');
+                            j += 1;
+                        }
+                        i = j;
+                    } else {
+                        code.push(bytes[i]);
+                        i += 1;
+                    }
+                }
+                '\'' => {
+                    // Char literal or lifetime. Treat 'x' / '\n' as a
+                    // literal; anything else (lifetime) passes through.
+                    if i + 2 < bytes.len() && bytes[i + 1] != '\\' && bytes[i + 2] == '\'' {
+                        code.push_str("' '");
+                        i += 3;
+                    } else if i + 3 < bytes.len() && bytes[i + 1] == '\\' && bytes[i + 3] == '\'' {
+                        code.push_str("'  '");
+                        i += 4;
+                    } else {
+                        code.push('\'');
+                        i += 1;
+                    }
+                }
+                c => {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+        }
+        let comment_only = code.trim().is_empty();
+        lines.push(Line { code, comment, comment_only, in_test_mod: false });
+    }
+    mark_test_mods(&mut lines);
+    lines
+}
+
+/// Mark the body lines of every `#[cfg(test)] mod …` block.
+fn mark_test_mods(lines: &mut [Line]) {
+    let n = lines.len();
+    let mut i = 0;
+    while i < n {
+        if lines[i].code.trim().starts_with("#[cfg(test)]") {
+            // The mod header is on one of the next few lines (other
+            // attributes may sit in between).
+            let mut j = i + 1;
+            while j < n
+                && (lines[j].comment_only || lines[j].code.trim().starts_with("#["))
+            {
+                j += 1;
+            }
+            if j < n && lines[j].code.trim_start().starts_with("mod ") {
+                if let Some(end) = brace_span_end(lines, j) {
+                    for line in lines.iter_mut().take(end + 1).skip(i) {
+                        line.in_test_mod = true;
+                    }
+                    i = end + 1;
+                    continue;
+                }
+            }
+        }
+        i += 1;
+    }
+}
+
+/// Index of the line closing the brace block that opens at or after
+/// `start` (inclusive), by depth counting over stripped code.
+fn brace_span_end(lines: &[Line], start: usize) -> Option<usize> {
+    let mut depth = 0i64;
+    let mut opened = false;
+    for (idx, line) in lines.iter().enumerate().skip(start) {
+        for c in line.code.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    opened = true;
+                }
+                '}' => depth -= 1,
+                _ => {}
+            }
+        }
+        if opened && depth <= 0 {
+            return Some(idx);
+        }
+    }
+    None
+}
+
+/// Parse `lint: allow(rule, reason)` out of a comment. Returns
+/// `Some((rule, reason))` when the marker is present (reason may be
+/// empty — the caller validates it).
+fn parse_allow(comment: &str) -> Option<(String, String)> {
+    let at = comment.find("lint: allow(")?;
+    let rest = &comment[at + "lint: allow(".len()..];
+    let close = rest.rfind(')')?;
+    let inside = &rest[..close];
+    match inside.split_once(',') {
+        Some((rule, reason)) => Some((rule.trim().to_string(), reason.trim().to_string())),
+        None => Some((inside.trim().to_string(), String::new())),
+    }
+}
+
+/// Is `rule` allowed at `idx`? An annotation counts when it sits on the
+/// same line or on the comment line(s) immediately above.
+fn allowed(lines: &[Line], idx: usize, rule: &str) -> bool {
+    if let Some((r, reason)) = parse_allow(&lines[idx].comment) {
+        if r == rule && !reason.is_empty() {
+            return true;
+        }
+    }
+    let mut j = idx;
+    while j > 0 && lines[j - 1].comment_only {
+        j -= 1;
+        if let Some((r, reason)) = parse_allow(&lines[j].comment) {
+            return r == rule && !reason.is_empty();
+        }
+    }
+    false
+}
+
+fn is_exec_file(label: &str) -> bool {
+    label.contains("/exec/") || label.ends_with("exec/mod.rs")
+}
+
+fn is_timing_seam(label: &str) -> bool {
+    label.ends_with("util/timer.rs") || label.ends_with("benchkit.rs")
+}
+
+/// Identifier character test for pattern-boundary checks.
+fn ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Find `fn <name>` (followed by `(` or `<`) on a stripped code line.
+fn is_fn_decl(code: &str, name: &str) -> bool {
+    let mut search = 0;
+    while let Some(pos) = code[search..].find("fn ") {
+        let at = search + pos;
+        // `fn` must be its own token (not e.g. `extern "C" fnx`).
+        let before_ok = at == 0 || !ident_char(code[..at].chars().next_back().unwrap_or(' '));
+        let after = &code[at + 3..];
+        let after = after.trim_start();
+        if before_ok && after.starts_with(name) {
+            let rest = &after[name.len()..];
+            if rest.starts_with('(') || rest.starts_with('<') {
+                return true;
+            }
+        }
+        search = at + 3;
+    }
+    false
+}
+
+/// Locate a region's body span `(first_line, last_line)` in this file.
+fn find_region_span(lines: &[Line], region: &Region) -> Option<(usize, usize)> {
+    for (idx, line) in lines.iter().enumerate() {
+        if line.in_test_mod || !is_fn_decl(&line.code, region.fn_name) {
+            continue;
+        }
+        if let Some(ctx) = region.impl_context {
+            // The nearest `impl` header above must mention the context.
+            let mut found = false;
+            for prev in lines[..idx].iter().rev() {
+                let t = prev.code.trim_start();
+                if t.starts_with("impl ") || t.starts_with("impl<") {
+                    found = prev.code.contains(ctx);
+                    break;
+                }
+            }
+            if !found {
+                continue;
+            }
+        }
+        let end = brace_span_end(lines, idx)?;
+        return Some((idx, end));
+    }
+    None
+}
+
+/// All single-file rules. `path_label` is the repo-relative path (used
+/// for the exec/, timer, and region-table scoping); `regions` is the
+/// hot-region table to apply (pass `repo_regions()` for the real tree).
+pub fn lint_file(path_label: &str, src: &str, regions: &[Region]) -> Vec<Finding> {
+    let lines = preprocess(src);
+    let mut findings = Vec::new();
+    let finding = |line: usize, rule: Rule, message: String| Finding {
+        file: path_label.to_string(),
+        line: line + 1,
+        rule,
+        message,
+    };
+
+    // Annotation syntax: every `lint: allow` marker must name a known
+    // rule and carry a reason.
+    for (idx, line) in lines.iter().enumerate() {
+        if let Some((rule, reason)) = parse_allow(&line.comment) {
+            if !KNOWN_ALLOW_RULES.contains(&rule.as_str()) {
+                findings.push(finding(
+                    idx,
+                    Rule::AllowSyntax,
+                    format!(
+                        "unknown lint rule {rule:?} in allow annotation \
+                         (known: {KNOWN_ALLOW_RULES:?})"
+                    ),
+                ));
+            } else if reason.is_empty() {
+                findings.push(finding(
+                    idx,
+                    Rule::AllowSyntax,
+                    format!("allow({rule}) annotation without a reason — write \
+                             `// lint: allow({rule}, <why this is sound>)`"),
+                ));
+            }
+        }
+    }
+
+    // Rule: SAFETY comments. Applies everywhere, including test mods —
+    // unsafe is unsafe no matter where it lives.
+    for (idx, line) in lines.iter().enumerate() {
+        let code = &line.code;
+        let mut search = 0;
+        let mut hit = false;
+        while let Some(pos) = code[search..].find("unsafe") {
+            let at = search + pos;
+            let before_ok =
+                at == 0 || !ident_char(code[..at].chars().next_back().unwrap_or(' '));
+            let after = code[at + "unsafe".len()..].chars().next().unwrap_or(' ');
+            if before_ok && !ident_char(after) {
+                hit = true;
+                break;
+            }
+            search = at + "unsafe".len();
+        }
+        if !hit {
+            continue;
+        }
+        let same_line = line.comment.contains("SAFETY:");
+        let mut above = false;
+        let mut j = idx;
+        while j > 0 && lines[j - 1].comment_only {
+            j -= 1;
+            if lines[j].comment.contains("SAFETY:") {
+                above = true;
+                break;
+            }
+        }
+        if !(same_line || above) {
+            findings.push(finding(
+                idx,
+                Rule::Safety,
+                "`unsafe` without an immediately-preceding `// SAFETY:` comment \
+                 stating why the invariants hold"
+                    .to_string(),
+            ));
+        }
+    }
+
+    // Rule: thread primitives outside exec/.
+    if !is_exec_file(path_label) {
+        for (idx, line) in lines.iter().enumerate() {
+            if line.in_test_mod {
+                continue;
+            }
+            for pat in THREAD_PATTERNS {
+                if line.code.contains(pat) && !allowed(&lines, idx, "thread-spawn") {
+                    findings.push(finding(
+                        idx,
+                        Rule::ThreadSpawn,
+                        format!(
+                            "`{pat}` outside exec/ — all parallelism must go through \
+                             the Executor (determinism + reuse contracts)"
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+
+    // Rule: wall-clock reads outside the timing seam.
+    if !is_timing_seam(path_label) {
+        for (idx, line) in lines.iter().enumerate() {
+            if line.in_test_mod {
+                continue;
+            }
+            for pat in TIMING_PATTERNS {
+                if line.code.contains(pat) && !allowed(&lines, idx, "timing") {
+                    findings.push(finding(
+                        idx,
+                        Rule::Timing,
+                        format!(
+                            "`{pat}` outside util/timer.rs and benchkit — route \
+                             wall-clock reads through util::timer"
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+
+    // Rule: HashMap/HashSet iteration. Track locals bound to hash
+    // collections, then flag order-dependent consumption of them.
+    {
+        let mut hash_vars: Vec<String> = Vec::new();
+        for line in &lines {
+            let code = line.code.trim_start();
+            if let Some(rest) = code.strip_prefix("let ") {
+                let rest = rest.trim_start_matches("mut ").trim_start();
+                let name: String = rest.chars().take_while(|&c| ident_char(c)).collect();
+                if !name.is_empty()
+                    && (code.contains("HashMap") || code.contains("HashSet"))
+                    && !hash_vars.contains(&name)
+                {
+                    hash_vars.push(name);
+                }
+            }
+        }
+        for (idx, line) in lines.iter().enumerate() {
+            if line.in_test_mod {
+                continue;
+            }
+            for var in &hash_vars {
+                let direct = HASH_ITER_METHODS
+                    .iter()
+                    .any(|m| line.code.contains(&format!("{var}{m}")));
+                let for_loop = [
+                    format!(" in {var} "),
+                    format!(" in {var} {{"),
+                    format!(" in &{var} "),
+                    format!(" in &{var} {{"),
+                    format!(" in &mut {var} "),
+                    format!(" in &mut {var} {{"),
+                ]
+                .iter()
+                .any(|p| line.code.contains(p.as_str()))
+                    && line.code.contains("for ");
+                if (direct || for_loop) && !allowed(&lines, idx, "hash-iter") {
+                    findings.push(finding(
+                        idx,
+                        Rule::HashIter,
+                        format!(
+                            "iteration over hash collection `{var}` — order is \
+                             nondeterministic and breaks the bit-identity contract \
+                             (use a sorted Vec or index by key)"
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+
+    // Rule: allocations inside hot regions.
+    for region in regions {
+        if !path_label.ends_with(region.file_suffix) {
+            continue;
+        }
+        let Some((start, end)) = find_region_span(&lines, region) else {
+            findings.push(finding(
+                0,
+                Rule::RegionMissing,
+                format!(
+                    "registered hot region `fn {}`{} not found in this file — \
+                     update the region table in rust/xtask/src/lib.rs",
+                    region.fn_name,
+                    region
+                        .impl_context
+                        .map(|c| format!(" (impl context {c:?})"))
+                        .unwrap_or_default(),
+                ),
+            ));
+            continue;
+        };
+        for idx in start..=end {
+            let line = &lines[idx];
+            for pat in ALLOC_PATTERNS {
+                if line.code.contains(pat) && !allowed(&lines, idx, "alloc") {
+                    findings.push(finding(
+                        idx,
+                        Rule::HotAlloc,
+                        format!(
+                            "allocating call `{pat}` inside hot region `fn {}` — \
+                             use the workspace-backed `_into` kernels, or annotate \
+                             `// lint: allow(alloc, <reason>)` if provably cold",
+                            region.fn_name
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+
+    findings
+}
+
+/// Tree-level report: findings plus the number of files scanned.
+pub struct LintReport {
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let entries =
+        std::fs::read_dir(dir).map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+    let mut entries: Vec<_> = entries
+        .collect::<Result<Vec<_>, _>>()
+        .map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+    entries.sort_by_key(|e| e.path());
+    for entry in entries {
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().and_then(|e| e.to_str()) == Some("rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Lint the crate sources under `<root>/rust/src` against the repo
+/// region table. Also fails when a registered region's file suffix
+/// matches no scanned file at all (table rot).
+pub fn lint_tree(root: &Path) -> Result<LintReport, String> {
+    let src_root = root.join("rust").join("src");
+    if !src_root.is_dir() {
+        return Err(format!("{} is not a directory", src_root.display()));
+    }
+    let mut files = Vec::new();
+    collect_rs_files(&src_root, &mut files)?;
+    let regions = repo_regions();
+    let mut findings = Vec::new();
+    let mut suffix_seen = vec![false; regions.len()];
+    for path in &files {
+        let label = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        for (i, region) in regions.iter().enumerate() {
+            if label.ends_with(region.file_suffix) {
+                suffix_seen[i] = true;
+            }
+        }
+        let src =
+            std::fs::read_to_string(path).map_err(|e| format!("read {}: {e}", path.display()))?;
+        findings.extend(lint_file(&label, &src, &regions));
+    }
+    for (i, region) in regions.iter().enumerate() {
+        if !suffix_seen[i] {
+            findings.push(Finding {
+                file: region.file_suffix.to_string(),
+                line: 0,
+                rule: Rule::RegionMissing,
+                message: format!(
+                    "no scanned file matches registered hot-region suffix \
+                     {:?} — update the region table in rust/xtask/src/lib.rs",
+                    region.file_suffix
+                ),
+            });
+        }
+    }
+    Ok(LintReport { findings, files_scanned: files.len() })
+}

@@ -1,0 +1,61 @@
+//! `cargo xtask <command>` — repo tooling entry point.
+//!
+//! Commands:
+//! - `lint [root]`: run the invariant lint over `rust/src` (see
+//!   `xtask::lint_file` for the rules). Exits non-zero on findings;
+//!   blocking in `scripts/verify.sh` and CI.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn repo_root() -> PathBuf {
+    // xtask lives at <root>/rust/xtask.
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("..")
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("lint") => {
+            let root = args
+                .get(1)
+                .map(PathBuf::from)
+                .unwrap_or_else(repo_root);
+            match xtask::lint_tree(&root) {
+                Ok(report) => {
+                    for f in &report.findings {
+                        println!("{f}");
+                    }
+                    if report.findings.is_empty() {
+                        println!(
+                            "xtask lint: clean ({} files under rust/src)",
+                            report.files_scanned
+                        );
+                        ExitCode::SUCCESS
+                    } else {
+                        eprintln!(
+                            "xtask lint: {} finding(s) across {} files",
+                            report.findings.len(),
+                            report.files_scanned
+                        );
+                        ExitCode::FAILURE
+                    }
+                }
+                Err(e) => {
+                    eprintln!("xtask lint: {e}");
+                    ExitCode::FAILURE
+                }
+            }
+        }
+        Some(cmd) => {
+            eprintln!("xtask: unknown command {cmd:?} (available: lint)");
+            ExitCode::FAILURE
+        }
+        None => {
+            eprintln!("usage: cargo xtask lint [repo-root]");
+            ExitCode::FAILURE
+        }
+    }
+}

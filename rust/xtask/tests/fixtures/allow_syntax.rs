@@ -1,0 +1,10 @@
+// Fixture: malformed allow annotations.
+
+impl Solver for FakeSolver<'_> {
+    fn step(&mut self) {
+        // lint: allow(alloc)
+        self.scratch = vec![0.0; 4]; // reason missing: allow-syntax + alloc
+        // lint: allow(bogus-rule, some reason)
+        self.w = self.data.matmul(&self.w); // unknown rule: allow-syntax + alloc
+    }
+}

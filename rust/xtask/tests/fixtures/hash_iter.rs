@@ -1,0 +1,30 @@
+// Fixture: HashMap/HashSet iteration in result-producing code.
+// Keyed insert/contains are fine; ordered consumption is flagged.
+
+use std::collections::{HashMap, HashSet};
+
+fn produce(xs: &[u64]) -> Vec<u64> {
+    let mut seen: HashSet<u64> = HashSet::new();
+    for &x in xs {
+        seen.insert(x); // fine: keyed operation
+    }
+    let mut out = Vec::new();
+    for v in &seen {
+        // violation above: iteration order is nondeterministic
+        out.push(*v);
+    }
+    let counts: HashMap<u64, u64> = HashMap::new();
+    out.extend(counts.values()); // violation: .values()
+    out
+}
+
+fn membership_only(xs: &[u64]) -> bool {
+    let mut seen: HashSet<u64> = HashSet::new();
+    for &x in xs {
+        if seen.contains(&x) {
+            return true;
+        }
+        seen.insert(x);
+    }
+    false
+}

@@ -1,0 +1,20 @@
+// Fixture: allocating kernel calls inside a registered hot region.
+// Linted with label "algo/fake.rs" and a region table registering
+// `fn step` inside `impl Solver for FakeSolver`. Never compiled.
+
+impl Solver for FakeSolver<'_> {
+    fn step(&mut self) -> StepReport {
+        let g = self.data.matmul(&self.w); // violation: .matmul(
+        let q = qr::orth(&g); // violation: orth(
+        self.scratch = vec![0.0; 4]; // violation: vec![
+        let label = String::new(); // violation: String::new(
+        StepReport { w: q.clone(), label } // violation: .clone()
+    }
+}
+
+// Outside the region: allocation is fine here.
+fn cold_rebuild() -> Vec<f64> {
+    let mut out = Vec::new();
+    out.push(1.0);
+    out
+}

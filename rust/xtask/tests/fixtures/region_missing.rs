@@ -1,0 +1,9 @@
+// Fixture: a file whose registered hot region has rotted away (the
+// region table expects `fn step` in `impl Solver for FakeSolver`, but
+// the fn was renamed).
+
+impl Solver for FakeSolver<'_> {
+    fn advance(&mut self) {
+        self.iter += 1;
+    }
+}

@@ -1,0 +1,11 @@
+// Fixture: ad-hoc thread primitives outside exec/. Linted with label
+// "coordinator/fake.rs" (not under exec/).
+
+fn run_workers() {
+    let h = std::thread::spawn(|| 1 + 1); // violation: thread::spawn(
+    let _ = h.join();
+    std::thread::scope(|s| {
+        // violation above: thread::scope(
+        let _ = s;
+    });
+}

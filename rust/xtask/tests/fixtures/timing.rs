@@ -1,0 +1,8 @@
+// Fixture: wall-clock reads outside util/timer.rs and benchkit.
+// Linted with label "coordinator/fake.rs".
+
+fn measure() -> f64 {
+    let t0 = std::time::Instant::now(); // violation: Instant::now(
+    let _ = std::time::SystemTime::UNIX_EPOCH; // violation: SystemTime
+    t0.elapsed().as_secs_f64()
+}

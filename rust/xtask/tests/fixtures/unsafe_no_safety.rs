@@ -1,0 +1,19 @@
+// Fixture: `unsafe` without a SAFETY comment.
+
+fn bad(p: *mut u8) {
+    unsafe {
+        // violation: no SAFETY comment on or above the unsafe line
+        *p = 1;
+    }
+}
+
+fn good(p: *mut u8) {
+    // SAFETY: the caller guarantees `p` is valid, aligned, and
+    // exclusively borrowed for the duration of this call.
+    unsafe {
+        *p = 2;
+    }
+}
+
+// A comment merely *mentioning* unsafe code is not flagged.
+fn commentary() {}

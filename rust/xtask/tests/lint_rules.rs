@@ -1,0 +1,159 @@
+//! Fixture tests pinning the lint on both sides: every violation
+//! fixture must be flagged with exactly the expected rule(s), the clean
+//! fixture must pass, and the real tree must lint clean.
+
+use std::path::Path;
+
+use xtask::{lint_file, lint_tree, Region, Rule};
+
+fn fixture(name: &str) -> String {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests").join("fixtures").join(name);
+    std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("read fixture {}: {e}", path.display()))
+}
+
+fn fake_solver_region(file_suffix: &'static str) -> Vec<Region> {
+    vec![Region {
+        file_suffix,
+        impl_context: Some("Solver for FakeSolver"),
+        fn_name: "step",
+    }]
+}
+
+fn rules_of(findings: &[xtask::Finding]) -> Vec<Rule> {
+    findings.iter().map(|f| f.rule).collect()
+}
+
+#[test]
+fn hot_alloc_fixture_flags_every_allocating_call_in_the_region() {
+    let src = fixture("hot_alloc.rs");
+    let findings =
+        lint_file("rust/src/algo/fake.rs", &src, &fake_solver_region("algo/fake.rs"));
+    assert!(
+        findings.iter().all(|f| f.rule == Rule::HotAlloc),
+        "only alloc findings expected, got: {findings:?}"
+    );
+    // .matmul(, orth(, vec![, String::new(, .clone() — five distinct calls.
+    assert_eq!(findings.len(), 5, "findings: {findings:?}");
+    // The allocation in cold_rebuild (outside the region) is not flagged.
+    let region_end = src.lines().position(|l| l.trim() == "}").unwrap() + 2;
+    assert!(
+        findings.iter().all(|f| f.line <= region_end),
+        "cold-path allocation was flagged: {findings:?}"
+    );
+}
+
+#[test]
+fn hash_iter_fixture_flags_iteration_but_not_keyed_access() {
+    let src = fixture("hash_iter.rs");
+    let findings = lint_file("rust/src/consensus/fake.rs", &src, &[]);
+    assert_eq!(rules_of(&findings), vec![Rule::HashIter, Rule::HashIter], "{findings:?}");
+    // The two findings are the `for v in &seen` loop and `counts.values()`,
+    // not the insert/contains lines.
+    let flagged: Vec<&str> =
+        findings.iter().map(|f| src.lines().nth(f.line - 1).unwrap().trim()).collect();
+    assert!(flagged[0].starts_with("for v in &seen"), "{flagged:?}");
+    assert!(flagged[1].contains("counts.values()"), "{flagged:?}");
+}
+
+#[test]
+fn thread_spawn_fixture_is_flagged_outside_exec() {
+    let src = fixture("thread_spawn.rs");
+    let findings = lint_file("rust/src/coordinator/fake.rs", &src, &[]);
+    assert_eq!(
+        rules_of(&findings),
+        vec![Rule::ThreadSpawn, Rule::ThreadSpawn],
+        "{findings:?}"
+    );
+}
+
+#[test]
+fn thread_primitives_are_permitted_under_exec() {
+    let src = fixture("thread_spawn.rs");
+    let findings = lint_file("rust/src/exec/fake.rs", &src, &[]);
+    assert!(findings.is_empty(), "{findings:?}");
+}
+
+#[test]
+fn timing_fixture_is_flagged_outside_the_timer_seam() {
+    let src = fixture("timing.rs");
+    let findings = lint_file("rust/src/coordinator/fake.rs", &src, &[]);
+    assert_eq!(rules_of(&findings), vec![Rule::Timing, Rule::Timing], "{findings:?}");
+}
+
+#[test]
+fn wall_clock_reads_are_permitted_in_the_timer_seam() {
+    let src = fixture("timing.rs");
+    assert!(lint_file("rust/src/util/timer.rs", &src, &[]).is_empty());
+    assert!(lint_file("rust/src/util/benchkit.rs", &src, &[]).is_empty());
+}
+
+#[test]
+fn unsafe_without_safety_comment_is_flagged_once() {
+    let src = fixture("unsafe_no_safety.rs");
+    let findings = lint_file("rust/src/util/fake.rs", &src, &[]);
+    assert_eq!(rules_of(&findings), vec![Rule::Safety], "{findings:?}");
+    let flagged = src.lines().nth(findings[0].line - 1).unwrap();
+    assert!(flagged.contains("unsafe"), "flagged line: {flagged:?}");
+}
+
+#[test]
+fn malformed_allow_annotations_are_flagged_and_do_not_suppress() {
+    let src = fixture("allow_syntax.rs");
+    let findings =
+        lint_file("rust/src/algo/fake.rs", &src, &fake_solver_region("algo/fake.rs"));
+    let allow_syntax = findings.iter().filter(|f| f.rule == Rule::AllowSyntax).count();
+    let hot_alloc = findings.iter().filter(|f| f.rule == Rule::HotAlloc).count();
+    // A reason-less allow and an unknown-rule allow are each flagged,
+    // and neither suppresses the allocation it sits above.
+    assert_eq!((allow_syntax, hot_alloc), (2, 2), "{findings:?}");
+}
+
+#[test]
+fn rotted_region_table_is_flagged_as_region_missing() {
+    let src = fixture("region_missing.rs");
+    let findings =
+        lint_file("rust/src/algo/fake.rs", &src, &fake_solver_region("algo/fake.rs"));
+    assert_eq!(rules_of(&findings), vec![Rule::RegionMissing], "{findings:?}");
+}
+
+#[test]
+fn clean_fixture_passes_every_rule() {
+    let src = fixture("clean.rs");
+    let findings = lint_file(
+        "rust/src/algo/fake_clean.rs",
+        &src,
+        &fake_solver_region("algo/fake_clean.rs"),
+    );
+    assert!(findings.is_empty(), "clean fixture flagged: {findings:?}");
+}
+
+#[test]
+fn pattern_text_inside_strings_and_comments_is_ignored() {
+    let src = r#"
+fn describe() -> &'static str {
+    // .matmul( vec![ Instant::now( thread::spawn( unsafe
+    /* SystemTime .clone() */
+    "thread::spawn( Instant::now( unsafe { }"
+}
+"#;
+    let findings = lint_file("rust/src/util/fake.rs", src, &[]);
+    assert!(findings.is_empty(), "{findings:?}");
+}
+
+#[test]
+fn repo_tree_lints_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("..");
+    let report = lint_tree(&root).expect("lint_tree on the repo root");
+    assert!(
+        report.findings.is_empty(),
+        "the real tree must lint clean; findings:\n{}",
+        report
+            .findings
+            .iter()
+            .map(|f| format!("  {f}"))
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+    assert!(report.files_scanned > 10, "suspiciously few files scanned");
+}

@@ -56,9 +56,14 @@ run_required cargo bench --no-run
 # Documentation must build cleanly with no external deps.
 run_required cargo doc --no-deps --quiet
 
+# Repo invariant lint (blocking): hot-path allocation bans, hash-iteration
+# bans, thread/clock seams, SAFETY comments. See rust/xtask/src/lib.rs.
+run_required cargo xtask lint
+run_required cargo test -q -p xtask
+
 # Style / lint, advisory unless STRICT=1.
-run_advisory cargo fmt --check
-run_advisory cargo clippy --all-targets -- -D warnings
+run_advisory cargo fmt --all --check
+run_advisory cargo clippy --workspace --all-targets -- -D warnings
 
 echo
 if [ "$fail" -ne 0 ]; then
