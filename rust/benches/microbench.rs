@@ -111,6 +111,32 @@ fn main() {
         dst.slice(0).data()[0]
     }));
 
+    // ---------------------------------------------------- sparse gossip
+    // Fleet-scale CSR rounds: O(edges · d · k) per round, no n×n matrix.
+    // Stable names (`fastmix_sparse_round/{ring,grid}`) so
+    // `scripts/bench_diff` tracks the per-round cost across commits.
+    section("sparse CSR gossip (n=20000, d=8, k=2, per round)");
+    {
+        use deepca::consensus::comm::SparseComm;
+        let mut srng = Rng::seed_from(904);
+        let n = 20_000;
+        let sparse_stack = AgentStack::new(
+            (0..n).map(|_| Mat::randn(8, 2, &mut srng)).collect(),
+        );
+        for (label, topo) in [
+            ("fastmix_sparse_round/ring", Topology::ring(n)),
+            ("fastmix_sparse_round/grid", Topology::grid(100, 200)),
+        ] {
+            let comm = SparseComm::metropolis(&topo);
+            let mut s = sparse_stack.clone();
+            comm.fastmix(&mut s, 1, &mut CommStats::default()); // warm buffers
+            suite.push(Bench::new(1, 5).run(label, || {
+                comm.fastmix(&mut s, 1, &mut CommStats::default());
+                s.slice(0).data()[0]
+            }));
+        }
+    }
+
     // --------------------------------------------------------- backends
     section("power-step backends (m=50 agents)");
     let ds = synthetic::w8a_like_scaled(50, 100, &mut Rng::seed_from(903));

@@ -94,6 +94,13 @@ pub enum Engine {
     /// per-link latency on a virtual clock, payload noise, time-varying
     /// topologies. `SimConfig::ideal(_)` reproduces `Dense` bit-for-bit.
     Sim(SimConfig),
+    /// Fleet-scale sparse gossip ([`crate::consensus::comm::SparseComm`]):
+    /// Metropolis–Hastings CSR weights built straight from adjacency
+    /// lists, λ₂ via a seeded Lanczos estimate — nothing dense in the
+    /// agent count, O(edges · d · k) per round. Not bit-identical to
+    /// `Dense` (different weight construction); at small agent counts
+    /// the dense engine's exact spectrum mixes in fewer rounds.
+    Sparse,
 }
 
 // ----------------------------------------------------------- state/step

@@ -1,10 +1,13 @@
 //! Communication engines.
 //!
-//! Two interchangeable implementations of [`Communicator`]:
+//! Interchangeable implementations of [`Communicator`]:
 //!
-//! - [`DenseComm`] — single-process: applies the gossip weight matrix
-//!   directly (exploiting its sparsity). Used by the experiment sweeps
+//! - [`DenseComm`] — single-process: validated dense gossip weights,
+//!   mixed through their CSR compression. Used by the experiment sweeps
 //!   where we want thousands of runs per minute.
+//! - [`SparseComm`] — single-process, sparse-native: Metropolis CSR
+//!   weights with a Lanczos λ₂ estimate, never materializing anything
+//!   n×n. The fleet-scale engine (n = 10⁵–10⁶ agents).
 //! - [`ThreadedNetwork`] — a real message-passing runtime: one OS thread
 //!   per agent, one `std::sync::mpsc` channel per *directed edge*, every
 //!   payload serialized length counted. Each FastMix round is a genuine
@@ -19,7 +22,8 @@ use super::fastmix::FastMix;
 use super::metrics::CommStats;
 use super::stack::AgentStack;
 use crate::exec::Executor;
-use crate::graph::gossip::GossipMatrix;
+use crate::graph::gossip::{GossipInfo, GossipMatrix};
+use crate::graph::sparse::SparseGossip;
 use crate::graph::topology::Topology;
 use crate::linalg::Mat;
 use std::sync::{mpsc, Arc};
@@ -28,8 +32,11 @@ use std::sync::{mpsc, Arc};
 pub trait Communicator: Send + Sync {
     /// Number of agents.
     fn m(&self) -> usize;
-    /// The gossip matrix (for spectral quantities / reporting).
-    fn gossip(&self) -> &GossipMatrix;
+    /// Spectral summary of the gossip weights (for round-count planning
+    /// and reporting). A `Copy` struct rather than a borrow of any
+    /// particular matrix representation, so sparse engines don't need an
+    /// n×n matrix to answer it.
+    fn info(&self) -> GossipInfo;
     /// In-place FastMix over the stack, accumulating stats. Engines keep
     /// their recursion buffers across calls, so steady-state gossip
     /// performs no payload cloning or allocation (Dense/Sim engines; the
@@ -58,8 +65,8 @@ impl Communicator for &dyn Communicator {
     fn m(&self) -> usize {
         (**self).m()
     }
-    fn gossip(&self) -> &GossipMatrix {
-        (**self).gossip()
+    fn info(&self) -> GossipInfo {
+        (**self).info()
     }
     fn fastmix(&self, stack: &mut AgentStack, rounds: usize, stats: &mut CommStats) {
         (**self).fastmix(stack, rounds, stats)
@@ -101,14 +108,71 @@ impl DenseComm {
         self.fm = self.fm.with_executor(exec);
         self
     }
+
+    /// The validated dense gossip matrix (always present for this
+    /// engine; tests and diagnostics inspect it directly).
+    pub fn gossip(&self) -> &GossipMatrix {
+        self.fm
+            .dense_gossip()
+            .expect("DenseComm is densely constructed")
+    }
 }
 
 impl Communicator for DenseComm {
     fn m(&self) -> usize {
-        self.fm.gossip().m()
+        self.fm.m()
     }
-    fn gossip(&self) -> &GossipMatrix {
-        self.fm.gossip()
+    fn info(&self) -> GossipInfo {
+        self.fm.info()
+    }
+    fn fastmix(&self, stack: &mut AgentStack, rounds: usize, stats: &mut CommStats) {
+        self.fm.mix(stack, rounds, stats);
+    }
+}
+
+// -------------------------------------------------------------- SparseComm
+
+/// Sparse-native single-process engine: CSR Metropolis weights, Lanczos
+/// λ₂ estimate, O(edges · d · k) per round and O(n · d · k + edges)
+/// memory — nothing dense in the agent count anywhere. This is the
+/// engine for fleet-scale networks (n = 10⁵–10⁶); at paper scale
+/// (n ≲ 10³) [`DenseComm`] is equivalent and its Laplacian weights
+/// usually have the larger spectral gap.
+pub struct SparseComm {
+    fm: FastMix,
+}
+
+impl SparseComm {
+    /// Metropolis–Hastings weights over `topo`, built directly in CSR.
+    pub fn metropolis(topo: &Topology) -> Self {
+        SparseComm { fm: FastMix::from_sparse(SparseGossip::metropolis(topo)) }
+    }
+
+    /// Wrap prebuilt CSR weights.
+    pub fn from_sparse(sparse: SparseGossip) -> Self {
+        SparseComm { fm: FastMix::from_sparse(sparse) }
+    }
+
+    /// Run each gossip round's per-agent row blocks on `exec`'s worker
+    /// pool (bit-identical to the sequential path for any thread count
+    /// — see [`FastMix::with_executor`]).
+    pub fn with_executor(mut self, exec: Arc<Executor>) -> Self {
+        self.fm = self.fm.with_executor(exec);
+        self
+    }
+
+    /// The CSR weights this engine mixes over.
+    pub fn sparse(&self) -> &SparseGossip {
+        self.fm.sparse_gossip()
+    }
+}
+
+impl Communicator for SparseComm {
+    fn m(&self) -> usize {
+        self.fm.m()
+    }
+    fn info(&self) -> GossipInfo {
+        self.fm.info()
     }
     fn fastmix(&self, stack: &mut AgentStack, rounds: usize, stats: &mut CommStats) {
         self.fm.mix(stack, rounds, stats);
@@ -212,8 +276,8 @@ impl Communicator for ThreadedNetwork {
         self.topo.n()
     }
 
-    fn gossip(&self) -> &GossipMatrix {
-        &self.gossip
+    fn info(&self) -> GossipInfo {
+        self.gossip.info()
     }
 
     fn fastmix(&self, stack: &mut AgentStack, rounds: usize, stats: &mut CommStats) {
@@ -456,6 +520,24 @@ mod tests {
         let before = stack.clone();
         net.fastmix(&mut stack, 0, &mut CommStats::default());
         assert_eq!(stack, before);
+    }
+
+    #[test]
+    fn sparse_comm_preserves_mean_and_contracts() {
+        let topo = Topology::ring(24);
+        let sc = SparseComm::metropolis(&topo);
+        let mut stack = random_stack(24, 4, 2, 120);
+        let mean0 = stack.mean();
+        let dev0 = stack.deviation_from_mean();
+        let k = sc.info().rounds_for_rho(0.1).min(200);
+        sc.fastmix(&mut stack, k, &mut CommStats::default());
+        assert!((&stack.mean() - &mean0).fro_norm() < 1e-9);
+        let bound = sc.info().rho(k) * dev0 * 1.3 + 1e-12;
+        assert!(
+            stack.deviation_from_mean() <= bound,
+            "dev {} > {bound}",
+            stack.deviation_from_mean()
+        );
     }
 
     #[test]

@@ -18,7 +18,8 @@
 use super::metrics::CommStats;
 use super::stack::AgentStack;
 use crate::exec::Executor;
-use crate::graph::gossip::GossipMatrix;
+use crate::graph::gossip::{GossipInfo, GossipMatrix};
+use crate::graph::sparse::SparseGossip;
 use crate::linalg::Mat;
 use std::sync::{Arc, Mutex};
 
@@ -72,14 +73,16 @@ impl PingPong {
     }
 }
 
-/// One Chebyshev round's update for agent `j`:
+/// One Chebyshev round's update for agent `j` over a *dense* weight row:
 /// `acc = (1+η) Σ_i w_{ji} cur_i − η prev_j`, accumulated in ascending
-/// `i` order. The single per-agent kernel shared by the sequential and
-/// executor-parallel paths (and by SimNet's ideal path), so every
-/// engine × thread-count combination performs the identical operation
-/// sequence — the bit-determinism contract.
+/// `i` order, skipping `w == 0.0`. This is the reference accumulation
+/// sequence; [`chebyshev_row_update_sparse`] performs the identical
+/// floating-point operations from a CSR row (which stores exactly the
+/// nonzeros in ascending column order), so dense-vs-sparse results are
+/// bit-identical — the parity tests in `tests/sparse_gossip.rs` pin
+/// this. Exposed so those tests can drive both kernels directly.
 #[inline]
-pub(crate) fn chebyshev_row_update(
+pub fn chebyshev_row_update(
     weights_row: &[f64],
     eta: f64,
     prev_j: &Mat,
@@ -97,9 +100,42 @@ pub(crate) fn chebyshev_row_update(
     }
 }
 
-/// Reusable FastMix operator bound to one gossip matrix.
+/// The CSR twin of [`chebyshev_row_update`]: iterates one agent's sparse
+/// row (`cols`/`vals` in ascending column order, diagonal included) —
+/// O(degree · d · k) per agent instead of O(n · d · k), and the same
+/// fixed accumulation order as the dense kernel, so results match
+/// bit-for-bit wherever both representations exist. The single per-agent
+/// kernel shared by every sparse engine path (FastMix, `SparseComm`,
+/// SimNet), sequential or executor-parallel: the bit-determinism
+/// contract.
+#[inline]
+pub fn chebyshev_row_update_sparse(
+    cols: &[usize],
+    vals: &[f64],
+    eta: f64,
+    prev_j: &Mat,
+    cur: &[Mat],
+    acc: &mut Mat,
+) {
+    let one_plus_eta = 1.0 + eta;
+    // acc = −η · prev_j  (overwrite, no zero pass)
+    acc.data_mut().copy_from_slice(prev_j.data());
+    acc.scale(-eta);
+    for (&i, &w) in cols.iter().zip(vals) {
+        acc.axpy(one_plus_eta * w, &cur[i]);
+    }
+}
+
+/// Reusable FastMix operator bound to one gossip-weight operator.
+///
+/// Rounds always run over the CSR representation — O(edges · d · k) per
+/// round. Densely-constructed operators ([`FastMix::new`]) additionally
+/// keep the validated [`GossipMatrix`] for diagnostics and the engines
+/// that genuinely need a dense row (`ThreadedNetwork`); sparse-native
+/// operators ([`FastMix::from_sparse`]) never materialize anything n×n.
 pub struct FastMix {
-    gossip: GossipMatrix,
+    sparse: SparseGossip,
+    dense: Option<GossipMatrix>,
     /// Chebyshev step size η_w.
     pub eta: f64,
     edges: usize,
@@ -119,7 +155,8 @@ impl Clone for FastMix {
         // starts cold and re-warms on its first mix. The executor is
         // shared (it is the session-wide pool).
         FastMix {
-            gossip: self.gossip.clone(),
+            sparse: self.sparse.clone(),
+            dense: self.dense.clone(),
             eta: self.eta,
             edges: self.edges,
             buffers: Mutex::new(PingPong::default()),
@@ -131,7 +168,7 @@ impl Clone for FastMix {
 impl std::fmt::Debug for FastMix {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("FastMix")
-            .field("gossip", &self.gossip)
+            .field("sparse", &self.sparse.info())
             .field("eta", &self.eta)
             .field("edges", &self.edges)
             .finish_non_exhaustive()
@@ -139,13 +176,32 @@ impl std::fmt::Debug for FastMix {
 }
 
 impl FastMix {
-    /// Bind to a gossip matrix; `edges` is the physical undirected edge
-    /// count of the underlying topology (for byte accounting).
+    /// Bind to a validated dense gossip matrix; `edges` is the physical
+    /// undirected edge count of the underlying topology (for byte
+    /// accounting). The rows are compressed to CSR up front — mixing
+    /// never scans the dense matrix again.
     pub fn new(gossip: GossipMatrix, edges: usize) -> Self {
+        let sparse = SparseGossip::from_gossip(&gossip);
         // Algorithm 3's step size uses λ₂² under the root.
-        let eta = gossip.chebyshev_eta();
+        let eta = sparse.chebyshev_eta();
         FastMix {
-            gossip,
+            sparse,
+            dense: Some(gossip),
+            eta,
+            edges,
+            buffers: Mutex::new(PingPong::default()),
+            exec: Arc::new(Executor::sequential()),
+        }
+    }
+
+    /// Bind to CSR weights directly — the fleet-scale constructor:
+    /// nothing dense in the agent count is ever allocated.
+    pub fn from_sparse(sparse: SparseGossip) -> Self {
+        let eta = sparse.chebyshev_eta();
+        let edges = sparse.edges();
+        FastMix {
+            sparse,
+            dense: None,
             eta,
             edges,
             buffers: Mutex::new(PingPong::default()),
@@ -160,9 +216,26 @@ impl FastMix {
         self
     }
 
-    /// Underlying gossip matrix.
-    pub fn gossip(&self) -> &GossipMatrix {
-        &self.gossip
+    /// Number of agents.
+    pub fn m(&self) -> usize {
+        self.sparse.m()
+    }
+
+    /// Spectral summary of the bound weights.
+    pub fn info(&self) -> GossipInfo {
+        self.sparse.info()
+    }
+
+    /// The CSR weights every round runs over.
+    pub fn sparse_gossip(&self) -> &SparseGossip {
+        &self.sparse
+    }
+
+    /// The validated dense matrix, if this operator was densely
+    /// constructed ([`FastMix::new`]); `None` for sparse-native
+    /// operators.
+    pub fn dense_gossip(&self) -> Option<&GossipMatrix> {
+        self.dense.as_ref()
     }
 
     /// Apply `rounds` accelerated gossip iterations in place.
@@ -176,7 +249,7 @@ impl FastMix {
         }
         let (d, k) = stack.slice_shape();
         let m = stack.m();
-        assert_eq!(m, self.gossip.m(), "stack size != network size");
+        assert_eq!(m, self.sparse.m(), "stack size != network size");
 
         // Maintain current and previous stacks; each round computes
         //   next_j = (1+η) Σ_i w_{ij} cur_i − η prev_j.
@@ -202,10 +275,11 @@ impl FastMix {
                 let PingPong { prev, cur, next } = &mut *bufs;
                 let prev: &[Mat] = prev;
                 let cur: &[Mat] = cur;
-                let gossip = &self.gossip;
+                let sparse = &self.sparse;
                 let eta = self.eta;
                 self.exec.par_for_each_agent(next.as_mut_slice(), |j, acc| {
-                    chebyshev_row_update(gossip.weights.row(j), eta, &prev[j], cur, acc);
+                    let (cols, vals) = sparse.row(j);
+                    chebyshev_row_update_sparse(cols, vals, eta, &prev[j], cur, acc);
                 });
             }
             bufs.rotate();
@@ -214,9 +288,9 @@ impl FastMix {
         bufs.store(stack);
     }
 
-    /// Convenience: mix and return the implied contraction bound ρ(K).
+    /// Convenience: the implied contraction bound ρ(K).
     pub fn rho(&self, rounds: usize) -> f64 {
-        self.gossip.rho(rounds)
+        self.info().rho(rounds)
     }
 }
 

@@ -22,22 +22,39 @@
 //!   [`SimConfig::noise_std`] on every delivered scalar (the noisy power
 //!   method regime; unlike drops, this sets a hard accuracy floor).
 //! - **Time-varying topology** — the engine consults a
-//!   [`TopologySchedule`] on every gossip round and recomputes gossip
-//!   weights (and the FastMix step size η) whenever the schedule enters a
-//!   new epoch.
+//!   [`TopologySchedule`] on every gossip round through
+//!   [`TopologySchedule::advance_to`]: an [`EpochStep::Unchanged`] tick
+//!   is O(1) (no weight rebuild at all), and a changed epoch rebuilds
+//!   weights in O(n + edges) — never O(n²).
 //!
-//! With `drop_prob = 0`, `max_latency = 0`, `noise_std = 0`, and a static
-//! schedule, the per-round arithmetic is the *identical* operation
-//! sequence as [`super::comm::DenseComm`]'s FastMix, so results match bit-for-bit —
-//! the parity tests in `tests/solver_api.rs` pin this.
+//! Everything per-round is sparse: weights live in a CSR
+//! [`SparseGossip`] (O(edges) storage, O(edges · d · k) per round) and
+//! link latencies are CSR-aligned per live directed edge rather than an
+//! n × n table, so the simulator scales to fleet-sized agent counts.
+//! Two weight modes share the machinery:
+//!
+//! - [`SimNet::new`] (default) keeps the paper's Laplacian weights: each
+//!   changed epoch builds the validated dense [`GossipMatrix`] and
+//!   compresses it to CSR. The compressed rows hold exactly the
+//!   nonzeros in ascending column order — the identical floating-point
+//!   operation sequence as the dense kernel — so with an ideal config
+//!   and a static schedule results match [`super::comm::DenseComm`]
+//!   bit-for-bit (the parity tests in `tests/solver_api.rs` pin this).
+//! - [`SimNet::sparse`] never materializes anything dense in the agent
+//!   count: Metropolis–Hastings weights built straight from the
+//!   adjacency lists, λ₂ via the seeded deterministic Lanczos estimate
+//!   (persistent workspace across epochs). This is the fleet-scale
+//!   mode, and on a static topology it is bit-identical to
+//!   [`super::comm::SparseComm`].
 
 use super::comm::Communicator;
-use super::fastmix::{chebyshev_row_update, PingPong};
+use super::fastmix::{chebyshev_row_update_sparse, PingPong};
 use super::metrics::CommStats;
 use super::stack::AgentStack;
 use crate::exec::Executor;
 use crate::graph::dynamic::TopologySchedule;
-use crate::graph::gossip::GossipMatrix;
+use crate::graph::gossip::{GossipInfo, GossipMatrix};
+use crate::graph::sparse::{SparseGossip, SpectrumWorkspace};
 use crate::graph::topology::Topology;
 use crate::linalg::Mat;
 use crate::util::rng::Rng;
@@ -71,8 +88,21 @@ impl Default for SimConfig {
     }
 }
 
+/// How a [`SimNet`] turns each epoch's topology into gossip weights.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum WeightMode {
+    /// The paper's `L = I − M/λ_max(M)` via the dense [`GossipMatrix`]
+    /// (exact spectrum, bit-compatible with `DenseComm`; epoch rebuilds
+    /// are O(n²) so this is the small-fleet default).
+    DenseLaplacian,
+    /// Metropolis–Hastings CSR weights with a Lanczos spectrum estimate —
+    /// nothing dense in the agent count, ever.
+    SparseMetropolis,
+}
+
 /// Fixed latency of the directed link `from → to`, in virtual ticks,
-/// derived from the run seed (stable across rounds and epochs).
+/// derived from the run seed (stable across rounds and epochs — a link
+/// that leaves and re-enters the live graph keeps its latency).
 fn link_latency(seed: u64, from: usize, to: usize, max_latency: u64) -> u64 {
     if max_latency == 0 {
         return 0;
@@ -82,35 +112,61 @@ fn link_latency(seed: u64, from: usize, to: usize, max_latency: u64) -> u64 {
 }
 
 /// Gossip weights + FastMix step size for one schedule epoch.
+///
+/// `latency[idx]` is the latency of the directed link `cols[idx] → j`
+/// for `idx` in row `j`'s CSR span (diagonal entries hold 0) — per live
+/// directed edge, not an n × n table. Values come from the pure
+/// [`link_latency`], so the round's slowest-delivery maximum is
+/// independent of the storage layout.
 struct Epoch {
     index: u64,
-    gossip: GossipMatrix,
+    sparse: SparseGossip,
     eta: f64,
     edges: usize,
+    latency: Vec<u64>,
 }
 
-fn build_epoch(schedule: &mut TopologySchedule, index: u64) -> Epoch {
-    let topo = schedule.topology_at_epoch(index);
-    let gossip = GossipMatrix::from_laplacian(&topo);
-    let eta = gossip.chebyshev_eta();
-    Epoch { index, eta, edges: topo.num_edges(), gossip }
-}
-
-/// Per-directed-link latency ticks, row-major `[from * m + to]` (empty
-/// when `max_latency == 0`). Latencies are epoch-invariant by
-/// construction, so the table is built once per engine and the
-/// per-message hot loop is a table lookup, not an Rng construction.
-fn latency_table(m: usize, cfg: &SimConfig) -> Vec<u64> {
+/// Rebuild the CSR-aligned latency vector for the current weights.
+fn rebuild_latency(latency: &mut Vec<u64>, sparse: &SparseGossip, cfg: &SimConfig) {
+    latency.clear();
     if cfg.max_latency == 0 {
-        return Vec::new();
+        return;
     }
-    let mut v = vec![0u64; m * m];
-    for from in 0..m {
-        for to in 0..m {
-            v[from * m + to] = link_latency(cfg.seed, from, to, cfg.max_latency);
+    latency.reserve(sparse.nnz());
+    for j in 0..sparse.m() {
+        let (cols, _) = sparse.row(j);
+        for &i in cols {
+            let l = if i == j { 0 } else { link_latency(cfg.seed, i, j, cfg.max_latency) };
+            latency.push(l);
         }
     }
-    v
+}
+
+/// Rebuild `epoch`'s weights, step size, and latencies for a changed
+/// topology. O(n + edges) in sparse mode (plus the capped Lanczos
+/// sweep); the dense mode pays the O(n²) [`GossipMatrix`] build to keep
+/// its exact spectrum and `DenseComm` bit-compatibility.
+fn rebuild_epoch(
+    epoch: &mut Epoch,
+    topo: &Topology,
+    mode: WeightMode,
+    ws: &mut SpectrumWorkspace,
+    cfg: &SimConfig,
+) {
+    match mode {
+        WeightMode::DenseLaplacian => {
+            let gossip = GossipMatrix::from_laplacian(topo);
+            epoch.eta = gossip.chebyshev_eta();
+            epoch.sparse = SparseGossip::from_gossip(&gossip);
+        }
+        WeightMode::SparseMetropolis => {
+            epoch.sparse.rebuild_metropolis(topo);
+            epoch.sparse.estimate_spectrum(ws);
+            epoch.eta = epoch.sparse.chebyshev_eta();
+        }
+    }
+    epoch.edges = topo.num_edges();
+    rebuild_latency(&mut epoch.latency, &epoch.sparse, cfg);
 }
 
 /// Mutable simulation state behind the [`Communicator`]'s `&self` API.
@@ -126,46 +182,70 @@ struct SimState {
     bufs: PingPong,
     /// Scratch for noised payloads.
     noisy: Mat,
+    /// Persistent Lanczos workspace for sparse-mode epoch rebuilds.
+    spectrum_ws: SpectrumWorkspace,
 }
 
 /// The deterministic unreliable-network engine. See the module docs.
 pub struct SimNet {
     cfg: SimConfig,
     m: usize,
-    /// Epoch-0 gossip matrix, reported through [`Communicator::gossip`]
+    mode: WeightMode,
+    /// Epoch-0 spectral summary, reported through [`Communicator::info`]
     /// (spectral quantities of later epochs live inside the state).
-    base_gossip: GossipMatrix,
-    /// See [`latency_table`].
-    latency: Vec<u64>,
+    base_info: GossipInfo,
     state: Mutex<SimState>,
     /// Worker pool for the per-agent row blocks of *ideal* rounds. The
     /// seeded fault stream (drops, noise) and the latency max are
     /// inherently sequential state — they consume one `Rng` in a fixed
-    /// (j, then i ascending) order — so only a fully ideal config
+    /// (j, then CSR-ascending i) order — so only a fully ideal config
     /// (`drop_prob = 0`, `noise_std = 0`, `max_latency = 0`) runs its
     /// rounds in parallel; every faulty config keeps the sequential
     /// loop. Either way results are bit-identical for every thread
     /// count (the ideal row update is the shared
-    /// [`chebyshev_row_update`] kernel).
+    /// [`chebyshev_row_update_sparse`] kernel).
     exec: Arc<Executor>,
 }
 
 impl SimNet {
-    /// Build over a (possibly time-varying) schedule.
-    pub fn new(mut schedule: TopologySchedule, cfg: SimConfig) -> Self {
+    fn build(mut schedule: TopologySchedule, cfg: SimConfig, mode: WeightMode) -> Self {
         assert!(
             (0.0..=1.0).contains(&cfg.drop_prob),
             "drop_prob must be in [0, 1]"
         );
         assert!(cfg.noise_std >= 0.0, "noise_std must be ≥ 0");
         let m = schedule.n();
-        let epoch = build_epoch(&mut schedule, 0);
-        let base_gossip = epoch.gossip.clone();
+        let mut spectrum_ws = SpectrumWorkspace::new();
+        let (epoch, base_info) = {
+            let step = schedule.advance_to(0);
+            let topo0 = step.topology();
+            let (sparse, eta) = match mode {
+                WeightMode::DenseLaplacian => {
+                    let g = GossipMatrix::from_laplacian(topo0);
+                    let eta = g.chebyshev_eta();
+                    (SparseGossip::from_gossip(&g), eta)
+                }
+                WeightMode::SparseMetropolis => {
+                    // Checks connectivity; fills `spectrum_ws` so later
+                    // churn epochs re-estimate without allocating.
+                    let mut sg = SparseGossip::metropolis(topo0);
+                    sg.estimate_spectrum(&mut spectrum_ws);
+                    let eta = sg.chebyshev_eta();
+                    (sg, eta)
+                }
+            };
+            let mut latency = Vec::new();
+            rebuild_latency(&mut latency, &sparse, &cfg);
+            let info = sparse.info();
+            let epoch =
+                Epoch { index: 0, eta, edges: topo0.num_edges(), sparse, latency };
+            (epoch, info)
+        };
         SimNet {
             cfg,
             m,
-            base_gossip,
-            latency: latency_table(m, &cfg),
+            mode,
+            base_info,
             state: Mutex::new(SimState {
                 rng: Rng::seed_from(cfg.seed),
                 schedule,
@@ -173,12 +253,27 @@ impl SimNet {
                 round: 0,
                 bufs: PingPong::default(),
                 noisy: Mat::zeros(0, 0),
+                spectrum_ws,
             }),
             exec: Arc::new(Executor::sequential()),
         }
     }
 
-    /// Build over a static topology.
+    /// Build over a (possibly time-varying) schedule with the paper's
+    /// dense Laplacian weights (bit-compatible with `DenseComm`).
+    pub fn new(schedule: TopologySchedule, cfg: SimConfig) -> Self {
+        Self::build(schedule, cfg, WeightMode::DenseLaplacian)
+    }
+
+    /// Build over a schedule with sparse Metropolis weights and a
+    /// Lanczos spectrum estimate — nothing dense in the agent count, so
+    /// this is the constructor for fleet-scale simulations. On a static
+    /// topology it is bit-identical to [`super::comm::SparseComm`].
+    pub fn sparse(schedule: TopologySchedule, cfg: SimConfig) -> Self {
+        Self::build(schedule, cfg, WeightMode::SparseMetropolis)
+    }
+
+    /// Build over a static topology (dense Laplacian weights).
     pub fn from_topology(topo: &Topology, cfg: SimConfig) -> Self {
         Self::new(TopologySchedule::fixed(topo.clone()), cfg)
     }
@@ -202,8 +297,8 @@ impl Communicator for SimNet {
         self.m
     }
 
-    fn gossip(&self) -> &GossipMatrix {
-        &self.base_gossip
+    fn info(&self) -> GossipInfo {
+        self.base_info
     }
 
     fn fastmix(&self, stack: &mut AgentStack, rounds: usize, stats: &mut CommStats) {
@@ -221,7 +316,7 @@ impl Communicator for SimNet {
         // FastMix recursion buffers (same rotation scheme as DenseComm,
         // same [`PingPong`] helper), persistent in the state across
         // mixes — zero allocation in steady state.
-        let SimState { rng, schedule, epoch, round, bufs, noisy } = st;
+        let SimState { rng, schedule, epoch, round, bufs, noisy, spectrum_ws } = st;
         bufs.ensure(m, d, k);
         if noisy.shape() != (d, k) {
             // lint: allow(alloc, one-time rebuild when the problem shape changes; steady state reuses the buffer)
@@ -237,29 +332,36 @@ impl Communicator for SimNet {
             && self.cfg.max_latency == 0;
 
         for _ in 0..rounds {
-            // Consult the schedule; rebuild weights on epoch boundaries.
+            // Consult the schedule. An Unchanged epoch tick is O(1);
+            // only genuinely changed topologies rebuild weights (and
+            // in sparse mode the rebuild reuses every buffer).
             let epoch_idx = schedule.epoch_of(*round);
             if epoch_idx != epoch.index {
-                *epoch = build_epoch(schedule, epoch_idx);
+                let step = schedule.advance_to(epoch_idx);
+                if step.changed() {
+                    rebuild_epoch(epoch, step.topology(), self.mode, spectrum_ws, &self.cfg);
+                }
+                epoch.index = epoch_idx;
             }
             let eta = epoch.eta;
             let one_plus_eta = 1.0 + eta;
-            let weights = &epoch.gossip.weights;
 
             let mut dropped_this_round = 0u64;
             let mut slowest_delivery = 0u64;
             if ideal && self.exec.threads() > 1 {
                 // Ideal round on the pool: per-agent row blocks are
                 // independent, and each accumulates through the same
-                // fixed-order `chebyshev_row_update` kernel as the
-                // sequential branch below (whose i == j arm is exactly
-                // the generic term) — bit-identical for any thread
-                // count, and still bit-identical to DenseComm.
+                // fixed-order CSR kernel as the sequential branch below
+                // (whose i == j arm is exactly the generic term) —
+                // bit-identical for any thread count, and still
+                // bit-identical to DenseComm in dense mode.
                 let PingPong { prev, cur, next } = &mut *bufs;
                 let prev: &[Mat] = prev;
                 let cur: &[Mat] = cur;
+                let sparse = &epoch.sparse;
                 self.exec.par_for_each_agent(next.as_mut_slice(), |j, acc| {
-                    chebyshev_row_update(weights.row(j), eta, &prev[j], cur, acc);
+                    let (cols, vals) = sparse.row(j);
+                    chebyshev_row_update_sparse(cols, vals, eta, &prev[j], cur, acc);
                 });
                 bufs.rotate();
                 *round += 1;
@@ -268,19 +370,22 @@ impl Communicator for SimNet {
                 continue;
             }
             // One barrier-synchronized event per round: every directed
-            // link carries one message; the deterministic (j, then i
-            // ascending) order below fixes both the Rng consumption and
-            // the floating-point accumulation order.
+            // link carries one message; the deterministic (j, then CSR
+            // column-ascending i) order below fixes both the Rng
+            // consumption and the floating-point accumulation order.
+            // Dense-mode CSR rows hold exactly the nonzeros the old
+            // dense scan visited, in the same order, so faulty runs
+            // replay bit-for-bit across the representation change.
             for j in 0..m {
-                let wj = weights.row(j);
+                let (lo, hi) = epoch.sparse.row_span(j);
+                let (cols, vals) = epoch.sparse.row(j);
+                let lat: &[u64] =
+                    if self.cfg.max_latency > 0 { &epoch.latency[lo..hi] } else { &[] };
                 let acc = &mut bufs.next[j];
                 // acc = −η · prev_j (overwrite, no zero pass).
                 acc.data_mut().copy_from_slice(bufs.prev[j].data());
                 acc.scale(-eta);
-                for (i, &w) in wj.iter().enumerate() {
-                    if w == 0.0 {
-                        continue;
-                    }
+                for (e, (&i, &w)) in cols.iter().zip(vals).enumerate() {
                     if i == j {
                         acc.axpy(one_plus_eta * w, &bufs.cur[j]);
                         continue;
@@ -294,8 +399,7 @@ impl Communicator for SimNet {
                         continue;
                     }
                     if self.cfg.max_latency > 0 {
-                        slowest_delivery =
-                            slowest_delivery.max(self.latency[i * m + j]);
+                        slowest_delivery = slowest_delivery.max(lat[e]);
                     }
                     if self.cfg.noise_std > 0.0 {
                         noisy.data_mut().copy_from_slice(bufs.cur[i].data());
@@ -323,7 +427,7 @@ impl Communicator for SimNet {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::consensus::comm::DenseComm;
+    use crate::consensus::comm::{DenseComm, SparseComm};
 
     fn random_stack(m: usize, d: usize, k: usize, seed: u64) -> AgentStack {
         let mut rng = Rng::seed_from(seed);
@@ -490,6 +594,25 @@ mod tests {
     }
 
     #[test]
+    fn latency_invariant_to_weight_mode() {
+        // The CSR-aligned latency entries come from the same pure
+        // per-directed-link function in both modes, and both modes put
+        // the same off-diagonal links in the live graph — so the
+        // virtual clock is a property of the network, not the weights.
+        let topo = Topology::erdos_renyi(10, 0.5, &mut Rng::seed_from(320));
+        let cfg = SimConfig { max_latency: 5, ..SimConfig::ideal(21) };
+        let run = |sim: SimNet| {
+            let mut s = random_stack(10, 3, 2, 321);
+            let mut stats = CommStats::default();
+            sim.fastmix(&mut s, 6, &mut stats);
+            stats.virtual_time
+        };
+        let dense_vt = run(SimNet::from_topology(&topo, cfg));
+        let sparse_vt = run(SimNet::sparse(TopologySchedule::fixed(topo.clone()), cfg));
+        assert_eq!(dense_vt, sparse_vt);
+    }
+
+    #[test]
     fn zero_latency_costs_one_tick_per_round() {
         let topo = Topology::star(5);
         let sim = SimNet::from_topology(&topo, SimConfig::ideal(17));
@@ -551,6 +674,61 @@ mod tests {
     }
 
     #[test]
+    fn sparse_mode_static_matches_sparse_comm() {
+        // Same Metropolis construction, same Lanczos seed → same η bits;
+        // same CSR kernel in the same order → bit-identical mixing.
+        let topo = Topology::erdos_renyi(14, 0.35, &mut Rng::seed_from(322));
+        let sc = SparseComm::metropolis(&topo);
+        let sim = SimNet::sparse(TopologySchedule::fixed(topo.clone()), SimConfig::ideal(5));
+        let stack0 = random_stack(14, 5, 2, 323);
+        let mut a = stack0.clone();
+        let mut b = stack0;
+        sc.fastmix(&mut a, 8, &mut CommStats::default());
+        sim.fastmix(&mut b, 8, &mut CommStats::default());
+        assert_eq!(a, b, "sparse SimNet must match SparseComm bit-for-bit");
+    }
+
+    #[test]
+    fn sparse_mode_markov_churn_mixes_and_preserves_mean() {
+        // The fleet-scale path: incremental churn epochs, Metropolis CSR
+        // rebuilds, Lanczos η — still doubly stochastic every epoch.
+        let base = Topology::erdos_renyi(12, 0.5, &mut Rng::seed_from(324));
+        let sched = TopologySchedule::markov(base, 0.2, 0.6, 47, 2);
+        let sim = SimNet::sparse(sched, SimConfig::ideal(9));
+        let mut stack = random_stack(12, 4, 2, 325);
+        let mean0 = stack.mean();
+        let dev0 = stack.deviation_from_mean();
+        sim.fastmix(&mut stack, 40, &mut CommStats::default());
+        assert!(stack.is_finite());
+        assert!((&stack.mean() - &mean0).fro_norm() < 1e-9);
+        assert!(
+            stack.deviation_from_mean() < 0.1 * dev0,
+            "sparse churned network failed to mix: {} -> {}",
+            dev0,
+            stack.deviation_from_mean()
+        );
+    }
+
+    #[test]
+    fn sparse_mode_replays_bit_for_bit() {
+        let base = Topology::erdos_renyi(11, 0.5, &mut Rng::seed_from(326));
+        let cfg = SimConfig { drop_prob: 0.2, noise_std: 0.02, ..SimConfig::ideal(53) };
+        let stack0 = random_stack(11, 4, 2, 327);
+        let run = || {
+            let sched = TopologySchedule::markov(base.clone(), 0.3, 0.5, 61, 3);
+            let sim = SimNet::sparse(sched, cfg);
+            let mut s = stack0.clone();
+            let mut stats = CommStats::default();
+            sim.fastmix(&mut s, 20, &mut stats);
+            (s, stats)
+        };
+        let (s1, st1) = run();
+        let (s2, st2) = run();
+        assert_eq!(s1, s2, "sparse-mode faulty churn must replay bit-for-bit");
+        assert_eq!(st1, st2, "stats must replay too");
+    }
+
+    #[test]
     fn zero_rounds_noop() {
         let topo = Topology::ring(5);
         let sim = SimNet::from_topology(
@@ -576,7 +754,7 @@ mod tests {
         assert_eq!(stats.rounds, 4);
         assert_eq!(stats.mixes, 1);
         assert_eq!(stats.messages, 4 * 2 * 6);
-        assert_eq!(stats.scalars_sent, 4 * 12 * 6);
         assert_eq!(stats.dropped, 0);
+        assert_eq!(stats.scalars_sent, 4 * 12 * 6);
     }
 }

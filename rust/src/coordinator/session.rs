@@ -44,6 +44,10 @@
 //!   seeded packet drops, virtual-clock latency, payload noise, and —
 //!   via [`Session::schedule`] — time-varying topologies. With an ideal
 //!   config it reproduces [`Engine::Dense`] bit-for-bit.
+//! - [`Engine::Sparse`] gossips through CSR Metropolis weights
+//!   ([`crate::consensus::comm::SparseComm`]) with a Lanczos λ₂
+//!   estimate — O(edges) per round and nothing dense in the agent
+//!   count, for fleet-scale topologies the dense engines cannot hold.
 //! - The centralized reference ignores the engine (no communication).
 
 use crate::algo::backend::{PowerBackend, RustBackend};
@@ -58,7 +62,7 @@ use crate::algo::solver::{
     drive, mean_tan_theta, Algo, Engine, SolveReport, Solver, StepReport, StopCriteria,
     StopReason,
 };
-use crate::consensus::comm::{Communicator, DenseComm, ThreadedNetwork};
+use crate::consensus::comm::{Communicator, DenseComm, SparseComm, ThreadedNetwork};
 use crate::consensus::simnet::SimNet;
 use crate::consensus::AgentStack;
 use crate::exec::Executor;
@@ -390,6 +394,11 @@ impl<'a> Session<'a> {
                     .unwrap_or_else(|| TopologySchedule::fixed(self.topo.clone()));
                 Box::new(SimNet::new(sched, cfg).with_executor(Arc::clone(exec)))
             }
+            // Fleet-scale CSR gossip: Metropolis weights + Lanczos λ₂,
+            // nothing dense in the agent count.
+            Engine::Sparse => Box::new(
+                SparseComm::metropolis(self.topo).with_executor(Arc::clone(exec)),
+            ),
             _ => Box::new(DenseComm::from_topology(self.topo).with_executor(Arc::clone(exec))),
         };
         (self.backend(exec), comm)
@@ -504,6 +513,29 @@ mod tests {
             "λ₁ estimate {} vs truth {}",
             est.values()[0],
             p.truth.values[0]
+        );
+    }
+
+    #[test]
+    fn sparse_engine_solves_deepca() {
+        // The fleet-scale CSR engine: different weights than Dense (so
+        // no bit parity expected), but DeEPCA still converges to the
+        // same subspace on a small graph.
+        let (p, topo) = setup(621);
+        let report = Session::on(&p, &topo)
+            .algo(Algo::Deepca(DeepcaConfig {
+                consensus_rounds: 10,
+                max_iters: 40,
+                ..Default::default()
+            }))
+            .engine(Engine::Sparse)
+            .solve();
+        assert_eq!(report.engine, Engine::Sparse);
+        assert!(!report.diverged);
+        assert!(
+            report.final_tan_theta < 1e-6,
+            "sparse engine failed to converge: {:.3e}",
+            report.final_tan_theta
         );
     }
 

@@ -47,8 +47,19 @@ struct MarkovChurn {
     rng: Rng,
     /// Epoch the `up` vector corresponds to.
     epoch: u64,
-    /// Snapshot for `epoch`.
+    /// Snapshot for `epoch`, maintained incrementally: each link toggle
+    /// is O(degree) sorted-list surgery on this topology instead of a
+    /// full O(edges) rebuild per epoch. Because live edges are always a
+    /// subset of the base graph and the initial snapshot is the full
+    /// base, adjacency capacities are at their high-water mark from the
+    /// start — steady-state toggles never allocate.
     snapshot: Topology,
+    /// Toggles `(a, b, now_up)` accumulated since the last
+    /// [`TopologySchedule::advance_to`] call, in chain order. Applying
+    /// them in order to the previous snapshot's edge set reproduces the
+    /// current snapshot. Cleared at the start of each batch so it never
+    /// grows beyond one batch's churn.
+    deltas: Vec<(usize, usize, bool)>,
 }
 
 impl MarkovChurn {
@@ -63,7 +74,8 @@ impl MarkovChurn {
             vec![false; edges.len()]
         };
         let up = vec![true; edges.len()];
-        let snapshot = base.clone();
+        let mut snapshot = base.clone();
+        snapshot.name = "markov-churn".to_string();
         MarkovChurn {
             base,
             edges,
@@ -74,30 +86,41 @@ impl MarkovChurn {
             rng: Rng::seed_from(seed),
             epoch: 0,
             snapshot,
+            deltas: Vec::new(),
         }
     }
 
-    /// Advance the per-link chains by one epoch and rebuild the snapshot.
+    /// Advance the per-link chains by one epoch, applying each toggle to
+    /// the persistent snapshot in place and recording it in `deltas` —
+    /// O(changed edges · degree) per epoch with zero steady-state
+    /// allocation. (The previous version collected a fresh live-edge
+    /// `Vec` and rebuilt a full `Topology` every epoch: with
+    /// `rounds_per_epoch = 1` that was a per-gossip-round allocation
+    /// inside `SimNet::fastmix`.) The `rng` consumption order and the
+    /// resulting adjacency are bit-identical to the rebuild path, so
+    /// seeded sample paths replay unchanged.
     fn advance_one(&mut self) {
         for (idx, state) in self.up.iter_mut().enumerate() {
             if self.protected[idx] {
                 continue; // floor edges never churn
             }
-            *state = if *state {
+            let was = *state;
+            *state = if was {
                 !self.rng.chance(self.p_drop)
             } else {
                 self.rng.chance(self.p_revive)
             };
+            if *state != was {
+                let (a, b) = self.edges[idx];
+                if *state {
+                    self.snapshot.insert_edge(a, b);
+                } else {
+                    self.snapshot.remove_edge(a, b);
+                }
+                self.deltas.push((a, b, *state));
+            }
         }
         self.epoch += 1;
-        let live: Vec<(usize, usize)> = self
-            .edges
-            .iter()
-            .zip(self.up.iter())
-            .filter(|pair| *pair.1)
-            .map(|pair| *pair.0)
-            .collect();
-        self.snapshot = Topology::from_edges(self.base.n(), &live, "markov-churn");
     }
 }
 
@@ -133,19 +156,59 @@ enum Kind {
     Markov(MarkovChurn),
 }
 
+/// What changed between two consecutive [`TopologySchedule::advance_to`]
+/// calls — the incremental-epoch contract that lets `SimNet` skip
+/// gossip-weight rebuilds when nothing moved.
+#[derive(Debug)]
+pub enum EpochStep<'a> {
+    /// Identical topology to the previous `advance_to` result: the
+    /// consumer can keep its weights untouched (the O(1) fast path —
+    /// the common case under light churn).
+    Unchanged(&'a Topology),
+    /// A structurally new topology (first query, or a periodic phase
+    /// switch): full rebuild required.
+    Switched(&'a Topology),
+    /// The same evolving graph with the listed `(a, b, now_up)` link
+    /// toggles applied since the previous result, in chain order —
+    /// O(changed edges) information for incremental consumers.
+    Deltas(&'a Topology, &'a [(usize, usize, bool)]),
+}
+
+impl<'a> EpochStep<'a> {
+    /// The topology now in force, whatever the step kind.
+    pub fn topology(&self) -> &'a Topology {
+        match self {
+            EpochStep::Unchanged(t) | EpochStep::Switched(t) => t,
+            EpochStep::Deltas(t, _) => t,
+        }
+    }
+
+    /// Whether the topology differs from the previous `advance_to`
+    /// result.
+    pub fn changed(&self) -> bool {
+        !matches!(self, EpochStep::Unchanged(_))
+    }
+}
+
 /// Deterministic round → topology map. See the module docs for the
 /// three schedule families.
 #[derive(Clone, Debug)]
 pub struct TopologySchedule {
     rounds_per_epoch: usize,
     kind: Kind,
+    /// Epoch of the last `advance_to` call (None before the first).
+    last_epoch: Option<u64>,
 }
 
 impl TopologySchedule {
     /// The degenerate schedule: one graph for the whole run.
     pub fn fixed(topo: Topology) -> Self {
         assert!(topo.is_connected(), "schedule needs a connected graph");
-        TopologySchedule { rounds_per_epoch: 1, kind: Kind::Fixed(topo) }
+        TopologySchedule {
+            rounds_per_epoch: 1,
+            kind: Kind::Fixed(topo),
+            last_epoch: None,
+        }
     }
 
     /// Cycle through `phases`, switching every `rounds_per_epoch` gossip
@@ -158,7 +221,11 @@ impl TopologySchedule {
             assert_eq!(p.n(), n, "periodic phases must share the node set");
             assert!(p.is_connected(), "periodic phase must be connected");
         }
-        TopologySchedule { rounds_per_epoch, kind: Kind::Periodic(phases) }
+        TopologySchedule {
+            rounds_per_epoch,
+            kind: Kind::Periodic(phases),
+            last_epoch: None,
+        }
     }
 
     /// Seeded per-link Markov churn over `base` **with** the connectivity
@@ -190,6 +257,7 @@ impl TopologySchedule {
         TopologySchedule {
             rounds_per_epoch,
             kind: Kind::Markov(MarkovChurn::new(base, p_drop, p_revive, seed, floor)),
+            last_epoch: None,
         }
     }
 
@@ -234,10 +302,67 @@ impl TopologySchedule {
                     epoch,
                     mc.epoch
                 );
+                mc.deltas.clear();
                 while mc.epoch < epoch {
                     mc.advance_one();
                 }
                 mc.snapshot.clone()
+            }
+        }
+    }
+
+    /// Advance the schedule to `epoch` and report *what changed* since
+    /// the previous `advance_to` result — the allocation-free engine
+    /// path. Unlike [`TopologySchedule::topology_at_epoch`] (which
+    /// clones a `Topology` per query) this hands back a borrow plus an
+    /// incremental change description, so a `SimNet` epoch tick is O(1)
+    /// when nothing churned and O(changed edges) bookkeeping when
+    /// something did.
+    ///
+    /// Markov schedules must be advanced in non-decreasing epoch order
+    /// (panics otherwise, like `topology_at_epoch`). A schedule instance
+    /// should be driven through *one* of the two access APIs, not both
+    /// interleaved: `topology_at_epoch` does not update the step
+    /// tracking.
+    pub fn advance_to(&mut self, epoch: u64) -> EpochStep<'_> {
+        let prev = self.last_epoch;
+        self.last_epoch = Some(epoch);
+        match &mut self.kind {
+            Kind::Fixed(t) => {
+                if prev.is_none() {
+                    EpochStep::Switched(t)
+                } else {
+                    EpochStep::Unchanged(t)
+                }
+            }
+            Kind::Periodic(ps) => {
+                let len = ps.len() as u64;
+                let phase = (epoch % len) as usize;
+                match prev {
+                    Some(p) if (p % len) as usize == phase => {
+                        EpochStep::Unchanged(&ps[phase])
+                    }
+                    _ => EpochStep::Switched(&ps[phase]),
+                }
+            }
+            Kind::Markov(mc) => {
+                assert!(
+                    epoch >= mc.epoch,
+                    "markov schedule queried backwards ({} after {})",
+                    epoch,
+                    mc.epoch
+                );
+                mc.deltas.clear();
+                while mc.epoch < epoch {
+                    mc.advance_one();
+                }
+                if prev.is_none() {
+                    EpochStep::Switched(&mc.snapshot)
+                } else if mc.deltas.is_empty() {
+                    EpochStep::Unchanged(&mc.snapshot)
+                } else {
+                    EpochStep::Deltas(&mc.snapshot, &mc.deltas)
+                }
             }
         }
     }
@@ -318,6 +443,95 @@ mod tests {
             s.topology_at_epoch(2)
         }));
         assert!(r.is_err(), "backward query must panic");
+    }
+
+    #[test]
+    fn incremental_snapshot_matches_from_edges_rebuild() {
+        // The persistent snapshot maintained by sorted-list surgery must
+        // stay identical to what a full rebuild from the live edge set
+        // would produce, at every epoch.
+        let base = Topology::erdos_renyi(12, 0.4, &mut Rng::seed_from(21));
+        let mut s =
+            TopologySchedule::markov_with_floor(base, 0.4, 0.4, 33, 1, false);
+        for epoch in 1..40 {
+            let snap = s.topology_at_epoch(epoch);
+            let Kind::Markov(mc) = &s.kind else { unreachable!() };
+            let live: Vec<(usize, usize)> = mc
+                .edges
+                .iter()
+                .zip(mc.up.iter())
+                .filter(|p| *p.1)
+                .map(|p| *p.0)
+                .collect();
+            let rebuilt =
+                Topology::from_edges(mc.base.n(), &live, "markov-churn");
+            assert_eq!(
+                snap.edges(),
+                rebuilt.edges(),
+                "incremental snapshot diverged at epoch {epoch}"
+            );
+        }
+    }
+
+    #[test]
+    fn advance_to_reports_exact_deltas() {
+        let base = Topology::erdos_renyi(10, 0.5, &mut Rng::seed_from(4));
+        let mut s = TopologySchedule::markov(base, 0.3, 0.3, 99, 1);
+        let mut edges = s.advance_to(0).topology().edges();
+        for epoch in 1..30 {
+            let step = s.advance_to(epoch);
+            let after = step.topology().edges();
+            match step {
+                EpochStep::Switched(_) => panic!("markov never switches"),
+                EpochStep::Unchanged(_) => {
+                    assert_eq!(edges, after, "Unchanged but edges differ")
+                }
+                EpochStep::Deltas(_, changes) => {
+                    assert!(!changes.is_empty());
+                    for &(a, b, up) in changes {
+                        let e = (a.min(b), a.max(b));
+                        match (edges.binary_search(&e), up) {
+                            (Err(pos), true) => edges.insert(pos, e),
+                            (Ok(pos), false) => {
+                                edges.remove(pos);
+                            }
+                            (found, _) => panic!(
+                                "delta ({a},{b},{up}) inconsistent: {found:?}"
+                            ),
+                        }
+                    }
+                    assert_eq!(
+                        edges, after,
+                        "deltas don't reproduce epoch {epoch}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn advance_to_frozen_chain_is_unchanged() {
+        // p_drop = p_revive = 0: every epoch after the first must take
+        // the O(1) Unchanged fast path.
+        let mut s = TopologySchedule::markov(Topology::ring(8), 0.0, 0.0, 5, 1);
+        assert!(matches!(s.advance_to(0), EpochStep::Switched(_)));
+        for epoch in 1..10 {
+            assert!(
+                !s.advance_to(epoch).changed(),
+                "frozen chain reported change at epoch {epoch}"
+            );
+        }
+        // Fixed and periodic schedules take the same fast path.
+        let mut f = TopologySchedule::fixed(Topology::ring(5));
+        assert!(f.advance_to(0).changed());
+        assert!(!f.advance_to(3).changed());
+        let mut p = TopologySchedule::periodic(
+            vec![Topology::ring(6), Topology::star(6)],
+            1,
+        );
+        assert!(p.advance_to(0).changed());
+        assert!(!p.advance_to(2).changed(), "same phase: unchanged");
+        assert!(p.advance_to(3).changed(), "phase switch");
     }
 
     #[test]

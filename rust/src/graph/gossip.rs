@@ -12,6 +12,92 @@ use crate::linalg::Mat;
 
 use super::topology::Topology;
 
+/// The spectral facts every consensus engine needs, decoupled from any
+/// particular weight representation (dense [`GossipMatrix`] or sparse CSR
+/// [`crate::graph::sparse::SparseGossip`]). `Copy`, so engines can hand it
+/// around without borrowing an n×n matrix.
+#[derive(Clone, Copy, Debug)]
+pub struct GossipInfo {
+    /// Number of agents.
+    pub m: usize,
+    /// Second-largest eigenvalue λ₂(L) (< 1 for connected graphs).
+    pub lambda2: f64,
+    /// Smallest eigenvalue of L (≥ 0 for the paper's Laplacian
+    /// construction; Metropolis weights can dip negative, e.g. −1/3 on a
+    /// small ring).
+    pub lambda_min: f64,
+}
+
+impl GossipInfo {
+    /// The spectral gap `1 − λ₂(L)`.
+    pub fn gap(&self) -> f64 {
+        1.0 - self.lambda2
+    }
+
+    /// Algorithm 3's Chebyshev step size
+    /// `η = (1 − √(1−β²)) / (1 + √(1−β²))` with `β = max(λ₂, −λ_min)` —
+    /// the single source of truth for every engine (FastMix, threaded,
+    /// distributed, SimNet, sparse), so the cross-engine parity tests
+    /// can't drift. For the paper's PSD construction `β = λ₂` exactly, so
+    /// this is bit-identical to the λ₂-only formula; the `−λ_min` arm
+    /// keeps the Chebyshev recursion contracting for non-PSD weights
+    /// (Metropolis on small rings).
+    pub fn chebyshev_eta(&self) -> f64 {
+        let beta = self.lambda2.max(-self.lambda_min).max(0.0);
+        assert!(beta < 1.0, "spectral radius β = {beta} ≥ 1: disconnected?");
+        let root = (1.0 - beta * beta).sqrt();
+        (1.0 - root) / (1.0 + root)
+    }
+
+    /// FastMix per-round contraction base `1 − √(1−λ₂)` (Proposition 1).
+    ///
+    /// Lies in `[0, 1)` whenever `0 ≤ λ₂ < 1`; λ₂ < 1 is guaranteed by
+    /// construction for connected graphs ([`GossipMatrix::from_weights`]
+    /// asserts it, the sparse estimator clamps to it), so the base can
+    /// never reach 1 and `ln(base)` below is always finite and negative.
+    /// λ₂ < 0 (complete graph) gives a negative base: one round is exact.
+    pub fn fastmix_base(&self) -> f64 {
+        1.0 - self.gap().sqrt()
+    }
+
+    /// ρ(K) = (1 − √(1−λ₂))^K — consensus error contraction after K
+    /// rounds. Uses `powf` on the clamped base, so huge K is fine (a
+    /// previous `powi(k as i32)` cast silently wrapped for K ≥ 2³¹ and
+    /// could report ρ = 1 for K = 2³²).
+    pub fn rho(&self, k_rounds: usize) -> f64 {
+        if k_rounds == 0 {
+            return 1.0;
+        }
+        // Negative base means better-than-one-shot (complete graph);
+        // clamp to 0 so the bound stays a probability-like factor.
+        self.fastmix_base().max(0.0).powf(k_rounds as f64)
+    }
+
+    /// Minimum K with ρ(K) ≤ target (Theorem-1 style bound inversion).
+    /// Saturates at `usize::MAX` instead of performing an unbounded
+    /// `f64 as usize` cast when the gap is vanishingly small.
+    pub fn rounds_for_rho(&self, target: f64) -> usize {
+        assert!(target > 0.0 && target < 1.0);
+        let base = self.fastmix_base();
+        if base <= 0.0 {
+            return 1; // complete graph: one round suffices
+        }
+        // base == 1.0 requires λ₂ == 1, which every constructor rejects
+        // (from_weights asserts λ₂ < 1 − 1e-12, the sparse estimator
+        // clamps below 1). Saturate defensively for hand-built infos
+        // instead of dividing by ln(1) = 0 below.
+        if base >= 1.0 {
+            return usize::MAX;
+        }
+        let k = (target.ln() / base.ln()).ceil().max(1.0);
+        if !k.is_finite() || k >= usize::MAX as f64 {
+            usize::MAX
+        } else {
+            k as usize
+        }
+    }
+}
+
 /// A gossip weight matrix together with its relevant spectrum.
 #[derive(Clone, Debug)]
 pub struct GossipMatrix {
@@ -98,38 +184,39 @@ impl GossipMatrix {
         self.weights.rows()
     }
 
-    /// The spectral gap `1 − λ₂(L)`.
-    pub fn gap(&self) -> f64 {
-        1.0 - self.lambda2
+    /// The representation-independent spectral summary (what the
+    /// consensus engines actually consume).
+    pub fn info(&self) -> GossipInfo {
+        GossipInfo {
+            m: self.m(),
+            lambda2: self.lambda2,
+            lambda_min: self.lambda_min,
+        }
     }
 
-    /// Algorithm 3's Chebyshev step size
-    /// `η = (1 − √(1−λ₂²)) / (1 + √(1−λ₂²))` — the single source of
-    /// truth for every engine (FastMix, threaded, distributed, SimNet),
-    /// so the cross-engine parity tests can't drift.
+    /// The spectral gap `1 − λ₂(L)`.
+    pub fn gap(&self) -> f64 {
+        self.info().gap()
+    }
+
+    /// Algorithm 3's Chebyshev step size (see [`GossipInfo::chebyshev_eta`]).
     pub fn chebyshev_eta(&self) -> f64 {
-        let root = (1.0 - self.lambda2 * self.lambda2).sqrt();
-        (1.0 - root) / (1.0 + root)
+        self.info().chebyshev_eta()
     }
 
     /// FastMix per-round contraction base `1 − √(1−λ₂)` (Proposition 1).
     pub fn fastmix_base(&self) -> f64 {
-        1.0 - self.gap().sqrt()
+        self.info().fastmix_base()
     }
 
     /// ρ(K) = (1 − √(1−λ₂))^K — consensus error contraction after K rounds.
     pub fn rho(&self, k_rounds: usize) -> f64 {
-        self.fastmix_base().powi(k_rounds as i32)
+        self.info().rho(k_rounds)
     }
 
     /// Minimum K with ρ(K) ≤ target (Theorem-1 style bound inversion).
     pub fn rounds_for_rho(&self, target: f64) -> usize {
-        assert!(target > 0.0 && target < 1.0);
-        let base = self.fastmix_base();
-        if base <= 0.0 {
-            return 1; // complete graph: one round suffices
-        }
-        (target.ln() / base.ln()).ceil().max(1.0) as usize
+        self.info().rounds_for_rho(target)
     }
 }
 
@@ -226,6 +313,32 @@ mod tests {
         for v in out {
             assert!((v - 1.0).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn rho_survives_huge_round_counts() {
+        // The old `powi(k_rounds as i32)` wrapped: K = 2³³ truncated to 0
+        // and reported ρ = 1. The powf path must stay monotone.
+        let g = GossipMatrix::from_laplacian(&Topology::ring(12));
+        let huge = 1usize << 33;
+        assert_eq!(g.rho(0), 1.0);
+        let r = g.rho(huge);
+        assert!((0.0..=1.0).contains(&r), "rho({huge}) = {r}");
+        assert!(r <= g.rho(8), "rho must be non-increasing in K");
+    }
+
+    #[test]
+    fn rounds_for_rho_saturates_instead_of_wrapping() {
+        // λ₂ == 1 can't come out of a validated constructor; a hand-built
+        // info must saturate instead of dividing by ln(1) = 0 (the old
+        // code's unbounded `as usize` made this UB-adjacent).
+        let info = GossipInfo { m: 4, lambda2: 1.0, lambda_min: 0.0 };
+        assert_eq!(info.rounds_for_rho(1e-9), usize::MAX);
+        // A representable-but-huge count still converts exactly.
+        let info = GossipInfo { m: 4, lambda2: 1.0 - 1e-12, lambda_min: 0.0 };
+        let k = info.rounds_for_rho(1e-9);
+        assert!(k > 1_000_000 && k < usize::MAX, "k = {k}");
+        assert!(info.rho(k) <= 1e-9 * (1.0 + 1e-9), "rho = {}", info.rho(k));
     }
 
     #[test]

@@ -9,10 +9,14 @@
 //! - [`gossip`] — the paper's weight construction `L = I − M/λ_max(M)`
 //!   (M = Laplacian), Metropolis–Hastings weights as an alternative, and
 //!   the spectral quantities (λ₂, `1 − λ₂`) driving FastMix;
+//! - [`sparse`] — [`sparse::SparseGossip`]: CSR weights with a Lanczos
+//!   λ₂ estimate, the fleet-scale representation (nothing dense in the
+//!   agent count; O(edges) per FastMix round);
 //! - [`dynamic`] — [`dynamic::TopologySchedule`]: time-varying networks
 //!   (static / periodic switching / seeded Markov per-link churn with a
 //!   connectivity floor) consumed by the `SimNet` engine.
 
 pub mod topology;
 pub mod gossip;
+pub mod sparse;
 pub mod dynamic;

@@ -1,0 +1,569 @@
+//! Sparse CSR gossip weights: the fleet-scale representation.
+//!
+//! The paper's whole point is per-agent locality — each FastMix round
+//! touches only a node's neighbors — so at n = 10⁵–10⁶ agents nothing may
+//! be dense in n. [`SparseGossip`] stores one CSR row per agent (neighbor
+//! indices + weights in ascending column order, diagonal included),
+//! builds Metropolis–Hastings weights straight from a [`Topology`]
+//! without materializing an n×n matrix, and estimates the spectrum
+//! (λ₂, λ_min) with a seeded deterministic Lanczos iteration on the
+//! sparse operator instead of a dense `eig_sym`.
+//!
+//! Determinism and parity contracts:
+//! - Rows store exactly the nonzero entries in ascending column order —
+//!   the same floating-point accumulation sequence the dense
+//!   `chebyshev_row_update` produces by skipping `w == 0.0` while
+//!   scanning ascending columns. Compressing a [`GossipMatrix`] with
+//!   [`SparseGossip::from_gossip`] therefore yields *bit-identical*
+//!   mixing results.
+//! - The λ₂ estimator is fully deterministic (fixed seed, sequential
+//!   arithmetic). On graphs small enough for a dense cross-check it runs
+//!   Lanczos with full reorthogonalization to completion, agreeing with
+//!   `eig_sym` to ~1e-12; on large graphs it caps the iteration count and
+//!   *underestimates* λ₂ (Rayleigh–Ritz bounds from below), which only
+//!   slows the Chebyshev recursion — it never destabilizes it.
+
+use crate::linalg::Mat;
+use crate::util::rng::Rng;
+
+use super::gossip::{GossipInfo, GossipMatrix};
+use super::topology::Topology;
+
+/// Up to this agent count the spectrum estimator keeps the full Lanczos
+/// basis and reorthogonalizes every step — essentially exact (matches
+/// `eig_sym` to ~1e-12). Beyond it, storage drops to three vectors.
+const FULL_REORTHO_MAX_M: usize = 512;
+
+/// Lanczos iteration cap for large graphs. Extreme Ritz values converge
+/// first (Kaniel–Paige), so this is plenty to get a usable λ₂ on
+/// fleet-scale rings/grids; any remaining underestimate is benign (see
+/// module docs).
+const LARGE_GRAPH_MAX_ITERS: usize = 128;
+
+/// Seed for the deterministic Lanczos start vector.
+const LANCZOS_SEED: u64 = 0x5EED_CA11;
+
+/// Gossip weights in CSR form plus their estimated spectrum.
+///
+/// Memory is O(n + nnz) where nnz = n + 2·edges (each row holds its
+/// neighbors and its own diagonal).
+#[derive(Clone, Debug)]
+pub struct SparseGossip {
+    m: usize,
+    row_ptr: Vec<usize>,
+    cols: Vec<usize>,
+    vals: Vec<f64>,
+    edges: usize,
+    /// Second-largest eigenvalue λ₂(L) (estimated; clamped below 1).
+    pub lambda2: f64,
+    /// Smallest eigenvalue of L, capped at 0 (Metropolis weights can be
+    /// indefinite; the Chebyshev step size accounts for it).
+    pub lambda_min: f64,
+}
+
+/// Reusable scratch for [`SparseGossip::estimate_spectrum`] so churn-epoch
+/// re-estimates allocate nothing in steady state (buffers warm up on
+/// first use and are reused thereafter).
+#[derive(Debug, Default)]
+pub struct SpectrumWorkspace {
+    v_prev: Vec<f64>,
+    v_cur: Vec<f64>,
+    w: Vec<f64>,
+    alpha: Vec<f64>,
+    beta: Vec<f64>,
+    /// Full Lanczos basis, allocated only in small-m reortho mode.
+    basis: Vec<Vec<f64>>,
+}
+
+impl SpectrumWorkspace {
+    /// Fresh, empty workspace (buffers grow on first use).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn ensure(&mut self, m: usize, iters: usize, reortho: bool) {
+        self.v_prev.resize(m, 0.0);
+        self.v_cur.resize(m, 0.0);
+        self.w.resize(m, 0.0);
+        self.alpha.reserve(iters);
+        self.beta.reserve(iters);
+        if reortho {
+            for b in &mut self.basis {
+                b.resize(m, 0.0);
+            }
+            while self.basis.len() < iters {
+                self.basis.push(vec![0.0; m]);
+            }
+        }
+    }
+}
+
+fn dot(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+fn norm2(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+/// Subtract the mean: projects out the all-ones eigenvector of `L`.
+fn project_out_mean(v: &mut [f64]) {
+    let mean = v.iter().sum::<f64>() / v.len() as f64;
+    for x in v.iter_mut() {
+        *x -= mean;
+    }
+}
+
+/// Extreme eigenvalues of the symmetric tridiagonal (alpha; beta) via a
+/// Sturm-sequence bisection — deterministic and allocation-free, so
+/// churn-epoch spectrum refreshes stay off the allocator.
+fn tridiag_extremes(alpha: &[f64], beta: &[f64]) -> (f64, f64) {
+    let k = alpha.len();
+    assert!(k >= 1 && beta.len() + 1 == k);
+    if k == 1 {
+        return (alpha[0], alpha[0]);
+    }
+    // Gershgorin interval containing the whole spectrum.
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for i in 0..k {
+        let mut r = 0.0;
+        if i > 0 {
+            r += beta[i - 1].abs();
+        }
+        if i + 1 < k {
+            r += beta[i].abs();
+        }
+        lo = lo.min(alpha[i] - r);
+        hi = hi.max(alpha[i] + r);
+    }
+    // Sturm count: number of eigenvalues strictly below x (LDLᵀ pivots).
+    let count_below = |x: f64| -> usize {
+        let mut cnt = 0usize;
+        let mut d = 1.0f64;
+        for i in 0..k {
+            let b2 = if i > 0 { beta[i - 1] * beta[i - 1] } else { 0.0 };
+            d = (alpha[i] - x) - b2 / d;
+            if d == 0.0 {
+                d = -1e-300;
+            }
+            if d < 0.0 {
+                cnt += 1;
+            }
+        }
+        cnt
+    };
+    let bisect = |want_at_least: usize| -> f64 {
+        let mut a = lo - 1.0;
+        let mut b = hi + 1.0;
+        for _ in 0..120 {
+            let mid = 0.5 * (a + b);
+            if count_below(mid) >= want_at_least {
+                b = mid;
+            } else {
+                a = mid;
+            }
+        }
+        0.5 * (a + b)
+    };
+    (bisect(1), bisect(k))
+}
+
+impl SparseGossip {
+    fn empty() -> Self {
+        SparseGossip {
+            m: 0,
+            row_ptr: Vec::new(),
+            cols: Vec::new(),
+            vals: Vec::new(),
+            edges: 0,
+            lambda2: 0.0,
+            lambda_min: 0.0,
+        }
+    }
+
+    /// Metropolis–Hastings weights over `topo` with an estimated
+    /// spectrum — the cold constructor (checks connectivity, allocates
+    /// its own scratch). For churn-epoch rebuilds use
+    /// [`SparseGossip::rebuild_metropolis`] +
+    /// [`SparseGossip::estimate_spectrum`] with persistent buffers.
+    pub fn metropolis(topo: &Topology) -> Self {
+        assert!(topo.n() >= 2, "sparse gossip needs ≥ 2 agents");
+        assert!(topo.is_connected(), "gossip matrix needs a connected graph");
+        let mut sg = Self::empty();
+        sg.rebuild_metropolis(topo);
+        let mut ws = SpectrumWorkspace::new();
+        sg.estimate_spectrum(&mut ws);
+        sg
+    }
+
+    /// Rebuild the CSR weights for `topo` in place, reusing this struct's
+    /// buffers (no allocation once capacities have warmed up — under
+    /// Markov churn the live graph is a subgraph of the base graph, so
+    /// the epoch-0 build is the capacity high-water mark). Does not touch
+    /// the stored spectrum; callers that need a fresh λ₂ follow up with
+    /// [`SparseGossip::estimate_spectrum`]. Connectivity is the caller's
+    /// contract (churn schedules keep a spanning-tree floor).
+    ///
+    /// Weight convention matches [`GossipMatrix::metropolis`]:
+    /// `L_ij = 1/(1+max(d_i,d_j))` on edges, diagonal fills the row to 1.
+    /// Each row stores its entries in ascending column order (diagonal in
+    /// place), the same accumulation sequence the dense kernel uses.
+    pub fn rebuild_metropolis(&mut self, topo: &Topology) {
+        let m = topo.n();
+        self.m = m;
+        self.row_ptr.clear();
+        self.cols.clear();
+        self.vals.clear();
+        self.row_ptr.push(0);
+        let mut deg_sum = 0usize;
+        for i in 0..m {
+            let di = topo.degree(i);
+            let mut off = 0.0;
+            let mut diag_idx = usize::MAX;
+            for &j in topo.neighbors(i) {
+                if diag_idx == usize::MAX && j > i {
+                    diag_idx = self.cols.len();
+                    self.cols.push(i);
+                    self.vals.push(0.0);
+                }
+                let w = 1.0 / (1.0 + di.max(topo.degree(j)) as f64);
+                self.cols.push(j);
+                self.vals.push(w);
+                off += w;
+            }
+            if diag_idx == usize::MAX {
+                diag_idx = self.cols.len();
+                self.cols.push(i);
+                self.vals.push(0.0);
+            }
+            self.vals[diag_idx] = 1.0 - off;
+            deg_sum += di;
+            self.row_ptr.push(self.cols.len());
+        }
+        self.edges = deg_sum / 2;
+    }
+
+    /// Compress a validated dense [`GossipMatrix`] to CSR, copying its
+    /// exact spectrum. Rows keep the nonzeros in ascending column order,
+    /// so mixing through the sparse kernel is bit-identical to the dense
+    /// kernel (which skips `w == 0.0` while scanning ascending columns).
+    pub fn from_gossip(g: &GossipMatrix) -> Self {
+        let m = g.m();
+        let mut sg = Self::empty();
+        sg.m = m;
+        sg.row_ptr.reserve(m + 1);
+        sg.row_ptr.push(0);
+        let mut off_nnz = 0usize;
+        for i in 0..m {
+            for (j, &w) in g.weights.row(i).iter().enumerate() {
+                if w != 0.0 {
+                    sg.cols.push(j);
+                    sg.vals.push(w);
+                    if j != i {
+                        off_nnz += 1;
+                    }
+                }
+            }
+            sg.row_ptr.push(sg.cols.len());
+        }
+        sg.edges = off_nnz / 2;
+        sg.lambda2 = g.lambda2;
+        sg.lambda_min = g.lambda_min;
+        sg
+    }
+
+    /// `out = L·v − mean(v)·1`: the gossip operator with the all-ones
+    /// eigenvector deflated away, so its largest eigenvalue is λ₂(L)
+    /// (clamped at 0) and its smallest is min(λ_min(L), 0).
+    fn apply_deflated(&self, v: &[f64], out: &mut [f64]) {
+        for i in 0..self.m {
+            let lo = self.row_ptr[i];
+            let hi = self.row_ptr[i + 1];
+            let mut acc = 0.0;
+            for idx in lo..hi {
+                acc += self.vals[idx] * v[self.cols[idx]];
+            }
+            out[i] = acc;
+        }
+        let mean = v.iter().sum::<f64>() / self.m as f64;
+        for o in out.iter_mut() {
+            *o -= mean;
+        }
+    }
+
+    /// Estimate (λ₂, λ_min) of the current weights with a seeded
+    /// deterministic Lanczos iteration on the sparse operator — O(nnz)
+    /// per step, never materializing anything dense in n.
+    ///
+    /// For m ≤ 512 the full basis is kept and reorthogonalized every step
+    /// (runs to completion: exact to roundoff). For larger m the
+    /// iteration is capped and keeps only three vectors; the resulting
+    /// Ritz value can only *under*estimate λ₂, which merely slows the
+    /// Chebyshev recursion (its roots stay strictly inside the unit disk
+    /// for any |μ| < 1), so the cap is safe.
+    pub fn estimate_spectrum(&mut self, ws: &mut SpectrumWorkspace) {
+        let m = self.m;
+        assert!(m >= 2, "spectrum estimation needs ≥ 2 agents");
+        let reortho = m <= FULL_REORTHO_MAX_M;
+        let max_iters = if reortho {
+            m - 1
+        } else {
+            LARGE_GRAPH_MAX_ITERS
+        };
+        ws.ensure(m, max_iters, reortho);
+        let mut rng = Rng::seed_from(
+            LANCZOS_SEED ^ (m as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        );
+        for x in ws.v_cur.iter_mut() {
+            *x = rng.uniform() - 0.5;
+        }
+        project_out_mean(&mut ws.v_cur);
+        let nrm = norm2(&ws.v_cur);
+        assert!(nrm > 0.0, "degenerate Lanczos start vector");
+        for x in ws.v_cur.iter_mut() {
+            *x /= nrm;
+        }
+        ws.v_prev.fill(0.0);
+        ws.alpha.clear();
+        ws.beta.clear();
+        let mut beta_prev = 0.0;
+        let mut scale = 1.0f64;
+        for k in 0..max_iters {
+            if reortho {
+                ws.basis[k].copy_from_slice(&ws.v_cur);
+            }
+            self.apply_deflated(&ws.v_cur, &mut ws.w);
+            if beta_prev != 0.0 {
+                for (w, &p) in ws.w.iter_mut().zip(ws.v_prev.iter()) {
+                    *w -= beta_prev * p;
+                }
+            }
+            let a = dot(&ws.w, &ws.v_cur);
+            ws.alpha.push(a);
+            for (w, &c) in ws.w.iter_mut().zip(ws.v_cur.iter()) {
+                *w -= a * c;
+            }
+            // Keep the iteration out of span(1) despite rounding drift.
+            project_out_mean(&mut ws.w);
+            if reortho {
+                for q in &ws.basis[..=k] {
+                    let c = dot(q, &ws.w);
+                    for (w, &qv) in ws.w.iter_mut().zip(q.iter()) {
+                        *w -= c * qv;
+                    }
+                }
+            }
+            scale = scale.max(a.abs());
+            let b = norm2(&ws.w);
+            if b <= 1e-12 * scale.max(1.0) {
+                break; // invariant subspace found: Ritz values are exact
+            }
+            ws.beta.push(b);
+            scale = scale.max(b);
+            std::mem::swap(&mut ws.v_prev, &mut ws.v_cur);
+            for (v, &w) in ws.v_cur.iter_mut().zip(ws.w.iter()) {
+                *v = w / b;
+            }
+            beta_prev = b;
+        }
+        let steps = ws.alpha.len();
+        let (lo, hi) = tridiag_extremes(&ws.alpha, &ws.beta[..steps - 1]);
+        // λ₂ < 1 is structural for connected graphs; clamp so the
+        // Chebyshev step size stays finite even if an estimate grazes 1.
+        self.lambda2 = hi.min(1.0 - 1e-12);
+        self.lambda_min = lo.min(0.0);
+    }
+
+    /// Number of agents.
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Undirected edge count of the represented graph.
+    pub fn edges(&self) -> usize {
+        self.edges
+    }
+
+    /// Stored nonzeros (n diagonal entries + 2·edges).
+    pub fn nnz(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// Row `j` as (columns, weights), ascending columns, diagonal
+    /// included.
+    pub fn row(&self, j: usize) -> (&[usize], &[f64]) {
+        let lo = self.row_ptr[j];
+        let hi = self.row_ptr[j + 1];
+        (&self.cols[lo..hi], &self.vals[lo..hi])
+    }
+
+    /// Half-open range of CSR indices backing row `j` (for parallel
+    /// arrays aligned with the nonzero layout, e.g. per-link latency).
+    pub fn row_span(&self, j: usize) -> (usize, usize) {
+        (self.row_ptr[j], self.row_ptr[j + 1])
+    }
+
+    /// The representation-independent spectral summary.
+    pub fn info(&self) -> GossipInfo {
+        GossipInfo {
+            m: self.m,
+            lambda2: self.lambda2,
+            lambda_min: self.lambda_min,
+        }
+    }
+
+    /// The spectral gap `1 − λ₂(L)` (see [`GossipInfo::gap`]).
+    pub fn gap(&self) -> f64 {
+        self.info().gap()
+    }
+
+    /// Chebyshev step size (see [`GossipInfo::chebyshev_eta`]).
+    pub fn chebyshev_eta(&self) -> f64 {
+        self.info().chebyshev_eta()
+    }
+
+    /// Proposition-1 contraction base (see [`GossipInfo::fastmix_base`]).
+    pub fn fastmix_base(&self) -> f64 {
+        self.info().fastmix_base()
+    }
+
+    /// ρ(K) after K rounds (see [`GossipInfo::rho`]).
+    pub fn rho(&self, k_rounds: usize) -> f64 {
+        self.info().rho(k_rounds)
+    }
+
+    /// Minimum K with ρ(K) ≤ target (see [`GossipInfo::rounds_for_rho`]).
+    pub fn rounds_for_rho(&self, target: f64) -> usize {
+        self.info().rounds_for_rho(target)
+    }
+
+    /// Materialize the dense m×m weight matrix — for tests and
+    /// small-graph diagnostics only (defeats the point at fleet scale).
+    pub fn to_dense(&self) -> Mat {
+        let mut w = Mat::zeros(self.m, self.m);
+        for i in 0..self.m {
+            let (cols, vals) = self.row(i);
+            for (&j, &v) in cols.iter().zip(vals) {
+                w[(i, j)] = v;
+            }
+        }
+        w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::eig::eig_sym;
+
+    fn check_csr(sg: &SparseGossip) {
+        for i in 0..sg.m() {
+            let (cols, vals) = sg.row(i);
+            assert!(cols.windows(2).all(|w| w[0] < w[1]), "row {i} not sorted");
+            assert!(cols.contains(&i), "row {i} missing diagonal");
+            let sum: f64 = vals.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-12, "row {i} sums to {sum}");
+        }
+    }
+
+    #[test]
+    fn metropolis_csr_structure_matches_dense_construction() {
+        for topo in [
+            Topology::ring(9),
+            Topology::star(8),
+            Topology::grid(3, 4),
+            Topology::path(7),
+        ] {
+            let sg = SparseGossip::metropolis(&topo);
+            check_csr(&sg);
+            assert_eq!(sg.edges(), topo.num_edges());
+            assert_eq!(sg.nnz(), topo.n() + 2 * topo.num_edges());
+            let dense = GossipMatrix::metropolis(&topo);
+            let sd = sg.to_dense();
+            for i in 0..topo.n() {
+                for j in 0..topo.n() {
+                    assert_eq!(
+                        sd[(i, j)],
+                        dense.weights[(i, j)],
+                        "weight mismatch at ({i},{j}) on {}",
+                        topo.name
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lanczos_spectrum_matches_eig_sym() {
+        use crate::util::rng::Rng;
+        for topo in [
+            Topology::ring(11),
+            Topology::star(9),
+            Topology::grid(3, 3),
+            Topology::path(8),
+            Topology::erdos_renyi(14, 0.5, &mut Rng::seed_from(7)),
+        ] {
+            let sg = SparseGossip::metropolis(&topo);
+            let e = eig_sym(&sg.to_dense());
+            let lambda2_ref = e.values[1];
+            let lambda_min_ref = e.values.last().unwrap().min(0.0);
+            assert!(
+                (sg.lambda2 - lambda2_ref).abs() < 1e-8,
+                "λ₂ = {} vs eig_sym {} on {}",
+                sg.lambda2,
+                lambda2_ref,
+                topo.name
+            );
+            assert!(
+                (sg.lambda_min - lambda_min_ref).abs() < 1e-8,
+                "λ_min = {} vs eig_sym {} on {}",
+                sg.lambda_min,
+                lambda_min_ref,
+                topo.name
+            );
+        }
+    }
+
+    #[test]
+    fn from_gossip_roundtrips_and_copies_spectrum() {
+        let topo = Topology::grid(3, 4);
+        let g = GossipMatrix::from_laplacian(&topo);
+        let sg = SparseGossip::from_gossip(&g);
+        check_csr(&sg);
+        assert_eq!(sg.edges(), topo.num_edges());
+        assert_eq!(sg.lambda2, g.lambda2);
+        assert_eq!(sg.lambda_min, g.lambda_min);
+        let sd = sg.to_dense();
+        for i in 0..topo.n() {
+            for j in 0..topo.n() {
+                assert_eq!(sd[(i, j)], g.weights[(i, j)]);
+            }
+        }
+    }
+
+    #[test]
+    fn rebuild_reuses_buffers_and_tracks_topology() {
+        let mut sg = SparseGossip::metropolis(&Topology::ring(12));
+        let mut ws = SpectrumWorkspace::new();
+        let ring_l2 = sg.lambda2;
+        sg.rebuild_metropolis(&Topology::complete(12));
+        sg.estimate_spectrum(&mut ws);
+        check_csr(&sg);
+        assert_eq!(sg.edges(), 12 * 11 / 2);
+        assert!(sg.lambda2 < ring_l2, "K₁₂ should mix far faster than a ring");
+        // And back: identical to a cold build.
+        sg.rebuild_metropolis(&Topology::ring(12));
+        sg.estimate_spectrum(&mut ws);
+        let cold = SparseGossip::metropolis(&Topology::ring(12));
+        assert_eq!(sg.lambda2, cold.lambda2);
+        assert_eq!(sg.row(3), cold.row(3));
+    }
+
+    #[test]
+    fn two_agents_degenerate_spectrum() {
+        let sg = SparseGossip::metropolis(&Topology::path(2));
+        assert!(sg.lambda2.abs() < 1e-12);
+        assert!((0.0..=1e-12).contains(&sg.chebyshev_eta()));
+    }
+}

@@ -22,17 +22,21 @@ impl Topology {
     /// Explicit edge-list constructor (used by [`crate::graph::dynamic`]
     /// to materialize churned snapshots). Duplicate edges are collapsed;
     /// self-loops and out-of-range endpoints panic.
+    ///
+    /// Runs in O(Σ degree · log degree): every endpoint is pushed
+    /// unconditionally, then each list is sorted and deduplicated. (The
+    /// previous `adj[a].contains(&b)` probe per insertion was O(Σ degree²)
+    /// — quadratic on high-degree graphs and on every churn snapshot.)
     pub fn from_edges(n: usize, edges: &[(usize, usize)], name: &str) -> Self {
         let mut adj = vec![Vec::new(); n];
         for &(a, b) in edges {
             assert!(a < n && b < n && a != b, "bad edge ({a},{b})");
-            if !adj[a].contains(&b) {
-                adj[a].push(b);
-                adj[b].push(a);
-            }
+            adj[a].push(b);
+            adj[b].push(a);
         }
         for l in &mut adj {
             l.sort_unstable();
+            l.dedup();
         }
         Topology { n, adj, name: name.to_string() }
     }
@@ -105,6 +109,49 @@ impl Topology {
         Topology::from_edges(n, &edges, &format!("grid({rows}x{cols})"))
     }
 
+    /// Random `degree`-regular graph built as the union of `degree/2`
+    /// independent random Hamiltonian cycles (so `degree` must be even and
+    /// ≥ 2). Connected by construction — each cycle alone visits every
+    /// node — and O(n) per cycle, so it scales to fleet-size n. A cycle
+    /// that would duplicate an existing edge is redrawn (collisions are
+    /// vanishingly rare at large n; a retry cap guards small n).
+    pub fn random_regular(n: usize, degree: usize, rng: &mut Rng) -> Self {
+        assert!(degree >= 2 && degree % 2 == 0, "degree must be even and ≥ 2");
+        assert!(n > degree, "need n > degree for a simple {degree}-regular graph");
+        assert!(n >= 3, "a Hamiltonian cycle needs n ≥ 3");
+        let mut perm: Vec<usize> = (0..n).collect();
+        let mut seen = std::collections::HashSet::with_capacity(n * degree / 2);
+        let mut edges = Vec::with_capacity(n * degree / 2);
+        for _cycle in 0..degree / 2 {
+            let mut committed = false;
+            'attempt: for _attempt in 0..200 {
+                rng.shuffle(&mut perm);
+                // Check the whole cycle is collision-free before committing.
+                for w in 0..n {
+                    let (a, b) = (perm[w], perm[(w + 1) % n]);
+                    let key = (a.min(b) as u64) * n as u64 + a.max(b) as u64;
+                    if seen.contains(&key) {
+                        continue 'attempt;
+                    }
+                }
+                for w in 0..n {
+                    let (a, b) = (perm[w], perm[(w + 1) % n]);
+                    let key = (a.min(b) as u64) * n as u64 + a.max(b) as u64;
+                    seen.insert(key);
+                    edges.push((a, b));
+                }
+                committed = true;
+                break;
+            }
+            assert!(
+                committed,
+                "random_regular: could not place cycle {_cycle} without \
+                 duplicate edges (n={n}, degree={degree})"
+            );
+        }
+        Topology::from_edges(n, &edges, &format!("random_regular(d={degree})"))
+    }
+
     /// Two complete cliques of size n/2 joined by a single bridge edge —
     /// pathological connectivity (tiny `1 − λ₂`), stress-tests FastMix.
     pub fn barbell(n: usize) -> Self {
@@ -134,6 +181,33 @@ impl Topology {
     /// Degree of node `i`.
     pub fn degree(&self, i: usize) -> usize {
         self.adj[i].len()
+    }
+
+    /// Insert the undirected edge `{a, b}`, keeping both adjacency lists
+    /// sorted. Idempotent; O(degree) per endpoint. Used by the churn
+    /// machinery to maintain a snapshot incrementally — when edges only
+    /// ever toggle within a fixed base set, list capacities warm up to
+    /// the base degree and steady-state toggles never reallocate.
+    pub fn insert_edge(&mut self, a: usize, b: usize) {
+        assert!(a < self.n && b < self.n && a != b, "bad edge ({a},{b})");
+        if let Err(pos) = self.adj[a].binary_search(&b) {
+            self.adj[a].insert(pos, b);
+        }
+        if let Err(pos) = self.adj[b].binary_search(&a) {
+            self.adj[b].insert(pos, a);
+        }
+    }
+
+    /// Remove the undirected edge `{a, b}` if present (sorted-list
+    /// surgery, O(degree) per endpoint, never reallocates).
+    pub fn remove_edge(&mut self, a: usize, b: usize) {
+        assert!(a < self.n && b < self.n && a != b, "bad edge ({a},{b})");
+        if let Ok(pos) = self.adj[a].binary_search(&b) {
+            self.adj[a].remove(pos);
+        }
+        if let Ok(pos) = self.adj[b].binary_search(&a) {
+            self.adj[b].remove(pos);
+        }
     }
 
     /// Total number of undirected edges.
@@ -293,5 +367,50 @@ mod tests {
         // Two disjoint edges on 4 nodes.
         let t = Topology::from_edges(4, &[(0, 1), (2, 3)], "manual");
         assert!(!t.is_connected());
+    }
+
+    #[test]
+    fn from_edges_collapses_duplicates_and_reversals() {
+        let t = Topology::from_edges(
+            5,
+            &[(0, 1), (1, 0), (0, 1), (2, 3), (3, 2), (1, 4)],
+            "dups",
+        );
+        assert_eq!(t.neighbors(0), &[1]);
+        assert_eq!(t.neighbors(1), &[0, 4]);
+        assert_eq!(t.neighbors(2), &[3]);
+        assert_eq!(t.num_edges(), 3);
+    }
+
+    #[test]
+    fn insert_remove_edge_keeps_sorted_symmetric_adjacency() {
+        let mut t = Topology::ring(6);
+        t.insert_edge(0, 3);
+        t.insert_edge(0, 3); // idempotent
+        assert_eq!(t.neighbors(0), &[1, 3, 5]);
+        assert_eq!(t.neighbors(3), &[0, 2, 4]);
+        t.remove_edge(3, 0);
+        t.remove_edge(3, 0); // idempotent
+        assert_eq!(t.neighbors(0), &[1, 5]);
+        assert_eq!(t.neighbors(3), &[2, 4]);
+        assert_eq!(t.edges(), Topology::ring(6).edges());
+    }
+
+    #[test]
+    fn random_regular_structure() {
+        let mut rng = Rng::seed_from(17);
+        let t = Topology::random_regular(40, 4, &mut rng);
+        assert_eq!(t.n(), 40);
+        assert!(t.is_connected());
+        for i in 0..40 {
+            assert_eq!(t.degree(i), 4, "node {i}");
+            for &j in t.neighbors(i) {
+                assert!(t.neighbors(j).contains(&i), "asymmetric adjacency");
+                assert_ne!(i, j, "self loop");
+            }
+        }
+        // Deterministic per seed.
+        let t2 = Topology::random_regular(40, 4, &mut Rng::seed_from(17));
+        assert_eq!(t.edges(), t2.edges());
     }
 }

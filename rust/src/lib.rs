@@ -47,9 +47,11 @@
 //! `Algo::Centralized` to run the baselines through the identical
 //! driver, recorder, and report; swap `.engine(...)` across
 //! `Engine::Dense`, `Engine::DenseParallel`, `Engine::Threaded`,
-//! `Engine::Distributed`, and `Engine::Sim` (deterministic
+//! `Engine::Distributed`, `Engine::Sim` (deterministic
 //! unreliable-network simulation: seeded drops/latency/noise and
-//! time-varying topologies) to change how the same math executes.
+//! time-varying topologies), and `Engine::Sparse` (fleet-scale CSR
+//! gossip — O(edges) rounds, nothing dense in the agent count) to
+//! change how the same math executes.
 //! Per-agent work (products, gossip row blocks, QR loops) runs on a
 //! persistent deterministic worker pool ([`exec::Executor`]), sized by
 //! `Session::threads` / `DEEPCA_THREADS` — results are bit-identical
@@ -112,9 +114,11 @@ pub mod prelude {
         Algo, Engine, SolveReport, Solver, SolverState, StepReport, StopCriteria, StopReason,
     };
     pub use crate::algo::workspace::SolverWorkspace;
+    pub use crate::consensus::comm::{Communicator, DenseComm, SparseComm};
     pub use crate::consensus::fastmix::FastMix;
     pub use crate::exec::Executor;
     pub use crate::consensus::simnet::{SimConfig, SimNet};
+    pub use crate::graph::sparse::{SparseGossip, SpectrumWorkspace};
     pub use crate::coordinator::online::{EpochRecord, OnlineConfig, OnlineReport, OnlineSession};
     pub use crate::coordinator::session::{Session, SolverBuilder};
     pub use crate::graph::dynamic::TopologySchedule;

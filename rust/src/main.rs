@@ -9,8 +9,10 @@
 //!              [--m 50] [--n 800] [--k 5] [--rounds 8] [--iters 60] [--tol 1e-9]
 //!              [--k-policy fixed|increasing] [--k-base 8] [--k-slope 1.0]
 //!              [--drop-prob 0.05] [--latency 3] [--noise 0.01] [--churn 0.2]   # sim engine
-//!              [--dataset w8a|a9a] [--data path/to/libsvm] [--topology er|ring|grid|star|complete]
+//!              [--dataset w8a|a9a] [--data path/to/libsvm] [--topology er|ring|grid|star|complete|rr]
 //! deepca info  [--dataset w8a|a9a] [--data path]   # spectrum / network diagnostics
+//! deepca gossip [--agents 100000] [--topology ring|grid|rr|er] [--degree 4]
+//!              [--rounds 8] [--d 8] [--k 2] [--threads N] [--seed S]
 //! ```
 
 use anyhow::{bail, Context, Result};
@@ -19,7 +21,11 @@ use deepca::algo::local_power::LocalPowerConfig;
 use deepca::algo::problem::Problem;
 use deepca::cli::Args;
 use deepca::config::ConfigMap;
+use deepca::consensus::comm::{Communicator, SparseComm};
+use deepca::consensus::metrics::CommStats;
 use deepca::consensus::simnet::SimConfig;
+use deepca::consensus::AgentStack;
+use deepca::exec::Executor;
 use deepca::coordinator::online::{OnlineConfig, OnlineSession};
 use deepca::coordinator::session::Session;
 use deepca::data::{libsvm, synthetic, Dataset};
@@ -28,9 +34,13 @@ use deepca::graph::dynamic::TopologySchedule;
 use deepca::stream::cov::Forgetting;
 use deepca::stream::source::{Drift, StreamParams, SyntheticStream};
 use deepca::graph::gossip::GossipMatrix;
+use deepca::graph::sparse::SparseGossip;
 use deepca::graph::topology::Topology;
+use deepca::linalg::Mat;
 use deepca::prelude::{Algo, DeepcaConfig, DepcaConfig, Engine, KPolicy, Rng};
+use deepca::util::timer::Timer;
 use std::path::Path;
+use std::sync::Arc;
 
 fn main() {
     if let Err(e) = run() {
@@ -46,6 +56,7 @@ fn run() -> Result<()> {
         Some("run") => cmd_run(&args),
         Some("stream") => cmd_stream(&args),
         Some("info") => cmd_info(&args),
+        Some("gossip") => cmd_gossip(&args),
         Some("help") | None => {
             print_help();
             Ok(())
@@ -65,15 +76,24 @@ USAGE:
               [--m N] [--n N] [--k N] [--rounds K] [--iters T] [--tol EPS]
               [--k-policy fixed|increasing] [--k-base K0] [--k-slope S]
               [--drop-prob P] [--latency L] [--noise STD] [--churn P]
-              [--dataset w8a|a9a] [--data libsvm-file] [--topology er|ring|grid|star|complete]
+              [--dataset w8a|a9a] [--data libsvm-file] [--topology er|ring|grid|star|complete|rr]
               [--seed S]
   deepca stream [--drift RATE | --change-at E | --fade RATE]
               [--window ROWS | --forget BETA] [--cold]
               [--m N] [--d N] [--k N] [--batch N] [--epochs E]
               [--rounds K] [--power-iters T] [--engine dense|parallel|threaded|sim]
               [--threads N] [--drop-prob P] [--latency L] [--noise STD] [--churn P]
-              [--topology er|ring|grid|star|complete] [--seed S]
+              [--topology er|ring|grid|star|complete|rr] [--seed S]
   deepca info [--dataset w8a|a9a] [--data libsvm-file] [--m N] [--k N]
+  deepca gossip [--agents 100000] [--topology ring|grid|rr|er] [--degree 4]
+              [--rounds 8] [--d 8] [--k 2] [--threads N] [--seed S]
+
+Fleet-scale smoke (deepca gossip): builds sparse CSR Metropolis gossip
+weights over --agents nodes (no n×n matrix anywhere), estimates λ₂ by
+seeded Lanczos, runs --rounds FastMix rounds over d×k iterates, and
+fails (exit 1) on non-finite values or mean drift above 1e-9 — the CI
+large-n regression gate. --topology rr is a seeded random regular
+graph of even --degree.
 
 Worker pool (--threads N): per-agent products, gossip row blocks, and
 QR loops run on a persistent deterministic pool. N=0 (the default)
@@ -174,7 +194,7 @@ fn load_dataset(args: &Args, cfg: &ConfigMap, m: usize, n: usize) -> Result<Data
     }
 }
 
-fn build_topology(kind: &str, m: usize, seed: u64) -> Result<Topology> {
+fn build_topology(kind: &str, m: usize, seed: u64, degree: usize) -> Result<Topology> {
     Ok(match kind {
         "er" => Topology::erdos_renyi(m, 0.5, &mut Rng::seed_from(seed)),
         "ring" => Topology::ring(m),
@@ -187,6 +207,15 @@ fn build_topology(kind: &str, m: usize, seed: u64) -> Result<Topology> {
         }
         "star" => Topology::star(m),
         "complete" => Topology::complete(m),
+        "rr" => {
+            if degree % 2 != 0 || degree == 0 {
+                bail!("--degree {degree}: random regular needs an even degree ≥ 2");
+            }
+            if m <= degree {
+                bail!("--degree {degree}: need more than `degree` agents (got {m})");
+            }
+            Topology::random_regular(m, degree, &mut Rng::seed_from(seed))
+        }
         other => bail!("unknown topology `{other}`"),
     })
 }
@@ -201,6 +230,7 @@ fn parse_engine(args: &Args, cfg: &ConfigMap, seed: u64) -> Result<Engine> {
         "parallel" => Engine::DenseParallel,
         "threaded" => Engine::Threaded,
         "distributed" => Engine::Distributed,
+        "sparse" => Engine::Sparse,
         "sim" => {
             let drop_prob = args.f64_or("drop-prob", cfg.f64_or("sim.drop_prob", 0.0)?)?;
             let noise_std = args.f64_or("noise", cfg.f64_or("sim.noise_std", 0.0)?)?;
@@ -272,6 +302,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         &args.str_or("topology", &cfg.str_or("topology", "er")),
         m,
         seed + 1,
+        args.usize_or("degree", cfg.usize_or("degree", 4)?)?,
     )?;
     let gossip = GossipMatrix::from_laplacian(&topo);
     println!(
@@ -460,7 +491,12 @@ fn cmd_stream(args: &Args) -> Result<()> {
         drift,
         seed,
     });
-    let topo = build_topology(&args.str_or("topology", "er"), m, seed + 1)?;
+    let topo = build_topology(
+        &args.str_or("topology", "er"),
+        m,
+        seed + 1,
+        args.usize_or("degree", 4)?,
+    )?;
     let engine = parse_engine(args, &cfg, seed)?;
     // The per-agent-thread engine would run only the first (cold) epoch
     // and silently fall back to Threaded on every warm-started one —
@@ -554,6 +590,76 @@ fn cmd_info(args: &Args) -> Result<()> {
         problem.gamma(),
         problem.spectral_bound,
         problem.heterogeneity()
+    );
+    Ok(())
+}
+
+/// `deepca gossip` — fleet-scale FastMix smoke test. Builds a sparse
+/// CSR Metropolis gossip operator over `--agents` nodes (no n×n matrix
+/// anywhere in the process), runs `--rounds` FastMix rounds over random
+/// d×k iterates on the worker pool, and verifies the doubly-stochastic
+/// invariant (mean preservation) and finiteness — exiting nonzero on
+/// violation so CI can gate large-n regressions on it.
+fn cmd_gossip(args: &Args) -> Result<()> {
+    let m = args.usize_or("agents", 100_000)?;
+    let d = args.usize_or("d", 8)?;
+    let k = args.usize_or("k", 2)?;
+    let rounds = args.usize_or("rounds", 8)?;
+    let seed = args.usize_or("seed", 701)? as u64;
+    let threads = args.usize_or("threads", 0)?;
+    if m < 3 {
+        bail!("--agents {m}: need at least 3 agents");
+    }
+    if d == 0 || k == 0 {
+        bail!("--d {d} / --k {k}: iterate shape must be nonzero");
+    }
+    if rounds == 0 {
+        bail!("--rounds {rounds}: must run at least one round");
+    }
+    let kind = args.str_or("topology", "ring");
+    let topo = build_topology(&kind, m, seed + 1, args.usize_or("degree", 4)?)?;
+
+    let t = Timer::start();
+    let sparse = SparseGossip::metropolis(&topo);
+    let build_secs = t.elapsed_secs();
+    let info = sparse.info();
+    println!(
+        "network {} m={} edges={} λ₂≈{:.6} η={:.4} (CSR build + Lanczos: {build_secs:.2}s)",
+        topo.name,
+        m,
+        sparse.edges(),
+        info.lambda2,
+        info.chebyshev_eta()
+    );
+
+    let edges = sparse.edges();
+    let comm = SparseComm::from_sparse(sparse).with_executor(Arc::new(Executor::new(threads)));
+    let mut rng = Rng::seed_from(seed);
+    let mut stack = AgentStack::new((0..m).map(|_| Mat::randn(d, k, &mut rng)).collect());
+    let mean0 = stack.mean();
+    let dev0 = stack.deviation_from_mean();
+
+    let mut stats = CommStats::default();
+    let t = Timer::start();
+    comm.fastmix(&mut stack, rounds, &mut stats);
+    let mix_secs = t.elapsed_secs();
+    println!(
+        "{rounds} FastMix rounds over {d}x{k} iterates in {mix_secs:.3}s \
+         ({:.1} ms/round, {:.3e} edge-scalars/s)",
+        1e3 * mix_secs / rounds as f64,
+        (2 * edges * d * k * rounds) as f64 / mix_secs.max(1e-12),
+    );
+
+    if !stack.is_finite() {
+        bail!("non-finite values after {rounds} rounds");
+    }
+    let drift = (&stack.mean() - &mean0).fro_norm() / mean0.fro_norm().max(1e-300);
+    if drift > 1e-9 {
+        bail!("mean drift {drift:.3e} exceeds tolerance 1e-9 — gossip is not doubly stochastic");
+    }
+    let dev1 = stack.deviation_from_mean();
+    println!(
+        "mean drift {drift:.3e} (tol 1e-9), deviation {dev0:.3e} -> {dev1:.3e} — OK"
     );
     Ok(())
 }

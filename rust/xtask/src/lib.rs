@@ -134,7 +134,27 @@ pub fn repo_regions() -> Vec<Region> {
             impl_context: None,
             fn_name: "chebyshev_row_update",
         },
+        Region {
+            file_suffix: "consensus/fastmix.rs",
+            impl_context: None,
+            fn_name: "chebyshev_row_update_sparse",
+        },
         Region { file_suffix: "consensus/fastmix.rs", impl_context: None, fn_name: "mix" },
+        Region {
+            file_suffix: "graph/sparse.rs",
+            impl_context: None,
+            fn_name: "rebuild_metropolis",
+        },
+        Region {
+            file_suffix: "graph/sparse.rs",
+            impl_context: None,
+            fn_name: "estimate_spectrum",
+        },
+        Region {
+            file_suffix: "graph/dynamic.rs",
+            impl_context: Some("MarkovChurn"),
+            fn_name: "advance_one",
+        },
         Region {
             file_suffix: "consensus/simnet.rs",
             impl_context: Some("Communicator for SimNet"),
@@ -143,6 +163,11 @@ pub fn repo_regions() -> Vec<Region> {
         Region {
             file_suffix: "consensus/comm.rs",
             impl_context: Some("Communicator for DenseComm"),
+            fn_name: "fastmix",
+        },
+        Region {
+            file_suffix: "consensus/comm.rs",
+            impl_context: Some("Communicator for SparseComm"),
             fn_name: "fastmix",
         },
         Region { file_suffix: "exec/mod.rs", impl_context: None, fn_name: "run_job" },
