@@ -203,6 +203,31 @@ fn main() {
         step_solver.step().iter
     }));
 
+    // ------------------------------------------------ tracing overhead
+    // The flight recorder's acceptance bar: a traced warm step stays
+    // within 5% of the bare step. Stable names (`bare_step` /
+    // `traced_step`) so `scripts/bench_diff` tracks the pair across
+    // commits. Recording is an atomic enabled check, a metrics bump,
+    // and one indexed store into a ring preallocated by `enable`.
+    section("flight-recorder overhead (m=50, d=300, k=5, K=8, 1 thread)");
+    {
+        let mut bare = Session::on(&problem, &topo)
+            .algo(Algo::Deepca(cfg.clone()))
+            .threads(1)
+            .build_solver();
+        bare.step(); // warm the workspace + engine buffers
+        suite.push(bench.run("bare_step", || bare.step().iter));
+
+        deepca::obs::trace::enable(1 << 16);
+        let mut traced = Session::on(&problem, &topo)
+            .algo(Algo::Deepca(cfg.clone()))
+            .threads(1)
+            .build_solver();
+        traced.step(); // warm buffers (and this thread's ring is live)
+        suite.push(bench.run("traced_step", || traced.step().iter));
+        deepca::obs::trace::disable();
+    }
+
     let path = Path::new("BENCH_microbench.json");
     suite.write_json(path).expect("write BENCH_microbench.json");
     println!("\nwrote {}", path.display());

@@ -73,9 +73,14 @@ impl Solver for CentralizedSolver<'_> {
 
     fn step(&mut self) -> StepReport {
         let t = self.state.iter;
-        self.problem
-            .aggregate
-            .matmul_into(self.state.w.slice(0), &mut self.prod);
+        let _span_step = crate::trace_span!(Step, t as u64);
+        {
+            let _span = crate::trace_span!(LocalProduct, t as u64);
+            self.problem
+                .aggregate
+                .matmul_into(self.state.w.slice(0), &mut self.prod);
+        }
+        let _span_qr = crate::trace_span!(Qr, t as u64);
         let q = self.workspace.orth_into(&self.prod, true);
         self.state.w.slice_mut(0).copy_from(q);
         self.state.iter = t + 1;

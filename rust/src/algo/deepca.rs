@@ -161,6 +161,7 @@ impl Solver for DeepcaSolver<'_> {
 
     fn step(&mut self) -> StepReport {
         let t = self.state.iter;
+        let _span_step = crate::trace_span!(Step, t as u64);
         let exec = Arc::clone(&self.exec);
         let SolverState { w, s, stats, .. } = &mut self.state;
         let s = s.as_mut().expect("DeEPCA tracks S");
@@ -169,8 +170,12 @@ impl Solver for DeepcaSolver<'_> {
         // land in the persistent `g_next` buffer, then the buffers swap —
         // exactly one A_j·W product per agent, zero allocation. Both the
         // product batch and the per-agent update run on the pool.
-        self.backend.local_products_into(w, &mut self.g_next);
         {
+            let _span = crate::trace_span!(LocalProduct, t as u64);
+            self.backend.local_products_into(w, &mut self.g_next);
+        }
+        {
+            let _span = crate::trace_span!(TrackingUpdate, t as u64);
             let g_next = &self.g_next;
             let g_prev = &self.g_prev;
             exec.par_for_each_agent(s.slices_mut(), |j, sj| {
@@ -181,12 +186,15 @@ impl Solver for DeepcaSolver<'_> {
         std::mem::swap(&mut self.g_prev, &mut self.g_next);
 
         // (3.2) multi-consensus on the tracked variable (the engine
-        // reuses its recursion buffers across mixes).
+        // reuses its recursion buffers across mixes). The gossip span is
+        // emitted inside the engine's `fastmix`, which also records
+        // per-round events.
         self.comm.fastmix(s, self.cfg.consensus_rounds, stats);
 
         // (3.3) local orthonormalization + sign adjustment, chunked over
         // the pool with one workspace slot per chunk.
         {
+            let _span = crate::trace_span!(Qr, t as u64);
             let s: &AgentStack = s;
             let w0 = &self.w0;
             let sign_adjust = self.cfg.sign_adjust;
@@ -201,6 +209,9 @@ impl Solver for DeepcaSolver<'_> {
                     }
                 }
             });
+        }
+        if self.cfg.sign_adjust {
+            crate::trace_event!(SignAdjust, t as u64);
         }
 
         self.state.iter = t + 1;

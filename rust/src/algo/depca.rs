@@ -162,6 +162,7 @@ impl Solver for DepcaSolver<'_> {
 
     fn step(&mut self) -> StepReport {
         let t = self.state.iter;
+        let _span_step = crate::trace_span!(Step, t as u64);
         let SolverState { w, s, stats, .. } = &mut self.state;
         // The pre-QR mixed variable `P` lives in `state.s` (the
         // recorder's s_deviation analogue; DePCA has no tracked S) and
@@ -169,12 +170,17 @@ impl Solver for DepcaSolver<'_> {
         let p = s.as_mut().expect("DePCA mixes P in place");
 
         // Local power step on the iterate itself (no tracking).
-        self.backend.local_products_into(w, p);
-        // Multi-consensus with the schedule's rounds for this iteration.
+        {
+            let _span = crate::trace_span!(LocalProduct, t as u64);
+            self.backend.local_products_into(w, p);
+        }
+        // Multi-consensus with the schedule's rounds for this iteration
+        // (the engine's `fastmix` emits the gossip span and round events).
         self.comm.fastmix(p, self.cfg.k_policy.rounds(t), stats);
         // Local orthonormalization, chunked over the pool with one
         // workspace slot per chunk.
         {
+            let _span = crate::trace_span!(Qr, t as u64);
             let p: &AgentStack = p;
             let w0 = &self.w0;
             let sign_adjust = self.cfg.sign_adjust;

@@ -94,9 +94,14 @@ impl Solver for LocalPowerSolver<'_> {
 
     fn step(&mut self) -> StepReport {
         let t = self.state.iter;
+        let _span_step = crate::trace_span!(Step, t as u64);
         let w = &mut self.state.w;
-        self.backend.local_products_into(w, &mut self.products);
         {
+            let _span = crate::trace_span!(LocalProduct, t as u64);
+            self.backend.local_products_into(w, &mut self.products);
+        }
+        {
+            let _span = crate::trace_span!(Qr, t as u64);
             let products = &self.products;
             self.exec
                 .par_chunks_ctx(w.slices_mut(), &mut self.workspaces, |lo, chunk, ws| {

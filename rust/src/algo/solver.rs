@@ -295,6 +295,12 @@ pub fn drive<'o>(
                 &report.comm,
                 t0.elapsed_secs(),
             );
+        } else {
+            // Stride-skipped iterations still log the cheap facts
+            // (communication, elapsed time) so traces keep a
+            // per-iteration x-axis; the expensive tan-theta metrics stay
+            // NaN sentinels that the accessors skip.
+            recorder.record_cheap(t, &report.comm, t0.elapsed_secs());
         }
         // Error for the stop checks: freshly computed from the current
         // iterate. A record written *this iteration* is that same fresh

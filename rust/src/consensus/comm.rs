@@ -288,6 +288,7 @@ impl Communicator for ThreadedNetwork {
         let m = self.topo.n();
         assert_eq!(stack.m(), m);
         let (d, k) = stack.slice_shape();
+        let _span = crate::trace_span!(Gossip, rounds as u64, self.topo.num_edges() as u64);
 
         // Channels are built once per engine (see [`EdgeChannels`]) and
         // lent to the agent threads for this mix. Each agent sends
@@ -397,8 +398,19 @@ impl Communicator for ThreadedNetwork {
         }
         stats.rounds += rounds as u64;
         stats.messages += (rounds * 2 * self.topo.num_edges()) as u64;
-        stats.scalars_sent += total_scalars;
-        stats.bytes_sent += total_scalars * 8;
+        // Measured mode: the agents counted the scalars they actually
+        // serialized into channel payloads (including zeroed fault
+        // payloads); bytes are the serialized size of exactly those
+        // scalars — never also pushed through the modeled
+        // `record_round` path, so nothing is double-counted.
+        let measured_bytes = total_scalars * std::mem::size_of::<f64>() as u64;
+        stats.record_measured(total_scalars, measured_bytes);
+        let edges = self.topo.num_edges() as u64;
+        let bytes_per_round = measured_bytes / rounds as u64;
+        for _ in 0..rounds {
+            crate::trace_event!(GossipRound, edges);
+            crate::trace_event!(GossipRoundIo, 0u64, bytes_per_round);
+        }
     }
 }
 

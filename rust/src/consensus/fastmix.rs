@@ -250,6 +250,8 @@ impl FastMix {
         let (d, k) = stack.slice_shape();
         let m = stack.m();
         assert_eq!(m, self.sparse.m(), "stack size != network size");
+        let _span = crate::trace_span!(Gossip, rounds as u64, self.edges as u64);
+        let round_bytes = (2 * self.edges * d * k) as u64 * 8;
 
         // Maintain current and previous stacks; each round computes
         //   next_j = (1+η) Σ_i w_{ij} cur_i − η prev_j.
@@ -284,6 +286,8 @@ impl FastMix {
             }
             bufs.rotate();
             stats.record_round(self.edges, d, k);
+            crate::trace_event!(GossipRound, self.edges as u64);
+            crate::trace_event!(GossipRoundIo, 0u64, round_bytes);
         }
         bufs.store(stack);
     }

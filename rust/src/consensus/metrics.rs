@@ -16,8 +16,12 @@ pub struct CommStats {
     pub mixes: u64,
     /// Total scalar values exchanged over all edges (both directions).
     pub scalars_sent: u64,
-    /// Total bytes on the wire (scalars × 8 for f64; the threaded engine
-    /// measures actual serialized sizes).
+    /// Total bytes on the wire. Two accounting modes, never combined for
+    /// the same traffic: the in-process engines *model* bytes via
+    /// [`CommStats::record_round`] (scalars × 8 for f64 payloads), while
+    /// the threaded engine *measures* its serialized channel payloads and
+    /// reports them through [`CommStats::record_measured`]. Each
+    /// transmission is counted by exactly one of the two paths.
     pub bytes_sent: u64,
     /// Messages (edge-transmissions) sent.
     pub messages: u64,
@@ -46,6 +50,16 @@ impl CommStats {
         self.messages += tx;
         self.scalars_sent += scalars;
         self.bytes_sent += scalars * 8;
+    }
+
+    /// Record traffic whose serialized size was *measured* by the engine
+    /// (the threaded runtime's channel payloads), as opposed to the
+    /// modeled `scalars × 8` of [`CommStats::record_round`]. Callers use
+    /// one mode or the other for a given transmission — never both — so
+    /// byte totals are never double-counted.
+    pub fn record_measured(&mut self, scalars: u64, bytes: u64) {
+        self.scalars_sent += scalars;
+        self.bytes_sent += bytes;
     }
 
     /// Record the start of a FastMix invocation.
@@ -125,6 +139,17 @@ mod tests {
         assert_eq!(s.messages, 20);
         assert_eq!(s.scalars_sent, 20 * 1500);
         assert_eq!(s.bytes_sent, 20 * 1500 * 8);
+    }
+
+    #[test]
+    fn record_measured_counts_real_bytes() {
+        // The threaded engine measures serialized sizes; its payloads go
+        // through record_measured instead of the modeled scalars×8 path.
+        let mut s = CommStats::default();
+        s.record_measured(1500, 12_345);
+        assert_eq!(s.scalars_sent, 1500);
+        assert_eq!(s.bytes_sent, 12_345);
+        assert_eq!(s.rounds, 0, "measured traffic does not add rounds");
     }
 
     #[test]

@@ -309,6 +309,7 @@ impl Communicator for SimNet {
         let m = self.m;
         assert_eq!(stack.m(), m, "stack size != network size");
         let (d, k) = stack.slice_shape();
+        let _span = crate::trace_span!(Gossip, rounds as u64);
 
         let mut st = self.state.lock().expect("SimNet state poisoned");
         let st = &mut *st;
@@ -367,6 +368,8 @@ impl Communicator for SimNet {
                 *round += 1;
                 stats.record_round(epoch.edges, d, k);
                 stats.virtual_time += 1;
+                crate::trace_event!(GossipRound, epoch.edges as u64);
+                crate::trace_event!(GossipRoundIo, 1u64, (2 * epoch.edges * d * k) as u64 * 8);
                 continue;
             }
             // One barrier-synchronized event per round: every directed
@@ -393,6 +396,7 @@ impl Communicator for SimNet {
                     // Directed link i → j: one message this round.
                     if self.cfg.drop_prob > 0.0 && rng.chance(self.cfg.drop_prob) {
                         dropped_this_round += 1;
+                        crate::trace_event!(LinkDrop, i as u64, j as u64);
                         // Self-weight fallback: substitute the receiver's
                         // own state so the row stays stochastic.
                         acc.axpy(one_plus_eta * w, &bufs.cur[j]);
@@ -419,6 +423,12 @@ impl Communicator for SimNet {
             // Discrete-event barrier: the round completes one baseline
             // tick after its slowest delivered message lands.
             stats.virtual_time += 1 + slowest_delivery;
+            crate::trace_event!(GossipRound, epoch.edges as u64, dropped_this_round);
+            crate::trace_event!(
+                GossipRoundIo,
+                1 + slowest_delivery,
+                (2 * epoch.edges * d * k) as u64 * 8
+            );
         }
         bufs.store(stack);
     }

@@ -154,18 +154,22 @@ pub fn run_deepca_distributed(
                 let Telemetry { agent, iter, s, w } = tele;
                 pending[iter][agent] = Some((s, w));
                 complete[iter] += 1;
-                if complete[iter] == m && rec.should_record(iter) {
-                    let ss = AgentStack::new(
-                        pending[iter].iter().map(|p| p.as_ref().unwrap().0.clone()).collect(),
-                    );
-                    let ws = AgentStack::new(
-                        pending[iter].iter().map(|p| p.as_ref().unwrap().1.clone()).collect(),
-                    );
+                if complete[iter] == m {
                     // Communication to date: (iter+1) mixes of `rounds` rounds.
                     let mut stats_for_record = CommStats::default();
                     stats_for_record.mixes = (iter + 1) as u64;
                     stats_for_record.rounds = ((iter + 1) * rounds) as u64;
-                    rec.record(iter, u_ref, &ws, Some(&ss), &stats_for_record, t0.elapsed_secs());
+                    if rec.should_record(iter) {
+                        let ss = AgentStack::new(
+                            pending[iter].iter().map(|p| p.as_ref().unwrap().0.clone()).collect(),
+                        );
+                        let ws = AgentStack::new(
+                            pending[iter].iter().map(|p| p.as_ref().unwrap().1.clone()).collect(),
+                        );
+                        rec.record(iter, u_ref, &ws, Some(&ss), &stats_for_record, t0.elapsed_secs());
+                    } else {
+                        rec.record_cheap(iter, &stats_for_record, t0.elapsed_secs());
+                    }
                     pending[iter].iter_mut().for_each(|p| *p = None); // free
                 }
             }
@@ -192,8 +196,10 @@ pub fn run_deepca_distributed(
     comm.mixes = iters as u64;
     comm.rounds = (iters * rounds) as u64;
     comm.messages = (iters * rounds * 2 * topo.num_edges()) as u64;
-    comm.scalars_sent = total_scalars;
-    comm.bytes_sent = total_scalars * 8;
+    // Scalar counts were measured per agent thread; route them through
+    // the measured-bytes accessor (one accounting path, no hard-coded
+    // payload width).
+    comm.record_measured(total_scalars, total_scalars * std::mem::size_of::<f64>() as u64);
 
     let diverged = !final_w.is_finite();
     RunOutput {

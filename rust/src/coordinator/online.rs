@@ -178,6 +178,7 @@ pub struct OnlineSession<'a> {
     schedule: Option<TopologySchedule>,
     threads: Option<usize>,
     exec: Option<Arc<Executor>>,
+    trace: Option<std::path::PathBuf>,
 }
 
 impl<'a> OnlineSession<'a> {
@@ -190,7 +191,18 @@ impl<'a> OnlineSession<'a> {
             schedule: None,
             threads: None,
             exec: None,
+            trace: None,
         }
+    }
+
+    /// Capture a flight-recorder trace of the whole stream run —
+    /// per-epoch ingest/refresh/solve spans plus everything the inner
+    /// sessions record — and write it to `path` when the run finishes
+    /// (`.json` → Chrome Trace Format, else JSONL). Mirror of
+    /// [`Session::trace`].
+    pub fn trace(mut self, path: impl Into<std::path::PathBuf>) -> Self {
+        self.trace = Some(path.into());
+        self
     }
 
     /// Size the worker pool shared across every epoch: the per-agent
@@ -251,6 +263,10 @@ impl<'a> OnlineSession<'a> {
     /// the local covariances, run a short (warm-started) DeEPCA session,
     /// and record tracking metrics.
     pub fn run(mut self, source: &mut dyn StreamSource) -> OnlineReport {
+        let trace_path = self.trace.take();
+        if trace_path.is_some() {
+            crate::obs::trace::enable(crate::obs::trace::DEFAULT_CAPACITY);
+        }
         let m = source.m();
         let d = source.dim();
         let k = source.k();
@@ -277,12 +293,17 @@ impl<'a> OnlineSession<'a> {
         };
 
         for e in 0..self.cfg.epochs {
-            for (j, tracker) in trackers.iter_mut().enumerate() {
-                tracker.observe(&source.next_batch(j));
+            let _span_epoch = crate::trace_span!(Epoch, e as u64);
+            {
+                let _span = crate::trace_span!(Ingest, e as u64, m as u64);
+                for (j, tracker) in trackers.iter_mut().enumerate() {
+                    tracker.observe(&source.next_batch(j));
+                }
             }
             {
                 // Each agent's tracker writes only its own buffer —
                 // deterministic under the fixed per-agent partitioning.
+                let _span = crate::trace_span!(Refresh, e as u64, m as u64);
                 let trackers = &trackers;
                 exec.par_for_each_agent(&mut locals, |j, local| {
                     trackers[j].covariance_into(local)
@@ -318,7 +339,10 @@ impl<'a> OnlineSession<'a> {
                     session = session.warm_start_from(w);
                 }
             }
-            let rep = session.solve();
+            let rep = {
+                let _span = crate::trace_span!(EpochSolve, e as u64);
+                session.solve()
+            };
 
             let oracle_tan_theta = match source.oracle() {
                 Some(u) => mean_tan_theta(&u, &rep.final_w),
@@ -350,6 +374,13 @@ impl<'a> OnlineSession<'a> {
             source.advance();
         }
 
+        if let Some(path) = trace_path {
+            crate::obs::trace::disable();
+            let snap = crate::obs::trace::snapshot();
+            if let Err(e) = crate::obs::export::write_auto(&path, &snap) {
+                eprintln!("warning: could not write trace {}: {e}", path.display());
+            }
+        }
         OnlineReport {
             scenario,
             records,

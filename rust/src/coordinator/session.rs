@@ -84,6 +84,7 @@ pub struct Session<'a> {
     schedule: Option<TopologySchedule>,
     threads: Option<usize>,
     exec: Option<Arc<Executor>>,
+    trace: Option<std::path::PathBuf>,
 }
 
 /// The issue-tracker name for [`Session`] — same type.
@@ -106,7 +107,20 @@ impl<'a> Session<'a> {
             schedule: None,
             threads: None,
             exec: None,
+            trace: None,
         }
+    }
+
+    /// Capture a flight-recorder trace of this solve and write it to
+    /// `path` when the run finishes (`.json` → Chrome Trace Format for
+    /// Perfetto/`chrome://tracing`, anything else → JSONL for `deepca
+    /// trace`). Enables [`crate::obs::trace`] for the duration of
+    /// [`Session::solve`]; an export failure is reported on stderr, not
+    /// panicked on — the solve result is never sacrificed to a full
+    /// disk.
+    pub fn trace(mut self, path: impl Into<std::path::PathBuf>) -> Self {
+        self.trace = Some(path.into());
+        self
     }
 
     /// Size the deterministic worker pool shared by the power-step
@@ -227,6 +241,10 @@ impl<'a> Session<'a> {
     /// Execute the session and collect the unified report.
     pub fn solve(mut self) -> SolveReport {
         self.check_schedule_engine();
+        let trace_path = self.trace.take();
+        if trace_path.is_some() {
+            crate::obs::trace::enable(crate::obs::trace::DEFAULT_CAPACITY);
+        }
         let stop = self
             .stop
             .clone()
@@ -322,6 +340,13 @@ impl<'a> Session<'a> {
             };
             report.eigenvalues =
                 Some(estimate_eigenvalues_from(self.problem, &stack, &comm, rounds));
+        }
+        if let Some(path) = trace_path {
+            crate::obs::trace::disable();
+            let snap = crate::obs::trace::snapshot();
+            if let Err(e) = crate::obs::export::write_auto(&path, &snap) {
+                eprintln!("warning: could not write trace {}: {e}", path.display());
+            }
         }
         report
     }

@@ -67,6 +67,55 @@ pub mod shim;
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 
+/// Flight-recorder hooks for the dispatch path. Scheduling events
+/// (which worker claimed which chunk, busy/idle transitions) are
+/// timing-dependent by nature, so [`crate::obs::trace`] marks their
+/// kinds non-deterministic and excludes them from replay comparison.
+/// Under loom the recorder's globals (std statics and thread-locals)
+/// live outside the model, so every hook compiles to a no-op there.
+#[cfg(not(feature = "loom"))]
+mod obs_hooks {
+    use crate::obs::trace::{record, EventKind};
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    /// Process-wide job sequence number (the `a` payload of
+    /// [`EventKind::JobPublish`]).
+    static JOB_SEQ: AtomicU64 = AtomicU64::new(0);
+
+    #[inline]
+    pub fn job_publish(chunks: usize) {
+        let seq = JOB_SEQ.fetch_add(1, Ordering::Relaxed);
+        record(EventKind::JobPublish, seq, chunks as u64);
+    }
+
+    #[inline]
+    pub fn chunk_claim(worker: usize, chunk: usize) {
+        record(EventKind::ChunkClaim, worker as u64, chunk as u64);
+    }
+
+    #[inline]
+    pub fn worker_busy(worker: usize, chunk: usize) {
+        record(EventKind::WorkerBusy, worker as u64, chunk as u64);
+    }
+
+    #[inline]
+    pub fn worker_idle(worker: usize, chunk: usize) {
+        record(EventKind::WorkerIdle, worker as u64, chunk as u64);
+    }
+}
+
+#[cfg(feature = "loom")]
+mod obs_hooks {
+    #[inline]
+    pub fn job_publish(_chunks: usize) {}
+    #[inline]
+    pub fn chunk_claim(_worker: usize, _chunk: usize) {}
+    #[inline]
+    pub fn worker_busy(_worker: usize, _chunk: usize) {}
+    #[inline]
+    pub fn worker_idle(_worker: usize, _chunk: usize) {}
+}
+
 use shim::sync::atomic::{AtomicBool, Ordering};
 use shim::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard};
 use shim::thread::JoinHandle;
@@ -175,7 +224,7 @@ impl Drop for CompletionGuard<'_> {
     }
 }
 
-fn worker_loop(shared: Arc<Shared>) {
+fn worker_loop(idx: usize, shared: Arc<Shared>) {
     loop {
         let (job, chunk) = {
             let mut st = lock(&shared.state);
@@ -211,13 +260,16 @@ fn worker_loop(shared: Arc<Shared>) {
                 };
             }
         };
+        obs_hooks::chunk_claim(idx, chunk);
         // Completion accounting is owed from this point on, no matter
         // how the chunk exits.
         let mut guard = CompletionGuard { shared: &*shared, panicked: false };
         // SAFETY: the dispatcher blocks until `remaining == 0`, so the
         // closure (and everything it borrows) is alive for this call.
         let f = unsafe { &*job.f };
+        obs_hooks::worker_busy(idx, chunk);
         let result = catch_unwind(AssertUnwindSafe(|| f(chunk)));
+        obs_hooks::worker_idle(idx, chunk);
         guard.panicked = result.is_err();
         drop(guard);
     }
@@ -291,7 +343,7 @@ impl Executor {
                 .map(|idx| {
                     let shared = Arc::clone(&shared);
                     shim::thread::spawn_named(format!("deepca-worker-{idx}"), move || {
-                        worker_loop(shared)
+                        worker_loop(idx, shared)
                     })
                 })
                 .collect();
@@ -333,6 +385,7 @@ impl Executor {
             return;
         }
         let _region = lock(&pool.dispatch);
+        obs_hooks::job_publish(nchunks);
         let ptr: *const (dyn Fn(usize) + Sync) = f;
         // SAFETY: lifetime erasure only; the pointer is dereferenced
         // exclusively before this function returns (completion wait
@@ -375,8 +428,11 @@ impl Executor {
                     st.next_chunk += 1;
                     c
                 };
+                obs_hooks::chunk_claim(0, chunk);
                 let mut guard = CompletionGuard { shared: &*pool.shared, panicked: false };
+                obs_hooks::worker_busy(0, chunk);
                 let result = catch_unwind(AssertUnwindSafe(|| f(chunk)));
+                obs_hooks::worker_idle(0, chunk);
                 guard.panicked = result.is_err();
                 drop(guard);
             }

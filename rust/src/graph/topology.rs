@@ -168,6 +168,46 @@ impl Topology {
         Topology::from_edges(n, &edges, "barbell")
     }
 
+    /// Parse a whitespace-separated edge list (`u v` per line; blank
+    /// lines and `#` comment lines skipped) into a topology on
+    /// `max node + 1` agents — the `--topology file` loader. Fallible
+    /// (malformed input comes from user files, not crate bugs): reports
+    /// the offending line for non-numeric tokens, wrong token counts,
+    /// and self-loops, and rejects empty inputs.
+    pub fn from_edge_list_text(text: &str, name: &str) -> Result<Self, String> {
+        let mut edges: Vec<(usize, usize)> = Vec::new();
+        let mut max_node = 0usize;
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let (Some(a), Some(b), None) = (it.next(), it.next(), it.next()) else {
+                return Err(format!(
+                    "line {}: expected exactly two node ids, got {:?}",
+                    lineno + 1,
+                    line
+                ));
+            };
+            let parse = |tok: &str| {
+                tok.parse::<usize>().map_err(|_| {
+                    format!("line {}: {:?} is not a node id", lineno + 1, tok)
+                })
+            };
+            let (u, v) = (parse(a)?, parse(b)?);
+            if u == v {
+                return Err(format!("line {}: self-loop {u} {v}", lineno + 1));
+            }
+            max_node = max_node.max(u).max(v);
+            edges.push((u, v));
+        }
+        if edges.is_empty() {
+            return Err("edge list has no edges".to_string());
+        }
+        Ok(Topology::from_edges(max_node + 1, &edges, name))
+    }
+
     /// Number of nodes.
     pub fn n(&self) -> usize {
         self.n
@@ -394,6 +434,34 @@ mod tests {
         assert_eq!(t.neighbors(0), &[1, 5]);
         assert_eq!(t.neighbors(3), &[2, 4]);
         assert_eq!(t.edges(), Topology::ring(6).edges());
+    }
+
+    #[test]
+    fn edge_list_text_round_trips() {
+        let t = Topology::from_edge_list_text(
+            "# a ring of four with a chord\n0 1\n1 2\n\n2 3\n3 0\n0 2\n",
+            "file",
+        )
+        .expect("well-formed edge list");
+        assert_eq!(t.n(), 4);
+        assert_eq!(t.num_edges(), 5);
+        assert_eq!(t.neighbors(0), &[1, 2, 3]);
+        assert!(t.is_connected());
+    }
+
+    #[test]
+    fn edge_list_text_rejects_malformed_input() {
+        for (text, needle) in [
+            ("0 1\n2\n", "exactly two"),
+            ("0 1 2\n", "exactly two"),
+            ("0 x\n", "not a node id"),
+            ("3 3\n", "self-loop"),
+            ("# only comments\n\n", "no edges"),
+        ] {
+            let err = Topology::from_edge_list_text(text, "bad")
+                .expect_err(&format!("{text:?} must be rejected"));
+            assert!(err.contains(needle), "{text:?}: {err}");
+        }
     }
 
     #[test]

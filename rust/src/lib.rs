@@ -80,6 +80,7 @@
 #![allow(clippy::needless_range_loop, clippy::field_reassign_with_default)]
 
 pub mod util;
+pub mod obs;
 pub mod exec;
 pub mod linalg;
 pub mod graph;

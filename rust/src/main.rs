@@ -11,8 +11,9 @@
 //!              [--drop-prob 0.05] [--latency 3] [--noise 0.01] [--churn 0.2]   # sim engine
 //!              [--dataset w8a|a9a] [--data path/to/libsvm] [--topology er|ring|grid|star|complete|rr]
 //! deepca info  [--dataset w8a|a9a] [--data path]   # spectrum / network diagnostics
-//! deepca gossip [--agents 100000] [--topology ring|grid|rr|er] [--degree 4]
-//!              [--rounds 8] [--d 8] [--k 2] [--threads N] [--seed S]
+//! deepca gossip [--agents 100000] [--topology ring|grid|rr|er|file] [--degree 4]
+//!              [--edge-file path] [--rounds 8] [--d 8] [--k 2] [--threads N] [--seed S]
+//! deepca trace <trace.jsonl>   # summarize a --trace capture
 //! ```
 
 use anyhow::{bail, Context, Result};
@@ -57,6 +58,7 @@ fn run() -> Result<()> {
         Some("stream") => cmd_stream(&args),
         Some("info") => cmd_info(&args),
         Some("gossip") => cmd_gossip(&args),
+        Some("trace") => cmd_trace(&args),
         Some("help") | None => {
             print_help();
             Ok(())
@@ -76,17 +78,32 @@ USAGE:
               [--m N] [--n N] [--k N] [--rounds K] [--iters T] [--tol EPS]
               [--k-policy fixed|increasing] [--k-base K0] [--k-slope S]
               [--drop-prob P] [--latency L] [--noise STD] [--churn P]
-              [--dataset w8a|a9a] [--data libsvm-file] [--topology er|ring|grid|star|complete|rr]
-              [--seed S]
+              [--dataset w8a|a9a] [--data libsvm-file]
+              [--topology er|ring|grid|star|complete|rr|file] [--edge-file PATH]
+              [--seed S] [--trace PATH]
   deepca stream [--drift RATE | --change-at E | --fade RATE]
               [--window ROWS | --forget BETA] [--cold]
               [--m N] [--d N] [--k N] [--batch N] [--epochs E]
               [--rounds K] [--power-iters T] [--engine dense|parallel|threaded|sim]
               [--threads N] [--drop-prob P] [--latency L] [--noise STD] [--churn P]
-              [--topology er|ring|grid|star|complete|rr] [--seed S]
+              [--topology er|ring|grid|star|complete|rr|file] [--edge-file PATH]
+              [--seed S] [--trace PATH]
   deepca info [--dataset w8a|a9a] [--data libsvm-file] [--m N] [--k N]
-  deepca gossip [--agents 100000] [--topology ring|grid|rr|er] [--degree 4]
-              [--rounds 8] [--d 8] [--k 2] [--threads N] [--seed S]
+  deepca gossip [--agents 100000] [--topology ring|grid|rr|er|file] [--degree 4]
+              [--edge-file PATH] [--rounds 8] [--d 8] [--k 2] [--threads N]
+              [--seed S] [--trace PATH]
+  deepca trace <trace.jsonl>
+
+Flight recorder (--trace PATH): records solver phases, gossip rounds,
+SimNet faults, and executor dispatch into preallocated per-thread ring
+buffers, then writes PATH on exit — `.json` is Chrome Trace Format
+(load in Perfetto / chrome://tracing), anything else is JSONL for
+`deepca trace`, which prints top spans by self-time, per-worker
+utilization, gossip volume, and the fault timeline.
+
+Edge-list topologies (--topology file --edge-file PATH): whitespace-
+separated `u v` node-id pairs, one edge per line (`#` comments and
+blank lines ignored); the file fixes the agent count.
 
 Fleet-scale smoke (deepca gossip): builds sparse CSR Metropolis gossip
 weights over --agents nodes (no n×n matrix anywhere), estimates λ₂ by
@@ -194,6 +211,42 @@ fn load_dataset(args: &Args, cfg: &ConfigMap, m: usize, n: usize) -> Result<Data
     }
 }
 
+/// Resolve `--topology`, including the `file` kind (`--edge-file
+/// <path>`: whitespace-separated `u v` lines). A file topology fixes
+/// the agent count itself; `m_from_file` says whether the caller can
+/// adopt it (`deepca gossip` without an explicit `--agents`) or must
+/// see it match the problem's agent count.
+fn resolve_topology(
+    args: &Args,
+    kind: &str,
+    m: usize,
+    m_from_file: bool,
+    seed: u64,
+    degree: usize,
+) -> Result<Topology> {
+    if kind == "file" {
+        let path = args
+            .options
+            .get("edge-file")
+            .ok_or_else(|| anyhow::anyhow!("--topology file requires --edge-file <path>"))?;
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading edge list {path}"))?;
+        let topo = Topology::from_edge_list_text(&text, &format!("file({path})"))
+            .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        if !m_from_file && topo.n() != m {
+            bail!(
+                "{path}: edge list spans {} agents but the run asked for {m}",
+                topo.n()
+            );
+        }
+        if !topo.is_connected() {
+            bail!("{path}: edge-list graph is not connected");
+        }
+        return Ok(topo);
+    }
+    build_topology(kind, m, seed, degree)
+}
+
 fn build_topology(kind: &str, m: usize, seed: u64, degree: usize) -> Result<Topology> {
     Ok(match kind {
         "er" => Topology::erdos_renyi(m, 0.5, &mut Rng::seed_from(seed)),
@@ -298,9 +351,11 @@ fn cmd_run(args: &Args) -> Result<()> {
         ds.density()
     );
     let problem = Problem::from_dataset(&ds, m, k);
-    let topo = build_topology(
+    let topo = resolve_topology(
+        args,
         &args.str_or("topology", &cfg.str_or("topology", "er")),
         m,
+        false,
         seed + 1,
         args.usize_or("degree", cfg.usize_or("degree", 4)?)?,
     )?;
@@ -377,6 +432,9 @@ fn cmd_run(args: &Args) -> Result<()> {
         .threads(threads);
     if let Some(sched) = schedule {
         session = session.schedule(sched);
+    }
+    if let Some(path) = args.options.get("trace") {
+        session = session.trace(path);
     }
     let report = session.solve();
     println!(
@@ -491,9 +549,11 @@ fn cmd_stream(args: &Args) -> Result<()> {
         drift,
         seed,
     });
-    let topo = build_topology(
+    let topo = resolve_topology(
+        args,
         &args.str_or("topology", "er"),
         m,
+        false,
         seed + 1,
         args.usize_or("degree", 4)?,
     )?;
@@ -522,6 +582,9 @@ fn cmd_stream(args: &Args) -> Result<()> {
     }
     if churn > 0.0 {
         session = session.schedule(TopologySchedule::markov(topo.clone(), churn, 0.5, seed + 2, 1));
+    }
+    if let Some(path) = args.options.get("trace") {
+        session = session.trace(path);
     }
 
     println!(
@@ -564,6 +627,20 @@ fn cmd_stream(args: &Args) -> Result<()> {
     );
     let path = deepca::experiments::report::write_result(&fname, &report.to_csv())?;
     println!("wrote {}", path.display());
+    Ok(())
+}
+
+/// `deepca trace <file>` — summarize a JSONL flight-recorder trace:
+/// top spans by self-time, per-worker utilization, gossip volume, and
+/// the fault timeline.
+fn cmd_trace(args: &Args) -> Result<()> {
+    let Some(path) = args.positionals.first() else {
+        bail!("usage: deepca trace <trace.jsonl> (captured via --trace)");
+    };
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let summary = deepca::obs::summary::summarize(&text)
+        .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    print!("{summary}");
     Ok(())
 }
 
@@ -617,7 +694,16 @@ fn cmd_gossip(args: &Args) -> Result<()> {
         bail!("--rounds {rounds}: must run at least one round");
     }
     let kind = args.str_or("topology", "ring");
-    let topo = build_topology(&kind, m, seed + 1, args.usize_or("degree", 4)?)?;
+    let topo = resolve_topology(
+        args,
+        &kind,
+        m,
+        !args.options.contains_key("agents"),
+        seed + 1,
+        args.usize_or("degree", 4)?,
+    )?;
+    // A file topology fixes the agent count itself.
+    let m = topo.n();
 
     let t = Timer::start();
     let sparse = SparseGossip::metropolis(&topo);
@@ -639,10 +725,21 @@ fn cmd_gossip(args: &Args) -> Result<()> {
     let mean0 = stack.mean();
     let dev0 = stack.deviation_from_mean();
 
+    let trace_path = args.options.get("trace");
+    if trace_path.is_some() {
+        deepca::obs::trace::enable(deepca::obs::trace::DEFAULT_CAPACITY);
+    }
     let mut stats = CommStats::default();
     let t = Timer::start();
     comm.fastmix(&mut stack, rounds, &mut stats);
     let mix_secs = t.elapsed_secs();
+    if let Some(path) = trace_path {
+        deepca::obs::trace::disable();
+        let snap = deepca::obs::trace::snapshot();
+        deepca::obs::export::write_auto(Path::new(path), &snap)
+            .with_context(|| format!("writing trace {path}"))?;
+        println!("wrote trace {path}");
+    }
     println!(
         "{rounds} FastMix rounds over {d}x{k} iterates in {mix_secs:.3}s \
          ({:.1} ms/round, {:.3e} edge-scalars/s)",

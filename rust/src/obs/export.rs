@@ -1,0 +1,250 @@
+//! Post-run trace exporters: JSON Lines (the `deepca trace` summarizer
+//! input) and Chrome Trace Format (loadable in Perfetto /
+//! `chrome://tracing`).
+//!
+//! Exporters run *after* a capture — they drain ring snapshots and may
+//! allocate freely; nothing here is on a hot path. Both formats are
+//! written with hand-rolled formatting (the repo vendors no serde).
+
+use super::trace::{Event, EventKind, ThreadEvents};
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+/// Minimal JSON string escape (thread names are the only free-form
+/// strings in either format).
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// One event per line:
+/// `{"tid":0,"thread":"main","kind":"StepBegin","code":1,"t_ns":12,"a":7,"b":0}`.
+/// A ring that overflowed leads with a synthetic
+/// [`EventKind::RingDropped`] line (`a` = events lost).
+pub fn write_jsonl(path: &Path, snapshot: &[ThreadEvents]) -> std::io::Result<()> {
+    let file = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(file);
+    for (tid, thread) in snapshot.iter().enumerate() {
+        let name = escape(&thread.name);
+        if thread.dropped > 0 {
+            write_jsonl_line(
+                &mut w,
+                tid,
+                &name,
+                &Event {
+                    kind: EventKind::RingDropped,
+                    t_ns: 0,
+                    a: thread.dropped,
+                    b: 0,
+                },
+            )?;
+        }
+        for ev in &thread.events {
+            if ev.kind == EventKind::Nop {
+                continue;
+            }
+            write_jsonl_line(&mut w, tid, &name, ev)?;
+        }
+    }
+    w.flush()
+}
+
+fn write_jsonl_line(
+    w: &mut impl Write,
+    tid: usize,
+    thread: &str,
+    ev: &Event,
+) -> std::io::Result<()> {
+    writeln!(
+        w,
+        "{{\"tid\":{tid},\"thread\":\"{thread}\",\"kind\":\"{}\",\"code\":{},\"t_ns\":{},\"a\":{},\"b\":{}}}",
+        ev.kind.name(),
+        ev.kind.code(),
+        ev.t_ns,
+        ev.a,
+        ev.b
+    )
+}
+
+/// Chrome Trace Format: `{"displayTimeUnit":"ns","traceEvents":[...]}`
+/// with thread-name metadata, `B`/`E` duration events for spans, and
+/// `i` instants (scope `t`) for everything else. `ts` is microseconds
+/// (the format's unit) at nanosecond precision.
+pub fn write_chrome(path: &Path, snapshot: &[ThreadEvents]) -> std::io::Result<()> {
+    let file = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(file);
+    write!(w, "{{\"displayTimeUnit\":\"ns\",\"traceEvents\":[")?;
+    let mut first = true;
+    let mut emit = |w: &mut BufWriter<std::fs::File>, body: &str| -> std::io::Result<()> {
+        if first {
+            first = false;
+        } else {
+            write!(w, ",")?;
+        }
+        write!(w, "\n{body}")
+    };
+    for (tid, thread) in snapshot.iter().enumerate() {
+        let name = escape(&thread.name);
+        emit(
+            &mut w,
+            &format!(
+                "{{\"ph\":\"M\",\"pid\":1,\"tid\":{tid},\"name\":\"thread_name\",\
+                 \"args\":{{\"name\":\"{name}\"}}}}"
+            ),
+        )?;
+        if thread.dropped > 0 {
+            emit(
+                &mut w,
+                &format!(
+                    "{{\"ph\":\"i\",\"pid\":1,\"tid\":{tid},\"ts\":0,\"s\":\"t\",\
+                     \"name\":\"RingDropped\",\"args\":{{\"a\":{},\"b\":0}}}}",
+                    thread.dropped
+                ),
+            )?;
+        }
+        for ev in &thread.events {
+            if ev.kind == EventKind::Nop {
+                continue;
+            }
+            let ts = format_us(ev.t_ns);
+            let body = if ev.kind.is_begin() {
+                format!(
+                    "{{\"ph\":\"B\",\"pid\":1,\"tid\":{tid},\"ts\":{ts},\"name\":\"{}\",\
+                     \"args\":{{\"a\":{},\"b\":{}}}}}",
+                    ev.kind.span_label().unwrap_or("span"),
+                    ev.a,
+                    ev.b
+                )
+            } else if ev.kind.is_end() {
+                format!(
+                    "{{\"ph\":\"E\",\"pid\":1,\"tid\":{tid},\"ts\":{ts},\"name\":\"{}\"}}",
+                    ev.kind.span_label().unwrap_or("span")
+                )
+            } else {
+                format!(
+                    "{{\"ph\":\"i\",\"pid\":1,\"tid\":{tid},\"ts\":{ts},\"s\":\"t\",\
+                     \"name\":\"{}\",\"args\":{{\"a\":{},\"b\":{}}}}}",
+                    ev.kind.name(),
+                    ev.a,
+                    ev.b
+                )
+            };
+            emit(&mut w, &body)?;
+        }
+    }
+    write!(w, "\n]}}")?;
+    w.flush()
+}
+
+/// Microseconds with nanosecond precision, without float formatting
+/// drift: `1234567 ns` → `"1234.567"`.
+fn format_us(t_ns: u64) -> String {
+    format!("{}.{:03}", t_ns / 1000, t_ns % 1000)
+}
+
+/// Pick the format from the extension: `.json` writes Chrome Trace
+/// Format (drop the file straight into Perfetto); anything else writes
+/// JSON Lines (the `deepca trace` summarizer input).
+pub fn write_auto(path: &Path, snapshot: &[ThreadEvents]) -> std::io::Result<()> {
+    match path.extension().and_then(|e| e.to_str()) {
+        Some("json") => write_chrome(path, snapshot),
+        _ => write_jsonl(path, snapshot),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_snapshot() -> Vec<ThreadEvents> {
+        vec![
+            ThreadEvents {
+                name: String::from("main"),
+                dropped: 0,
+                events: vec![
+                    Event { kind: EventKind::StepBegin, t_ns: 1000, a: 0, b: 0 },
+                    Event { kind: EventKind::GossipRound, t_ns: 1500, a: 6, b: 1 },
+                    Event { kind: EventKind::StepEnd, t_ns: 2500, a: 0, b: 0 },
+                ],
+            },
+            ThreadEvents {
+                name: String::from("deepca-worker-1"),
+                dropped: 3,
+                events: vec![Event { kind: EventKind::ChunkClaim, t_ns: 1200, a: 1, b: 1 }],
+            },
+        ]
+    }
+
+    #[test]
+    fn jsonl_export_round_trips_lines() {
+        let dir = std::env::temp_dir().join("deepca_obs_test_jsonl");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.jsonl");
+        write_jsonl(&path, &sample_snapshot()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        // 3 main events + RingDropped marker + 1 worker event.
+        assert_eq!(lines.len(), 5);
+        assert!(lines[0].contains("\"kind\":\"StepBegin\""));
+        assert!(lines[1].contains("\"a\":6"));
+        assert!(lines[1].contains("\"b\":1"));
+        assert!(lines[3].contains("\"kind\":\"RingDropped\""));
+        assert!(lines[3].contains("\"a\":3"));
+        assert!(lines[4].contains("\"thread\":\"deepca-worker-1\""));
+        // Every line is a standalone JSON object.
+        assert!(lines.iter().all(|l| l.starts_with('{') && l.ends_with('}')));
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn chrome_export_is_balanced_json() {
+        let dir = std::env::temp_dir().join("deepca_obs_test_chrome");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.json");
+        write_chrome(&path, &sample_snapshot()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with('{') && text.trim_end().ends_with('}'));
+        assert!(text.contains("\"traceEvents\""));
+        assert!(text.contains("\"ph\":\"B\""));
+        assert!(text.contains("\"ph\":\"E\""));
+        assert!(text.contains("\"ph\":\"M\""));
+        assert!(text.contains("\"name\":\"step\""));
+        // µs timestamps at ns precision: 1500 ns → 1.500 µs.
+        assert!(text.contains("\"ts\":1.500"));
+        // Structural balance (no nested objects are left open).
+        let opens = text.matches('{').count();
+        let closes = text.matches('}').count();
+        assert_eq!(opens, closes);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn auto_picks_format_by_extension() {
+        let dir = std::env::temp_dir().join("deepca_obs_test_auto");
+        std::fs::create_dir_all(&dir).unwrap();
+        let chrome = dir.join("t.json");
+        let jsonl = dir.join("t.jsonl");
+        write_auto(&chrome, &sample_snapshot()).unwrap();
+        write_auto(&jsonl, &sample_snapshot()).unwrap();
+        assert!(std::fs::read_to_string(&chrome).unwrap().contains("traceEvents"));
+        assert!(!std::fs::read_to_string(&jsonl).unwrap().contains("traceEvents"));
+        std::fs::remove_file(&chrome).unwrap();
+        std::fs::remove_file(&jsonl).unwrap();
+    }
+
+    #[test]
+    fn escape_handles_quotes_and_controls() {
+        assert_eq!(escape("plain"), "plain");
+        assert_eq!(escape("a\"b"), "a\\\"b");
+        assert_eq!(escape("a\\b"), "a\\\\b");
+        assert_eq!(escape("a\nb"), "a\\u000ab");
+    }
+}

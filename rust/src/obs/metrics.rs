@@ -1,0 +1,323 @@
+//! Static metrics registry: named counters and log-scale histograms,
+//! preregistered as `static`s so steady state allocates nothing.
+//!
+//! This unifies what `CommStats`, `RunRecorder`, and benchkit each
+//! half-did: one process-wide place where event payloads accumulate
+//! under atomic increments. [`bump`] is fed by every
+//! [`crate::obs::trace::record`] call (registered hot region);
+//! [`observe_span`] is fed by span guards on drop. [`reset`] runs at
+//! every capture start so the registry describes exactly one run.
+
+use super::trace::{EventKind, SpanKind};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Monotonic named counter.
+pub struct Counter {
+    name: &'static str,
+    val: AtomicU64,
+}
+
+impl Counter {
+    const fn new(name: &'static str) -> Counter {
+        Counter { name, val: AtomicU64::new(0) }
+    }
+
+    /// Registry name (dotted, e.g. `gossip.rounds`).
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    #[inline]
+    pub fn add(&self, v: u64) {
+        self.val.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.val.load(Ordering::Relaxed)
+    }
+
+    fn reset(&self) {
+        self.val.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Number of power-of-two buckets per histogram: bucket `i` holds
+/// values `v` with `i = bit_length(v)` (so bucket 0 is exactly `v = 0`,
+/// bucket 1 is `v = 1`, bucket 11 is `1024 ≤ v < 2048`, …), saturating
+/// at the top bucket.
+pub const HISTOGRAM_BUCKETS: usize = 40;
+
+/// Fixed log₂-bucket histogram (durations in nanoseconds): 40 buckets
+/// cover 1 ns … ~9 minutes, each observation is two atomic adds and one
+/// atomic increment, and the bucket array is a `static` — nothing ever
+/// grows.
+pub struct Histogram {
+    name: &'static str,
+    buckets: [AtomicU64; HISTOGRAM_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Histogram {
+    const fn new(name: &'static str) -> Histogram {
+        Histogram {
+            name,
+            buckets: [const { AtomicU64::new(0) }; HISTOGRAM_BUCKETS],
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    /// Registry name (dotted, e.g. `span.gossip.ns`).
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// Bucket index of a value: its bit length, saturated to the table.
+    #[inline]
+    pub fn bucket_of(v: u64) -> usize {
+        ((u64::BITS - v.leading_zeros()) as usize).min(HISTOGRAM_BUCKETS - 1)
+    }
+
+    #[inline]
+    pub fn observe(&self, v: u64) {
+        self.buckets[Self::bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Mean observation, or 0 when empty.
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum() as f64 / n as f64
+        }
+    }
+
+    /// Bucket counts (index = bit length of the value).
+    pub fn bucket_counts(&self) -> [u64; HISTOGRAM_BUCKETS] {
+        let mut out = [0u64; HISTOGRAM_BUCKETS];
+        for (slot, bucket) in out.iter_mut().zip(self.buckets.iter()) {
+            *slot = bucket.load(Ordering::Relaxed);
+        }
+        out
+    }
+
+    fn reset(&self) {
+        for bucket in &self.buckets {
+            bucket.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum.store(0, Ordering::Relaxed);
+    }
+}
+
+// ------------------------------------------------------------ registry
+
+/// Events recorded (all kinds).
+pub static TRACE_EVENTS: Counter = Counter::new("trace.events");
+/// Solver steps started.
+pub static SOLVER_STEPS: Counter = Counter::new("solver.steps");
+/// FastMix calls (mixes).
+pub static GOSSIP_MIXES: Counter = Counter::new("gossip.mixes");
+/// Gossip rounds executed.
+pub static GOSSIP_ROUNDS: Counter = Counter::new("gossip.rounds");
+/// Messages dropped by the fault model.
+pub static GOSSIP_DROPPED: Counter = Counter::new("gossip.dropped");
+/// Payload bytes moved by gossip rounds.
+pub static GOSSIP_BYTES: Counter = Counter::new("gossip.bytes");
+/// SimNet virtual ticks elapsed in gossip rounds.
+pub static GOSSIP_VTICKS: Counter = Counter::new("gossip.vticks");
+/// Parallel regions dispatched by the executor.
+pub static EXEC_JOBS: Counter = Counter::new("exec.jobs");
+/// Chunks claimed across all workers.
+pub static EXEC_CHUNKS: Counter = Counter::new("exec.chunks");
+/// Streaming epochs started.
+pub static STREAM_EPOCHS: Counter = Counter::new("stream.epochs");
+
+/// Span-duration histograms, one per [`SpanKind`].
+pub static SPAN_STEP_NS: Histogram = Histogram::new("span.step.ns");
+pub static SPAN_LOCAL_PRODUCT_NS: Histogram = Histogram::new("span.local_product.ns");
+pub static SPAN_TRACKING_UPDATE_NS: Histogram = Histogram::new("span.tracking_update.ns");
+pub static SPAN_GOSSIP_NS: Histogram = Histogram::new("span.gossip.ns");
+pub static SPAN_QR_NS: Histogram = Histogram::new("span.qr.ns");
+pub static SPAN_EPOCH_NS: Histogram = Histogram::new("span.epoch.ns");
+pub static SPAN_INGEST_NS: Histogram = Histogram::new("span.ingest.ns");
+pub static SPAN_REFRESH_NS: Histogram = Histogram::new("span.refresh.ns");
+pub static SPAN_EPOCH_SOLVE_NS: Histogram = Histogram::new("span.epoch_solve.ns");
+
+/// Every registered counter, in render order.
+pub fn counters() -> [&'static Counter; 10] {
+    [
+        &TRACE_EVENTS,
+        &SOLVER_STEPS,
+        &GOSSIP_MIXES,
+        &GOSSIP_ROUNDS,
+        &GOSSIP_DROPPED,
+        &GOSSIP_BYTES,
+        &GOSSIP_VTICKS,
+        &EXEC_JOBS,
+        &EXEC_CHUNKS,
+        &STREAM_EPOCHS,
+    ]
+}
+
+/// Every registered histogram, in render order.
+pub fn histograms() -> [&'static Histogram; 9] {
+    [
+        &SPAN_STEP_NS,
+        &SPAN_LOCAL_PRODUCT_NS,
+        &SPAN_TRACKING_UPDATE_NS,
+        &SPAN_GOSSIP_NS,
+        &SPAN_QR_NS,
+        &SPAN_EPOCH_NS,
+        &SPAN_INGEST_NS,
+        &SPAN_REFRESH_NS,
+        &SPAN_EPOCH_SOLVE_NS,
+    ]
+}
+
+/// The histogram a span kind's durations land in.
+pub fn span_histogram(kind: SpanKind) -> &'static Histogram {
+    match kind {
+        SpanKind::Step => &SPAN_STEP_NS,
+        SpanKind::LocalProduct => &SPAN_LOCAL_PRODUCT_NS,
+        SpanKind::TrackingUpdate => &SPAN_TRACKING_UPDATE_NS,
+        SpanKind::Gossip => &SPAN_GOSSIP_NS,
+        SpanKind::Qr => &SPAN_QR_NS,
+        SpanKind::Epoch => &SPAN_EPOCH_NS,
+        SpanKind::Ingest => &SPAN_INGEST_NS,
+        SpanKind::Refresh => &SPAN_REFRESH_NS,
+        SpanKind::EpochSolve => &SPAN_EPOCH_SOLVE_NS,
+    }
+}
+
+/// Route one recorded event's payload into the registry — atomic adds
+/// against preregistered statics only (registered hot region).
+#[inline]
+pub fn bump(kind: EventKind, a: u64, b: u64) {
+    TRACE_EVENTS.add(1);
+    match kind {
+        EventKind::StepBegin => SOLVER_STEPS.add(1),
+        EventKind::GossipBegin => GOSSIP_MIXES.add(1),
+        EventKind::GossipRound => {
+            GOSSIP_ROUNDS.add(1);
+            GOSSIP_DROPPED.add(b);
+        }
+        EventKind::GossipRoundIo => {
+            GOSSIP_VTICKS.add(a);
+            GOSSIP_BYTES.add(b);
+        }
+        EventKind::JobPublish => EXEC_JOBS.add(1),
+        EventKind::ChunkClaim => EXEC_CHUNKS.add(1),
+        EventKind::EpochBegin => STREAM_EPOCHS.add(1),
+        _ => {}
+    }
+}
+
+/// Record one span duration (called by span guards on drop).
+#[inline]
+pub fn observe_span(kind: SpanKind, ns: u64) {
+    span_histogram(kind).observe(ns);
+}
+
+/// Zero every counter and histogram (capture start).
+pub fn reset() {
+    for c in counters() {
+        c.reset();
+    }
+    for h in histograms() {
+        h.reset();
+    }
+}
+
+/// Human-readable registry dump (the CLI prints this after a traced
+/// run). Counters first, then non-empty span histograms.
+pub fn render() -> String {
+    let mut out = String::new();
+    for c in counters() {
+        out.push_str(&format!("{:<24} {}\n", c.name(), c.get()));
+    }
+    for h in histograms() {
+        if h.count() > 0 {
+            out.push_str(&format!(
+                "{:<24} n={} mean={:.0}ns\n",
+                h.name(),
+                h.count(),
+                h.mean()
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_indexing_is_log2() {
+        assert_eq!(Histogram::bucket_of(0), 0);
+        assert_eq!(Histogram::bucket_of(1), 1);
+        assert_eq!(Histogram::bucket_of(2), 2);
+        assert_eq!(Histogram::bucket_of(3), 2);
+        assert_eq!(Histogram::bucket_of(1024), 11);
+        assert_eq!(Histogram::bucket_of(u64::MAX), HISTOGRAM_BUCKETS - 1);
+    }
+
+    #[test]
+    fn bump_routes_payloads() {
+        let _guard = crate::obs::trace::test_lock();
+        reset();
+        bump(EventKind::GossipRound, 6, 2);
+        bump(EventKind::GossipRound, 6, 1);
+        bump(EventKind::GossipRoundIo, 3, 960);
+        bump(EventKind::StepBegin, 0, 0);
+        assert_eq!(TRACE_EVENTS.get(), 4);
+        assert_eq!(GOSSIP_ROUNDS.get(), 2);
+        assert_eq!(GOSSIP_DROPPED.get(), 3);
+        assert_eq!(GOSSIP_VTICKS.get(), 3);
+        assert_eq!(GOSSIP_BYTES.get(), 960);
+        assert_eq!(SOLVER_STEPS.get(), 1);
+        reset();
+        assert_eq!(TRACE_EVENTS.get(), 0);
+        assert_eq!(GOSSIP_BYTES.get(), 0);
+    }
+
+    #[test]
+    fn histogram_accumulates_and_resets() {
+        let _guard = crate::obs::trace::test_lock();
+        reset();
+        SPAN_QR_NS.observe(100);
+        SPAN_QR_NS.observe(300);
+        assert_eq!(SPAN_QR_NS.count(), 2);
+        assert_eq!(SPAN_QR_NS.sum(), 400);
+        assert!((SPAN_QR_NS.mean() - 200.0).abs() < 1e-9);
+        let buckets = SPAN_QR_NS.bucket_counts();
+        assert_eq!(buckets[Histogram::bucket_of(100)], 1);
+        assert_eq!(buckets[Histogram::bucket_of(300)], 1);
+        assert_eq!(buckets.iter().sum::<u64>(), 2);
+        reset();
+        assert_eq!(SPAN_QR_NS.count(), 0);
+    }
+
+    #[test]
+    fn render_lists_every_counter() {
+        let _guard = crate::obs::trace::test_lock();
+        reset();
+        let out = render();
+        for c in counters() {
+            assert!(out.contains(c.name()), "render missing {}", c.name());
+        }
+    }
+}

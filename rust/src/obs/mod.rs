@@ -1,0 +1,49 @@
+//! `obs` — the flight recorder: structured tracing, a metrics registry,
+//! and post-run exporters.
+//!
+//! The repo's three standing contracts shape every piece of this
+//! subsystem:
+//!
+//! - **Zero steady-state allocation.** Events are fixed-size 32-byte
+//!   records written into preallocated per-thread ring buffers
+//!   ([`trace::Recorder::with_capacity`]); recording is an atomic
+//!   enabled check, a couple of counter bumps, and one indexed store.
+//!   No formatting, boxing, or channel nodes anywhere on the hot path —
+//!   `rust/tests/alloc_free.rs` audits a traced `Solver::step` at zero
+//!   allocations after warm-up.
+//! - **Bit-determinism.** Every event that describes *algorithmic*
+//!   progress (solver phases, gossip rounds, SimNet drops) is recorded
+//!   on the caller thread in program order, so the deterministic event
+//!   stream — timestamps masked — is identical across thread counts and
+//!   seeded replays ([`trace::deterministic_events`]). Events that
+//!   describe *scheduling* (job publish, chunk claims, worker busy/idle)
+//!   are inherently thread-count-dependent and are excluded from the
+//!   comparison by kind.
+//! - **One timing seam.** Timestamps come only from
+//!   [`crate::util::timer::Timer::elapsed_nanos`] against a process
+//!   epoch; no other wall-clock read exists in this module (enforced by
+//!   `cargo xtask lint`). Timestamps order events for humans and
+//!   Perfetto; they carry no algorithmic meaning and are masked in
+//!   determinism comparisons.
+//!
+//! Layout:
+//!
+//! - [`trace`] — event kinds, the per-thread ring recorder, span guards,
+//!   and the `trace_span!` / `trace_event!` macros.
+//! - [`metrics`] — a static registry of named counters and log-scale
+//!   histograms, preregistered so steady state allocates nothing.
+//! - [`export`] — JSON Lines and Chrome Trace Format (Perfetto) writers
+//!   that drain the rings *after* a run.
+//! - [`summary`] — the `deepca trace <file>` summarizer over exported
+//!   JSONL: top spans by self-time, per-worker utilization, gossip
+//!   round/byte totals, and the fault timeline.
+//!
+//! Capture a trace from the CLI with `--trace <path>` on `run`,
+//! `stream`, or `gossip` (a `.json` extension writes Chrome Trace
+//! Format for Perfetto; anything else writes JSONL for `deepca trace`),
+//! or from code via `Session::trace(path)` / `OnlineSession::trace(path)`.
+
+pub mod export;
+pub mod metrics;
+pub mod summary;
+pub mod trace;

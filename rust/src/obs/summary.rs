@@ -1,0 +1,272 @@
+//! `deepca trace <file>` — summarize an exported JSONL trace: top spans
+//! by self-time, per-worker utilization and chunk counts, gossip
+//! round/byte totals, and the fault timeline.
+//!
+//! Input is the JSONL format written by [`super::export::write_jsonl`]
+//! (one flat object per line). Parsing is hand-rolled field extraction —
+//! the repo vendors no serde, and the exporter's output is flat enough
+//! that substring scanning is exact.
+
+use super::trace::EventKind;
+use std::collections::BTreeMap;
+
+/// Extract an unsigned integer field (`"key":123`) from a flat JSON line.
+fn field_u64(line: &str, key: &str) -> Option<u64> {
+    let pat = format!("\"{key}\":");
+    let start = line.find(&pat)? + pat.len();
+    let rest = &line[start..];
+    let end = rest
+        .find(|c: char| !c.is_ascii_digit())
+        .unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+/// Extract a string field (`"key":"value"`) from a flat JSON line.
+/// Escaped quotes never match because they appear as `\"` in the text.
+fn field_str<'a>(line: &'a str, key: &str) -> Option<&'a str> {
+    let pat = format!("\"{key}\":\"");
+    let start = line.find(&pat)? + pat.len();
+    let rest = &line[start..];
+    rest.find('"').map(|end| &rest[..end])
+}
+
+struct Line {
+    tid: u64,
+    kind: EventKind,
+    t_ns: u64,
+    a: u64,
+    b: u64,
+}
+
+fn parse_line(line: &str) -> Option<Line> {
+    Some(Line {
+        tid: field_u64(line, "tid")?,
+        kind: EventKind::from_name(field_str(line, "kind")?)?,
+        t_ns: field_u64(line, "t_ns")?,
+        a: field_u64(line, "a")?,
+        b: field_u64(line, "b")?,
+    })
+}
+
+#[derive(Default)]
+struct SpanAgg {
+    count: u64,
+    total_ns: u64,
+    self_ns: u64,
+}
+
+/// Summarize an exported JSONL trace into a human-readable report.
+/// Returns `Err` with a hint for non-JSONL input (e.g. a Chrome Trace
+/// Format file, which `deepca trace` does not read).
+pub fn summarize(text: &str) -> Result<String, String> {
+    let trimmed = text.trim_start();
+    if trimmed.is_empty() {
+        return Err(String::from("empty trace file"));
+    }
+    let head = &trimmed[..trimmed.len().min(2000)];
+    if trimmed.starts_with('[') || head.contains("\"traceEvents\"") {
+        return Err(String::from(
+            "this looks like a Chrome Trace Format file (load it in Perfetto); \
+             `deepca trace` reads the JSONL export — re-run with a `.jsonl` path",
+        ));
+    }
+
+    let mut events: Vec<Line> = Vec::new();
+    let mut thread_names: BTreeMap<u64, String> = BTreeMap::new();
+    let mut skipped = 0usize;
+    for raw in text.lines() {
+        if raw.trim().is_empty() {
+            continue;
+        }
+        match parse_line(raw) {
+            Some(line) => {
+                if let Some(name) = field_str(raw, "thread") {
+                    thread_names.entry(line.tid).or_insert_with(|| name.to_string());
+                }
+                events.push(line);
+            }
+            None => skipped += 1,
+        }
+    }
+    if events.is_empty() {
+        return Err(String::from("no parseable events in trace file"));
+    }
+
+    // Span self-time: per-tid stack of open spans; a child's duration is
+    // charged against its parent's self-time when the child closes.
+    let mut spans: BTreeMap<&'static str, SpanAgg> = BTreeMap::new();
+    let mut stacks: BTreeMap<u64, Vec<(&'static str, u64, u64)>> = BTreeMap::new();
+    // Workers: busy intervals from WorkerBusy..WorkerIdle, chunk counts
+    // from ChunkClaim (payload `a` = worker id in both).
+    let mut workers: BTreeMap<u64, (u64, u64, Option<u64>)> = BTreeMap::new();
+    let mut rounds = 0u64;
+    let mut dropped = 0u64;
+    let mut vticks = 0u64;
+    let mut bytes = 0u64;
+    let mut faults: Vec<(u64, u64, u64)> = Vec::new();
+    let mut ring_lost = 0u64;
+
+    for ev in &events {
+        if let Some(label) = ev.kind.span_label() {
+            let stack = stacks.entry(ev.tid).or_default();
+            if ev.kind.is_begin() {
+                stack.push((label, ev.t_ns, 0));
+            } else if ev.kind.is_end() {
+                if let Some((open_label, t0, child_ns)) = stack.pop() {
+                    let dur = ev.t_ns.saturating_sub(t0);
+                    let agg = spans.entry(open_label).or_default();
+                    agg.count += 1;
+                    agg.total_ns += dur;
+                    agg.self_ns += dur.saturating_sub(child_ns);
+                    if let Some(parent) = stack.last_mut() {
+                        parent.2 += dur;
+                    }
+                }
+            }
+        }
+        match ev.kind {
+            EventKind::GossipRound => {
+                rounds += 1;
+                dropped += ev.b;
+            }
+            EventKind::GossipRoundIo => {
+                vticks += ev.a;
+                bytes += ev.b;
+            }
+            EventKind::LinkDrop => faults.push((ev.t_ns, ev.a, ev.b)),
+            EventKind::WorkerBusy => {
+                workers.entry(ev.a).or_insert((0, 0, None)).2 = Some(ev.t_ns);
+            }
+            EventKind::WorkerIdle => {
+                let w = workers.entry(ev.a).or_insert((0, 0, None));
+                if let Some(t0) = w.2.take() {
+                    w.0 += ev.t_ns.saturating_sub(t0);
+                }
+            }
+            EventKind::ChunkClaim => {
+                workers.entry(ev.a).or_insert((0, 0, None)).1 += 1;
+            }
+            EventKind::RingDropped => ring_lost += ev.a,
+            _ => {}
+        }
+    }
+
+    let mut out = String::new();
+    out.push_str("trace summary\n");
+    out.push_str(&format!("threads: {}\n", thread_names.len()));
+    out.push_str(&format!("events: {}\n", events.len()));
+    if ring_lost > 0 {
+        out.push_str(&format!(
+            "warning: {ring_lost} events lost to ring overflow (raise capacity)\n"
+        ));
+    }
+    if skipped > 0 {
+        out.push_str(&format!("warning: {skipped} unparseable lines skipped\n"));
+    }
+
+    if !spans.is_empty() {
+        out.push_str("\ntop spans by self-time:\n");
+        let mut ranked: Vec<(&&str, &SpanAgg)> = spans.iter().collect();
+        ranked.sort_by(|x, y| y.1.self_ns.cmp(&x.1.self_ns).then(x.0.cmp(y.0)));
+        for (label, agg) in ranked {
+            out.push_str(&format!(
+                "  {:<16} n={} total={}ns self={}ns\n",
+                label, agg.count, agg.total_ns, agg.self_ns
+            ));
+        }
+    }
+
+    if rounds > 0 || bytes > 0 {
+        out.push_str(&format!(
+            "\ngossip: rounds={rounds} dropped={dropped} vticks={vticks} bytes={bytes}\n"
+        ));
+    }
+
+    if !workers.is_empty() {
+        out.push_str("\nworkers:\n");
+        for (id, (busy_ns, chunks, _)) in &workers {
+            out.push_str(&format!(
+                "  worker {id}: busy={busy_ns}ns chunks={chunks}\n"
+            ));
+        }
+    }
+
+    if !faults.is_empty() {
+        out.push_str("\nfaults:\n");
+        for (t_ns, from, to) in &faults {
+            out.push_str(&format!("  t={t_ns}ns link {from} -> {to}\n"));
+        }
+    }
+
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn line(tid: u64, kind: &str, t_ns: u64, a: u64, b: u64) -> String {
+        format!(
+            "{{\"tid\":{tid},\"thread\":\"t{tid}\",\"kind\":\"{kind}\",\"t_ns\":{t_ns},\"a\":{a},\"b\":{b}}}"
+        )
+    }
+
+    #[test]
+    fn field_extraction_is_exact() {
+        let l = line(3, "GossipRound", 1500, 6, 1);
+        assert_eq!(field_u64(&l, "tid"), Some(3));
+        assert_eq!(field_u64(&l, "t_ns"), Some(1500));
+        assert_eq!(field_u64(&l, "a"), Some(6));
+        assert_eq!(field_u64(&l, "b"), Some(1));
+        assert_eq!(field_str(&l, "kind"), Some("GossipRound"));
+        assert_eq!(field_str(&l, "thread"), Some("t3"));
+        assert_eq!(field_u64(&l, "missing"), None);
+    }
+
+    #[test]
+    fn chrome_input_is_rejected_with_hint() {
+        let err = summarize("{\"displayTimeUnit\":\"ns\",\"traceEvents\":[]}").unwrap_err();
+        assert!(err.contains("Perfetto"));
+        assert!(summarize("   ").is_err());
+    }
+
+    #[test]
+    fn span_self_time_subtracts_children() {
+        let text = [
+            line(0, "StepBegin", 0, 0, 0),
+            line(0, "GossipBegin", 100, 2, 0),
+            line(0, "GossipEnd", 400, 0, 0),
+            line(0, "StepEnd", 1000, 0, 0),
+        ]
+        .join("\n");
+        let out = summarize(&text).unwrap();
+        assert!(out.contains("step"), "{out}");
+        assert!(out.contains("total=1000ns self=700ns"), "{out}");
+        assert!(out.contains("total=300ns self=300ns"), "{out}");
+    }
+
+    #[test]
+    fn workers_gossip_and_faults_are_reported() {
+        let text = [
+            line(0, "GossipRound", 200, 6, 1),
+            line(0, "LinkDrop", 210, 3, 4),
+            line(0, "GossipRoundIo", 250, 2, 960),
+            line(1, "WorkerBusy", 120, 1, 0),
+            line(1, "ChunkClaim", 125, 1, 1),
+            line(1, "WorkerIdle", 220, 1, 0),
+        ]
+        .join("\n");
+        let out = summarize(&text).unwrap();
+        assert!(out.contains("gossip: rounds=1 dropped=1 vticks=2 bytes=960"), "{out}");
+        assert!(out.contains("worker 1: busy=100ns chunks=1"), "{out}");
+        assert!(out.contains("t=210ns link 3 -> 4"), "{out}");
+    }
+
+    #[test]
+    fn unparseable_lines_are_counted_not_fatal() {
+        let text = format!("{}\nnot json at all\n", line(0, "StepBegin", 0, 0, 0));
+        let out = summarize(&text).unwrap();
+        assert!(out.contains("events: 1"), "{out}");
+        assert!(out.contains("1 unparseable"), "{out}");
+    }
+}

@@ -1,0 +1,709 @@
+//! The flight-recorder core: fixed-size events, per-thread ring
+//! buffers, span guards, and the global enable/snapshot switchboard.
+//!
+//! Recording discipline (the zero-allocation contract): [`record`] is an
+//! atomic enabled check, a metrics bump, and one indexed store into a
+//! preallocated ring ([`Recorder::push`]). The only allocating moment is
+//! a thread's *first* event — ring registration — which happens inside
+//! the warm-up window of every audited steady state. Both fast paths
+//! are registered hot regions in `cargo xtask lint`.
+
+use crate::util::timer::Timer;
+use std::cell::OnceCell;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+
+/// Default per-thread ring capacity (events). At 32 bytes per event
+/// this is ~1 MiB per recording thread — enough for a few hundred
+/// power iterations with per-round gossip events; older events are
+/// overwritten (and counted) once a ring fills.
+pub const DEFAULT_CAPACITY: usize = 1 << 15;
+
+/// What one event records. Codes are part of the JSONL export format —
+/// append new kinds, never renumber.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u16)]
+pub enum EventKind {
+    /// Preallocation filler; never exported.
+    Nop = 0,
+    /// Solver step span (`a` = iteration).
+    StepBegin = 1,
+    StepEnd = 2,
+    /// Per-agent Gram product phase.
+    LocalProductBegin = 3,
+    LocalProductEnd = 4,
+    /// DeEPCA tracking update (S += AW − G).
+    TrackingUpdateBegin = 5,
+    TrackingUpdateEnd = 6,
+    /// One FastMix call (`a` = requested rounds).
+    GossipBegin = 7,
+    GossipEnd = 8,
+    /// QR / orthonormalization phase.
+    QrBegin = 9,
+    QrEnd = 10,
+    /// Sign-adjust applied this step (`a` = agents).
+    SignAdjust = 11,
+    /// One gossip round (`a` = live edges, `b` = messages dropped).
+    GossipRound = 12,
+    /// Round I/O accounting (`a` = virtual ticks, `b` = payload bytes).
+    GossipRoundIo = 13,
+    /// SimNet dropped the round's message on link `a` → `b`.
+    LinkDrop = 14,
+    /// Executor published a parallel region (`a` = job seq, `b` = chunks).
+    JobPublish = 15,
+    /// A worker claimed a chunk (`a` = worker id, `b` = chunk index).
+    ChunkClaim = 16,
+    /// Worker busy/idle transitions (`a` = worker id, `b` = chunk index).
+    WorkerBusy = 17,
+    WorkerIdle = 18,
+    /// Streaming epoch span (`a` = epoch index).
+    EpochBegin = 19,
+    EpochEnd = 20,
+    /// Stream ingest phase.
+    IngestBegin = 21,
+    IngestEnd = 22,
+    /// Covariance refresh phase.
+    RefreshBegin = 23,
+    RefreshEnd = 24,
+    /// Inner warm-started solve of one epoch.
+    EpochSolveBegin = 25,
+    EpochSolveEnd = 26,
+    /// Synthetic export-time marker: `a` events were overwritten after
+    /// the ring filled.
+    RingDropped = 27,
+}
+
+impl EventKind {
+    /// Stable wire code.
+    pub fn code(self) -> u16 {
+        self as u16
+    }
+
+    /// Inverse of [`EventKind::code`] (None for unknown codes, so
+    /// foreign JSONL degrades gracefully in the summarizer).
+    pub fn from_code(code: u16) -> Option<EventKind> {
+        use EventKind::*;
+        Some(match code {
+            0 => Nop,
+            1 => StepBegin,
+            2 => StepEnd,
+            3 => LocalProductBegin,
+            4 => LocalProductEnd,
+            5 => TrackingUpdateBegin,
+            6 => TrackingUpdateEnd,
+            7 => GossipBegin,
+            8 => GossipEnd,
+            9 => QrBegin,
+            10 => QrEnd,
+            11 => SignAdjust,
+            12 => GossipRound,
+            13 => GossipRoundIo,
+            14 => LinkDrop,
+            15 => JobPublish,
+            16 => ChunkClaim,
+            17 => WorkerBusy,
+            18 => WorkerIdle,
+            19 => EpochBegin,
+            20 => EpochEnd,
+            21 => IngestBegin,
+            22 => IngestEnd,
+            23 => RefreshBegin,
+            24 => RefreshEnd,
+            25 => EpochSolveBegin,
+            26 => EpochSolveEnd,
+            27 => RingDropped,
+            _ => return None,
+        })
+    }
+
+    /// Export name (also the JSONL `kind` field).
+    pub fn name(self) -> &'static str {
+        use EventKind::*;
+        match self {
+            Nop => "Nop",
+            StepBegin => "StepBegin",
+            StepEnd => "StepEnd",
+            LocalProductBegin => "LocalProductBegin",
+            LocalProductEnd => "LocalProductEnd",
+            TrackingUpdateBegin => "TrackingUpdateBegin",
+            TrackingUpdateEnd => "TrackingUpdateEnd",
+            GossipBegin => "GossipBegin",
+            GossipEnd => "GossipEnd",
+            QrBegin => "QrBegin",
+            QrEnd => "QrEnd",
+            SignAdjust => "SignAdjust",
+            GossipRound => "GossipRound",
+            GossipRoundIo => "GossipRoundIo",
+            LinkDrop => "LinkDrop",
+            JobPublish => "JobPublish",
+            ChunkClaim => "ChunkClaim",
+            WorkerBusy => "WorkerBusy",
+            WorkerIdle => "WorkerIdle",
+            EpochBegin => "EpochBegin",
+            EpochEnd => "EpochEnd",
+            IngestBegin => "IngestBegin",
+            IngestEnd => "IngestEnd",
+            RefreshBegin => "RefreshBegin",
+            RefreshEnd => "RefreshEnd",
+            EpochSolveBegin => "EpochSolveBegin",
+            EpochSolveEnd => "EpochSolveEnd",
+            RingDropped => "RingDropped",
+        }
+    }
+
+    /// Parse an export name back to a kind (summarizer input path).
+    pub fn from_name(name: &str) -> Option<EventKind> {
+        (0..=27).map(|c| EventKind::from_code(c).unwrap()).find(|k| k.name() == name)
+    }
+
+    /// Span name for Begin/End pairs (Chrome trace + summarizer label);
+    /// None for instants.
+    pub fn span_label(self) -> Option<&'static str> {
+        use EventKind::*;
+        Some(match self {
+            StepBegin | StepEnd => "step",
+            LocalProductBegin | LocalProductEnd => "local_product",
+            TrackingUpdateBegin | TrackingUpdateEnd => "tracking_update",
+            GossipBegin | GossipEnd => "gossip",
+            QrBegin | QrEnd => "qr",
+            EpochBegin | EpochEnd => "epoch",
+            IngestBegin | IngestEnd => "ingest",
+            RefreshBegin | RefreshEnd => "refresh",
+            EpochSolveBegin | EpochSolveEnd => "epoch_solve",
+            _ => return None,
+        })
+    }
+
+    /// Does this kind open a span?
+    pub fn is_begin(self) -> bool {
+        use EventKind::*;
+        matches!(
+            self,
+            StepBegin
+                | LocalProductBegin
+                | TrackingUpdateBegin
+                | GossipBegin
+                | QrBegin
+                | EpochBegin
+                | IngestBegin
+                | RefreshBegin
+                | EpochSolveBegin
+        )
+    }
+
+    /// Does this kind close a span?
+    pub fn is_end(self) -> bool {
+        use EventKind::*;
+        matches!(
+            self,
+            StepEnd
+                | LocalProductEnd
+                | TrackingUpdateEnd
+                | GossipEnd
+                | QrEnd
+                | EpochEnd
+                | IngestEnd
+                | RefreshEnd
+                | EpochSolveEnd
+        )
+    }
+
+    /// Events describing algorithmic progress — recorded on the caller
+    /// thread in program order, so their (kind, a, b) stream is
+    /// bit-identical across thread counts and seeded replays. Scheduling
+    /// events (executor dispatch) and export-time markers are excluded:
+    /// chunk counts and claim patterns legitimately vary with the pool.
+    pub fn is_deterministic(self) -> bool {
+        use EventKind::*;
+        !matches!(
+            self,
+            Nop | JobPublish | ChunkClaim | WorkerBusy | WorkerIdle | RingDropped
+        )
+    }
+}
+
+/// One fixed-size trace record. `t_ns` is wall time against the process
+/// trace epoch (masked in determinism comparisons); `a`/`b` are
+/// kind-specific payloads (see [`EventKind`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Event {
+    pub kind: EventKind,
+    pub t_ns: u64,
+    pub a: u64,
+    pub b: u64,
+}
+
+impl Event {
+    /// Ring preallocation filler.
+    pub const NOP: Event = Event { kind: EventKind::Nop, t_ns: 0, a: 0, b: 0 };
+}
+
+/// Preallocated single-thread ring buffer of [`Event`]s. Once full, new
+/// events overwrite the oldest (the `dropped` counter records how many
+/// were lost; the exporters surface it as a [`EventKind::RingDropped`]
+/// marker).
+pub struct Recorder {
+    buf: Vec<Event>,
+    /// Next write index.
+    head: usize,
+    /// Valid events (≤ capacity).
+    len: usize,
+    /// Events overwritten after the ring filled.
+    dropped: u64,
+    /// Thread label captured at registration.
+    name: String,
+}
+
+impl Recorder {
+    /// Ring with room for `capacity` events, fully preallocated up
+    /// front so recording never grows anything.
+    pub fn with_capacity(capacity: usize) -> Recorder {
+        Recorder::named(capacity, String::from("thread"))
+    }
+
+    fn named(capacity: usize, name: String) -> Recorder {
+        Recorder { buf: vec![Event::NOP; capacity.max(16)], head: 0, len: 0, dropped: 0, name }
+    }
+
+    /// Append one event — a single indexed store plus ring bookkeeping.
+    /// This is the per-event fast path (registered hot region).
+    #[inline]
+    pub fn push(&mut self, ev: Event) {
+        let cap = self.buf.len();
+        self.buf[self.head] = ev;
+        self.head = if self.head + 1 == cap { 0 } else { self.head + 1 };
+        if self.len < cap {
+            self.len += 1;
+        } else {
+            self.dropped += 1;
+        }
+    }
+
+    /// Ring capacity in events.
+    pub fn capacity(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Events currently held (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when nothing has been recorded since the last reset.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Events lost to ring overwrite since the last reset.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Drain to a linear oldest → newest copy (export path, post-run).
+    pub fn events(&self) -> Vec<Event> {
+        let cap = self.buf.len();
+        let start = (self.head + cap - self.len) % cap;
+        (0..self.len).map(|i| self.buf[(start + i) % cap]).collect()
+    }
+
+    /// Clear and (if needed) re-size for a fresh capture.
+    fn reset(&mut self, capacity: usize) {
+        let capacity = capacity.max(16);
+        if self.buf.len() != capacity {
+            self.buf = vec![Event::NOP; capacity];
+        }
+        self.head = 0;
+        self.len = 0;
+        self.dropped = 0;
+    }
+}
+
+/// One thread's drained events, as returned by [`snapshot`].
+pub struct ThreadEvents {
+    /// Thread label ("main", "deepca-worker-1", …).
+    pub name: String,
+    /// Events lost to ring overwrite.
+    pub dropped: u64,
+    /// Oldest → newest.
+    pub events: Vec<Event>,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static CAPACITY: AtomicUsize = AtomicUsize::new(DEFAULT_CAPACITY);
+/// Trace epoch: all timestamps are nanoseconds since the first
+/// [`enable`]. A `Timer` (the sanctioned wall-clock seam) rather than a
+/// raw `Instant` so this module performs no clock reads of its own.
+static EPOCH: OnceLock<Timer> = OnceLock::new();
+/// Every ring ever registered, in registration order. Rings live for
+/// the process (threads park and die; their captured events remain
+/// exportable) and are reset wholesale by [`enable`].
+static REGISTRY: Mutex<Vec<Arc<Mutex<Recorder>>>> = Mutex::new(Vec::new());
+
+thread_local! {
+    /// This thread's ring, registered on first use.
+    static LOCAL: OnceCell<Arc<Mutex<Recorder>>> = const { OnceCell::new() };
+}
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// Cold path: allocate and register this thread's ring. Runs once per
+/// thread, on its first recorded event (inside every audited warm-up
+/// window) or via [`register_current_thread`].
+fn register_ring() -> Arc<Mutex<Recorder>> {
+    let capacity = CAPACITY.load(Ordering::Relaxed);
+    let name = std::thread::current()
+        .name()
+        .unwrap_or("thread")
+        .to_string();
+    let rec = Arc::new(Mutex::new(Recorder::named(capacity, name)));
+    lock(&REGISTRY).push(Arc::clone(&rec));
+    rec
+}
+
+/// Pre-register the calling thread's ring (so its registration
+/// allocation happens *now*, not inside a measured region).
+pub fn register_current_thread() {
+    LOCAL.with(|cell| {
+        let _ = cell.get_or_init(register_ring);
+    });
+}
+
+/// Is recording live? Instrumentation call sites may use this to skip
+/// payload computation; [`record`] checks it itself.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Nanoseconds since the trace epoch (0 before the first [`enable`]).
+#[inline]
+pub fn now_ns() -> u64 {
+    match EPOCH.get() {
+        Some(t) => t.elapsed_nanos(),
+        None => 0,
+    }
+}
+
+/// Start a capture: fix the ring capacity, reset every registered ring
+/// (a fresh capture never carries a prior run's events), reset the
+/// metrics registry, register the calling thread, and open recording.
+pub fn enable(capacity: usize) {
+    let capacity = capacity.max(16);
+    CAPACITY.store(capacity, Ordering::Relaxed);
+    let _ = EPOCH.get_or_init(Timer::start);
+    {
+        let registry = lock(&REGISTRY);
+        for rec in registry.iter() {
+            lock(rec).reset(capacity);
+        }
+    }
+    super::metrics::reset();
+    register_current_thread();
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Stop recording. Captured events stay in their rings for [`snapshot`].
+pub fn disable() {
+    ENABLED.store(false, Ordering::SeqCst);
+}
+
+/// Record one event on the calling thread's ring. The per-event fast
+/// path (registered hot region): enabled check → metrics bump →
+/// timestamp → indexed ring store. No-op when disabled.
+#[inline]
+pub fn record(kind: EventKind, a: u64, b: u64) {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return;
+    }
+    super::metrics::bump(kind, a, b);
+    let t_ns = now_ns();
+    LOCAL.with(|cell| {
+        let rec = cell.get_or_init(register_ring);
+        let mut guard = match rec.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        guard.push(Event { kind, t_ns, a, b });
+    });
+}
+
+/// Drain every registered ring (registration order, oldest → newest
+/// within each thread). Usually called after [`disable`].
+pub fn snapshot() -> Vec<ThreadEvents> {
+    let registry = lock(&REGISTRY);
+    registry
+        .iter()
+        .map(|rec| {
+            let guard = lock(rec);
+            ThreadEvents {
+                name: guard.name.clone(),
+                dropped: guard.dropped,
+                events: guard.events(),
+            }
+        })
+        .collect()
+}
+
+/// The deterministic event stream of a snapshot: (code, a, b) triples
+/// with timestamps masked and scheduling-class kinds removed. This is
+/// the stream the determinism tests compare across thread counts and
+/// seeded replays.
+pub fn deterministic_events(snapshot: &[ThreadEvents]) -> Vec<(u16, u64, u64)> {
+    snapshot
+        .iter()
+        .flat_map(|t| t.events.iter())
+        .filter(|e| e.kind != EventKind::Nop && e.kind.is_deterministic())
+        .map(|e| (e.kind.code(), e.a, e.b))
+        .collect()
+}
+
+/// Serializes tests that toggle the global recording state. Every test
+/// that calls [`enable`] must hold this guard for its whole body.
+pub fn test_lock() -> MutexGuard<'static, ()> {
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+    match TEST_LOCK.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// Span identities for [`SpanGuard`] — each maps to a Begin/End
+/// [`EventKind`] pair and a duration histogram in the metrics registry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanKind {
+    Step,
+    LocalProduct,
+    TrackingUpdate,
+    Gossip,
+    Qr,
+    Epoch,
+    Ingest,
+    Refresh,
+    EpochSolve,
+}
+
+impl SpanKind {
+    fn begin(self) -> EventKind {
+        use SpanKind::*;
+        match self {
+            Step => EventKind::StepBegin,
+            LocalProduct => EventKind::LocalProductBegin,
+            TrackingUpdate => EventKind::TrackingUpdateBegin,
+            Gossip => EventKind::GossipBegin,
+            Qr => EventKind::QrBegin,
+            Epoch => EventKind::EpochBegin,
+            Ingest => EventKind::IngestBegin,
+            Refresh => EventKind::RefreshBegin,
+            EpochSolve => EventKind::EpochSolveBegin,
+        }
+    }
+
+    fn end(self) -> EventKind {
+        use SpanKind::*;
+        match self {
+            Step => EventKind::StepEnd,
+            LocalProduct => EventKind::LocalProductEnd,
+            TrackingUpdate => EventKind::TrackingUpdateEnd,
+            Gossip => EventKind::GossipEnd,
+            Qr => EventKind::QrEnd,
+            Epoch => EventKind::EpochEnd,
+            Ingest => EventKind::IngestEnd,
+            Refresh => EventKind::RefreshEnd,
+            EpochSolve => EventKind::EpochSolveEnd,
+        }
+    }
+}
+
+/// RAII span: records the Begin event on construction and the End event
+/// (plus a duration histogram observation) on drop. Inert — zero work,
+/// zero stores — when recording is disabled at entry.
+pub struct SpanGuard {
+    kind: SpanKind,
+    t0_ns: u64,
+    active: bool,
+}
+
+impl SpanGuard {
+    /// Open a span (`a`/`b` ride on the Begin event). This is cheap
+    /// enough for per-iteration scopes; per-*agent* scopes should stay
+    /// uninstrumented (one event per agent per step would dominate the
+    /// ring at fleet scale).
+    #[inline]
+    pub fn enter(kind: SpanKind, a: u64, b: u64) -> SpanGuard {
+        if !ENABLED.load(Ordering::Relaxed) {
+            return SpanGuard { kind, t0_ns: 0, active: false };
+        }
+        let t0_ns = now_ns();
+        record(kind.begin(), a, b);
+        SpanGuard { kind, t0_ns, active: true }
+    }
+}
+
+impl Drop for SpanGuard {
+    #[inline]
+    fn drop(&mut self) {
+        if self.active {
+            let now = now_ns();
+            record(self.kind.end(), 0, 0);
+            super::metrics::observe_span(self.kind, now.saturating_sub(self.t0_ns));
+        }
+    }
+}
+
+/// Open a trace span for the enclosing scope; bind the result
+/// (`let _span = trace_span!(Step);`) or the guard drops immediately.
+/// Payloads: `trace_span!(Gossip, rounds)` / `trace_span!(Step, t, m)`.
+#[macro_export]
+macro_rules! trace_span {
+    ($kind:ident) => {
+        $crate::trace_span!($kind, 0u64, 0u64)
+    };
+    ($kind:ident, $a:expr) => {
+        $crate::trace_span!($kind, $a, 0u64)
+    };
+    ($kind:ident, $a:expr, $b:expr) => {
+        $crate::obs::trace::SpanGuard::enter(
+            $crate::obs::trace::SpanKind::$kind,
+            $a as u64,
+            $b as u64,
+        )
+    };
+}
+
+/// Record one instant event (counter semantics — the metrics registry
+/// accumulates payloads by kind): `trace_event!(GossipRound, edges,
+/// dropped)`.
+#[macro_export]
+macro_rules! trace_event {
+    ($kind:ident) => {
+        $crate::trace_event!($kind, 0u64, 0u64)
+    };
+    ($kind:ident, $a:expr) => {
+        $crate::trace_event!($kind, $a, 0u64)
+    };
+    ($kind:ident, $a:expr, $b:expr) => {
+        $crate::obs::trace::record($crate::obs::trace::EventKind::$kind, $a as u64, $b as u64)
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_wraps_and_counts_drops() {
+        let mut rec = Recorder::with_capacity(16);
+        for i in 0..20u64 {
+            rec.push(Event { kind: EventKind::GossipRound, t_ns: i, a: i, b: 0 });
+        }
+        assert_eq!(rec.len(), 16);
+        assert_eq!(rec.dropped(), 4);
+        let events = rec.events();
+        assert_eq!(events.len(), 16);
+        // Oldest surviving event is #4; newest is #19.
+        assert_eq!(events[0].a, 4);
+        assert_eq!(events[15].a, 19);
+    }
+
+    #[test]
+    fn ring_linearizes_before_wrap() {
+        let mut rec = Recorder::with_capacity(32);
+        for i in 0..5u64 {
+            rec.push(Event { kind: EventKind::StepBegin, t_ns: i, a: i, b: 0 });
+        }
+        let events = rec.events();
+        assert_eq!(events.len(), 5);
+        assert!(events.iter().enumerate().all(|(i, e)| e.a == i as u64));
+        assert_eq!(rec.dropped(), 0);
+    }
+
+    #[test]
+    fn codes_round_trip() {
+        for code in 0..=27u16 {
+            let kind = EventKind::from_code(code).expect("contiguous codes");
+            assert_eq!(kind.code(), code);
+            assert_eq!(EventKind::from_name(kind.name()), Some(kind));
+        }
+        assert_eq!(EventKind::from_code(999), None);
+        assert_eq!(EventKind::from_name("NotAKind"), None);
+    }
+
+    #[test]
+    fn begin_end_pairing_is_consistent() {
+        for code in 0..=27u16 {
+            let kind = EventKind::from_code(code).unwrap();
+            if kind.is_begin() || kind.is_end() {
+                assert!(kind.span_label().is_some(), "{kind:?} needs a span label");
+            }
+            assert!(!(kind.is_begin() && kind.is_end()));
+        }
+    }
+
+    #[test]
+    fn record_and_snapshot_round_trip() {
+        let _guard = test_lock();
+        enable(64);
+        record(EventKind::StepBegin, 7, 0);
+        record(EventKind::GossipRound, 12, 3);
+        record(EventKind::StepEnd, 0, 0);
+        disable();
+        let snap = snapshot();
+        let det = deterministic_events(&snap);
+        assert_eq!(det, vec![(1, 7, 0), (12, 12, 3), (2, 0, 0)]);
+        // Re-enable resets the rings: the previous capture is gone.
+        enable(64);
+        disable();
+        assert!(deterministic_events(&snapshot()).is_empty());
+    }
+
+    #[test]
+    fn disabled_recording_is_inert() {
+        let _guard = test_lock();
+        disable();
+        record(EventKind::StepBegin, 1, 2);
+        let span = SpanGuard::enter(SpanKind::Qr, 0, 0);
+        assert!(!span.active);
+        drop(span);
+        // Nothing above may have opened recording.
+        assert!(!enabled());
+    }
+
+    #[test]
+    fn span_guard_emits_begin_and_end() {
+        let _guard = test_lock();
+        enable(64);
+        {
+            let _span = trace_span!(Gossip, 8u64);
+            trace_event!(GossipRound, 4u64, 1u64);
+        }
+        disable();
+        let det = deterministic_events(&snapshot());
+        assert_eq!(
+            det,
+            vec![
+                (EventKind::GossipBegin.code(), 8, 0),
+                (EventKind::GossipRound.code(), 4, 1),
+                (EventKind::GossipEnd.code(), 0, 0),
+            ]
+        );
+    }
+
+    #[test]
+    fn scheduling_kinds_are_masked_from_determinism() {
+        let _guard = test_lock();
+        enable(64);
+        record(EventKind::JobPublish, 1, 4);
+        record(EventKind::ChunkClaim, 2, 3);
+        record(EventKind::WorkerBusy, 2, 1);
+        record(EventKind::WorkerIdle, 2, 1);
+        record(EventKind::GossipRound, 6, 0);
+        disable();
+        let det = deterministic_events(&snapshot());
+        assert_eq!(det, vec![(EventKind::GossipRound.code(), 6, 0)]);
+    }
+}

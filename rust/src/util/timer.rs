@@ -31,6 +31,17 @@ impl Timer {
     pub fn elapsed_secs(&self) -> f64 {
         self.t0.elapsed().as_secs_f64()
     }
+
+    /// Whole nanoseconds elapsed since [`Timer::start`].
+    ///
+    /// This is the flight recorder's timestamp source
+    /// ([`crate::obs::trace`] reads a process-epoch `Timer` through it) —
+    /// trace timestamps stay behind the same auditable seam as every
+    /// other wall-clock read.
+    #[inline]
+    pub fn elapsed_nanos(&self) -> u64 {
+        self.t0.elapsed().as_nanos() as u64
+    }
 }
 
 /// Simple accumulating stopwatch for profiling sections of a hot loop.

@@ -169,4 +169,38 @@ fn solver_steps_are_allocation_free_after_warmup() {
             5,
         );
     }
+
+    // The flight recorder's own contract: with tracing *enabled*, steps
+    // must still allocate nothing in steady state — events go into
+    // preallocated per-thread rings, metrics into static atomics.
+    // Sequential only: a pool worker's ring is registered lazily on its
+    // first recorded event (one allocation per thread, by design), so
+    // the caller thread is the one whose steady state is measured here;
+    // `enable` pre-registers it before the measurement window.
+    {
+        let _guard = deepca::obs::trace::test_lock();
+        deepca::obs::trace::enable(1 << 16);
+        for (label, algo) in &algos {
+            let mut solver = Session::on(&problem, &topo)
+                .algo(algo.clone())
+                .threads(1)
+                .build_solver();
+            audit(&format!("{label} [traced]"), &mut *solver, 2, 5);
+        }
+        let mut sim_solver = Session::on(&problem, &topo)
+            .algo(Algo::Deepca(DeepcaConfig {
+                consensus_rounds: 8,
+                max_iters: 64,
+                ..Default::default()
+            }))
+            .engine(Engine::Sim(SimConfig {
+                drop_prob: 0.1,
+                max_latency: 2,
+                ..SimConfig::ideal(9)
+            }))
+            .threads(1)
+            .build_solver();
+        audit("deepca/sim-faulty [traced]", &mut *sim_solver, 2, 5);
+        deepca::obs::trace::disable();
+    }
 }

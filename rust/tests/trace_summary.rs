@@ -1,0 +1,48 @@
+//! Golden test for the `deepca trace` summarizer against a committed
+//! JSONL fixture (`fixtures/trace_small.jsonl`): one solver step with a
+//! two-round gossip span, one dropped link, a QR phase, and a worker
+//! busy interval on a second thread.
+//!
+//! The fixture values are hand-computed so the expected report pins the
+//! whole output format — span self-time subtraction, gossip and worker
+//! aggregation, and the fault timeline — not just substrings.
+
+use deepca::obs::summary::summarize;
+
+const FIXTURE: &str = include_str!("fixtures/trace_small.jsonl");
+
+#[test]
+fn summarizer_matches_golden_fixture() {
+    let out = summarize(FIXTURE).expect("fixture must parse");
+    // step total 1000ns with 300ns gossip + 200ns qr children;
+    // gossip rounds 2 (one message dropped), vticks 2+1, bytes 2*960;
+    // worker 1 busy 120..220 with one claimed chunk; drop on link 3→4.
+    let expected = "\
+trace summary
+threads: 2
+events: 14
+
+top spans by self-time:
+  step             n=1 total=1000ns self=500ns
+  gossip           n=1 total=300ns self=300ns
+  qr               n=1 total=200ns self=200ns
+
+gossip: rounds=2 dropped=1 vticks=3 bytes=1920
+
+workers:
+  worker 1: busy=100ns chunks=1
+
+faults:
+  t=210ns link 3 -> 4
+";
+    assert_eq!(out, expected);
+}
+
+#[test]
+fn summarizer_rejects_chrome_format_with_hint() {
+    // `--trace out.json` writes Chrome Trace Format for Perfetto; the
+    // summarizer reads only the JSONL flavor and should say so.
+    let err = summarize("{\"displayTimeUnit\":\"ns\",\"traceEvents\":[{}]}").unwrap_err();
+    assert!(err.contains("Perfetto"), "{err}");
+    assert!(err.contains("jsonl"), "{err}");
+}

@@ -177,6 +177,13 @@ pub fn repo_regions() -> Vec<Region> {
             fn_name: "par_for_each_agent",
         },
         Region { file_suffix: "exec/mod.rs", impl_context: None, fn_name: "par_chunks_ctx" },
+        Region {
+            file_suffix: "obs/trace.rs",
+            impl_context: Some("Recorder"),
+            fn_name: "push",
+        },
+        Region { file_suffix: "obs/trace.rs", impl_context: None, fn_name: "record" },
+        Region { file_suffix: "obs/metrics.rs", impl_context: None, fn_name: "bump" },
     ]
 }
 
