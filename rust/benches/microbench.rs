@@ -53,6 +53,15 @@ fn main() {
     suite.push(bench.run("householder thin-QR (300x5)", || thin_qr(&s300)));
     let u300 = Mat::rand_orthonormal(300, 5, &mut rng);
     suite.push(bench.run("tan_theta(U, X) (300x5)", || tan_theta(&u300, &s300)));
+    // Wide product (m > 16): the cache-blocked k×j tiled path. Stable
+    // name so `scripts/bench_diff` tracks the blocked kernel across
+    // commits.
+    let w64 = Mat::randn(300, 64, &mut rng);
+    let mut out64 = Mat::zeros(300, 64);
+    suite.push(bench.run("matmul_wide_blocked", || {
+        a300.matmul_into(&w64, &mut out64);
+        out64.data()[0]
+    }));
 
     // ------------------------------------------- allocating vs `_into`
     // The workspace refactor's headline contrast: the same kernels with
@@ -135,6 +144,59 @@ fn main() {
                 s.slice(0).data()[0]
             }));
         }
+    }
+
+    // ---------------------------------------------- faulty SimNet rounds
+    // The fault-plan split's acceptance bar: a faulty round (drops +
+    // latency + noise together) builds its schedule sequentially, then
+    // applies it on the worker pool — the 1→4 thread ratio on these
+    // stable names is the headline speedup `scripts/bench_diff` tracks.
+    section("faulty SimNet rounds (n=20000 grid, drop 5%, latency 2, noise 1e-2)");
+    {
+        use deepca::consensus::simnet::{SimConfig, SimNet};
+        use deepca::graph::dynamic::TopologySchedule;
+        let mut srng = Rng::seed_from(905);
+        let n = 20_000;
+        let faulty_stack = AgentStack::new(
+            (0..n).map(|_| Mat::randn(8, 2, &mut srng)).collect(),
+        );
+        let cfg = SimConfig {
+            drop_prob: 0.05,
+            max_latency: 2,
+            noise_std: 0.01,
+            ..SimConfig::ideal(906)
+        };
+        for threads in [1usize, 4] {
+            let net = SimNet::sparse(TopologySchedule::fixed(Topology::grid(100, 200)), cfg)
+                .with_executor(Arc::new(Executor::new(threads)));
+            let mut s = faulty_stack.clone();
+            net.fastmix(&mut s, 1, &mut CommStats::default()); // warm buffers + plan
+            let name = format!("simnet_faulty_round/threads{threads}");
+            suite.push(Bench::new(1, 5).run(&name, || {
+                net.fastmix(&mut s, 1, &mut CommStats::default());
+                s.slice(0).data()[0]
+            }));
+        }
+    }
+
+    // ------------------------------------------------ weighted dispatch
+    // Pure dispatch overhead of the cost-aware chunking: a skewed
+    // prefix, trivial per-item work — what a solver pays on top of the
+    // useful flops when it routes a batch through `par_weighted`.
+    section("cost-aware dispatch (par_weighted, n=100000, skewed weights)");
+    {
+        let n = 100_000;
+        let mut prefix = Vec::with_capacity(n + 1);
+        prefix.push(0usize);
+        for i in 0..n {
+            prefix.push(prefix[i] + 1 + (i % 64));
+        }
+        let exec = Executor::new(4);
+        let mut items = vec![0.0f64; n];
+        suite.push(bench.run("par_weighted_dispatch", || {
+            exec.par_weighted(&mut items, &prefix, |i, x| *x = (i % 7) as f64);
+            items[0]
+        }));
     }
 
     // --------------------------------------------------------- backends

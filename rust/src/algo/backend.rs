@@ -96,19 +96,33 @@ impl PowerBackend for &dyn PowerBackend {
 pub struct RustBackend<'a> {
     locals: &'a [Mat],
     exec: Option<Arc<Executor>>,
+    /// Per-agent cost prefix (`rows · cols` of each local, summed),
+    /// built once at construction: the weight vector for the
+    /// executor's cost-aware dispatch, so heterogeneous shard sizes
+    /// split into chunks of comparable flops rather than equal agent
+    /// counts. Empty for the sequential backend.
+    cost_prefix: Vec<usize>,
 }
 
 impl<'a> RustBackend<'a> {
     /// Borrow the problem's local matrices (sequential products).
     pub fn new(locals: &'a [Mat]) -> Self {
-        RustBackend { locals, exec: None }
+        RustBackend { locals, exec: None, cost_prefix: Vec::new() }
     }
 
     /// Borrow the local matrices and run batched products on `exec`'s
-    /// worker pool (fixed per-agent partitioning; results bit-identical
-    /// to the sequential path for any thread count).
+    /// worker pool, chunked by per-agent flop weight (results
+    /// bit-identical to the sequential path for any thread count — the
+    /// chunk boundaries are a pure function of the shapes, never of
+    /// measured timing).
     pub fn with_executor(locals: &'a [Mat], exec: Arc<Executor>) -> Self {
-        RustBackend { locals, exec: Some(exec) }
+        let mut cost_prefix = Vec::with_capacity(locals.len() + 1);
+        cost_prefix.push(0usize);
+        for l in locals {
+            let last = *cost_prefix.last().expect("seeded with 0");
+            cost_prefix.push(last + l.rows() * l.cols());
+        }
+        RustBackend { locals, exec: Some(exec), cost_prefix }
     }
 }
 
@@ -138,7 +152,7 @@ impl PowerBackend for RustBackend<'_> {
         assert_eq!(out.m(), self.m());
         let locals = self.locals;
         match &self.exec {
-            Some(exec) => exec.par_for_each_agent(out.slices_mut(), |j, o| {
+            Some(exec) => exec.par_weighted(out.slices_mut(), &self.cost_prefix, |j, o| {
                 locals[j].matmul_into(ws.slice(j), o)
             }),
             None => {

@@ -279,7 +279,13 @@ impl FastMix {
                 let cur: &[Mat] = cur;
                 let sparse = &self.sparse;
                 let eta = self.eta;
-                self.exec.par_for_each_agent(next.as_mut_slice(), |j, acc| {
+                // Cost-aware dispatch: a row's work is ∝ its neighbor
+                // count, so the CSR row pointer is the exact per-row
+                // cost prefix — hub rows no longer serialize one chunk
+                // on irregular topologies. Boundaries are a pure
+                // function of the prefix, so results stay bit-identical
+                // to `par_for_each_agent` at every thread count.
+                self.exec.par_weighted(next.as_mut_slice(), sparse.row_ptr(), |j, acc| {
                     let (cols, vals) = sparse.row(j);
                     chebyshev_row_update_sparse(cols, vals, eta, &prev[j], cur, acc);
                 });

@@ -124,6 +124,12 @@ struct Epoch {
     eta: f64,
     edges: usize,
     latency: Vec<u64>,
+    /// CSR-aligned prefix: `diag_before[idx]` = number of diagonal
+    /// entries at flat CSR indices `< idx`. The fault-plan apply stage
+    /// uses it to turn a flat edge index into that edge's noise-draw
+    /// slot (its delivered off-diagonal ordinal) in O(1) — only built
+    /// when payload noise is enabled (empty otherwise).
+    diag_before: Vec<usize>,
 }
 
 /// Rebuild the CSR-aligned latency vector for the current weights.
@@ -138,6 +144,27 @@ fn rebuild_latency(latency: &mut Vec<u64>, sparse: &SparseGossip, cfg: &SimConfi
         for &i in cols {
             let l = if i == j { 0 } else { link_latency(cfg.seed, i, j, cfg.max_latency) };
             latency.push(l);
+        }
+    }
+}
+
+/// Rebuild the [`Epoch::diag_before`] prefix for the current weights.
+/// Skipped (left empty) when noise is off — the apply stage never
+/// consults it then.
+fn rebuild_diag_before(diag_before: &mut Vec<usize>, sparse: &SparseGossip, cfg: &SimConfig) {
+    diag_before.clear();
+    if cfg.noise_std == 0.0 {
+        return;
+    }
+    diag_before.reserve(sparse.nnz());
+    let mut count = 0usize;
+    for j in 0..sparse.m() {
+        let (cols, _) = sparse.row(j);
+        for &i in cols {
+            diag_before.push(count);
+            if i == j {
+                count += 1;
+            }
         }
     }
 }
@@ -167,6 +194,89 @@ fn rebuild_epoch(
     }
     epoch.edges = topo.num_edges();
     rebuild_latency(&mut epoch.latency, &epoch.sparse, cfg);
+    rebuild_diag_before(&mut epoch.diag_before, &epoch.sparse, cfg);
+}
+
+/// One round's materialized fault schedule: which directed links drop,
+/// the noise draws for every delivered noisy link, and the round's
+/// latency/drop aggregates. Only *eventful* links are stored —
+/// O(dropped + delivered-noisy), not O(edges) — and the buffers persist
+/// across rounds at their high-water mark, so steady-state rounds are
+/// allocation-free.
+///
+/// The plan is what lets faulty rounds run on the executor: [`build`]
+/// consumes the seeded `Rng` on the caller thread in exactly the
+/// sequential order, then the row updates become pure functions of
+/// (plan, flat CSR index) and parallelize like the ideal path with
+/// bit-identical results.
+///
+/// [`build`]: FaultPlan::build
+#[derive(Default)]
+struct FaultPlan {
+    /// Flat CSR indices of dropped directed links, strictly ascending
+    /// (the build walk is j-ascending, CSR-column-ascending).
+    drops: Vec<usize>,
+    /// Noise draws for delivered noisy links: `d·k` consecutive values
+    /// per link, in the same fixed walk order.
+    noise: Vec<f64>,
+    /// Drops this round (the `CommStats::dropped` increment).
+    dropped: u64,
+    /// Max latency over *delivered* links this round (dropped messages
+    /// never land, so they cannot gate the round barrier).
+    slowest: u64,
+}
+
+impl FaultPlan {
+    /// Consume the fault rng for one round in exactly the order the
+    /// sequential loop uses — j ascending, CSR column-ascending i, the
+    /// drop draw before the per-element noise draws, diagonal entries
+    /// consuming nothing — materializing only the eventful links.
+    /// Runs on the caller thread; `LinkDrop` trace events fire here, so
+    /// the deterministic event stream matches the sequential path
+    /// exactly.
+    fn build(&mut self, rng: &mut Rng, epoch: &Epoch, cfg: &SimConfig, d: usize, k: usize) {
+        self.drops.clear();
+        self.noise.clear();
+        self.dropped = 0;
+        self.slowest = 0;
+        let sparse = &epoch.sparse;
+        for j in 0..sparse.m() {
+            let (lo, hi) = sparse.row_span(j);
+            let (cols, _) = sparse.row(j);
+            let lat: &[u64] = if cfg.max_latency > 0 { &epoch.latency[lo..hi] } else { &[] };
+            for (e, &i) in cols.iter().enumerate() {
+                if i == j {
+                    continue;
+                }
+                if cfg.drop_prob > 0.0 && rng.chance(cfg.drop_prob) {
+                    self.dropped += 1;
+                    self.drops.push(lo + e);
+                    crate::trace_event!(LinkDrop, i as u64, j as u64);
+                    continue;
+                }
+                if cfg.max_latency > 0 {
+                    self.slowest = self.slowest.max(lat[e]);
+                }
+                if cfg.noise_std > 0.0 {
+                    for _ in 0..d * k {
+                        self.noise.push(rng.normal());
+                    }
+                }
+            }
+        }
+    }
+
+    /// Reserve worst-case capacity (every off-diagonal link dropped /
+    /// noisy) so later rounds never grow the buffers mid-solve — the
+    /// zero-steady-state-allocation contract `alloc_free.rs` audits.
+    fn reserve_worst_case(&mut self, sparse: &SparseGossip, d: usize, k: usize, cfg: &SimConfig) {
+        let nnz = sparse.nnz();
+        self.drops.reserve(nnz.saturating_sub(self.drops.len()));
+        if cfg.noise_std > 0.0 {
+            let want = nnz * d * k;
+            self.noise.reserve(want.saturating_sub(self.noise.len()));
+        }
+    }
 }
 
 /// Mutable simulation state behind the [`Communicator`]'s `&self` API.
@@ -180,8 +290,15 @@ struct SimState {
     /// see [`PingPong`]), persistent across `fastmix` calls so
     /// steady-state rounds perform zero heap allocation.
     bufs: PingPong,
-    /// Scratch for noised payloads.
+    /// Scratch for noised payloads (sequential faulty path).
     noisy: Mat,
+    /// Per-round fault schedule for pooled faulty rounds, persistent at
+    /// its high-water capacity.
+    plan: FaultPlan,
+    /// Per-chunk noised-payload scratch for the pooled faulty path (one
+    /// `d × k` Mat per executor chunk; contents never influence
+    /// results).
+    chunk_noisy: Vec<Mat>,
     /// Persistent Lanczos workspace for sparse-mode epoch rebuilds.
     spectrum_ws: SpectrumWorkspace,
 }
@@ -195,15 +312,18 @@ pub struct SimNet {
     /// (spectral quantities of later epochs live inside the state).
     base_info: GossipInfo,
     state: Mutex<SimState>,
-    /// Worker pool for the per-agent row blocks of *ideal* rounds. The
-    /// seeded fault stream (drops, noise) and the latency max are
-    /// inherently sequential state — they consume one `Rng` in a fixed
-    /// (j, then CSR-ascending i) order — so only a fully ideal config
-    /// (`drop_prob = 0`, `noise_std = 0`, `max_latency = 0`) runs its
-    /// rounds in parallel; every faulty config keeps the sequential
-    /// loop. Either way results are bit-identical for every thread
-    /// count (the ideal row update is the shared
-    /// [`chebyshev_row_update_sparse`] kernel).
+    /// Worker pool for the per-agent row blocks of every round. Ideal
+    /// rounds dispatch directly (the row update is the shared
+    /// [`chebyshev_row_update_sparse`] kernel). Faulty rounds split
+    /// generation from application: a [`FaultPlan`] build pass on the
+    /// caller thread consumes the seeded `Rng` in the same fixed
+    /// (j, then CSR-ascending i) order as the sequential loop, after
+    /// which the row updates are pure functions of (plan, flat CSR
+    /// index) and dispatch through the executor's weighted chunks
+    /// (`row_ptr` as the cost prefix). Results, stats, and the
+    /// deterministic trace stream are bit-identical for every thread
+    /// count; `threads() == 1` keeps the original single-pass
+    /// sequential loop.
     exec: Arc<Executor>,
 }
 
@@ -236,9 +356,17 @@ impl SimNet {
             };
             let mut latency = Vec::new();
             rebuild_latency(&mut latency, &sparse, &cfg);
+            let mut diag_before = Vec::new();
+            rebuild_diag_before(&mut diag_before, &sparse, &cfg);
             let info = sparse.info();
-            let epoch =
-                Epoch { index: 0, eta, edges: topo0.num_edges(), sparse, latency };
+            let epoch = Epoch {
+                index: 0,
+                eta,
+                edges: topo0.num_edges(),
+                sparse,
+                latency,
+                diag_before,
+            };
             (epoch, info)
         };
         SimNet {
@@ -253,6 +381,8 @@ impl SimNet {
                 round: 0,
                 bufs: PingPong::default(),
                 noisy: Mat::zeros(0, 0),
+                plan: FaultPlan::default(),
+                chunk_noisy: Vec::new(),
                 spectrum_ws,
             }),
             exec: Arc::new(Executor::sequential()),
@@ -278,9 +408,12 @@ impl SimNet {
         Self::new(TopologySchedule::fixed(topo.clone()), cfg)
     }
 
-    /// Run ideal rounds' per-agent row blocks on `exec`'s worker pool
-    /// (see the `exec` field: faulty configs stay sequential because the
-    /// seeded fault stream is consumed in a fixed order).
+    /// Run each round's per-agent row blocks on `exec`'s worker pool.
+    /// Faulty configs parallelize too: fault generation stays a
+    /// sequential [`FaultPlan`] build on the caller thread (the seeded
+    /// stream's order never changes), and only the pure index-based
+    /// application fans out — results are bit-identical to the
+    /// executor-less engine at every thread count.
     pub fn with_executor(mut self, exec: Arc<Executor>) -> Self {
         self.exec = exec;
         self
@@ -317,7 +450,8 @@ impl Communicator for SimNet {
         // FastMix recursion buffers (same rotation scheme as DenseComm,
         // same [`PingPong`] helper), persistent in the state across
         // mixes — zero allocation in steady state.
-        let SimState { rng, schedule, epoch, round, bufs, noisy, spectrum_ws } = st;
+        let SimState { rng, schedule, epoch, round, bufs, noisy, plan, chunk_noisy, spectrum_ws } =
+            st;
         bufs.ensure(m, d, k);
         if noisy.shape() != (d, k) {
             // lint: allow(alloc, one-time rebuild when the problem shape changes; steady state reuses the buffer)
@@ -325,12 +459,22 @@ impl Communicator for SimNet {
         }
         bufs.load(stack);
 
-        // Only a fully ideal config may parallelize its rounds — the
-        // fault stream and latency max are sequential state (see the
-        // `exec` field).
+        // Ideal rounds dispatch straight to the pool; faulty rounds run
+        // pooled too via the fault-plan split (build sequential, apply
+        // parallel — see the `exec` field). `threads() == 1` keeps the
+        // original single-pass sequential loop.
         let ideal = self.cfg.drop_prob == 0.0
             && self.cfg.noise_std == 0.0
             && self.cfg.max_latency == 0;
+        let pooled = self.exec.threads() > 1;
+        if !ideal && pooled {
+            let nchunks = self.exec.chunk_count(m);
+            if chunk_noisy.len() < nchunks || chunk_noisy.iter().any(|s| s.shape() != (d, k)) {
+                chunk_noisy.clear();
+                // lint: allow(alloc, one-time scratch build on shape or pool change; steady state reuses the bank)
+                chunk_noisy.resize_with(nchunks, || Mat::zeros(d, k));
+            }
+        }
 
         for _ in 0..rounds {
             // Consult the schedule. An Unchanged epoch tick is O(1);
@@ -349,7 +493,7 @@ impl Communicator for SimNet {
 
             let mut dropped_this_round = 0u64;
             let mut slowest_delivery = 0u64;
-            if ideal && self.exec.threads() > 1 {
+            if ideal && pooled {
                 // Ideal round on the pool: per-agent row blocks are
                 // independent, and each accumulates through the same
                 // fixed-order CSR kernel as the sequential branch below
@@ -360,7 +504,10 @@ impl Communicator for SimNet {
                 let prev: &[Mat] = prev;
                 let cur: &[Mat] = cur;
                 let sparse = &epoch.sparse;
-                self.exec.par_for_each_agent(next.as_mut_slice(), |j, acc| {
+                // Cost-aware chunks (CSR row pointer as the per-row
+                // work prefix); boundaries are index-pure, so this is
+                // bit-identical to uniform chunking.
+                self.exec.par_weighted(next.as_mut_slice(), sparse.row_ptr(), |j, acc| {
                     let (cols, vals) = sparse.row(j);
                     chebyshev_row_update_sparse(cols, vals, eta, &prev[j], cur, acc);
                 });
@@ -370,6 +517,99 @@ impl Communicator for SimNet {
                 stats.virtual_time += 1;
                 crate::trace_event!(GossipRound, epoch.edges as u64);
                 crate::trace_event!(GossipRoundIo, 1u64, (2 * epoch.edges * d * k) as u64 * 8);
+                continue;
+            }
+            if !ideal && pooled {
+                // Faulty round on the pool: generation is split from
+                // application. The plan build consumes the seeded rng on
+                // this thread in exactly the sequential branch's order
+                // (so replay and the LinkDrop event stream are
+                // unchanged), then the row updates — now pure functions
+                // of (plan, flat CSR index) — fan out over weighted
+                // chunks with the CSR row pointer as the cost prefix, so
+                // hub rows don't serialize a chunk.
+                plan.reserve_worst_case(&epoch.sparse, d, k, &self.cfg);
+                plan.build(rng, epoch, &self.cfg, d, k);
+                crate::trace_event!(
+                    FaultPlanBuild,
+                    plan.dropped,
+                    (plan.drops.len() + plan.noise.len()) as u64
+                );
+                {
+                    let PingPong { prev, cur, next } = &mut *bufs;
+                    let prev: &[Mat] = prev;
+                    let cur: &[Mat] = cur;
+                    let sparse = &epoch.sparse;
+                    let diag_before: &[usize] = &epoch.diag_before;
+                    let drops: &[usize] = &plan.drops;
+                    let noise: &[f64] = &plan.noise;
+                    let cfg = self.cfg;
+                    let noise_dim = d * k;
+                    self.exec.par_weighted_chunks_ctx(
+                        next.as_mut_slice(),
+                        sparse.row_ptr(),
+                        chunk_noisy,
+                        |lo, rows, noisy| {
+                            for (off, acc) in rows.iter_mut().enumerate() {
+                                let j = lo + off;
+                                let (rlo, _rhi) = sparse.row_span(j);
+                                let (cols, vals) = sparse.row(j);
+                                // Cursor over this row's drops: after the
+                                // binary search it advances in lockstep
+                                // with the edge walk, so at each edge it
+                                // equals the global count of drops at
+                                // flat indices below it.
+                                let mut dcur = drops.partition_point(|&x| x < rlo);
+                                // acc = −η · prev_j (overwrite, no zero pass).
+                                acc.data_mut().copy_from_slice(prev[j].data());
+                                acc.scale(-eta);
+                                for (e, (&i, &w)) in cols.iter().zip(vals).enumerate() {
+                                    if i == j {
+                                        acc.axpy(one_plus_eta * w, &cur[j]);
+                                        continue;
+                                    }
+                                    let flat = rlo + e;
+                                    if dcur < drops.len() && drops[dcur] == flat {
+                                        // Dropped: self-weight fallback,
+                                        // same as the sequential branch.
+                                        dcur += 1;
+                                        acc.axpy(one_plus_eta * w, &cur[j]);
+                                        continue;
+                                    }
+                                    if cfg.noise_std > 0.0 {
+                                        // This delivered link's draws sit at
+                                        // its delivered off-diagonal ordinal:
+                                        // off-diagonals before `flat` minus
+                                        // drops before `flat`.
+                                        let slot = flat - diag_before[flat] - dcur;
+                                        let z = &noise[slot * noise_dim..(slot + 1) * noise_dim];
+                                        let nd = noisy.data_mut();
+                                        for ((nv, &cv), &zv) in
+                                            nd.iter_mut().zip(cur[i].data()).zip(z)
+                                        {
+                                            *nv = cv + cfg.noise_std * zv;
+                                        }
+                                        acc.axpy(one_plus_eta * w, noisy);
+                                    } else {
+                                        acc.axpy(one_plus_eta * w, &cur[i]);
+                                    }
+                                }
+                            }
+                        },
+                    );
+                }
+                crate::trace_event!(FaultPlanApply, m as u64, plan.slowest);
+                bufs.rotate();
+                *round += 1;
+                stats.record_round(epoch.edges, d, k);
+                stats.dropped += plan.dropped;
+                stats.virtual_time += 1 + plan.slowest;
+                crate::trace_event!(GossipRound, epoch.edges as u64, plan.dropped);
+                crate::trace_event!(
+                    GossipRoundIo,
+                    1 + plan.slowest,
+                    (2 * epoch.edges * d * k) as u64 * 8
+                );
                 continue;
             }
             // One barrier-synchronized event per round: every directed
@@ -507,22 +747,93 @@ mod tests {
     }
 
     #[test]
-    fn pooled_faulty_config_stays_sequential_and_replays() {
-        // A faulty config must consume the fault Rng in the fixed
-        // sequential order no matter the executor — same bits as the
-        // executor-less engine.
-        let topo = Topology::ring(8);
-        let cfg = SimConfig { drop_prob: 0.25, noise_std: 0.01, ..SimConfig::ideal(29) };
-        let stack0 = random_stack(8, 4, 2, 318);
+    fn pooled_faulty_bit_identical_to_sequential() {
+        // The fault plan consumes the rng in the same fixed order the
+        // sequential loop does and the apply stage is index-pure, so a
+        // pooled faulty run (drops + noise + latency all active) must
+        // match the executor-less engine bit for bit — stats included.
+        let topo = Topology::erdos_renyi(9, 0.4, &mut Rng::seed_from(340));
+        let cfg = SimConfig {
+            drop_prob: 0.25,
+            noise_std: 0.01,
+            max_latency: 3,
+            ..SimConfig::ideal(29)
+        };
+        let stack0 = random_stack(9, 4, 2, 318);
 
         let mut want = stack0.clone();
-        SimNet::from_topology(&topo, cfg).fastmix(&mut want, 9, &mut CommStats::default());
+        let mut want_stats = CommStats::default();
+        SimNet::from_topology(&topo, cfg).fastmix(&mut want, 9, &mut want_stats);
+        assert!(want_stats.dropped > 0, "drops must actually fire in this fixture");
 
-        let sim = SimNet::from_topology(&topo, cfg)
-            .with_executor(Arc::new(Executor::new(8)));
-        let mut got = stack0;
-        sim.fastmix(&mut got, 9, &mut CommStats::default());
-        assert_eq!(want, got, "faulty rounds must be executor-invariant");
+        for threads in [2usize, 4, 8] {
+            let sim = SimNet::from_topology(&topo, cfg)
+                .with_executor(Arc::new(Executor::new(threads)));
+            let mut got = stack0.clone();
+            let mut stats = CommStats::default();
+            sim.fastmix(&mut got, 9, &mut stats);
+            assert_eq!(want, got, "faulty rounds must be executor-invariant (threads={threads})");
+            assert_eq!(want_stats, stats, "stats must be executor-invariant (threads={threads})");
+        }
+    }
+
+    #[test]
+    fn pooled_faulty_single_fault_axes_match_sequential() {
+        // Each fault axis exercises a different plan field (drops →
+        // drop mask, latency → slowest, noise → draw buffer); pin each
+        // one alone against the sequential engine.
+        let topo = Topology::erdos_renyi(10, 0.45, &mut Rng::seed_from(343));
+        let axes = [
+            SimConfig { drop_prob: 0.3, ..SimConfig::ideal(71) },
+            SimConfig { max_latency: 4, ..SimConfig::ideal(72) },
+            SimConfig { noise_std: 0.05, ..SimConfig::ideal(73) },
+        ];
+        for cfg in axes {
+            let stack0 = random_stack(10, 3, 2, 344);
+            let mut want = stack0.clone();
+            let mut want_stats = CommStats::default();
+            SimNet::from_topology(&topo, cfg).fastmix(&mut want, 7, &mut want_stats);
+
+            let sim = SimNet::from_topology(&topo, cfg)
+                .with_executor(Arc::new(Executor::new(4)));
+            let mut got = stack0;
+            let mut stats = CommStats::default();
+            sim.fastmix(&mut got, 7, &mut stats);
+            assert_eq!(want, got, "cfg={cfg:?}");
+            assert_eq!(want_stats, stats, "cfg={cfg:?}");
+        }
+    }
+
+    #[test]
+    fn pooled_faulty_sparse_mode_with_churn_matches_sequential() {
+        // Fleet-scale shape: Metropolis CSR weights, Markov churn
+        // (epoch rebuilds mid-mix resize the plan's aux arrays), all
+        // three fault axes on — still executor-invariant to the bit.
+        let base = Topology::erdos_renyi(12, 0.5, &mut Rng::seed_from(341));
+        let cfg = SimConfig {
+            drop_prob: 0.15,
+            noise_std: 0.02,
+            max_latency: 2,
+            ..SimConfig::ideal(57)
+        };
+        let stack0 = random_stack(12, 4, 2, 342);
+        let run = |threads: usize| {
+            let sched = TopologySchedule::markov(base.clone(), 0.3, 0.5, 61, 3);
+            let mut sim = SimNet::sparse(sched, cfg);
+            if threads > 1 {
+                sim = sim.with_executor(Arc::new(Executor::new(threads)));
+            }
+            let mut s = stack0.clone();
+            let mut stats = CommStats::default();
+            sim.fastmix(&mut s, 20, &mut stats);
+            (s, stats)
+        };
+        let (want, want_stats) = run(1);
+        for threads in [2usize, 8] {
+            let (got, stats) = run(threads);
+            assert_eq!(want, got, "threads={threads}");
+            assert_eq!(want_stats, stats, "threads={threads}");
+        }
     }
 
     #[test]

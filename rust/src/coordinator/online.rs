@@ -13,8 +13,11 @@
 //!
 //! The driver is engine-agnostic: each epoch's inner run goes through
 //! the ordinary [`Session`] builder, so the same stream scenario runs on
-//! [`Engine::Dense`], [`Engine::Threaded`], or [`Engine::Sim`] (drift
-//! plus packet drops/latency/noise together). An optional
+//! [`Engine::Dense`], [`Engine::Threaded`], [`Engine::Sim`] (drift plus
+//! packet drops/latency/noise together), or [`Engine::Sparse`]
+//! (fleet-scale CSR gossip — the epoch loop rebuilds the Metropolis
+//! weights from each epoch's topology, so it composes with a
+//! [`TopologySchedule`] like every other engine). An optional
 //! [`TopologySchedule`] additionally re-draws the network once per
 //! stream epoch — unlike [`Session::schedule`] this works on *every*
 //! engine, because the epoch topology is materialized before the inner
@@ -492,6 +495,53 @@ mod tests {
             assert_eq!(ra.oracle_tan_theta.to_bits(), rb.oracle_tan_theta.to_bits());
             assert_eq!(ra.empirical_tan_theta.to_bits(), rb.empirical_tan_theta.to_bits());
         }
+    }
+
+    #[test]
+    fn sparse_engine_tracks_like_dense_on_the_same_stream() {
+        // Engine::Sparse (CSR Metropolis weights, Lanczos λ₂) is not
+        // bit-identical to Dense (exact-spectrum weights), so parity is
+        // subspace-level: the same drifting stream, topology, and
+        // per-epoch budget must land both engines on the same empirical
+        // subspace — and the sparse epoch loop must itself stay
+        // bit-identical across thread counts.
+        let topo =
+            Topology::erdos_renyi(6, 0.6, &mut crate::util::rng::Rng::seed_from(91));
+        let run = |engine: Engine, threads: usize| {
+            let mut src = stream(Drift::Rotation { rate: 0.02 }, 41);
+            OnlineSession::on(&topo)
+                .engine(engine)
+                .threads(threads)
+                .config(OnlineConfig {
+                    epochs: 8,
+                    consensus_rounds: 12,
+                    power_iters: 2,
+                    warm_start: true,
+                    forgetting: Forgetting::Exponential(0.8),
+                    init_seed: 5,
+                })
+                .run(&mut src)
+        };
+        let dense = run(Engine::Dense, 1);
+        let sparse = run(Engine::Sparse, 1);
+        assert!(!sparse.records.iter().any(|r| r.diverged));
+        // Identical round accounting: the engines differ in weights, not
+        // in how many gossip rounds the budget buys.
+        assert_eq!(dense.comm.rounds, sparse.comm.rounds);
+        let dl = dense.records.last().unwrap().empirical_tan_theta;
+        let sl = sparse.records.last().unwrap().empirical_tan_theta;
+        assert!(dl < 5e-2, "dense tracking error: {dl:.3e}");
+        assert!(sl < 5e-2, "sparse tracking error: {sl:.3e}");
+        assert!(
+            (dl - sl).abs() < 5e-2,
+            "engines disagree on the tracked subspace: dense {dl:.3e} vs sparse {sl:.3e}"
+        );
+        let pooled = run(Engine::Sparse, 4);
+        assert_eq!(
+            sparse.final_w.distance(&pooled.final_w),
+            0.0,
+            "sparse epoch loop must be bit-identical across thread counts"
+        );
     }
 
     #[test]

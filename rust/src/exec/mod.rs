@@ -22,6 +22,10 @@
 //!   contiguous chunks by index — never work-stealing, never
 //!   order-of-completion. Which *thread* computes an item changes with
 //!   the thread count; the arithmetic performed on each item does not.
+//!   The cost-aware variants ([`Executor::par_weighted`],
+//!   [`Executor::par_weighted_chunks_ctx`]) keep this: chunk boundaries
+//!   are a pure function of a caller-supplied weight prefix sum (e.g. a
+//!   CSR `row_ptr`), never of measured timing.
 //! - **No cross-item reductions inside parallel regions.** Every
 //!   parallel callback writes only its own items; reductions (stack
 //!   means, stats accumulation, the SimNet fault stream) stay on the
@@ -150,6 +154,45 @@ pub fn default_threads() -> usize {
 pub fn chunk_range(chunk: usize, n: usize, nchunks: usize) -> (usize, usize) {
     let size = n.div_ceil(nchunks);
     ((chunk * size).min(n), ((chunk + 1) * size).min(n))
+}
+
+/// Contiguous index range of `chunk` when items are split into `nchunks`
+/// chunks balanced by *cumulative cost* instead of item count.
+///
+/// `prefix` is an exclusive prefix sum of per-item weights with
+/// `prefix.len() = n + 1`, `prefix[0] = 0`, and `prefix[n]` = total
+/// weight (a CSR `row_ptr` is exactly this shape, which is why the
+/// gossip engines can pass theirs without building anything). Chunk `c`
+/// covers the items whose weight midpoint falls in the `c`-th fraction
+/// of the total: boundaries are the smallest indices where
+/// `prefix[i] · nchunks ≥ c · total` (computed in u128 so huge
+/// weight × chunk products cannot wrap). Like [`chunk_range`] the
+/// boundaries are a pure function of `(chunk, prefix, nchunks)` — no
+/// measurement, no claim order — so weighted dispatch keeps the
+/// determinism contract. Trailing zero-weight items are folded into the
+/// last chunk; a zero total falls back to uniform [`chunk_range`].
+pub fn weighted_chunk_range(chunk: usize, nchunks: usize, prefix: &[usize]) -> (usize, usize) {
+    debug_assert!(!prefix.is_empty() && prefix[0] == 0, "prefix must start at 0");
+    debug_assert!(prefix.windows(2).all(|w| w[0] <= w[1]), "prefix must be non-decreasing");
+    let n = prefix.len() - 1;
+    let total = prefix[n] as u128;
+    if total == 0 {
+        return chunk_range(chunk, n, nchunks);
+    }
+    if chunk >= nchunks {
+        return (n, n);
+    }
+    let bound = |c: usize| -> usize {
+        if c == 0 {
+            return 0;
+        }
+        if c >= nchunks {
+            return n;
+        }
+        let target = c as u128 * total; // compare against prefix[i] · nchunks
+        prefix.partition_point(|&p| (p as u128) * nchunks as u128 < target)
+    };
+    (bound(chunk), bound(chunk + 1))
 }
 
 /// Type-erased pointer to the borrowed job closure. Only dereferenced
@@ -525,6 +568,92 @@ impl Executor {
         self.run_job(nchunks, &run);
     }
 
+    /// Cost-aware [`Executor::par_for_each_agent`]: run
+    /// `f(j, &mut items[j])` for every item with chunk boundaries
+    /// balanced by per-item weight instead of item count. `prefix` is an
+    /// exclusive prefix sum of the weights (`prefix.len() = items.len()
+    /// + 1`, `prefix[0] = 0` — a CSR `row_ptr` qualifies verbatim), so
+    /// heterogeneous shards (a hub row with 10³ neighbors next to leaf
+    /// rows with 2) split into chunks of comparable *work*. Boundaries
+    /// come from [`weighted_chunk_range`] — a pure function of the
+    /// prefix — so results stay bit-identical to the sequential loop for
+    /// any thread count.
+    pub fn par_weighted<T, F>(&self, items: &mut [T], prefix: &[usize], f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut T) + Sync,
+    {
+        let n = items.len();
+        if n == 0 {
+            return;
+        }
+        assert_eq!(prefix.len(), n + 1, "need one prefix entry per item plus the total");
+        let nchunks = self.chunk_count(n);
+        let base = items.as_mut_ptr() as usize;
+        let run = |chunk: usize| {
+            let (lo, hi) = weighted_chunk_range(chunk, nchunks, prefix);
+            let ptr = base as *mut T;
+            for j in lo..hi {
+                // SAFETY: weighted chunks are disjoint index ranges over
+                // `items` (see weighted_chunk_range: the boundaries are a
+                // non-decreasing function of the chunk index covering
+                // 0..n exactly once), so each element gets exactly one
+                // &mut.
+                f(j, unsafe { &mut *ptr.add(j) });
+            }
+        };
+        self.run_job(nchunks, &run);
+    }
+
+    /// Cost-aware [`Executor::par_chunks_ctx`]: weighted chunk
+    /// boundaries (see [`Executor::par_weighted`]) plus one mutable
+    /// scratch context per chunk — `f(chunk_start, chunk_items, ctx)`.
+    /// `ctxs` must hold at least [`Executor::chunk_count`]`(n)` slots
+    /// and scratch contents must not influence results (determinism
+    /// contract).
+    pub fn par_weighted_chunks_ctx<T, C, F>(
+        &self,
+        items: &mut [T],
+        prefix: &[usize],
+        ctxs: &mut [C],
+        f: F,
+    ) where
+        T: Send,
+        C: Send,
+        F: Fn(usize, &mut [T], &mut C) + Sync,
+    {
+        let n = items.len();
+        if n == 0 {
+            return;
+        }
+        assert_eq!(prefix.len(), n + 1, "need one prefix entry per item plus the total");
+        let nchunks = self.chunk_count(n);
+        assert!(
+            ctxs.len() >= nchunks,
+            "need one ctx per chunk: {} < {nchunks}",
+            ctxs.len()
+        );
+        let items_base = items.as_mut_ptr() as usize;
+        let ctx_base = ctxs.as_mut_ptr() as usize;
+        let run = |chunk: usize| {
+            let (lo, hi) = weighted_chunk_range(chunk, nchunks, prefix);
+            if lo >= hi {
+                return;
+            }
+            // SAFETY: weighted chunks are disjoint index ranges of
+            // `items`, so each element is inside exactly one
+            // reconstituted slice.
+            let slice = unsafe {
+                std::slice::from_raw_parts_mut((items_base as *mut T).add(lo), hi - lo)
+            };
+            // SAFETY: chunk indices < nchunks ≤ ctxs.len() are pairwise
+            // distinct, so each ctx slot gets exactly one &mut.
+            let ctx = unsafe { &mut *(ctx_base as *mut C).add(chunk) };
+            f(lo, slice, ctx);
+        };
+        self.run_job(nchunks, &run);
+    }
+
     /// Run one-shot tasks that may *block on each other* (channel
     /// `recv`), each on its own dedicated persistent thread. Blocks
     /// until every task completes; a panicking task is reported (by
@@ -623,6 +752,117 @@ mod tests {
                 assert!(lo >= hi);
             }
         }
+    }
+
+    #[test]
+    fn weighted_chunk_ranges_cover_and_are_disjoint() {
+        // Uniform, skewed, zero-weight, and hub-dominated profiles.
+        let profiles: Vec<Vec<usize>> = vec![
+            vec![1; 16],
+            vec![1, 1, 1, 1000, 1, 1, 1, 1],
+            vec![0, 0, 5, 0, 0, 7, 0, 0],
+            vec![0; 9],
+            (0..33).map(|i| i * i).collect(),
+            vec![1000, 1, 1, 1, 1, 1, 1, 0, 0],
+        ];
+        for weights in profiles {
+            let n = weights.len();
+            let mut prefix = vec![0usize; n + 1];
+            for (i, w) in weights.iter().enumerate() {
+                prefix[i + 1] = prefix[i] + w;
+            }
+            for nchunks in 1..=8usize {
+                let mut covered = vec![0u8; n];
+                let mut prev_hi = 0usize;
+                for c in 0..nchunks {
+                    let (lo, hi) = weighted_chunk_range(c, nchunks, &prefix);
+                    assert_eq!(lo, prev_hi, "chunks must be contiguous ({weights:?})");
+                    prev_hi = hi;
+                    for j in lo..hi {
+                        covered[j] += 1;
+                    }
+                }
+                assert_eq!(prev_hi, n, "chunks must cover every item ({weights:?})");
+                assert!(covered.iter().all(|&c| c == 1), "{weights:?} chunks={nchunks}");
+                // Chunks past the count are empty.
+                let (lo, hi) = weighted_chunk_range(nchunks, nchunks, &prefix);
+                assert!(lo >= hi);
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_chunk_boundaries_balance_heavy_items() {
+        // One hub worth half the total weight: the hub's chunk should
+        // not also absorb half the remaining items.
+        let weights = [100usize, 1, 1, 1, 1, 1, 1, 1, 1, 1, 1, 1];
+        let mut prefix = vec![0usize; weights.len() + 1];
+        for (i, w) in weights.iter().enumerate() {
+            prefix[i + 1] = prefix[i] + w;
+        }
+        let (lo0, hi0) = weighted_chunk_range(0, 4, &prefix);
+        assert_eq!((lo0, hi0), (0, 1), "the hub alone fills chunk 0");
+        // Uniform chunking would have put items 0..3 in chunk 0.
+        let (_, hi_uniform) = chunk_range(0, weights.len(), 4);
+        assert_eq!(hi_uniform, 3);
+    }
+
+    #[test]
+    fn weighted_chunk_range_survives_huge_weights() {
+        // prefix · nchunks overflows usize on 64-bit if computed
+        // natively; the u128 comparison must not wrap.
+        let big = usize::MAX / 4;
+        let prefix = [0usize, big, 2 * big, 3 * big, 4 * big];
+        let mut prev_hi = 0;
+        for c in 0..8 {
+            let (lo, hi) = weighted_chunk_range(c, 8, &prefix);
+            assert_eq!(lo, prev_hi);
+            prev_hi = hi;
+        }
+        assert_eq!(prev_hi, 4);
+    }
+
+    #[test]
+    fn par_weighted_matches_sequential_for_every_thread_count() {
+        let weights: Vec<usize> = (0..41).map(|i| (i * 7) % 13).collect();
+        let mut prefix = vec![0usize; weights.len() + 1];
+        for (i, w) in weights.iter().enumerate() {
+            prefix[i + 1] = prefix[i] + w;
+        }
+        let base: Vec<f64> = (0..41).map(|i| i as f64 * 0.25).collect();
+        let mut want = base.clone();
+        for (j, v) in want.iter_mut().enumerate() {
+            *v = v.cos() * j as f64;
+        }
+        for threads in [1usize, 2, 3, 8, 16] {
+            let exec = Executor::new(threads);
+            let mut got = base.clone();
+            exec.par_weighted(&mut got, &prefix, |j, v| *v = v.cos() * j as f64);
+            assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn par_weighted_chunks_ctx_visits_every_item_once() {
+        let exec = Executor::new(4);
+        let weights = [9usize, 0, 0, 1, 1, 1, 1, 1, 20, 1];
+        let mut prefix = vec![0usize; weights.len() + 1];
+        for (i, w) in weights.iter().enumerate() {
+            prefix[i + 1] = prefix[i] + w;
+        }
+        let mut items = vec![0usize; weights.len()];
+        let nchunks = exec.chunk_count(items.len());
+        let mut ctxs: Vec<Vec<usize>> = vec![Vec::new(); nchunks];
+        exec.par_weighted_chunks_ctx(&mut items, &prefix, &mut ctxs, |lo, chunk, ctx| {
+            for (off, it) in chunk.iter_mut().enumerate() {
+                *it = lo + off;
+                ctx.push(lo + off);
+            }
+        });
+        assert_eq!(items, (0..weights.len()).collect::<Vec<_>>());
+        let mut seen: Vec<usize> = ctxs.into_iter().flatten().collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..weights.len()).collect::<Vec<_>>());
     }
 
     #[test]

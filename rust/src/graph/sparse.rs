@@ -404,6 +404,16 @@ impl SparseGossip {
         (self.row_ptr[j], self.row_ptr[j + 1])
     }
 
+    /// The CSR row-pointer array (`m + 1` entries, `row_ptr[0] = 0`).
+    /// Doubles as the per-row *cost* prefix the executor's weighted
+    /// dispatch wants ([`crate::exec::Executor::par_weighted`]): entry
+    /// `j` is the cumulative nonzero count before row `j`, so chunking
+    /// by it balances gossip work across hub and leaf agents with zero
+    /// extra bookkeeping.
+    pub fn row_ptr(&self) -> &[usize] {
+        &self.row_ptr
+    }
+
     /// The representation-independent spectral summary.
     pub fn info(&self) -> GossipInfo {
         GossipInfo {

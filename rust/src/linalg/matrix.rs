@@ -1,14 +1,34 @@
 //! Row-major dense `f64` matrix with the operations the DeEPCA stack needs.
 //!
-//! Sized for the paper's regime (d ≤ a few hundred): matmul uses an
-//! `i-k-j` loop order so the inner loop is a contiguous fused
-//! multiply-add over the output row — autovectorizes well and needs no
-//! explicit blocking at these sizes (see EXPERIMENTS.md §Perf for the
-//! measured comparison against the naive `i-j-k` order).
+//! Kernel family (see EXPERIMENTS.md §Perf for the measured history):
+//! ≤8 output columns run a register-blocked panel kernel (the DeEPCA
+//! power-step shape `A(d×d) @ W(d×k)`), 9–16 as two panels, and wider
+//! outputs — Gram/covariance products, Rayleigh blocks — run the same
+//! panel kernel under a cache-blocked `k × j` tiling: 8-wide column
+//! panels × inner-dimension blocks sized so the streamed B panel stays
+//! in cache, with the panel accumulator re-seeded from the output
+//! between blocks (bit-identical to a single full-depth pass, because
+//! each output element still accumulates in ascending inner order).
+//! `t_matmul_into` tiles wide outputs by column block for the same
+//! reason, keeping its sparse-operand zero skip.
 
 use crate::util::rng::Rng;
 use std::fmt;
 use std::ops::{Add, Mul, Sub};
+
+/// Inner-dimension block for the wide (>16 column) matmul path: the
+/// panel kernel streams `WIDE_K_BLOCK` B-rows per pass, so the live
+/// B panel is `256 × 8 × 8 B = 16 KiB` — resident in L1 while the
+/// accumulators sit in registers. Chosen once; the blocked result is
+/// bit-identical for *any* block size (ascending-`p` accumulation),
+/// so this is purely a cache knob.
+const WIDE_K_BLOCK: usize = 256;
+
+/// Column tile for wide `t_matmul_into` outputs: bounds the output
+/// working set touched per input row to `d × 64 × 8 B`, so the Gram
+/// accumulation (`CovTracker`'s `XᵀX` at d up to a few hundred) stays
+/// in L2 instead of sweeping the whole `d × m` output every row.
+const TM_COL_BLOCK: usize = 64;
 
 /// Dense row-major matrix of `f64`.
 #[derive(Clone, PartialEq)]
@@ -194,8 +214,14 @@ impl Mat {
     /// live in registers, one streaming pass over the A row and the B
     /// panel — ~8× the naive i-k-j loop, see EXPERIMENTS.md §Perf);
     /// 9–16 columns run as two ≤8-wide panels directly into the output
-    /// (no column-slice materialization). Wider results fall back to the
-    /// cache-friendly i-k-j order.
+    /// (no column-slice materialization). Wider outputs — Gram and
+    /// covariance products — auto-detect by shape and run the same
+    /// panel kernel under a cache-blocked `k × j` tiling: 8-wide column
+    /// panels × [`WIDE_K_BLOCK`]-deep inner blocks, with the panel
+    /// accumulators re-seeded from `out` between blocks. Each output
+    /// element still accumulates in ascending inner order, so the
+    /// blocked result is bit-identical to a single full-depth panel
+    /// pass (pinned by a unit test below).
     pub fn matmul_into(&self, other: &Mat, out: &mut Mat) {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
         assert_eq!(
@@ -212,37 +238,93 @@ impl Mat {
                 self.matmul_thin_panel_into(other, 0, half, out);
                 self.matmul_thin_panel_into(other, half, m - half, out);
             }
-            _ => self.matmul_wide_into(other, out),
+            _ => self.matmul_wide_blocked_into(other, out),
         }
     }
 
-    /// Dispatch one ≤8-wide panel to the monomorphized thin kernel:
-    /// B columns `col0 .. col0+width` into the same output columns.
+    /// Dispatch one ≤8-wide panel to the monomorphized thin kernel over
+    /// the full inner dimension: B columns `col0 .. col0+width` into the
+    /// same output columns.
     fn matmul_thin_panel_into(&self, other: &Mat, col0: usize, width: usize, out: &mut Mat) {
+        self.matmul_panel_block_into(other, col0, width, 0, self.cols, false, out);
+    }
+
+    /// Dispatch one ≤8-wide panel restricted to inner rows `p0..p1` to
+    /// the monomorphized block kernel. `accumulate` seeds the register
+    /// accumulators from `out` (for the second and later inner blocks
+    /// of the wide tiled path) instead of zero.
+    #[allow(clippy::too_many_arguments)]
+    fn matmul_panel_block_into(
+        &self,
+        other: &Mat,
+        col0: usize,
+        width: usize,
+        p0: usize,
+        p1: usize,
+        accumulate: bool,
+        out: &mut Mat,
+    ) {
         match width {
-            1 => self.matmul_thin_into::<1>(other, col0, out),
-            2 => self.matmul_thin_into::<2>(other, col0, out),
-            3 => self.matmul_thin_into::<3>(other, col0, out),
-            4 => self.matmul_thin_into::<4>(other, col0, out),
-            5 => self.matmul_thin_into::<5>(other, col0, out),
-            6 => self.matmul_thin_into::<6>(other, col0, out),
-            7 => self.matmul_thin_into::<7>(other, col0, out),
-            8 => self.matmul_thin_into::<8>(other, col0, out),
+            1 => self.matmul_thin_block_into::<1>(other, col0, p0, p1, accumulate, out),
+            2 => self.matmul_thin_block_into::<2>(other, col0, p0, p1, accumulate, out),
+            3 => self.matmul_thin_block_into::<3>(other, col0, p0, p1, accumulate, out),
+            4 => self.matmul_thin_block_into::<4>(other, col0, p0, p1, accumulate, out),
+            5 => self.matmul_thin_block_into::<5>(other, col0, p0, p1, accumulate, out),
+            6 => self.matmul_thin_block_into::<6>(other, col0, p0, p1, accumulate, out),
+            7 => self.matmul_thin_block_into::<7>(other, col0, p0, p1, accumulate, out),
+            8 => self.matmul_thin_block_into::<8>(other, col0, p0, p1, accumulate, out),
             _ => unreachable!("thin panels are 1..=8 wide"),
         }
     }
 
+    /// Cache-blocked product for wide outputs (> 16 columns): iterate
+    /// 8-wide column panels, and within each panel sweep the inner
+    /// dimension in [`WIDE_K_BLOCK`]-deep blocks so the streamed B
+    /// panel stays L1-resident. The first block overwrites `out`
+    /// (dirty buffers allowed, same contract as the thin path), later
+    /// blocks re-seed the register accumulators from `out` — per
+    /// output element that is the same ascending-`p` addition sequence
+    /// as one full-depth pass, so the split is bit-invisible.
+    fn matmul_wide_blocked_into(&self, other: &Mat, out: &mut Mat) {
+        let (k, m) = (self.cols, other.cols);
+        if k == 0 {
+            out.data.fill(0.0);
+            return;
+        }
+        let mut col0 = 0;
+        while col0 < m {
+            let width = (m - col0).min(8);
+            let mut p0 = 0;
+            while p0 < k {
+                let p1 = (p0 + WIDE_K_BLOCK).min(k);
+                self.matmul_panel_block_into(other, col0, width, p0, p1, p0 > 0, out);
+                p0 = p1;
+            }
+            col0 += width;
+        }
+    }
+
     /// Register-blocked kernel for an `M`-wide panel (compile-time
-    /// width): `M` output accumulators live in registers, one streaming
-    /// pass over the A row per output row. (A transposed-panel
-    /// dot-product variant with 4-wide unrolling was measured 10–25%
-    /// *slower* at these shapes — see EXPERIMENTS.md §Perf — and
-    /// reverted.)
-    fn matmul_thin_into<const M: usize>(&self, other: &Mat, col0: usize, out: &mut Mat) {
+    /// width) over inner rows `p0..p1`: `M` output accumulators live in
+    /// registers, one streaming pass over the A row segment per output
+    /// row. With `accumulate` the registers are seeded from `out`
+    /// (partial sums from earlier inner blocks) instead of zero. (A
+    /// transposed-panel dot-product variant with 4-wide unrolling was
+    /// measured 10–25% *slower* at these shapes — see EXPERIMENTS.md
+    /// §Perf — and reverted.)
+    fn matmul_thin_block_into<const M: usize>(
+        &self,
+        other: &Mat,
+        col0: usize,
+        p0: usize,
+        p1: usize,
+        accumulate: bool,
+        out: &mut Mat,
+    ) {
         let (n, k) = (self.rows, self.cols);
         let bn = other.cols;
         let on = out.cols;
-        debug_assert!(col0 + M <= bn && col0 + M <= on);
+        debug_assert!(col0 + M <= bn && col0 + M <= on && p0 <= p1 && p1 <= k);
         // Two A-rows per pass: 2·M independent accumulator chains hide
         // FMA latency, and each B row is loaded once for both outputs.
         let mut i = 0;
@@ -251,7 +333,11 @@ impl Mat {
             let arow1 = &self.data[(i + 1) * k..(i + 2) * k];
             let mut acc0 = [0.0f64; M];
             let mut acc1 = [0.0f64; M];
-            for p in 0..k {
+            if accumulate {
+                acc0.copy_from_slice(&out.data[i * on + col0..i * on + col0 + M]);
+                acc1.copy_from_slice(&out.data[(i + 1) * on + col0..(i + 1) * on + col0 + M]);
+            }
+            for p in p0..p1 {
                 let a0 = arow0[p];
                 let a1 = arow1[p];
                 let brow = &other.data[p * bn + col0..p * bn + col0 + M];
@@ -267,7 +353,11 @@ impl Mat {
         if i < n {
             let arow = self.row(i);
             let mut acc = [0.0f64; M];
-            for (p, &a) in arow.iter().enumerate().take(k) {
+            if accumulate {
+                acc.copy_from_slice(&out.data[i * on + col0..i * on + col0 + M]);
+            }
+            for p in p0..p1 {
+                let a = arow[p];
                 let brow = &other.data[p * bn + col0..p * bn + col0 + M];
                 for j in 0..M {
                     acc[j] += a * brow[j];
@@ -278,6 +368,7 @@ impl Mat {
     }
 
     /// General i-k-j product (contiguous FMA inner loop), allocating.
+    /// Test-only reference the blocked wide path is checked against.
     #[cfg(test)]
     fn matmul_wide(&self, other: &Mat) -> Mat {
         let mut out = Mat::zeros(self.rows, other.cols);
@@ -285,7 +376,10 @@ impl Mat {
         out
     }
 
-    /// General i-k-j product into a caller-owned buffer.
+    /// General i-k-j product into a caller-owned buffer (test-only
+    /// reference; the production wide path is
+    /// [`Mat::matmul_wide_blocked_into`]).
+    #[cfg(test)]
     fn matmul_wide_into(&self, other: &Mat, out: &mut Mat) {
         let (n, k, m) = (self.rows, self.cols, other.cols);
         out.data.fill(0.0);
@@ -313,6 +407,15 @@ impl Mat {
 
     /// `out = selfᵀ * other` into a caller-owned buffer (`out` is fully
     /// overwritten, never reallocated).
+    ///
+    /// Wide outputs (> 16 columns — the Gram/covariance shape
+    /// `Xᵀ(n×d) X(n×d)` with d up to a few hundred) run column-tiled
+    /// ([`TM_COL_BLOCK`]) so each input row's outer-product update
+    /// touches an L2-resident output panel instead of sweeping the full
+    /// `d × m` output. Per output element the accumulation order is
+    /// unchanged (ascending input row, same `a == 0` skip), so the
+    /// tiled result is bit-identical to the untiled loop (pinned by a
+    /// unit test below).
     pub fn t_matmul_into(&self, other: &Mat, out: &mut Mat) {
         assert_eq!(self.rows, other.rows, "t_matmul shape mismatch");
         assert_eq!(
@@ -321,6 +424,10 @@ impl Mat {
             "t_matmul_into output shape mismatch"
         );
         let (n, m) = (self.rows, other.cols);
+        if m > 16 {
+            self.t_matmul_blocked_into(other, out);
+            return;
+        }
         out.data.fill(0.0);
         for p in 0..n {
             let arow = self.row(p);
@@ -334,6 +441,36 @@ impl Mat {
                     *o += a * b;
                 }
             }
+        }
+    }
+
+    /// Column-tiled `selfᵀ * other` for wide outputs: for each
+    /// [`TM_COL_BLOCK`]-wide output column tile, sweep all input rows
+    /// and accumulate the outer-product contribution restricted to the
+    /// tile. Same ascending-row accumulation and `a == 0.0` skip
+    /// (sparse-ish binary features) as the untiled loop — the tiling
+    /// only reorders *which elements* are updated when, never the order
+    /// of additions within one element, so results are bit-identical.
+    fn t_matmul_blocked_into(&self, other: &Mat, out: &mut Mat) {
+        let (n, d, m) = (self.rows, self.cols, other.cols);
+        out.data.fill(0.0);
+        let mut j0 = 0;
+        while j0 < m {
+            let j1 = (j0 + TM_COL_BLOCK).min(m);
+            for p in 0..n {
+                let arow = &self.data[p * d..(p + 1) * d];
+                let brow = &other.data[p * m + j0..p * m + j1];
+                for (i, &a) in arow.iter().enumerate() {
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let orow = &mut out.data[i * m + j0..i * m + j1];
+                    for (o, &b) in orow.iter_mut().zip(brow) {
+                        *o += a * b;
+                    }
+                }
+            }
+            j0 = j1;
         }
     }
 
@@ -605,6 +742,85 @@ mod tests {
             let slow = a.matmul_wide(&b);
             assert!(
                 (&fast - &slow).fro_norm() < 1e-12 * (1.0 + slow.fro_norm()),
+                "cols={m}"
+            );
+        }
+    }
+
+    #[test]
+    fn wide_blocked_matches_naive_reference_past_one_k_block() {
+        // Inner dimension 700 spans three WIDE_K_BLOCK blocks; widths
+        // cover full panels, a ragged tail panel, and both sides of the
+        // 16/17 dispatch boundary.
+        let mut r = Rng::seed_from(64);
+        for m in [17usize, 33, 40, 64, 100] {
+            let a = Mat::randn(9, 700, &mut r);
+            let b = Mat::randn(700, m, &mut r);
+            let fast = a.matmul(&b);
+            let slow = a.matmul_wide(&b);
+            assert!(
+                (&fast - &slow).fro_norm() < 1e-11 * (1.0 + slow.fro_norm()),
+                "cols={m}"
+            );
+        }
+    }
+
+    #[test]
+    fn wide_blocked_k_split_bit_identical_to_single_pass() {
+        // The inner-dimension split must be bit-invisible: seeding the
+        // panel accumulators from the previous block's partial sums and
+        // continuing in ascending p is the same addition sequence as one
+        // full-depth panel pass. 700 inner rows → 3 blocks vs 1 pass.
+        let mut r = Rng::seed_from(65);
+        let a = Mat::randn(11, 700, &mut r);
+        let b = Mat::randn(700, 20, &mut r);
+        let mut blocked = Mat::from_fn(11, 20, |_, _| f64::NAN);
+        a.matmul_into(&b, &mut blocked);
+        let mut single = Mat::from_fn(11, 20, |_, _| f64::NAN);
+        let mut col0 = 0;
+        while col0 < 20 {
+            let width = (20 - col0).min(8);
+            a.matmul_thin_panel_into(&b, col0, width, &mut single);
+            col0 += width;
+        }
+        assert!(blocked
+            .data()
+            .iter()
+            .zip(single.data())
+            .all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+
+    #[test]
+    fn t_matmul_wide_tiling_bit_identical_to_untiled_loop() {
+        // Column tiling must not change per-element accumulation order
+        // or the a == 0.0 skip; widths cover one tile, a tile boundary,
+        // and a ragged tail tile.
+        let mut r = Rng::seed_from(66);
+        for m in [17usize, 64, 70, 150] {
+            let mut a = Mat::randn(40, 23, &mut r);
+            // Inject exact zeros so the sparse skip is exercised.
+            for i in 0..40 {
+                a[(i, i % 23)] = 0.0;
+            }
+            let b = Mat::randn(40, m, &mut r);
+            let mut tiled = Mat::from_fn(23, m, |_, _| f64::NAN);
+            a.t_matmul_into(&b, &mut tiled);
+            // Untiled reference: the narrow-path loop, verbatim.
+            let mut want = Mat::zeros(23, m);
+            for p in 0..40 {
+                let arow = a.row(p);
+                let brow = b.row(p);
+                for (i, &av) in arow.iter().enumerate() {
+                    if av == 0.0 {
+                        continue;
+                    }
+                    for (j, &bv) in brow.iter().enumerate() {
+                        want[(i, j)] += av * bv;
+                    }
+                }
+            }
+            assert!(
+                want.data().iter().zip(tiled.data()).all(|(x, y)| x.to_bits() == y.to_bits()),
                 "cols={m}"
             );
         }

@@ -13,6 +13,7 @@
 //! deepca info  [--dataset w8a|a9a] [--data path]   # spectrum / network diagnostics
 //! deepca gossip [--agents 100000] [--topology ring|grid|rr|er|file] [--degree 4]
 //!              [--edge-file path] [--rounds 8] [--d 8] [--k 2] [--threads N] [--seed S]
+//!              [--drop-prob 0.05] [--latency 2] [--noise 0.01]   # faulty fleet-scale rounds
 //! deepca trace <trace.jsonl>   # summarize a --trace capture
 //! ```
 
@@ -24,7 +25,7 @@ use deepca::cli::Args;
 use deepca::config::ConfigMap;
 use deepca::consensus::comm::{Communicator, SparseComm};
 use deepca::consensus::metrics::CommStats;
-use deepca::consensus::simnet::SimConfig;
+use deepca::consensus::simnet::{SimConfig, SimNet};
 use deepca::consensus::AgentStack;
 use deepca::exec::Executor;
 use deepca::coordinator::online::{OnlineConfig, OnlineSession};
@@ -84,13 +85,15 @@ USAGE:
   deepca stream [--drift RATE | --change-at E | --fade RATE]
               [--window ROWS | --forget BETA] [--cold]
               [--m N] [--d N] [--k N] [--batch N] [--epochs E]
-              [--rounds K] [--power-iters T] [--engine dense|parallel|threaded|sim]
+              [--rounds K] [--power-iters T]
+              [--engine dense|parallel|threaded|sim|sparse]
               [--threads N] [--drop-prob P] [--latency L] [--noise STD] [--churn P]
               [--topology er|ring|grid|star|complete|rr|file] [--edge-file PATH]
               [--seed S] [--trace PATH]
   deepca info [--dataset w8a|a9a] [--data libsvm-file] [--m N] [--k N]
   deepca gossip [--agents 100000] [--topology ring|grid|rr|er|file] [--degree 4]
               [--edge-file PATH] [--rounds 8] [--d 8] [--k 2] [--threads N]
+              [--drop-prob P] [--latency L] [--noise STD]
               [--seed S] [--trace PATH]
   deepca trace <trace.jsonl>
 
@@ -135,7 +138,8 @@ re-tracks the drifting subspace:
   --churn P         per-epoch Markov topology churn (any engine here;
                     the other fault flags still need --engine sim)
 
-SimNet fault model (--engine sim; all seeded, bit-reproducible):
+SimNet fault model (--engine sim, or directly on `deepca gossip` for
+fleet-scale faulty rounds; all seeded, bit-reproducible):
   --drop-prob P   per-link message drop probability per gossip round
   --latency L     max per-link latency in virtual ticks (reported as vticks)
   --noise STD     additive Gaussian payload noise (std per scalar)
@@ -562,7 +566,7 @@ fn cmd_stream(args: &Args) -> Result<()> {
     // and silently fall back to Threaded on every warm-started one —
     // reject rather than mix engines across epochs.
     if engine == Engine::Distributed {
-        bail!("--engine distributed is not supported by `deepca stream` (dense|parallel|threaded|sim)");
+        bail!("--engine distributed is not supported by `deepca stream` (dense|parallel|threaded|sim|sparse)");
     }
 
     let threads = args.usize_or("threads", cfg.usize_or("threads", 0)?)?;
@@ -676,7 +680,10 @@ fn cmd_info(args: &Args) -> Result<()> {
 /// anywhere in the process), runs `--rounds` FastMix rounds over random
 /// d×k iterates on the worker pool, and verifies the doubly-stochastic
 /// invariant (mean preservation) and finiteness — exiting nonzero on
-/// violation so CI can gate large-n regressions on it.
+/// violation so CI can gate large-n regressions on it. With
+/// `--drop-prob/--latency/--noise` the rounds go through the sparse
+/// SimNet's fault-plan path instead, and the gate becomes deviation
+/// contraction (drops break exact mean preservation by design).
 fn cmd_gossip(args: &Args) -> Result<()> {
     let m = args.usize_or("agents", 100_000)?;
     let d = args.usize_or("d", 8)?;
@@ -705,21 +712,57 @@ fn cmd_gossip(args: &Args) -> Result<()> {
     // A file topology fixes the agent count itself.
     let m = topo.n();
 
-    let t = Timer::start();
-    let sparse = SparseGossip::metropolis(&topo);
-    let build_secs = t.elapsed_secs();
-    let info = sparse.info();
-    println!(
-        "network {} m={} edges={} λ₂≈{:.6} η={:.4} (CSR build + Lanczos: {build_secs:.2}s)",
-        topo.name,
-        m,
-        sparse.edges(),
-        info.lambda2,
-        info.chebyshev_eta()
-    );
+    // Fault flags route the rounds through the sparse-weight SimNet —
+    // the same CSR Metropolis operator, with seeded drops / latency /
+    // noise generated per round into a fault plan and applied on the
+    // worker pool (bit-reproducible for any --threads).
+    let drop_prob = args.f64_or("drop-prob", 0.0)?;
+    let latency = args.usize_or("latency", 0)? as u64;
+    let noise_std = args.f64_or("noise", 0.0)?;
+    if !(0.0..=1.0).contains(&drop_prob) {
+        bail!("--drop-prob {drop_prob}: must be in [0, 1]");
+    }
+    if noise_std < 0.0 {
+        bail!("--noise {noise_std}: must be ≥ 0");
+    }
+    let faulty = drop_prob > 0.0 || latency > 0 || noise_std > 0.0;
 
-    let edges = sparse.edges();
-    let comm = SparseComm::from_sparse(sparse).with_executor(Arc::new(Executor::new(threads)));
+    let exec = Arc::new(Executor::new(threads));
+    let t = Timer::start();
+    let (comm, edges): (Box<dyn Communicator>, usize) = if faulty {
+        let edges = topo.num_edges();
+        let net = SimNet::sparse(
+            TopologySchedule::fixed(topo.clone()),
+            SimConfig { drop_prob, max_latency: latency, noise_std, seed: seed + 2 },
+        )
+        .with_executor(Arc::clone(&exec));
+        println!(
+            "network {} m={} edges={} faulty sim: drop {drop_prob:.3} latency {latency} \
+             noise {noise_std:.1e} (CSR build + Lanczos: {:.2}s)",
+            topo.name,
+            m,
+            edges,
+            t.elapsed_secs()
+        );
+        (Box::new(net), edges)
+    } else {
+        let sparse = SparseGossip::metropolis(&topo);
+        let build_secs = t.elapsed_secs();
+        let info = sparse.info();
+        println!(
+            "network {} m={} edges={} λ₂≈{:.6} η={:.4} (CSR build + Lanczos: {build_secs:.2}s)",
+            topo.name,
+            m,
+            sparse.edges(),
+            info.lambda2,
+            info.chebyshev_eta()
+        );
+        let edges = sparse.edges();
+        (
+            Box::new(SparseComm::from_sparse(sparse).with_executor(Arc::clone(&exec))),
+            edges,
+        )
+    };
     let mut rng = Rng::seed_from(seed);
     let mut stack = AgentStack::new((0..m).map(|_| Mat::randn(d, k, &mut rng)).collect());
     let mean0 = stack.mean();
@@ -751,12 +794,31 @@ fn cmd_gossip(args: &Args) -> Result<()> {
         bail!("non-finite values after {rounds} rounds");
     }
     let drift = (&stack.mean() - &mean0).fro_norm() / mean0.fro_norm().max(1e-300);
-    if drift > 1e-9 {
-        bail!("mean drift {drift:.3e} exceeds tolerance 1e-9 — gossip is not doubly stochastic");
-    }
     let dev1 = stack.deviation_from_mean();
-    println!(
-        "mean drift {drift:.3e} (tol 1e-9), deviation {dev0:.3e} -> {dev1:.3e} — OK"
-    );
+    if faulty {
+        // Dropped links substitute the sender's own row, so the exact
+        // mean-preservation invariant does not hold mid-disagreement;
+        // the gate becomes contraction: faults may slow consensus but
+        // must not break it.
+        if dev1 >= dev0 {
+            bail!(
+                "deviation did not contract under faults: {dev0:.3e} -> {dev1:.3e}"
+            );
+        }
+        println!(
+            "deviation {dev0:.3e} -> {dev1:.3e} under faults \
+             (dropped {}, virtual time {} ticks, mean drift {drift:.3e}) — OK",
+            stats.dropped, stats.virtual_time
+        );
+    } else {
+        if drift > 1e-9 {
+            bail!(
+                "mean drift {drift:.3e} exceeds tolerance 1e-9 — gossip is not doubly stochastic"
+            );
+        }
+        println!(
+            "mean drift {drift:.3e} (tol 1e-9), deviation {dev0:.3e} -> {dev1:.3e} — OK"
+        );
+    }
     Ok(())
 }

@@ -71,6 +71,16 @@ pub enum EventKind {
     /// Synthetic export-time marker: `a` events were overwritten after
     /// the ring filled.
     RingDropped = 27,
+    /// SimNet materialized one round's fault schedule on the caller
+    /// thread (`a` = drops, `b` = stored eventful-link entries).
+    /// Scheduling-class: only emitted on the pooled faulty path, so it
+    /// is masked from the deterministic stream (the sequential path
+    /// never builds a plan).
+    FaultPlanBuild = 28,
+    /// SimNet applied a fault plan through the executor (`a` = agent
+    /// rows, `b` = round's slowest delivery). Scheduling-class, like
+    /// [`EventKind::FaultPlanBuild`].
+    FaultPlanApply = 29,
 }
 
 impl EventKind {
@@ -112,6 +122,8 @@ impl EventKind {
             25 => EpochSolveBegin,
             26 => EpochSolveEnd,
             27 => RingDropped,
+            28 => FaultPlanBuild,
+            29 => FaultPlanApply,
             _ => return None,
         })
     }
@@ -148,12 +160,14 @@ impl EventKind {
             EpochSolveBegin => "EpochSolveBegin",
             EpochSolveEnd => "EpochSolveEnd",
             RingDropped => "RingDropped",
+            FaultPlanBuild => "FaultPlanBuild",
+            FaultPlanApply => "FaultPlanApply",
         }
     }
 
     /// Parse an export name back to a kind (summarizer input path).
     pub fn from_name(name: &str) -> Option<EventKind> {
-        (0..=27).map(|c| EventKind::from_code(c).unwrap()).find(|k| k.name() == name)
+        (0..=29).map(|c| EventKind::from_code(c).unwrap()).find(|k| k.name() == name)
     }
 
     /// Span name for Begin/End pairs (Chrome trace + summarizer label);
@@ -211,13 +225,20 @@ impl EventKind {
     /// Events describing algorithmic progress — recorded on the caller
     /// thread in program order, so their (kind, a, b) stream is
     /// bit-identical across thread counts and seeded replays. Scheduling
-    /// events (executor dispatch) and export-time markers are excluded:
+    /// events (executor dispatch, the fault-plan stage markers that only
+    /// exist on the pooled path) and export-time markers are excluded:
     /// chunk counts and claim patterns legitimately vary with the pool.
     pub fn is_deterministic(self) -> bool {
         use EventKind::*;
         !matches!(
             self,
-            Nop | JobPublish | ChunkClaim | WorkerBusy | WorkerIdle | RingDropped
+            Nop | JobPublish
+                | ChunkClaim
+                | WorkerBusy
+                | WorkerIdle
+                | RingDropped
+                | FaultPlanBuild
+                | FaultPlanApply
         )
     }
 }
@@ -624,7 +645,7 @@ mod tests {
 
     #[test]
     fn codes_round_trip() {
-        for code in 0..=27u16 {
+        for code in 0..=29u16 {
             let kind = EventKind::from_code(code).expect("contiguous codes");
             assert_eq!(kind.code(), code);
             assert_eq!(EventKind::from_name(kind.name()), Some(kind));
@@ -635,7 +656,7 @@ mod tests {
 
     #[test]
     fn begin_end_pairing_is_consistent() {
-        for code in 0..=27u16 {
+        for code in 0..=29u16 {
             let kind = EventKind::from_code(code).unwrap();
             if kind.is_begin() || kind.is_end() {
                 assert!(kind.span_label().is_some(), "{kind:?} needs a span label");

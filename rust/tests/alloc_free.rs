@@ -13,7 +13,9 @@
 //!
 //! Engines audited: `Dense` (the sweep workhorse) for all four
 //! algorithms, plus the ideal `Sim` engine for DeEPCA (pins the SimNet
-//! buffer reuse). The threaded engines are excluded by design — they
+//! buffer reuse) and a faulty `Sim` run with all three fault axes on
+//! (pins the per-round `FaultPlan` buffer recycling, sequential and
+//! pooled). The threaded engines are excluded by design — they
 //! allocate per *message* to model real serialization, and thread spawn
 //! itself allocates.
 
@@ -164,6 +166,36 @@ fn solver_steps_are_allocation_free_after_warmup() {
             .build_solver();
         audit(
             &format!("deepca/sim-ideal [threads={threads}]"),
+            &mut *sim_solver,
+            2,
+            5,
+        );
+    }
+
+    // DeEPCA over a *faulty* SimNet, sequential and pooled: every round
+    // generates a fault schedule (drops + latency + noise together) and
+    // — on the pool — applies it through weighted chunks.
+    // `FaultPlan::reserve_worst_case` sizes the plan buffers for the
+    // topology's worst case during warm-up and `clear()` keeps their
+    // capacity, so steady-state faulty rounds recycle them at zero
+    // allocations — the fault-plan split's half of the contract.
+    for threads in [1usize, 4] {
+        let mut sim_solver = Session::on(&problem, &topo)
+            .algo(Algo::Deepca(DeepcaConfig {
+                consensus_rounds: 8,
+                max_iters: 64,
+                ..Default::default()
+            }))
+            .engine(Engine::Sim(SimConfig {
+                drop_prob: 0.1,
+                max_latency: 2,
+                noise_std: 0.01,
+                ..SimConfig::ideal(17)
+            }))
+            .threads(threads)
+            .build_solver();
+        audit(
+            &format!("deepca/sim-faulty [threads={threads}]"),
             &mut *sim_solver,
             2,
             5,

@@ -1,6 +1,7 @@
 //! Determinism under parallelism — the executor refactor's acceptance
-//! bar: every algorithm on the Dense and ideal-Sim engines produces
-//! **bit-identical `SolveReport` trajectories** at `threads ∈ {1, 2, 8}`.
+//! bar: every algorithm on the Dense, ideal-Sim, and faulty-Sim engines
+//! produces **bit-identical `SolveReport` trajectories** at
+//! `threads ∈ {1, 2, 8}`.
 //!
 //! The executor guarantees this by construction (fixed partitioning by
 //! agent index, no cross-item reductions inside parallel regions,
@@ -110,7 +111,20 @@ fn every_algo_and_engine_is_bit_identical_across_thread_counts() {
         |&seed| {
             let (p, topo) = random_problem(seed);
             for algo in algos() {
-                for engine in [Engine::Dense, Engine::Sim(SimConfig::ideal(1))] {
+                // The faulty Sim engine routes pooled rounds through the
+                // precomputed fault-plan path; threads=1 keeps the
+                // original sequential loop — the comparison below pins
+                // the two bit-identical on every fault axis at once.
+                for engine in [
+                    Engine::Dense,
+                    Engine::Sim(SimConfig::ideal(1)),
+                    Engine::Sim(SimConfig {
+                        drop_prob: 0.1,
+                        max_latency: 2,
+                        noise_std: 0.01,
+                        ..SimConfig::ideal(3)
+                    }),
+                ] {
                     let name = algo.name();
                     let base = solve(&p, &topo, algo.clone(), engine, 1);
                     for threads in [2usize, 8] {

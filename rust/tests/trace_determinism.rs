@@ -4,7 +4,10 @@
 //! events are recorded on the caller thread in program order, so after
 //! masking timestamps and filtering scheduling events the stream is
 //! bit-identical across worker-pool sizes and across seeded replays —
-//! including the fault events a lossy SimNet injects.
+//! including the fault events a lossy SimNet injects. With all three
+//! fault axes active (drops, latency, noise) the pooled runs take the
+//! precomputed fault-plan path, so these tests also pin that the plan's
+//! LinkDrop emission order matches the sequential round exactly.
 //!
 //! Both tests hold `trace::test_lock()` for their whole body: the
 //! recorder is a process-global and these assertions measure it.
@@ -36,6 +39,7 @@ fn faulty_traced_run(threads: usize, fault_seed: u64) -> Vec<(u16, u64, u64)> {
         .engine(Engine::Sim(SimConfig {
             drop_prob: 0.15,
             max_latency: 2,
+            noise_std: 0.01,
             ..SimConfig::ideal(fault_seed)
         }))
         .threads(threads)

@@ -184,6 +184,34 @@ pub fn repo_regions() -> Vec<Region> {
         },
         Region { file_suffix: "obs/trace.rs", impl_context: None, fn_name: "record" },
         Region { file_suffix: "obs/metrics.rs", impl_context: None, fn_name: "bump" },
+        // Fault-plan SimNet: the per-round schedule build runs on the
+        // caller thread between parallel regions — an allocation there
+        // is paid every faulty round.
+        Region {
+            file_suffix: "consensus/simnet.rs",
+            impl_context: Some("FaultPlan"),
+            fn_name: "build",
+        },
+        // Cost-aware dispatch: boundary computation + chunk fan-out sit
+        // on every pooled batch.
+        Region { file_suffix: "exec/mod.rs", impl_context: None, fn_name: "par_weighted" },
+        Region {
+            file_suffix: "exec/mod.rs",
+            impl_context: None,
+            fn_name: "par_weighted_chunks_ctx",
+        },
+        // Blocked wide-matmul inner kernel and the tiled Gram transpose
+        // product (CovTracker / wide power steps run through these).
+        Region {
+            file_suffix: "linalg/matrix.rs",
+            impl_context: None,
+            fn_name: "matmul_thin_block_into",
+        },
+        Region {
+            file_suffix: "linalg/matrix.rs",
+            impl_context: None,
+            fn_name: "t_matmul_blocked_into",
+        },
     ]
 }
 

@@ -8,9 +8,10 @@
 #
 # Each bench binary writes its own BENCH_*.json via benchkit::Suite;
 # this script just sequences them from the repo root so the output
-# lands in a predictable place. CI uploads BENCH_*.json as artifacts and
-# diffs the microbench suite against the committed baseline with
-# scripts/bench_diff (warn-only).
+# lands in a predictable place. CI uploads BENCH_*.json as artifacts,
+# gates the microbench suite against an in-job merge-base baseline with
+# scripts/bench_diff (blocking), and additionally diffs it against the
+# committed baseline (warn-only long-horizon drift check).
 
 set -euo pipefail
 cd "$(dirname "$0")/.."
