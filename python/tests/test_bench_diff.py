@@ -79,6 +79,21 @@ def test_empty_current_is_not_the_skip_path(tmp_path):
     assert "only in baseline" in proc.stdout
 
 
+def test_disjoint_names_warn_and_skip(tmp_path):
+    # Names present in only one file are warned about and skipped, and a
+    # fully disjoint pair is announced as "nothing compared" rather than
+    # passing a vacuous 0-shared comparison — either way exit 0 (suites
+    # grow and shrink over time; only shared-name regressions are fatal).
+    base = suite(tmp_path, "base", {"matmul_thin": 1.0})
+    cur = suite(tmp_path, "cur", {"matmul_packed/simd": 0.5})
+    proc = run(base, cur)
+    assert proc.returncode == 0, proc.stderr
+    assert "warning: matmul_thin: only in baseline" in proc.stdout
+    assert "warning: matmul_packed/simd: new benchmark" in proc.stdout
+    assert "no shared benchmarks" in proc.stdout
+    assert "OK" not in proc.stdout
+
+
 def test_custom_threshold_both_forms(tmp_path):
     base = suite(tmp_path, "base", {"matmul": 1.0})
     cur = suite(tmp_path, "cur", {"matmul": 1.3})

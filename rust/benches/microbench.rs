@@ -26,6 +26,7 @@ use deepca::graph::topology::Topology;
 use deepca::linalg::angles::tan_theta;
 use deepca::linalg::eig::eig_sym;
 use deepca::linalg::qr::{qr_into, thin_qr, QrWorkspace};
+use deepca::linalg::simd::{self, KernelDispatch, PackBuf, SimdMode};
 use deepca::linalg::Mat;
 use deepca::prelude::{Algo, Solver};
 use deepca::util::rng::Rng;
@@ -33,6 +34,11 @@ use std::path::Path;
 
 fn main() {
     let mut suite = Suite::new("microbench");
+    // Which microkernel set the auto dispatch selected on this machine —
+    // recorded in the JSON so bench artifacts from different runners are
+    // comparable (`matmul_packed/simd` on a NEON box is a different
+    // kernel than on an AVX2 box).
+    suite.meta("simd_kernel", simd::dispatch().mode().name());
     let bench = Bench::new(2, 10);
     let mut rng = Rng::seed_from(901);
 
@@ -61,6 +67,39 @@ fn main() {
     suite.push(bench.run("matmul_wide_blocked", || {
         a300.matmul_into(&w64, &mut out64);
         out64.data()[0]
+    }));
+    // Packed-B microkernels, scalar vs the auto-selected ISA kernels —
+    // the SIMD layer's acceptance pair. Stable names
+    // (`matmul_packed/{scalar,simd}`, `chebyshev_row_axpy/{scalar,simd}`)
+    // so `scripts/bench_diff` tracks the speedup across commits; the
+    // `simd` leg's actual kernel set is the suite's `simd_kernel` meta.
+    let kd_scalar = KernelDispatch::for_mode(SimdMode::Scalar);
+    let kd_auto = KernelDispatch::auto();
+    let mut packbuf = PackBuf::new();
+    suite.push(bench.run("matmul_packed/scalar", || {
+        a300.matmul_packed_with(&kd_scalar, &w64, &mut packbuf, &mut out64);
+        out64.data()[0]
+    }));
+    suite.push(bench.run("matmul_packed/simd", || {
+        a300.matmul_packed_with(&kd_auto, &w64, &mut packbuf, &mut out64);
+        out64.data()[0]
+    }));
+    // The FastMix inner loop's shape: repeated axpy over one agent's
+    // flattened d×k row slice (d=300, k=5 → 1500 doubles).
+    let row_src: Vec<f64> = (0..1500).map(|_| rng.normal()).collect();
+    let mut row_dst = vec![0.0f64; 1500];
+    suite.push(bench.run("chebyshev_row_axpy/scalar", || {
+        for _ in 0..256 {
+            kd_scalar.axpy(&mut row_dst, 1.000_001, &row_src);
+        }
+        row_dst[0]
+    }));
+    row_dst.fill(0.0);
+    suite.push(bench.run("chebyshev_row_axpy/simd", || {
+        for _ in 0..256 {
+            kd_auto.axpy(&mut row_dst, 1.000_001, &row_src);
+        }
+        row_dst[0]
     }));
 
     // ------------------------------------------- allocating vs `_into`

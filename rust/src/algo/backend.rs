@@ -18,8 +18,9 @@
 
 use crate::consensus::AgentStack;
 use crate::exec::Executor;
+use crate::linalg::simd::PackBuf;
 use crate::linalg::Mat;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// Per-agent power-step provider.
 ///
@@ -102,12 +103,26 @@ pub struct RustBackend<'a> {
     /// split into chunks of comparable flops rather than equal agent
     /// counts. Empty for the sequential backend.
     cost_prefix: Vec<usize>,
+    /// One packed-B scratch per worker chunk (slot 0 doubles as the
+    /// sequential path's scratch), grown on first use and recycled
+    /// forever after — the batched products run `matmul_packed_into`
+    /// at zero steady-state allocations. Scratch contents never
+    /// influence results (packing is re-done from B every product), so
+    /// the chunk→slot mapping is determinism-neutral. Behind a `Mutex`
+    /// only because the trait takes `&self`; the lock is uncontended
+    /// (one batch at a time per backend).
+    packs: Mutex<Vec<PackBuf>>,
 }
 
 impl<'a> RustBackend<'a> {
     /// Borrow the problem's local matrices (sequential products).
     pub fn new(locals: &'a [Mat]) -> Self {
-        RustBackend { locals, exec: None, cost_prefix: Vec::new() }
+        RustBackend {
+            locals,
+            exec: None,
+            cost_prefix: Vec::new(),
+            packs: Mutex::new(Vec::new()),
+        }
     }
 
     /// Borrow the local matrices and run batched products on `exec`'s
@@ -122,7 +137,12 @@ impl<'a> RustBackend<'a> {
             let last = *cost_prefix.last().expect("seeded with 0");
             cost_prefix.push(last + l.rows() * l.cols());
         }
-        RustBackend { locals, exec: Some(exec), cost_prefix }
+        RustBackend {
+            locals,
+            exec: Some(exec),
+            cost_prefix,
+            packs: Mutex::new(Vec::new()),
+        }
     }
 }
 
@@ -151,13 +171,36 @@ impl PowerBackend for RustBackend<'_> {
         assert_eq!(ws.m(), self.m());
         assert_eq!(out.m(), self.m());
         let locals = self.locals;
+        // Scratch contents don't affect results, so a poisoned lock
+        // (a panic mid-batch elsewhere) is safe to take over.
+        let mut packs = match self.packs.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
         match &self.exec {
-            Some(exec) => exec.par_weighted(out.slices_mut(), &self.cost_prefix, |j, o| {
-                locals[j].matmul_into(ws.slice(j), o)
-            }),
+            Some(exec) => {
+                let nchunks = exec.chunk_count(out.m());
+                if packs.len() < nchunks {
+                    packs.resize_with(nchunks, PackBuf::new);
+                }
+                exec.par_weighted_chunks_ctx(
+                    out.slices_mut(),
+                    &self.cost_prefix,
+                    &mut packs,
+                    |lo, chunk, pack| {
+                        for (off, o) in chunk.iter_mut().enumerate() {
+                            locals[lo + off].matmul_packed_into(ws.slice(lo + off), pack, o);
+                        }
+                    },
+                );
+            }
             None => {
+                if packs.is_empty() {
+                    packs.push(PackBuf::new());
+                }
+                let pack = &mut packs[0];
                 for j in 0..self.m() {
-                    locals[j].matmul_into(ws.slice(j), out.slice_mut(j));
+                    locals[j].matmul_packed_into(ws.slice(j), pack, out.slice_mut(j));
                 }
             }
         }

@@ -76,9 +76,11 @@ impl Solver for CentralizedSolver<'_> {
         let _span_step = crate::trace_span!(Step, t as u64);
         {
             let _span = crate::trace_span!(LocalProduct, t as u64);
-            self.problem
-                .aggregate
-                .matmul_into(self.state.w.slice(0), &mut self.prod);
+            self.problem.aggregate.matmul_packed_into(
+                self.state.w.slice(0),
+                self.workspace.pack_buf(),
+                &mut self.prod,
+            );
         }
         let _span_qr = crate::trace_span!(Qr, t as u64);
         let q = self.workspace.orth_into(&self.prod, true);

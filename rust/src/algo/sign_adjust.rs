@@ -29,19 +29,38 @@ pub fn sign_adjust_into(w: &Mat, reference: &Mat, out: &mut Mat) {
 
 /// In-place variant (column dots are computed before any flip, so the
 /// result equals the out-of-place forms exactly).
+///
+/// Runs row-major in ≤64-column blocks through the SIMD dispatch's
+/// [`col_dots`](crate::linalg::simd::KernelDispatch::col_dots) kernel:
+/// one streaming pass over `w`/`reference` per block accumulates every
+/// column's dot simultaneously instead of striding column-by-column.
+/// Per column the accumulation chain still runs in ascending row order
+/// (the pre-SIMD sequence — unfused in scalar mode), and flips are
+/// exact negations, bit-identical in every mode.
 pub fn sign_adjust_inplace(w: &mut Mat, reference: &Mat) {
     assert_eq!(w.shape(), reference.shape(), "SignAdjust shape mismatch");
     let (d, k) = w.shape();
-    for i in 0..k {
-        let mut dot = 0.0;
+    let kd = crate::linalg::simd::dispatch();
+    let mut dots = [0.0f64; 64];
+    let mut j0 = 0;
+    while j0 < k {
+        let jw = (k - j0).min(64);
+        dots[..jw].fill(0.0);
         for r in 0..d {
-            dot += w[(r, i)] * reference[(r, i)];
+            let row = r * k + j0;
+            kd.col_dots(&w.data()[row..row + jw], &reference.data()[row..row + jw], &mut dots[..jw]);
         }
-        if dot < 0.0 {
-            for r in 0..d {
-                w[(r, i)] = -w[(r, i)];
+        // Flips only touch their own column, so dots-then-flips equals
+        // the old per-column interleaving exactly.
+        for j in 0..jw {
+            if dots[j] < 0.0 {
+                for r in 0..d {
+                    let x = &mut w.data_mut()[r * k + j0 + j];
+                    *x = -*x;
+                }
             }
         }
+        j0 += jw;
     }
 }
 

@@ -26,6 +26,7 @@
 //! respectively.
 
 use crate::linalg::qr::{qr_into, QrWorkspace};
+use crate::linalg::simd::PackBuf;
 use crate::linalg::Mat;
 
 /// Scratch buffers for one solver's per-iteration linalg: the
@@ -37,6 +38,10 @@ pub struct SolverWorkspace {
     q: Mat,
     /// k×k triangular factor (computed by QR, discarded by the solvers).
     r: Mat,
+    /// Packed-B scratch for [`crate::linalg::Mat::matmul_packed_into`]
+    /// in the solver's product step (grow-only; cloning a workspace
+    /// yields a fresh empty scratch — see [`PackBuf`]).
+    pack: PackBuf,
 }
 
 impl SolverWorkspace {
@@ -46,7 +51,15 @@ impl SolverWorkspace {
             qr: QrWorkspace::new(d, k),
             q: Mat::zeros(d, k),
             r: Mat::zeros(k, k),
+            pack: PackBuf::new(),
         }
+    }
+
+    /// The workspace-owned packed-B scratch (the solvers thread it into
+    /// `matmul_packed_into` so the product step stays allocation-free
+    /// once the scratch has grown to the steady-state panel size).
+    pub fn pack_buf(&mut self) -> &mut PackBuf {
+        &mut self.pack
     }
 
     /// QR-orthonormalize `a` into the workspace's Q buffer and return

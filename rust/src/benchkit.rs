@@ -111,6 +111,11 @@ fn json_escape(s: &str) -> String {
 pub struct Suite {
     /// Suite label (becomes the `BENCH_<name>.json` stem).
     pub name: String,
+    /// Run-level metadata (e.g. the selected SIMD kernel), emitted as a
+    /// `"meta"` object in the JSON document. Insertion-ordered; later
+    /// writes to the same key win at read time (JSON object semantics),
+    /// so callers should set each key once.
+    pub meta: Vec<(String, String)>,
     /// Collected measurements, in run order.
     pub measurements: Vec<Measurement>,
 }
@@ -118,7 +123,13 @@ pub struct Suite {
 impl Suite {
     /// Empty suite.
     pub fn new(name: &str) -> Self {
-        Suite { name: name.to_string(), measurements: Vec::new() }
+        Suite { name: name.to_string(), meta: Vec::new(), measurements: Vec::new() }
+    }
+
+    /// Record one metadata key (stringly-typed by design: the consumers
+    /// are `scripts/bench_diff` and human eyes on CI artifacts).
+    pub fn meta(&mut self, key: &str, value: &str) {
+        self.meta.push((key.to_string(), value.to_string()));
     }
 
     /// Add one measurement.
@@ -126,12 +137,24 @@ impl Suite {
         self.measurements.push(m);
     }
 
-    /// The whole suite as one JSON document.
+    /// The whole suite as one JSON document. The `"meta"` object is
+    /// omitted when empty so pre-metadata suites serialize unchanged.
     pub fn to_json(&self) -> String {
         let results: Vec<String> = self.measurements.iter().map(|m| m.to_json()).collect();
+        let meta = if self.meta.is_empty() {
+            String::new()
+        } else {
+            let pairs: Vec<String> = self
+                .meta
+                .iter()
+                .map(|(k, v)| format!("\"{}\":\"{}\"", json_escape(k), json_escape(v)))
+                .collect();
+            format!("\"meta\":{{{}}},", pairs.join(","))
+        };
         format!(
-            "{{\"suite\":\"{}\",\"results\":[{}]}}\n",
+            "{{\"suite\":\"{}\",{}\"results\":[{}]}}\n",
             json_escape(&self.name),
+            meta,
             results.join(",")
         )
     }
@@ -252,6 +275,22 @@ mod tests {
         let closes = json.matches('}').count();
         assert_eq!(opens, closes);
         assert_eq!(json.matches('[').count(), json.matches(']').count());
+    }
+
+    #[test]
+    fn suite_meta_is_emitted_and_omitted_when_empty() {
+        let mut suite = Suite::new("m");
+        suite.push(Measurement::new("x", vec![1.0]));
+        assert!(
+            !suite.to_json().contains("\"meta\""),
+            "empty meta must serialize exactly like a pre-metadata suite"
+        );
+        suite.meta("simd_kernel", "avx2");
+        suite.meta("odd \"key\"", "v");
+        let json = suite.to_json();
+        assert!(json.contains("\"meta\":{\"simd_kernel\":\"avx2\",\"odd \\\"key\\\"\":\"v\"}"));
+        assert!(json.starts_with("{\"suite\":\"m\",\"meta\""));
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
     }
 
     #[test]

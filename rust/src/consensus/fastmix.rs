@@ -90,9 +90,10 @@ pub fn chebyshev_row_update(
     acc: &mut Mat,
 ) {
     let one_plus_eta = 1.0 + eta;
-    // acc = −η · prev_j  (overwrite, no zero pass)
-    acc.data_mut().copy_from_slice(prev_j.data());
-    acc.scale(-eta);
+    // acc = −η · prev_j: a single fused multiply per element (SIMD
+    // fill-scaled kernel) — bit-identical to the copy-then-scale
+    // sequence it replaces, one memory sweep instead of two.
+    acc.fill_scaled_from(-eta, prev_j);
     for (i, &w) in weights_row.iter().enumerate() {
         if w != 0.0 {
             acc.axpy(one_plus_eta * w, &cur[i]);
@@ -118,9 +119,8 @@ pub fn chebyshev_row_update_sparse(
     acc: &mut Mat,
 ) {
     let one_plus_eta = 1.0 + eta;
-    // acc = −η · prev_j  (overwrite, no zero pass)
-    acc.data_mut().copy_from_slice(prev_j.data());
-    acc.scale(-eta);
+    // acc = −η · prev_j: same single-multiply seed as the dense kernel.
+    acc.fill_scaled_from(-eta, prev_j);
     for (&i, &w) in cols.iter().zip(vals) {
         acc.axpy(one_plus_eta * w, &cur[i]);
     }

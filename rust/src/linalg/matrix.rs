@@ -11,7 +11,15 @@
 //! each output element still accumulates in ascending inner order).
 //! `t_matmul_into` tiles wide outputs by column block for the same
 //! reason, keeping its sparse-operand zero skip.
+//!
+//! All scalar inner loops live in [`super::simd`] behind the
+//! process-wide [`simd::dispatch`] (AVX2+FMA / NEON / scalar, selected
+//! once from `DEEPCA_SIMD`); `matmul_packed_into` additionally packs
+//! each B panel into a [`PackBuf`] for contiguous full-width streaming
+//! on the wide-product hot paths. See `linalg/simd.rs` for the
+//! per-mode determinism contract.
 
+use super::simd::{self, KernelDispatch, PackBuf};
 use crate::util::rng::Rng;
 use std::fmt;
 use std::ops::{Add, Mul, Sub};
@@ -250,9 +258,10 @@ impl Mat {
     }
 
     /// Dispatch one ≤8-wide panel restricted to inner rows `p0..p1` to
-    /// the monomorphized block kernel. `accumulate` seeds the register
-    /// accumulators from `out` (for the second and later inner blocks
-    /// of the wide tiled path) instead of zero.
+    /// the process-wide SIMD kernel dispatch (`simd::dispatch()`).
+    /// `accumulate` seeds the register accumulators from `out` (for the
+    /// second and later inner blocks of the wide tiled path) instead of
+    /// zero.
     #[allow(clippy::too_many_arguments)]
     fn matmul_panel_block_into(
         &self,
@@ -264,17 +273,20 @@ impl Mat {
         accumulate: bool,
         out: &mut Mat,
     ) {
-        match width {
-            1 => self.matmul_thin_block_into::<1>(other, col0, p0, p1, accumulate, out),
-            2 => self.matmul_thin_block_into::<2>(other, col0, p0, p1, accumulate, out),
-            3 => self.matmul_thin_block_into::<3>(other, col0, p0, p1, accumulate, out),
-            4 => self.matmul_thin_block_into::<4>(other, col0, p0, p1, accumulate, out),
-            5 => self.matmul_thin_block_into::<5>(other, col0, p0, p1, accumulate, out),
-            6 => self.matmul_thin_block_into::<6>(other, col0, p0, p1, accumulate, out),
-            7 => self.matmul_thin_block_into::<7>(other, col0, p0, p1, accumulate, out),
-            8 => self.matmul_thin_block_into::<8>(other, col0, p0, p1, accumulate, out),
-            _ => unreachable!("thin panels are 1..=8 wide"),
-        }
+        simd::dispatch().matmul_panel_block(
+            &self.data,
+            self.rows,
+            self.cols,
+            &other.data,
+            other.cols,
+            col0,
+            width,
+            p0,
+            p1,
+            accumulate,
+            &mut out.data,
+            out.cols,
+        );
     }
 
     /// Cache-blocked product for wide outputs (> 16 columns): iterate
@@ -304,66 +316,50 @@ impl Mat {
         }
     }
 
-    /// Register-blocked kernel for an `M`-wide panel (compile-time
-    /// width) over inner rows `p0..p1`: `M` output accumulators live in
-    /// registers, one streaming pass over the A row segment per output
-    /// row. With `accumulate` the registers are seeded from `out`
-    /// (partial sums from earlier inner blocks) instead of zero. (A
-    /// transposed-panel dot-product variant with 4-wide unrolling was
-    /// measured 10–25% *slower* at these shapes — see EXPERIMENTS.md
-    /// §Perf — and reverted.)
-    fn matmul_thin_block_into<const M: usize>(
+    /// Packed-B product into a caller-owned buffer: like
+    /// [`Mat::matmul_into`], but each ≤8-wide B panel is first packed
+    /// into `pack` (stride-8, zero-padded, cache-line-aligned scratch —
+    /// see [`simd::PackBuf`]) and the microkernel streams the panel as
+    /// contiguous rows over the **full** inner dimension in one pass.
+    /// Bit-identical to [`Mat::matmul_into`] in every SIMD mode
+    /// (packing relocates B values, never reorders any element's
+    /// update sequence; pinned by unit tests below). The scratch is
+    /// grow-only, so repeated products at steady-state shapes allocate
+    /// nothing — this is the backend/centralized hot path for wide
+    /// products.
+    pub fn matmul_packed_into(&self, other: &Mat, pack: &mut PackBuf, out: &mut Mat) {
+        self.matmul_packed_with(simd::dispatch(), other, pack, out);
+    }
+
+    /// [`Mat::matmul_packed_into`] with an explicit kernel dispatch
+    /// (benches and parity tests run scalar and vector side by side;
+    /// production code uses the process-wide dispatch).
+    pub fn matmul_packed_with(
         &self,
+        kd: &KernelDispatch,
         other: &Mat,
-        col0: usize,
-        p0: usize,
-        p1: usize,
-        accumulate: bool,
+        pack: &mut PackBuf,
         out: &mut Mat,
     ) {
-        let (n, k) = (self.rows, self.cols);
-        let bn = other.cols;
-        let on = out.cols;
-        debug_assert!(col0 + M <= bn && col0 + M <= on && p0 <= p1 && p1 <= k);
-        // Two A-rows per pass: 2·M independent accumulator chains hide
-        // FMA latency, and each B row is loaded once for both outputs.
-        let mut i = 0;
-        while i + 1 < n {
-            let arow0 = &self.data[i * k..(i + 1) * k];
-            let arow1 = &self.data[(i + 1) * k..(i + 2) * k];
-            let mut acc0 = [0.0f64; M];
-            let mut acc1 = [0.0f64; M];
-            if accumulate {
-                acc0.copy_from_slice(&out.data[i * on + col0..i * on + col0 + M]);
-                acc1.copy_from_slice(&out.data[(i + 1) * on + col0..(i + 1) * on + col0 + M]);
-            }
-            for p in p0..p1 {
-                let a0 = arow0[p];
-                let a1 = arow1[p];
-                let brow = &other.data[p * bn + col0..p * bn + col0 + M];
-                for j in 0..M {
-                    acc0[j] += a0 * brow[j];
-                    acc1[j] += a1 * brow[j];
-                }
-            }
-            out.data[i * on + col0..i * on + col0 + M].copy_from_slice(&acc0);
-            out.data[(i + 1) * on + col0..(i + 1) * on + col0 + M].copy_from_slice(&acc1);
-            i += 2;
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        assert_eq!(
+            out.shape(),
+            (self.rows, other.cols),
+            "matmul_packed_into output shape mismatch"
+        );
+        let (k, m) = (self.cols, other.cols);
+        if k == 0 || m == 0 {
+            out.data.fill(0.0);
+            return;
         }
-        if i < n {
-            let arow = self.row(i);
-            let mut acc = [0.0f64; M];
-            if accumulate {
-                acc.copy_from_slice(&out.data[i * on + col0..i * on + col0 + M]);
-            }
-            for p in p0..p1 {
-                let a = arow[p];
-                let brow = &other.data[p * bn + col0..p * bn + col0 + M];
-                for j in 0..M {
-                    acc[j] += a * brow[j];
-                }
-            }
-            out.data[i * on + col0..i * on + col0 + M].copy_from_slice(&acc);
+        let mut col0 = 0;
+        while col0 < m {
+            let width = (m - col0).min(8);
+            let packed = kd.pack_panel(&other.data, m, col0, width, k, pack);
+            kd.matmul_panel_packed(
+                &self.data, self.rows, k, packed, col0, width, false, &mut out.data, m,
+            );
+            col0 += width;
         }
     }
 
@@ -428,18 +424,16 @@ impl Mat {
             self.t_matmul_blocked_into(other, out);
             return;
         }
+        let kd = simd::dispatch();
         out.data.fill(0.0);
         for p in 0..n {
-            let arow = self.row(p);
-            let brow = other.row(p);
+            let arow = &self.data[p * self.cols..(p + 1) * self.cols];
+            let brow = &other.data[p * m..(p + 1) * m];
             for (i, &a) in arow.iter().enumerate() {
                 if a == 0.0 {
                     continue;
                 }
-                let orow = &mut out.data[i * m..(i + 1) * m];
-                for (o, &b) in orow.iter_mut().zip(brow) {
-                    *o += a * b;
-                }
+                kd.axpy(&mut out.data[i * m..(i + 1) * m], a, brow);
             }
         }
     }
@@ -453,6 +447,7 @@ impl Mat {
     /// of additions within one element, so results are bit-identical.
     fn t_matmul_blocked_into(&self, other: &Mat, out: &mut Mat) {
         let (n, d, m) = (self.rows, self.cols, other.cols);
+        let kd = simd::dispatch();
         out.data.fill(0.0);
         let mut j0 = 0;
         while j0 < m {
@@ -464,10 +459,7 @@ impl Mat {
                     if a == 0.0 {
                         continue;
                     }
-                    let orow = &mut out.data[i * m + j0..i * m + j1];
-                    for (o, &b) in orow.iter_mut().zip(brow) {
-                        *o += a * b;
-                    }
+                    kd.axpy(&mut out.data[i * m + j0..i * m + j1], a, brow);
                 }
             }
             j0 = j1;
@@ -482,12 +474,14 @@ impl Mat {
             .collect()
     }
 
-    /// In-place `self += alpha * other`.
+    /// In-place `self += alpha * other`. One update per element through
+    /// the SIMD dispatch (unfused in scalar mode, fused in vector
+    /// modes) — the same per-element formula as
+    /// [`Mat::add_scaled_into`], so copy-then-axpy and add-scaled are
+    /// bit-identical within every mode.
     pub fn axpy(&mut self, alpha: f64, other: &Mat) {
         assert_eq!(self.shape(), other.shape());
-        for (a, &b) in self.data.iter_mut().zip(&other.data) {
-            *a += alpha * b;
-        }
+        simd::dispatch().axpy(&mut self.data, alpha, &other.data);
     }
 
     /// `out = self + alpha · other` into a caller-owned buffer (the
@@ -496,16 +490,24 @@ impl Mat {
     pub fn add_scaled_into(&self, alpha: f64, other: &Mat, out: &mut Mat) {
         assert_eq!(self.shape(), other.shape(), "add_scaled shape mismatch");
         assert_eq!(self.shape(), out.shape(), "add_scaled_into output shape mismatch");
-        for ((o, &a), &b) in out.data.iter_mut().zip(&self.data).zip(&other.data) {
-            *o = a + alpha * b;
-        }
+        simd::dispatch().add_scaled(&mut out.data, &self.data, alpha, &other.data);
     }
 
-    /// In-place scale.
+    /// In-place scale. A single multiply per element — bit-identical
+    /// across all SIMD modes.
     pub fn scale(&mut self, alpha: f64) {
-        for a in &mut self.data {
-            *a *= alpha;
-        }
+        simd::dispatch().scale(&mut self.data, alpha);
+    }
+
+    /// `self = alpha · src`, elementwise — the fused form of
+    /// [`Mat::copy_from`] + [`Mat::scale`]. A single correctly-rounded
+    /// multiply per element, so it is bit-identical to the
+    /// copy-then-scale sequence it replaces in every SIMD mode (and
+    /// across modes) while touching each cache line once instead of
+    /// twice — the Chebyshev row-update seed path.
+    pub fn fill_scaled_from(&mut self, alpha: f64, src: &Mat) {
+        assert_eq!(self.shape(), src.shape(), "fill_scaled_from shape mismatch");
+        simd::dispatch().fill_scaled(&mut self.data, &src.data, alpha);
     }
 
     /// `alpha * self` as a new matrix.
@@ -805,18 +807,19 @@ mod tests {
             let b = Mat::randn(40, m, &mut r);
             let mut tiled = Mat::from_fn(23, m, |_, _| f64::NAN);
             a.t_matmul_into(&b, &mut tiled);
-            // Untiled reference: the narrow-path loop, verbatim.
+            // Untiled reference: the narrow-path loop, verbatim — over
+            // the same dispatched axpy rows so the comparison stays
+            // within whatever SIMD mode this process runs.
+            let kd = simd::dispatch();
             let mut want = Mat::zeros(23, m);
             for p in 0..40 {
-                let arow = a.row(p);
-                let brow = b.row(p);
+                let arow = a.row(p).to_vec();
+                let brow = b.row(p).to_vec();
                 for (i, &av) in arow.iter().enumerate() {
                     if av == 0.0 {
                         continue;
                     }
-                    for (j, &bv) in brow.iter().enumerate() {
-                        want[(i, j)] += av * bv;
-                    }
+                    kd.axpy(want.row_mut(i), av, &brow);
                 }
             }
             assert!(
@@ -824,6 +827,57 @@ mod tests {
                 "cols={m}"
             );
         }
+    }
+
+    #[test]
+    fn matmul_packed_bit_identical_to_matmul_into() {
+        // Packing B panels into the stride-8 scratch must be
+        // bit-invisible: same per-element update sequence, relocated
+        // operand bytes. Shapes cover thin, split-panel, full-8, and
+        // wide/ragged panels; the PackBuf is shared across shapes to
+        // prove stale scratch contents never leak.
+        let mut r = Rng::seed_from(67);
+        let mut pack = PackBuf::new();
+        for (n, k, m) in
+            [(9usize, 30usize, 8usize), (19, 27, 3), (11, 700, 20), (7, 64, 33), (1, 5, 17)]
+        {
+            let a = Mat::randn(n, k, &mut r);
+            let b = Mat::randn(k, m, &mut r);
+            let mut want = Mat::from_fn(n, m, |_, _| f64::NAN);
+            a.matmul_into(&b, &mut want);
+            let mut got = Mat::from_fn(n, m, |_, _| f64::NAN);
+            a.matmul_packed_into(&b, &mut pack, &mut got);
+            assert!(
+                want.data().iter().zip(got.data()).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "n={n} k={k} m={m}"
+            );
+        }
+    }
+
+    #[test]
+    fn matmul_packed_handles_degenerate_shapes() {
+        let mut pack = PackBuf::new();
+        let a = Mat::zeros(3, 0);
+        let b = Mat::zeros(0, 4);
+        let mut out = Mat::from_fn(3, 4, |_, _| f64::NAN);
+        a.matmul_packed_into(&b, &mut pack, &mut out);
+        assert!(out.data().iter().all(|&x| x == 0.0), "k=0 must zero the output");
+        let a = Mat::zeros(3, 5);
+        let b = Mat::zeros(5, 0);
+        let mut out = Mat::zeros(3, 0);
+        a.matmul_packed_into(&b, &mut pack, &mut out);
+    }
+
+    #[test]
+    fn fill_scaled_from_bit_identical_to_copy_then_scale() {
+        let mut r = Rng::seed_from(68);
+        let src = Mat::randn(6, 9, &mut r);
+        let mut want = Mat::zeros(6, 9);
+        want.copy_from(&src);
+        want.scale(-0.75);
+        let mut got = Mat::from_fn(6, 9, |_, _| f64::NAN);
+        got.fill_scaled_from(-0.75, &src);
+        assert!(want.data().iter().zip(got.data()).all(|(x, y)| x.to_bits() == y.to_bits()));
     }
 
     #[test]

@@ -13,6 +13,10 @@
 //!   `t_matmul_into`, `transpose_into`, `add_scaled_into`, `copy_from`)
 //!   that writes into a caller-owned output; the allocating methods are
 //!   thin wrappers over them, bit-identical by construction.
+//! - [`simd`] — runtime-dispatched SIMD microkernels (AVX2+FMA / NEON /
+//!   scalar, `DEEPCA_SIMD` knob) plus the packed-B panel layout; every
+//!   `Mat` hot loop and the Chebyshev/SignAdjust cores route through its
+//!   [`simd::KernelDispatch`].
 //! - [`qr`] — Householder thin QR with the positive-diagonal-R
 //!   convention; `qr_into` + [`qr::QrWorkspace`] is the allocation-free
 //!   form the solver loops run on.
@@ -22,6 +26,7 @@
 //! - [`angles`] — cos/sin/tan θ_k between subspaces (paper Definition 1).
 
 pub mod matrix;
+pub mod simd;
 pub mod qr;
 pub mod eig;
 pub mod solve;

@@ -1,0 +1,1356 @@
+//! Runtime-dispatched SIMD microkernels for the dense hot paths.
+//!
+//! Everything numerical the solvers do per iteration bottoms out in a
+//! handful of primitive loops: the ≤8-wide matmul panel kernel (power
+//! products), elementwise axpy/scale/add-scaled (tracking updates,
+//! Chebyshev gossip rounds), and strided column dots (SignAdjust). This
+//! module owns those loops behind one [`KernelDispatch`], selected
+//! **once per process** from `DEEPCA_SIMD=auto|scalar|avx2|neon`:
+//!
+//! - `scalar` — the exact loops the crate has always run: plain `f64`
+//!   mul-then-add, bit-identical to every pre-SIMD release.
+//! - `avx2` — 4-lane `core::arch::x86_64` AVX2+FMA kernels.
+//! - `neon` — 2-lane `core::arch::aarch64` NEON FMA kernels.
+//! - `auto` (default) — the best mode the running CPU supports.
+//!
+//! ## Determinism contract
+//!
+//! Mode selection is a pure function of the environment variable and
+//! the ISA — never of thread count, data, or timing. Within a mode,
+//! every output element is produced by a **fixed sequence of
+//! identically-rounded operations**: the scalar mode applies an
+//! unfused multiply-then-add per update, and the vector modes apply
+//! one correctly-rounded fused multiply-add per update — in the vector
+//! body via FMA lanes and in ragged tails via [`f64::mul_add`], which
+//! is the *same* correctly-rounded operation. Consequences, all pinned
+//! by tests (`tests/simd_kernels.rs`, the suites under both CI modes):
+//!
+//! - results are bit-identical across thread counts in every mode
+//!   (chunking never changes any element's update sequence);
+//! - the packed-B kernel is bit-identical to the unpacked panel kernel
+//!   within a mode (packing relocates bytes, never reorders math);
+//! - `DEEPCA_SIMD=scalar` is bit-identical to the pre-SIMD kernels;
+//! - scalar vs. vector modes differ only by FMA fusion — one rounding
+//!   per update instead of two, within ~`k·ε` relative error;
+//! - multiply-only primitives ([`KernelDispatch::fill_scaled`],
+//!   [`KernelDispatch::scale`]) are bit-identical across **all** modes.
+//!
+//! ## Packed-B layout
+//!
+//! The wide-product hot path (`Mat::matmul_packed_into`) packs each
+//! ≤8-wide B panel into a [`PackBuf`]: a cache-line-aligned,
+//! stride-8, zero-padded scratch owned by the caller's workspace
+//! (`SolverWorkspace`, the backend's per-chunk scratch pool). The
+//! microkernel then streams the panel as contiguous full-width rows —
+//! no per-`p` bounds checks, no strided-row cache splits — and the
+//! grow-only buffer keeps steady state at zero heap allocations
+//! (audited by `tests/alloc_free.rs`).
+//!
+//! This file is the only place `core::arch`/feature detection may
+//! appear — `cargo xtask lint` enforces the boundary (rule `arch`).
+
+use std::sync::OnceLock;
+
+/// Which kernel family a [`KernelDispatch`] runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdMode {
+    /// Unfused scalar loops — bit-identical to the pre-SIMD kernels.
+    Scalar,
+    /// x86_64 AVX2+FMA, 4 × f64 lanes.
+    Avx2,
+    /// aarch64 NEON FMA, 2 × f64 lanes.
+    Neon,
+}
+
+impl SimdMode {
+    /// Stable lowercase name (the `DEEPCA_SIMD` vocabulary; recorded in
+    /// BENCH JSON metadata).
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdMode::Scalar => "scalar",
+            SimdMode::Avx2 => "avx2",
+            SimdMode::Neon => "neon",
+        }
+    }
+}
+
+#[cfg(all(target_arch = "x86_64", not(miri)))]
+fn avx2_available() -> bool {
+    std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+}
+
+#[cfg(not(all(target_arch = "x86_64", not(miri))))]
+fn avx2_available() -> bool {
+    false
+}
+
+#[cfg(all(target_arch = "aarch64", not(miri)))]
+fn neon_available() -> bool {
+    std::arch::is_aarch64_feature_detected!("neon")
+}
+
+#[cfg(not(all(target_arch = "aarch64", not(miri))))]
+fn neon_available() -> bool {
+    false
+}
+
+/// Best mode the running target supports — a pure function of the ISA.
+/// Under Miri no vendor intrinsics are interpretable, so the
+/// "ISA" the interpreter presents is scalar-only.
+fn detect() -> SimdMode {
+    if avx2_available() {
+        SimdMode::Avx2
+    } else if neon_available() {
+        SimdMode::Neon
+    } else {
+        SimdMode::Scalar
+    }
+}
+
+/// Resolve a `DEEPCA_SIMD` value (`None` = unset) to a mode. Pure —
+/// the testable core of [`dispatch`]. An explicitly requested vector
+/// mode that the CPU cannot run is a hard error, not a silent
+/// fallback: silently degrading would make "same env, same bits"
+/// unverifiable across machines.
+fn mode_from_env(var: Option<&str>) -> SimdMode {
+    match var {
+        None | Some("auto") | Some("") => detect(),
+        Some("scalar") => SimdMode::Scalar,
+        Some("avx2") => {
+            assert!(
+                avx2_available(),
+                "DEEPCA_SIMD=avx2 requested but AVX2+FMA are not available on this CPU"
+            );
+            SimdMode::Avx2
+        }
+        Some("neon") => {
+            assert!(
+                neon_available(),
+                "DEEPCA_SIMD=neon requested but NEON is not available on this target"
+            );
+            SimdMode::Neon
+        }
+        Some(other) => {
+            panic!("DEEPCA_SIMD={other:?}: expected auto|scalar|avx2|neon")
+        }
+    }
+}
+
+static DISPATCH: OnceLock<KernelDispatch> = OnceLock::new();
+
+/// The process-wide kernel dispatch, selected once from `DEEPCA_SIMD`
+/// on first use. Every `Mat` kernel routes through this.
+pub fn dispatch() -> &'static KernelDispatch {
+    DISPATCH.get_or_init(|| {
+        let var = std::env::var("DEEPCA_SIMD").ok();
+        KernelDispatch { mode: mode_from_env(var.as_deref()) }
+    })
+}
+
+/// A resolved kernel family. Copyable and constructible per-mode
+/// ([`KernelDispatch::for_mode`]) so benches and parity tests can run
+/// scalar and vector kernels side by side in one process; production
+/// code uses the process-wide [`dispatch`].
+#[derive(Clone, Copy, Debug)]
+pub struct KernelDispatch {
+    mode: SimdMode,
+}
+
+/// Grow-only, cache-line-aligned packing scratch for the packed-B
+/// matmul path. One lives in each `SolverWorkspace` and in each of the
+/// backend's per-chunk scratch slots; `ensure` reallocates only when a
+/// request exceeds every previous one, so steady-state solver steps
+/// (repeating shapes) allocate nothing.
+#[derive(Debug)]
+pub struct PackBuf {
+    buf: Vec<f64>,
+    /// Element offset of the first 64-byte-aligned slot, recomputed on
+    /// every (re)allocation.
+    off: usize,
+}
+
+impl PackBuf {
+    pub fn new() -> Self {
+        PackBuf { buf: Vec::new(), off: 0 }
+    }
+
+    /// Borrow `len` f64s of scratch starting on a cache-line boundary.
+    fn ensure(&mut self, len: usize) -> &mut [f64] {
+        if self.buf.len() < len + 8 {
+            // Grow-only (+8 slack f64s so a 64-byte-aligned start always
+            // fits); reached only when the request exceeds every
+            // previous one — never in steady state.
+            self.buf.resize(len + 8, 0.0);
+            let addr = self.buf.as_ptr() as usize;
+            // Vec<f64> storage is 8-aligned, so the byte distance to
+            // the next 64-boundary is a whole number of elements.
+            self.off = (addr.wrapping_neg() & 63) / 8;
+        }
+        &mut self.buf[self.off..self.off + len]
+    }
+
+    /// Current backing capacity in elements (diagnostics/tests).
+    pub fn capacity(&self) -> usize {
+        self.buf.len()
+    }
+}
+
+impl Default for PackBuf {
+    fn default() -> Self {
+        PackBuf::new()
+    }
+}
+
+impl Clone for PackBuf {
+    /// Scratch contents are not part of any value — a clone starts
+    /// empty (and re-aligns against its own allocation on first use).
+    fn clone(&self) -> Self {
+        PackBuf::new()
+    }
+}
+
+impl KernelDispatch {
+    /// Dispatch for an explicit mode. Panics if the running CPU cannot
+    /// execute it (same contract as `DEEPCA_SIMD=<mode>`).
+    pub fn for_mode(mode: SimdMode) -> KernelDispatch {
+        match mode {
+            SimdMode::Scalar => {}
+            SimdMode::Avx2 => assert!(
+                avx2_available(),
+                "KernelDispatch::for_mode(Avx2): AVX2+FMA not available on this CPU"
+            ),
+            SimdMode::Neon => assert!(
+                neon_available(),
+                "KernelDispatch::for_mode(Neon): NEON not available on this target"
+            ),
+        }
+        KernelDispatch { mode }
+    }
+
+    /// Dispatch for the best mode this CPU supports (what
+    /// `DEEPCA_SIMD=auto` resolves to).
+    pub fn auto() -> KernelDispatch {
+        KernelDispatch { mode: detect() }
+    }
+
+    /// The resolved mode.
+    pub fn mode(&self) -> SimdMode {
+        self.mode
+    }
+
+    /// Unpacked ≤8-wide matmul panel kernel over inner rows `p0..p1`:
+    /// `out[i, col0..col0+width] (+)= a[i, p0..p1] · b[p0..p1, col0..col0+width]`
+    /// for row-major `a` (n×k), `b` (k×bn), `out` (n×on). With
+    /// `accumulate` the register accumulators seed from `out` (later
+    /// inner blocks of the wide tiled path) instead of zero; without
+    /// it, `out` is never read (dirty buffers allowed). Per output
+    /// element the updates run in ascending `p`, one per inner row —
+    /// so inner-dimension splits are bit-invisible in every mode.
+    #[allow(clippy::too_many_arguments)]
+    pub fn matmul_panel_block(
+        &self,
+        a: &[f64],
+        n: usize,
+        k: usize,
+        b: &[f64],
+        bn: usize,
+        col0: usize,
+        width: usize,
+        p0: usize,
+        p1: usize,
+        accumulate: bool,
+        out: &mut [f64],
+        on: usize,
+    ) {
+        assert!((1..=8).contains(&width), "panel width must be 1..=8");
+        assert!(p0 <= p1 && p1 <= k, "inner block out of range");
+        assert!(col0 + width <= bn && col0 + width <= on, "panel out of range");
+        assert!(a.len() == n * k && b.len() == k * bn && out.len() == n * on);
+        match self.mode {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: an `Avx2` dispatch is only constructed after
+            // `avx2_available` confirmed AVX2+FMA on this CPU, so the
+            // target-feature call is sound; the asserts above establish
+            // the slice-extent invariants the kernel's raw-pointer
+            // arithmetic relies on.
+            SimdMode::Avx2 => unsafe {
+                avx2::matmul_panel_block(a, n, k, b, bn, col0, width, p0, p1, accumulate, out, on)
+            },
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: a `Neon` dispatch is only constructed after
+            // `neon_available` confirmed NEON, and the asserts above
+            // establish the extent invariants.
+            SimdMode::Neon => unsafe {
+                neon::matmul_panel_block(a, n, k, b, bn, col0, width, p0, p1, accumulate, out, on)
+            },
+            _ => scalar::matmul_panel_block(
+                a, n, k, b, bn, col0, width, p0, p1, accumulate, out, on, col0,
+            ),
+        }
+    }
+
+    /// Pack B columns `col0..col0+width` over all `k` inner rows into
+    /// `pack` as a stride-8, zero-padded, cache-line-aligned panel and
+    /// return it. Pure data movement — identical in every mode — so no
+    /// per-ISA variants exist.
+    pub fn pack_panel<'p>(
+        &self,
+        b: &[f64],
+        bn: usize,
+        col0: usize,
+        width: usize,
+        k: usize,
+        pack: &'p mut PackBuf,
+    ) -> &'p [f64] {
+        assert!((1..=8).contains(&width), "panel width must be 1..=8");
+        assert!(col0 + width <= bn && b.len() == k * bn);
+        let buf = pack.ensure(k * 8);
+        for p in 0..k {
+            let dst = &mut buf[p * 8..p * 8 + 8];
+            dst[..width].copy_from_slice(&b[p * bn + col0..p * bn + col0 + width]);
+            dst[width..].fill(0.0);
+        }
+        buf
+    }
+
+    /// Packed-panel matmul over the full inner dimension:
+    /// `out[i, col0..col0+width] = a[i, :] · panel`, where `packed` is a
+    /// stride-8 panel from [`KernelDispatch::pack_panel`]. Bit-identical
+    /// to the unpacked kernel within a mode: packing changes where the
+    /// B values live, never the per-element update sequence.
+    #[allow(clippy::too_many_arguments)]
+    pub fn matmul_panel_packed(
+        &self,
+        a: &[f64],
+        n: usize,
+        k: usize,
+        packed: &[f64],
+        col0: usize,
+        width: usize,
+        accumulate: bool,
+        out: &mut [f64],
+        on: usize,
+    ) {
+        assert!((1..=8).contains(&width), "panel width must be 1..=8");
+        assert!(packed.len() >= k * 8, "packed panel shorter than the inner dimension");
+        assert!(col0 + width <= on, "panel out of range");
+        assert!(a.len() == n * k && out.len() == n * on);
+        match self.mode {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: AVX2+FMA confirmed at dispatch construction; the
+            // asserts above establish the extent invariants (including
+            // the full stride-8 panel the aligned full-width loads
+            // rely on).
+            SimdMode::Avx2 => unsafe {
+                avx2::matmul_panel_packed(a, n, k, packed, col0, width, accumulate, out, on)
+            },
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: NEON confirmed at dispatch construction; extents
+            // established by the asserts above.
+            SimdMode::Neon => unsafe {
+                neon::matmul_panel_packed(a, n, k, packed, col0, width, accumulate, out, on)
+            },
+            // The scalar path reuses the generic panel kernel with the
+            // packed layout as an 8-stride B starting at column 0,
+            // writing the output window at `col0` — by construction the
+            // same arithmetic as the unpacked scalar kernel.
+            _ => scalar::matmul_panel_block(
+                a, n, k, packed, 8, 0, width, 0, k, accumulate, out, on, col0,
+            ),
+        }
+    }
+
+    /// `dst += alpha · src`, elementwise. One update per element:
+    /// unfused in scalar mode, one fused multiply-add in vector modes.
+    #[inline]
+    pub fn axpy(&self, dst: &mut [f64], alpha: f64, src: &[f64]) {
+        assert_eq!(dst.len(), src.len(), "axpy length mismatch");
+        match self.mode {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: AVX2+FMA confirmed at dispatch construction;
+            // equal lengths asserted above.
+            SimdMode::Avx2 => unsafe { avx2::axpy(dst, alpha, src) },
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: NEON confirmed at dispatch construction; equal
+            // lengths asserted above.
+            SimdMode::Neon => unsafe { neon::axpy(dst, alpha, src) },
+            _ => scalar::axpy(dst, alpha, src),
+        }
+    }
+
+    /// `dst = alpha · src`, elementwise — the fused form of copy +
+    /// scale. A single correctly-rounded multiply per element in every
+    /// mode, so results are bit-identical across **all** modes (and to
+    /// the unfused copy-then-scale sequence it replaces).
+    #[inline]
+    pub fn fill_scaled(&self, dst: &mut [f64], src: &[f64], alpha: f64) {
+        assert_eq!(dst.len(), src.len(), "fill_scaled length mismatch");
+        match self.mode {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: AVX2+FMA confirmed at dispatch construction;
+            // equal lengths asserted above.
+            SimdMode::Avx2 => unsafe { avx2::fill_scaled(dst, src, alpha) },
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: NEON confirmed at dispatch construction; equal
+            // lengths asserted above.
+            SimdMode::Neon => unsafe { neon::fill_scaled(dst, src, alpha) },
+            _ => scalar::fill_scaled(dst, src, alpha),
+        }
+    }
+
+    /// `dst *= alpha`, elementwise. A single multiply per element in
+    /// every mode — bit-identical across all modes.
+    #[inline]
+    pub fn scale(&self, dst: &mut [f64], alpha: f64) {
+        match self.mode {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: AVX2+FMA confirmed at dispatch construction; the
+            // kernel stays within `dst`'s bounds.
+            SimdMode::Avx2 => unsafe { avx2::scale(dst, alpha) },
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: NEON confirmed at dispatch construction; the
+            // kernel stays within `dst`'s bounds.
+            SimdMode::Neon => unsafe { neon::scale(dst, alpha) },
+            _ => scalar::scale(dst, alpha),
+        }
+    }
+
+    /// `out = a + alpha · b`, elementwise. One update per element, same
+    /// rounding profile as [`KernelDispatch::axpy`] — so
+    /// `out.copy_from(a); axpy(out, alpha, b)` and `add_scaled(out, a,
+    /// alpha, b)` are bit-identical within every mode.
+    #[inline]
+    pub fn add_scaled(&self, out: &mut [f64], a: &[f64], alpha: f64, b: &[f64]) {
+        assert!(out.len() == a.len() && out.len() == b.len(), "add_scaled length mismatch");
+        match self.mode {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: AVX2+FMA confirmed at dispatch construction;
+            // equal lengths asserted above.
+            SimdMode::Avx2 => unsafe { avx2::add_scaled(out, a, alpha, b) },
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: NEON confirmed at dispatch construction; equal
+            // lengths asserted above.
+            SimdMode::Neon => unsafe { neon::add_scaled(out, a, alpha, b) },
+            _ => scalar::add_scaled(out, a, alpha, b),
+        }
+    }
+
+    /// `dots[j] += w[j] · r[j]`, elementwise — one row's contribution
+    /// to a block of per-column dot products (SignAdjust's column-dot
+    /// pass restructured row-major). Per column the accumulation chain
+    /// runs in ascending row order, exactly the pre-SIMD column loop.
+    #[inline]
+    pub fn col_dots(&self, w: &[f64], r: &[f64], dots: &mut [f64]) {
+        assert!(w.len() == r.len() && w.len() == dots.len(), "col_dots length mismatch");
+        match self.mode {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: AVX2+FMA confirmed at dispatch construction;
+            // equal lengths asserted above.
+            SimdMode::Avx2 => unsafe { avx2::col_dots(w, r, dots) },
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: NEON confirmed at dispatch construction; equal
+            // lengths asserted above.
+            SimdMode::Neon => unsafe { neon::col_dots(w, r, dots) },
+            _ => scalar::col_dots(w, r, dots),
+        }
+    }
+}
+
+/// The pre-SIMD loops, verbatim: plain unfused multiply-then-add.
+/// `DEEPCA_SIMD=scalar` runs exactly these, which is how the
+/// "bit-identical to every pre-SIMD release" leg of the contract holds.
+mod scalar {
+    /// Generic panel kernel: B columns `bcol0..bcol0+width` with row
+    /// stride `bstride` into output columns `ocol0..ocol0+width`. The
+    /// unpacked entry uses `bstride = bn, bcol0 = ocol0`; the packed
+    /// entry uses `bstride = 8, bcol0 = 0` — same arithmetic, shifted
+    /// addressing.
+    #[allow(clippy::too_many_arguments)]
+    fn panel<const M: usize>(
+        a: &[f64],
+        n: usize,
+        k: usize,
+        b: &[f64],
+        bstride: usize,
+        bcol0: usize,
+        p0: usize,
+        p1: usize,
+        accumulate: bool,
+        out: &mut [f64],
+        on: usize,
+        ocol0: usize,
+    ) {
+        // Two A-rows per pass: 2·M independent accumulator chains hide
+        // FP-add latency, and each B row is loaded once for both
+        // outputs.
+        let mut i = 0;
+        while i + 1 < n {
+            let arow0 = &a[i * k..(i + 1) * k];
+            let arow1 = &a[(i + 1) * k..(i + 2) * k];
+            let mut acc0 = [0.0f64; M];
+            let mut acc1 = [0.0f64; M];
+            if accumulate {
+                acc0.copy_from_slice(&out[i * on + ocol0..i * on + ocol0 + M]);
+                acc1.copy_from_slice(&out[(i + 1) * on + ocol0..(i + 1) * on + ocol0 + M]);
+            }
+            for p in p0..p1 {
+                let a0 = arow0[p];
+                let a1 = arow1[p];
+                let brow = &b[p * bstride + bcol0..p * bstride + bcol0 + M];
+                for j in 0..M {
+                    acc0[j] += a0 * brow[j];
+                    acc1[j] += a1 * brow[j];
+                }
+            }
+            out[i * on + ocol0..i * on + ocol0 + M].copy_from_slice(&acc0);
+            out[(i + 1) * on + ocol0..(i + 1) * on + ocol0 + M].copy_from_slice(&acc1);
+            i += 2;
+        }
+        if i < n {
+            let arow = &a[i * k..(i + 1) * k];
+            let mut acc = [0.0f64; M];
+            if accumulate {
+                acc.copy_from_slice(&out[i * on + ocol0..i * on + ocol0 + M]);
+            }
+            for p in p0..p1 {
+                let av = arow[p];
+                let brow = &b[p * bstride + bcol0..p * bstride + bcol0 + M];
+                for j in 0..M {
+                    acc[j] += av * brow[j];
+                }
+            }
+            out[i * on + ocol0..i * on + ocol0 + M].copy_from_slice(&acc);
+        }
+    }
+
+    /// Width → monomorphized kernel dispatch (register-resident
+    /// accumulator arrays need a compile-time width).
+    #[allow(clippy::too_many_arguments)]
+    pub(super) fn matmul_panel_block(
+        a: &[f64],
+        n: usize,
+        k: usize,
+        b: &[f64],
+        bstride: usize,
+        bcol0: usize,
+        width: usize,
+        p0: usize,
+        p1: usize,
+        accumulate: bool,
+        out: &mut [f64],
+        on: usize,
+        ocol0: usize,
+    ) {
+        match width {
+            1 => panel::<1>(a, n, k, b, bstride, bcol0, p0, p1, accumulate, out, on, ocol0),
+            2 => panel::<2>(a, n, k, b, bstride, bcol0, p0, p1, accumulate, out, on, ocol0),
+            3 => panel::<3>(a, n, k, b, bstride, bcol0, p0, p1, accumulate, out, on, ocol0),
+            4 => panel::<4>(a, n, k, b, bstride, bcol0, p0, p1, accumulate, out, on, ocol0),
+            5 => panel::<5>(a, n, k, b, bstride, bcol0, p0, p1, accumulate, out, on, ocol0),
+            6 => panel::<6>(a, n, k, b, bstride, bcol0, p0, p1, accumulate, out, on, ocol0),
+            7 => panel::<7>(a, n, k, b, bstride, bcol0, p0, p1, accumulate, out, on, ocol0),
+            8 => panel::<8>(a, n, k, b, bstride, bcol0, p0, p1, accumulate, out, on, ocol0),
+            _ => unreachable!("thin panels are 1..=8 wide"),
+        }
+    }
+
+    pub(super) fn axpy(dst: &mut [f64], alpha: f64, src: &[f64]) {
+        for (d, &s) in dst.iter_mut().zip(src) {
+            *d += alpha * s;
+        }
+    }
+
+    pub(super) fn fill_scaled(dst: &mut [f64], src: &[f64], alpha: f64) {
+        for (d, &s) in dst.iter_mut().zip(src) {
+            *d = alpha * s;
+        }
+    }
+
+    pub(super) fn scale(dst: &mut [f64], alpha: f64) {
+        for d in dst.iter_mut() {
+            *d *= alpha;
+        }
+    }
+
+    pub(super) fn add_scaled(out: &mut [f64], a: &[f64], alpha: f64, b: &[f64]) {
+        for ((o, &av), &bv) in out.iter_mut().zip(a).zip(b) {
+            *o = av + alpha * bv;
+        }
+    }
+
+    pub(super) fn col_dots(w: &[f64], r: &[f64], dots: &mut [f64]) {
+        for ((d, &wv), &rv) in dots.iter_mut().zip(w).zip(r) {
+            *d += wv * rv;
+        }
+    }
+}
+
+/// AVX2+FMA kernels: 4 × f64 ymm lanes, `f64::mul_add` ragged tails
+/// (the same correctly-rounded fused op as an FMA lane, so tail
+/// elements match their packed-lane counterparts bitwise).
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use core::arch::x86_64::*;
+
+    /// Unpacked ≤8-wide panel kernel. Full 4-lane groups run as FMA
+    /// vectors; the `width % 4` tail runs as scalar `mul_add` chains so
+    /// no load ever touches B or `out` past `col0 + width`.
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2,fma")]
+    // SAFETY: callers guarantee AVX2+FMA availability (checked once at
+    // dispatch construction) and the slice-extent invariants asserted
+    // by the dispatch wrapper.
+    pub(super) unsafe fn matmul_panel_block(
+        a: &[f64],
+        n: usize,
+        k: usize,
+        b: &[f64],
+        bn: usize,
+        col0: usize,
+        width: usize,
+        p0: usize,
+        p1: usize,
+        accumulate: bool,
+        out: &mut [f64],
+        on: usize,
+    ) {
+        let vw = width / 4;
+        let tail = width % 4;
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let op = out.as_mut_ptr();
+        let mut i = 0;
+        while i + 1 < n {
+            // SAFETY: the dispatch wrapper asserted `a.len() == n·k`,
+            // `b.len() == k·bn`, `out.len() == n·on`, `p1 ≤ k`, and
+            // `col0 + width ≤ min(bn, on)`; all offsets below stay
+            // inside those extents (`4·vw + tail == width`), and `out`
+            // does not alias `a`/`b` (distinct slices).
+            unsafe {
+                let o0 = op.add(i * on + col0);
+                let o1 = op.add((i + 1) * on + col0);
+                let mut acc0 = [_mm256_setzero_pd(); 2];
+                let mut acc1 = [_mm256_setzero_pd(); 2];
+                let mut t0 = [0.0f64; 4];
+                let mut t1 = [0.0f64; 4];
+                if accumulate {
+                    for g in 0..vw {
+                        acc0[g] = _mm256_loadu_pd(o0.add(4 * g));
+                        acc1[g] = _mm256_loadu_pd(o1.add(4 * g));
+                    }
+                    for j in 0..tail {
+                        t0[j] = *o0.add(4 * vw + j);
+                        t1[j] = *o1.add(4 * vw + j);
+                    }
+                }
+                let ar0 = ap.add(i * k);
+                let ar1 = ap.add((i + 1) * k);
+                for p in p0..p1 {
+                    let s0 = *ar0.add(p);
+                    let s1 = *ar1.add(p);
+                    let a0 = _mm256_set1_pd(s0);
+                    let a1 = _mm256_set1_pd(s1);
+                    let br = bp.add(p * bn + col0);
+                    for g in 0..vw {
+                        let bv = _mm256_loadu_pd(br.add(4 * g));
+                        acc0[g] = _mm256_fmadd_pd(a0, bv, acc0[g]);
+                        acc1[g] = _mm256_fmadd_pd(a1, bv, acc1[g]);
+                    }
+                    for j in 0..tail {
+                        let bj = *br.add(4 * vw + j);
+                        t0[j] = s0.mul_add(bj, t0[j]);
+                        t1[j] = s1.mul_add(bj, t1[j]);
+                    }
+                }
+                for g in 0..vw {
+                    _mm256_storeu_pd(o0.add(4 * g), acc0[g]);
+                    _mm256_storeu_pd(o1.add(4 * g), acc1[g]);
+                }
+                for j in 0..tail {
+                    *o0.add(4 * vw + j) = t0[j];
+                    *o1.add(4 * vw + j) = t1[j];
+                }
+            }
+            i += 2;
+        }
+        if i < n {
+            // SAFETY: same extents as above for the single remaining
+            // row `i == n - 1`.
+            unsafe {
+                let o0 = op.add(i * on + col0);
+                let mut acc = [_mm256_setzero_pd(); 2];
+                let mut t = [0.0f64; 4];
+                if accumulate {
+                    for g in 0..vw {
+                        acc[g] = _mm256_loadu_pd(o0.add(4 * g));
+                    }
+                    for j in 0..tail {
+                        t[j] = *o0.add(4 * vw + j);
+                    }
+                }
+                let ar = ap.add(i * k);
+                for p in p0..p1 {
+                    let s = *ar.add(p);
+                    let av = _mm256_set1_pd(s);
+                    let br = bp.add(p * bn + col0);
+                    for g in 0..vw {
+                        let bv = _mm256_loadu_pd(br.add(4 * g));
+                        acc[g] = _mm256_fmadd_pd(av, bv, acc[g]);
+                    }
+                    for j in 0..tail {
+                        t[j] = s.mul_add(*br.add(4 * vw + j), t[j]);
+                    }
+                }
+                for g in 0..vw {
+                    _mm256_storeu_pd(o0.add(4 * g), acc[g]);
+                }
+                for j in 0..tail {
+                    *o0.add(4 * vw + j) = t[j];
+                }
+            }
+        }
+    }
+
+    /// Packed-panel kernel: the stride-8 zero-padded panel always
+    /// supports full 8-lane loads, so every element — ragged widths
+    /// included — runs as an FMA lane; seeds and stores stage through
+    /// an 8-wide stack buffer so only `width` output columns are ever
+    /// read or written.
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2,fma")]
+    // SAFETY: callers guarantee AVX2+FMA availability (checked once at
+    // dispatch construction) and the slice-extent invariants asserted
+    // by the dispatch wrapper.
+    pub(super) unsafe fn matmul_panel_packed(
+        a: &[f64],
+        n: usize,
+        k: usize,
+        packed: &[f64],
+        col0: usize,
+        width: usize,
+        accumulate: bool,
+        out: &mut [f64],
+        on: usize,
+    ) {
+        let ap = a.as_ptr();
+        let pp = packed.as_ptr();
+        let op = out.as_mut_ptr();
+        let mut i = 0;
+        while i + 1 < n {
+            // SAFETY: the dispatch wrapper asserted `a.len() == n·k`,
+            // `packed.len() ≥ k·8`, `out.len() == n·on`, and
+            // `col0 + width ≤ on`; panel loads are full stride-8 rows
+            // inside `packed`, output access stages through `width`
+            // elements of 8-wide stack buffers, and `out` does not
+            // alias `a`/`packed` (distinct slices).
+            unsafe {
+                let o0 = op.add(i * on + col0);
+                let o1 = op.add((i + 1) * on + col0);
+                let mut s0 = [0.0f64; 8];
+                let mut s1 = [0.0f64; 8];
+                if accumulate {
+                    core::ptr::copy_nonoverlapping(o0, s0.as_mut_ptr(), width);
+                    core::ptr::copy_nonoverlapping(o1, s1.as_mut_ptr(), width);
+                }
+                let mut acc00 = _mm256_loadu_pd(s0.as_ptr());
+                let mut acc01 = _mm256_loadu_pd(s0.as_ptr().add(4));
+                let mut acc10 = _mm256_loadu_pd(s1.as_ptr());
+                let mut acc11 = _mm256_loadu_pd(s1.as_ptr().add(4));
+                let ar0 = ap.add(i * k);
+                let ar1 = ap.add((i + 1) * k);
+                for p in 0..k {
+                    let b0 = _mm256_loadu_pd(pp.add(8 * p));
+                    let b1 = _mm256_loadu_pd(pp.add(8 * p + 4));
+                    let a0 = _mm256_set1_pd(*ar0.add(p));
+                    let a1 = _mm256_set1_pd(*ar1.add(p));
+                    acc00 = _mm256_fmadd_pd(a0, b0, acc00);
+                    acc01 = _mm256_fmadd_pd(a0, b1, acc01);
+                    acc10 = _mm256_fmadd_pd(a1, b0, acc10);
+                    acc11 = _mm256_fmadd_pd(a1, b1, acc11);
+                }
+                _mm256_storeu_pd(s0.as_mut_ptr(), acc00);
+                _mm256_storeu_pd(s0.as_mut_ptr().add(4), acc01);
+                _mm256_storeu_pd(s1.as_mut_ptr(), acc10);
+                _mm256_storeu_pd(s1.as_mut_ptr().add(4), acc11);
+                core::ptr::copy_nonoverlapping(s0.as_ptr(), o0, width);
+                core::ptr::copy_nonoverlapping(s1.as_ptr(), o1, width);
+            }
+            i += 2;
+        }
+        if i < n {
+            // SAFETY: same extents as above for the single remaining
+            // row `i == n - 1`.
+            unsafe {
+                let o0 = op.add(i * on + col0);
+                let mut s0 = [0.0f64; 8];
+                if accumulate {
+                    core::ptr::copy_nonoverlapping(o0, s0.as_mut_ptr(), width);
+                }
+                let mut acc0 = _mm256_loadu_pd(s0.as_ptr());
+                let mut acc1 = _mm256_loadu_pd(s0.as_ptr().add(4));
+                let ar = ap.add(i * k);
+                for p in 0..k {
+                    let b0 = _mm256_loadu_pd(pp.add(8 * p));
+                    let b1 = _mm256_loadu_pd(pp.add(8 * p + 4));
+                    let av = _mm256_set1_pd(*ar.add(p));
+                    acc0 = _mm256_fmadd_pd(av, b0, acc0);
+                    acc1 = _mm256_fmadd_pd(av, b1, acc1);
+                }
+                _mm256_storeu_pd(s0.as_mut_ptr(), acc0);
+                _mm256_storeu_pd(s0.as_mut_ptr().add(4), acc1);
+                core::ptr::copy_nonoverlapping(s0.as_ptr(), o0, width);
+            }
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    // SAFETY: callers guarantee AVX2+FMA availability (checked once at
+    // dispatch construction) and the slice-extent invariants asserted
+    // by the dispatch wrapper.
+    pub(super) unsafe fn axpy(dst: &mut [f64], alpha: f64, src: &[f64]) {
+        // SAFETY: the dispatch wrapper asserted equal lengths; the
+        // vector loop stops at `len/4*4` and the tail is scalar, so
+        // every access is in bounds (`dst`/`src` are distinct slices).
+        unsafe {
+            let n = dst.len();
+            let n4 = n / 4 * 4;
+            let av = _mm256_set1_pd(alpha);
+            let dp = dst.as_mut_ptr();
+            let sp = src.as_ptr();
+            let mut i = 0;
+            while i < n4 {
+                let d = _mm256_loadu_pd(dp.add(i));
+                let s = _mm256_loadu_pd(sp.add(i));
+                _mm256_storeu_pd(dp.add(i), _mm256_fmadd_pd(av, s, d));
+                i += 4;
+            }
+            while i < n {
+                *dp.add(i) = alpha.mul_add(*sp.add(i), *dp.add(i));
+                i += 1;
+            }
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    // SAFETY: callers guarantee AVX2+FMA availability (checked once at
+    // dispatch construction) and the slice-extent invariants asserted
+    // by the dispatch wrapper.
+    pub(super) unsafe fn fill_scaled(dst: &mut [f64], src: &[f64], alpha: f64) {
+        // SAFETY: equal lengths asserted by the wrapper; bounds as in
+        // `axpy` above.
+        unsafe {
+            let n = dst.len();
+            let n4 = n / 4 * 4;
+            let av = _mm256_set1_pd(alpha);
+            let dp = dst.as_mut_ptr();
+            let sp = src.as_ptr();
+            let mut i = 0;
+            while i < n4 {
+                let s = _mm256_loadu_pd(sp.add(i));
+                _mm256_storeu_pd(dp.add(i), _mm256_mul_pd(av, s));
+                i += 4;
+            }
+            while i < n {
+                *dp.add(i) = alpha * *sp.add(i);
+                i += 1;
+            }
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    // SAFETY: callers guarantee AVX2+FMA availability (checked once at
+    // dispatch construction) and the slice-extent invariants asserted
+    // by the dispatch wrapper.
+    pub(super) unsafe fn scale(dst: &mut [f64], alpha: f64) {
+        // SAFETY: the vector loop stops at `len/4*4` and the tail is
+        // scalar, so every access stays inside `dst`.
+        unsafe {
+            let n = dst.len();
+            let n4 = n / 4 * 4;
+            let av = _mm256_set1_pd(alpha);
+            let dp = dst.as_mut_ptr();
+            let mut i = 0;
+            while i < n4 {
+                let d = _mm256_loadu_pd(dp.add(i));
+                _mm256_storeu_pd(dp.add(i), _mm256_mul_pd(av, d));
+                i += 4;
+            }
+            while i < n {
+                *dp.add(i) *= alpha;
+                i += 1;
+            }
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    // SAFETY: callers guarantee AVX2+FMA availability (checked once at
+    // dispatch construction) and the slice-extent invariants asserted
+    // by the dispatch wrapper.
+    pub(super) unsafe fn add_scaled(out: &mut [f64], a: &[f64], alpha: f64, b: &[f64]) {
+        // SAFETY: equal lengths asserted by the wrapper; bounds as in
+        // `axpy` above (`out` distinct from `a`/`b`).
+        unsafe {
+            let n = out.len();
+            let n4 = n / 4 * 4;
+            let av = _mm256_set1_pd(alpha);
+            let op = out.as_mut_ptr();
+            let ap = a.as_ptr();
+            let bp = b.as_ptr();
+            let mut i = 0;
+            while i < n4 {
+                let va = _mm256_loadu_pd(ap.add(i));
+                let vb = _mm256_loadu_pd(bp.add(i));
+                _mm256_storeu_pd(op.add(i), _mm256_fmadd_pd(av, vb, va));
+                i += 4;
+            }
+            while i < n {
+                *op.add(i) = alpha.mul_add(*bp.add(i), *ap.add(i));
+                i += 1;
+            }
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    // SAFETY: callers guarantee AVX2+FMA availability (checked once at
+    // dispatch construction) and the slice-extent invariants asserted
+    // by the dispatch wrapper.
+    pub(super) unsafe fn col_dots(w: &[f64], r: &[f64], dots: &mut [f64]) {
+        // SAFETY: equal lengths asserted by the wrapper; bounds as in
+        // `axpy` above.
+        unsafe {
+            let n = dots.len();
+            let n4 = n / 4 * 4;
+            let dp = dots.as_mut_ptr();
+            let wp = w.as_ptr();
+            let rp = r.as_ptr();
+            let mut i = 0;
+            while i < n4 {
+                let d = _mm256_loadu_pd(dp.add(i));
+                let wv = _mm256_loadu_pd(wp.add(i));
+                let rv = _mm256_loadu_pd(rp.add(i));
+                _mm256_storeu_pd(dp.add(i), _mm256_fmadd_pd(wv, rv, d));
+                i += 4;
+            }
+            while i < n {
+                *dp.add(i) = (*wp.add(i)).mul_add(*rp.add(i), *dp.add(i));
+                i += 1;
+            }
+        }
+    }
+}
+
+/// NEON kernels: 2 × f64 lanes (`vfmaq_f64` is a correctly-rounded
+/// fused multiply-add, like the AVX2 lanes and `f64::mul_add` tails).
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use core::arch::aarch64::*;
+
+    /// Unpacked ≤8-wide panel kernel: full 2-lane groups as FMA
+    /// vectors, `width % 2` tail as a scalar `mul_add` chain.
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "neon")]
+    // SAFETY: callers guarantee NEON availability (checked once at
+    // dispatch construction) and the slice-extent invariants asserted
+    // by the dispatch wrapper.
+    pub(super) unsafe fn matmul_panel_block(
+        a: &[f64],
+        n: usize,
+        k: usize,
+        b: &[f64],
+        bn: usize,
+        col0: usize,
+        width: usize,
+        p0: usize,
+        p1: usize,
+        accumulate: bool,
+        out: &mut [f64],
+        on: usize,
+    ) {
+        let vw = width / 2;
+        let tail = width % 2;
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let op = out.as_mut_ptr();
+        for i in 0..n {
+            // SAFETY: the dispatch wrapper asserted `a.len() == n·k`,
+            // `b.len() == k·bn`, `out.len() == n·on`, `p1 ≤ k`, and
+            // `col0 + width ≤ min(bn, on)`; `2·vw + tail == width`
+            // keeps every offset inside those extents, and `out` does
+            // not alias `a`/`b`.
+            unsafe {
+                let o0 = op.add(i * on + col0);
+                let mut acc = [vdupq_n_f64(0.0); 4];
+                let mut t = 0.0f64;
+                if accumulate {
+                    for g in 0..vw {
+                        acc[g] = vld1q_f64(o0.add(2 * g));
+                    }
+                    if tail == 1 {
+                        t = *o0.add(2 * vw);
+                    }
+                }
+                let ar = ap.add(i * k);
+                for p in p0..p1 {
+                    let s = *ar.add(p);
+                    let av = vdupq_n_f64(s);
+                    let br = bp.add(p * bn + col0);
+                    for g in 0..vw {
+                        let bv = vld1q_f64(br.add(2 * g));
+                        acc[g] = vfmaq_f64(acc[g], av, bv);
+                    }
+                    if tail == 1 {
+                        t = s.mul_add(*br.add(2 * vw), t);
+                    }
+                }
+                for g in 0..vw {
+                    vst1q_f64(o0.add(2 * g), acc[g]);
+                }
+                if tail == 1 {
+                    *o0.add(2 * vw) = t;
+                }
+            }
+        }
+    }
+
+    /// Packed-panel kernel: full 8-lane (4 × 2-lane) compute over the
+    /// stride-8 zero-padded panel; output access stages through an
+    /// 8-wide stack buffer so only `width` columns are read or written.
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "neon")]
+    // SAFETY: callers guarantee NEON availability (checked once at
+    // dispatch construction) and the slice-extent invariants asserted
+    // by the dispatch wrapper.
+    pub(super) unsafe fn matmul_panel_packed(
+        a: &[f64],
+        n: usize,
+        k: usize,
+        packed: &[f64],
+        col0: usize,
+        width: usize,
+        accumulate: bool,
+        out: &mut [f64],
+        on: usize,
+    ) {
+        let ap = a.as_ptr();
+        let pp = packed.as_ptr();
+        let op = out.as_mut_ptr();
+        for i in 0..n {
+            // SAFETY: the dispatch wrapper asserted `a.len() == n·k`,
+            // `packed.len() ≥ k·8`, `out.len() == n·on`, and
+            // `col0 + width ≤ on`; panel loads are full stride-8 rows,
+            // and output access stages through `width` elements of an
+            // 8-wide stack buffer (`out` distinct from `a`/`packed`).
+            unsafe {
+                let o0 = op.add(i * on + col0);
+                let mut s = [0.0f64; 8];
+                if accumulate {
+                    core::ptr::copy_nonoverlapping(o0, s.as_mut_ptr(), width);
+                }
+                let mut acc = [
+                    vld1q_f64(s.as_ptr()),
+                    vld1q_f64(s.as_ptr().add(2)),
+                    vld1q_f64(s.as_ptr().add(4)),
+                    vld1q_f64(s.as_ptr().add(6)),
+                ];
+                let ar = ap.add(i * k);
+                for p in 0..k {
+                    let av = vdupq_n_f64(*ar.add(p));
+                    let pr = pp.add(8 * p);
+                    for (g, slot) in acc.iter_mut().enumerate() {
+                        let bv = vld1q_f64(pr.add(2 * g));
+                        *slot = vfmaq_f64(*slot, av, bv);
+                    }
+                }
+                for (g, slot) in acc.iter().enumerate() {
+                    vst1q_f64(s.as_mut_ptr().add(2 * g), *slot);
+                }
+                core::ptr::copy_nonoverlapping(s.as_ptr(), o0, width);
+            }
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    // SAFETY: callers guarantee NEON availability (checked once at
+    // dispatch construction) and the slice-extent invariants asserted
+    // by the dispatch wrapper.
+    pub(super) unsafe fn axpy(dst: &mut [f64], alpha: f64, src: &[f64]) {
+        // SAFETY: equal lengths asserted by the wrapper; the vector
+        // loop stops at `len/2*2` and the tail is scalar.
+        unsafe {
+            let n = dst.len();
+            let n2 = n / 2 * 2;
+            let av = vdupq_n_f64(alpha);
+            let dp = dst.as_mut_ptr();
+            let sp = src.as_ptr();
+            let mut i = 0;
+            while i < n2 {
+                let d = vld1q_f64(dp.add(i));
+                let s = vld1q_f64(sp.add(i));
+                vst1q_f64(dp.add(i), vfmaq_f64(d, av, s));
+                i += 2;
+            }
+            if i < n {
+                *dp.add(i) = alpha.mul_add(*sp.add(i), *dp.add(i));
+            }
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    // SAFETY: callers guarantee NEON availability (checked once at
+    // dispatch construction) and the slice-extent invariants asserted
+    // by the dispatch wrapper.
+    pub(super) unsafe fn fill_scaled(dst: &mut [f64], src: &[f64], alpha: f64) {
+        // SAFETY: equal lengths asserted by the wrapper; bounds as in
+        // `axpy` above.
+        unsafe {
+            let n = dst.len();
+            let n2 = n / 2 * 2;
+            let av = vdupq_n_f64(alpha);
+            let dp = dst.as_mut_ptr();
+            let sp = src.as_ptr();
+            let mut i = 0;
+            while i < n2 {
+                let s = vld1q_f64(sp.add(i));
+                vst1q_f64(dp.add(i), vmulq_f64(av, s));
+                i += 2;
+            }
+            if i < n {
+                *dp.add(i) = alpha * *sp.add(i);
+            }
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    // SAFETY: callers guarantee NEON availability (checked once at
+    // dispatch construction) and the slice-extent invariants asserted
+    // by the dispatch wrapper.
+    pub(super) unsafe fn scale(dst: &mut [f64], alpha: f64) {
+        // SAFETY: the vector loop stops at `len/2*2` and the tail is
+        // scalar, so every access stays inside `dst`.
+        unsafe {
+            let n = dst.len();
+            let n2 = n / 2 * 2;
+            let av = vdupq_n_f64(alpha);
+            let dp = dst.as_mut_ptr();
+            let mut i = 0;
+            while i < n2 {
+                let d = vld1q_f64(dp.add(i));
+                vst1q_f64(dp.add(i), vmulq_f64(av, d));
+                i += 2;
+            }
+            if i < n {
+                *dp.add(i) *= alpha;
+            }
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    // SAFETY: callers guarantee NEON availability (checked once at
+    // dispatch construction) and the slice-extent invariants asserted
+    // by the dispatch wrapper.
+    pub(super) unsafe fn add_scaled(out: &mut [f64], a: &[f64], alpha: f64, b: &[f64]) {
+        // SAFETY: equal lengths asserted by the wrapper; bounds as in
+        // `axpy` above (`out` distinct from `a`/`b`).
+        unsafe {
+            let n = out.len();
+            let n2 = n / 2 * 2;
+            let av = vdupq_n_f64(alpha);
+            let op = out.as_mut_ptr();
+            let ap = a.as_ptr();
+            let bp = b.as_ptr();
+            let mut i = 0;
+            while i < n2 {
+                let va = vld1q_f64(ap.add(i));
+                let vb = vld1q_f64(bp.add(i));
+                vst1q_f64(op.add(i), vfmaq_f64(va, av, vb));
+                i += 2;
+            }
+            if i < n {
+                *op.add(i) = alpha.mul_add(*bp.add(i), *ap.add(i));
+            }
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    // SAFETY: callers guarantee NEON availability (checked once at
+    // dispatch construction) and the slice-extent invariants asserted
+    // by the dispatch wrapper.
+    pub(super) unsafe fn col_dots(w: &[f64], r: &[f64], dots: &mut [f64]) {
+        // SAFETY: equal lengths asserted by the wrapper; bounds as in
+        // `axpy` above.
+        unsafe {
+            let n = dots.len();
+            let n2 = n / 2 * 2;
+            let dp = dots.as_mut_ptr();
+            let wp = w.as_ptr();
+            let rp = r.as_ptr();
+            let mut i = 0;
+            while i < n2 {
+                let d = vld1q_f64(dp.add(i));
+                let wv = vld1q_f64(wp.add(i));
+                let rv = vld1q_f64(rp.add(i));
+                vst1q_f64(dp.add(i), vfmaq_f64(d, wv, rv));
+                i += 2;
+            }
+            if i < n {
+                *dp.add(i) = (*wp.add(i)).mul_add(*rp.add(i), *dp.add(i));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randv(n: usize, rng: &mut Rng) -> Vec<f64> {
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn env_parsing_is_a_pure_function() {
+        assert_eq!(mode_from_env(Some("scalar")), SimdMode::Scalar);
+        assert_eq!(mode_from_env(None), detect());
+        assert_eq!(mode_from_env(Some("auto")), detect());
+        assert_eq!(mode_from_env(Some("")), detect());
+        // Repeat calls agree — selection depends on nothing mutable.
+        assert_eq!(mode_from_env(None), mode_from_env(None));
+    }
+
+    #[test]
+    #[should_panic(expected = "expected auto|scalar|avx2|neon")]
+    fn unknown_mode_is_rejected() {
+        mode_from_env(Some("sse9"));
+    }
+
+    #[test]
+    fn global_dispatch_is_stable_and_env_consistent() {
+        let first = dispatch().mode();
+        assert_eq!(dispatch().mode(), first);
+        match std::env::var("DEEPCA_SIMD").ok().as_deref() {
+            Some("scalar") => assert_eq!(first, SimdMode::Scalar),
+            Some("avx2") => assert_eq!(first, SimdMode::Avx2),
+            Some("neon") => assert_eq!(first, SimdMode::Neon),
+            _ => assert_eq!(first, detect()),
+        }
+    }
+
+    #[test]
+    fn packbuf_is_cache_line_aligned_and_grow_only() {
+        let mut pack = PackBuf::new();
+        for len in [8usize, 64, 64, 640, 640, 16] {
+            let buf = pack.ensure(len);
+            assert_eq!(buf.len(), len);
+            assert_eq!(buf.as_ptr() as usize % 64, 0, "len={len}");
+        }
+        let cap = pack.capacity();
+        pack.ensure(640);
+        assert_eq!(pack.capacity(), cap, "shrinking request must not reallocate");
+    }
+
+    #[test]
+    fn pack_panel_layout_and_zero_padding() {
+        let kd = KernelDispatch::for_mode(SimdMode::Scalar);
+        let mut rng = Rng::seed_from(41);
+        let (k, bn) = (5usize, 7usize);
+        let b = randv(k * bn, &mut rng);
+        let mut pack = PackBuf::new();
+        let panel = kd.pack_panel(&b, bn, 4, 3, k, &mut pack);
+        assert_eq!(panel.len(), k * 8);
+        for p in 0..k {
+            for j in 0..3 {
+                assert_eq!(panel[p * 8 + j].to_bits(), b[p * bn + 4 + j].to_bits());
+            }
+            for j in 3..8 {
+                assert_eq!(panel[p * 8 + j], 0.0, "padding must be exact zero");
+            }
+        }
+    }
+
+    /// The scalar elementwise primitives are the pre-SIMD loops,
+    /// verbatim — pinned here so a refactor cannot silently change
+    /// the `DEEPCA_SIMD=scalar` bit contract.
+    #[test]
+    fn scalar_primitives_match_the_reference_loops_bitwise() {
+        let kd = KernelDispatch::for_mode(SimdMode::Scalar);
+        let mut rng = Rng::seed_from(42);
+        let n = 37;
+        let a = randv(n, &mut rng);
+        let b = randv(n, &mut rng);
+        let alpha = rng.normal();
+
+        let mut got = a.clone();
+        kd.axpy(&mut got, alpha, &b);
+        let want: Vec<f64> = a.iter().zip(&b).map(|(x, y)| x + alpha * y).collect();
+        assert!(got.iter().zip(&want).all(|(x, y)| x.to_bits() == y.to_bits()));
+
+        let mut got = vec![f64::NAN; n];
+        kd.fill_scaled(&mut got, &b, alpha);
+        assert!(got.iter().zip(&b).all(|(x, y)| x.to_bits() == (alpha * y).to_bits()));
+
+        let mut got = a.clone();
+        kd.scale(&mut got, alpha);
+        assert!(got.iter().zip(&a).all(|(x, y)| x.to_bits() == (y * alpha).to_bits()));
+
+        let mut got = vec![f64::NAN; n];
+        kd.add_scaled(&mut got, &a, alpha, &b);
+        assert!(got.iter().zip(&want).all(|(x, y)| x.to_bits() == y.to_bits()));
+
+        let mut dots = vec![0.25f64; n];
+        kd.col_dots(&a, &b, &mut dots);
+        let want: Vec<f64> =
+            a.iter().zip(&b).map(|(x, y)| 0.25 + x * y).collect();
+        assert!(dots.iter().zip(&want).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+
+    /// Packed and unpacked panel kernels agree bitwise in whatever mode
+    /// this process runs (the full cross-mode matrix lives in
+    /// `tests/simd_kernels.rs`).
+    #[test]
+    fn packed_panel_bit_matches_unpacked_panel() {
+        let kd = *dispatch();
+        let mut rng = Rng::seed_from(43);
+        let mut pack = PackBuf::new();
+        for (n, k, bn, col0, width) in
+            [(9usize, 30usize, 8usize, 0usize, 8usize), (7, 13, 7, 2, 5), (1, 20, 3, 0, 3)]
+        {
+            let a = randv(n * k, &mut rng);
+            let b = randv(k * bn, &mut rng);
+            let mut unpacked = vec![f64::NAN; n * bn];
+            kd.matmul_panel_block(&a, n, k, &b, bn, col0, width, 0, k, false, &mut unpacked, bn);
+            let panel = kd.pack_panel(&b, bn, col0, width, k, &mut pack);
+            // Borrow gymnastics: the panel borrow ends before the
+            // packed kernel writes the output.
+            let panel: Vec<f64> = panel.to_vec();
+            let mut packed_out = vec![f64::NAN; n * bn];
+            kd.matmul_panel_packed(&a, n, k, &panel, col0, width, false, &mut packed_out, bn);
+            for (i, (x, y)) in unpacked.iter().zip(&packed_out).enumerate() {
+                let col = i % bn;
+                if col >= col0 && col < col0 + width {
+                    assert_eq!(x.to_bits(), y.to_bits(), "n={n} k={k} width={width} i={i}");
+                }
+            }
+        }
+    }
+
+    /// The fixed mode's vector kernels are within FMA-fusion distance
+    /// of scalar: one rounding per update instead of two.
+    #[test]
+    fn native_mode_is_within_fusion_tolerance_of_scalar() {
+        let scalar = KernelDispatch::for_mode(SimdMode::Scalar);
+        let native = KernelDispatch::auto();
+        let mut rng = Rng::seed_from(44);
+        let (n, k, bn) = (11usize, 64usize, 6usize);
+        let a = randv(n * k, &mut rng);
+        let b = randv(k * bn, &mut rng);
+        let mut want = vec![f64::NAN; n * bn];
+        scalar.matmul_panel_block(&a, n, k, &b, bn, 0, bn, 0, k, false, &mut want, bn);
+        let mut got = vec![f64::NAN; n * bn];
+        native.matmul_panel_block(&a, n, k, &b, bn, 0, bn, 0, k, false, &mut got, bn);
+        let scale = want.iter().fold(1.0f64, |m, x| m.max(x.abs()));
+        for (x, y) in want.iter().zip(&got) {
+            assert!((x - y).abs() <= 1e-13 * scale, "{x} vs {y}");
+        }
+    }
+}

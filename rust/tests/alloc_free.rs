@@ -202,6 +202,44 @@ fn solver_steps_are_allocation_free_after_warmup() {
         );
     }
 
+    // The packed-B product path in isolation: the backend's per-chunk
+    // `PackBuf` scratch grows on the first batch and is recycled
+    // forever after, so warm `local_products_into` calls — sequential
+    // and pooled — must allocate nothing (this is where the SIMD
+    // layer's packing workspace would show up if it ever allocated
+    // per panel).
+    {
+        use deepca::algo::backend::{PowerBackend, RustBackend};
+        use deepca::consensus::AgentStack;
+        use deepca::exec::Executor;
+        use deepca::linalg::Mat;
+        use std::sync::Arc;
+
+        let ws = AgentStack::replicate(problem.locals.len(), &problem.initial_w(5));
+        let (d, k) = ws.slice_shape();
+        let mut out = AgentStack::replicate(ws.m(), &Mat::zeros(d, k));
+        for threads in [0usize, 4] {
+            let (label, backend) = if threads == 0 {
+                ("packed products [sequential]", RustBackend::new(&problem.locals))
+            } else {
+                (
+                    "packed products [threads=4]",
+                    RustBackend::with_executor(&problem.locals, Arc::new(Executor::new(threads))),
+                )
+            };
+            backend.local_products_into(&ws, &mut out); // grow the pack scratch
+            let before = allocations();
+            for _ in 0..5 {
+                backend.local_products_into(&ws, &mut out);
+            }
+            let delta = allocations() - before;
+            assert_eq!(
+                delta, 0,
+                "{label}: {delta} heap allocations across 5 warm batched products"
+            );
+        }
+    }
+
     // The flight recorder's own contract: with tracing *enabled*, steps
     // must still allocate nothing in steady state — events go into
     // preallocated per-thread rings, metrics into static atomics.

@@ -1,0 +1,211 @@
+//! Scalar-vs-SIMD parity for the dispatch layer — the SIMD tentpole's
+//! acceptance bar, pinned from outside the crate:
+//!
+//! - packed-B products are **bit-identical** to the unpacked `matmul_into`
+//!   path within a mode, on random shapes, into dirty (NaN-filled)
+//!   output buffers, through a shared grow-only [`PackBuf`];
+//! - repeated runs within a fixed mode are bit-stable;
+//! - `SimdMode::Scalar` reproduces the unfused two-rounding reference
+//!   loop exactly (the `DEEPCA_SIMD=scalar` ≡ pre-SIMD contract);
+//! - scalar vs the auto-selected ISA kernels agree to ≤1e-13 relative
+//!   (fused-multiply-add rounding is the only permitted divergence);
+//! - multiply-only kernels (`fill_scaled`, `scale`) are bit-identical
+//!   across **all** modes.
+
+use deepca::linalg::simd::{KernelDispatch, PackBuf, SimdMode};
+use deepca::linalg::Mat;
+use deepca::testing::{check, PropConfig};
+use deepca::util::rng::Rng;
+
+/// Scalar plus (when the host selects one) the native vector mode.
+fn modes() -> Vec<KernelDispatch> {
+    let mut v = vec![KernelDispatch::for_mode(SimdMode::Scalar)];
+    let auto = KernelDispatch::auto();
+    if auto.mode() != SimdMode::Scalar {
+        v.push(auto);
+    }
+    v
+}
+
+fn nan_mat(n: usize, m: usize) -> Mat {
+    Mat::from_fn(n, m, |_, _| f64::NAN)
+}
+
+fn bits_eq(got: &Mat, want: &Mat, label: &str) -> Result<(), String> {
+    for (i, (x, y)) in got.data().iter().zip(want.data()).enumerate() {
+        if x.to_bits() != y.to_bits() {
+            return Err(format!("{label}: element {i} {x:.17e} vs {y:.17e}"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn packed_product_is_bit_identical_to_matmul_into() {
+    // One shared scratch across every case: the grow-only panel buffer
+    // must never leak state between products of different shapes.
+    let mut pack = PackBuf::new();
+    check(
+        "matmul_packed_into ≡ matmul_into (bitwise, random shapes)",
+        PropConfig { cases: 40, seed: 0x51D1 },
+        |rng| (rng.range(1, 33), rng.range(1, 97), rng.range(1, 41), rng.next_u64()),
+        |&(n, k, m, seed)| {
+            let mut rng = Rng::seed_from(seed);
+            let a = Mat::randn(n, k, &mut rng);
+            let b = Mat::randn(k, m, &mut rng);
+            let mut want = nan_mat(n, m);
+            a.matmul_into(&b, &mut want);
+            let mut got = nan_mat(n, m);
+            a.matmul_packed_into(&b, &mut pack, &mut got);
+            bits_eq(&got, &want, &format!("{n}x{k} @ {k}x{m}"))?;
+            // Bit-stable on repeat: same inputs, dirty buffer, warm pack.
+            let mut again = nan_mat(n, m);
+            a.matmul_packed_into(&b, &mut pack, &mut again);
+            bits_eq(&again, &want, &format!("{n}x{k} @ {k}x{m} (repeat)"))
+        },
+    );
+}
+
+#[test]
+fn scalar_mode_matches_the_unfused_reference_bitwise() {
+    // The pre-SIMD kernels were plain `acc += a*b` loops in ascending
+    // inner order; `DEEPCA_SIMD=scalar` must reproduce them bit for bit.
+    let mut rng = Rng::seed_from(0xBE11);
+    let kd = KernelDispatch::for_mode(SimdMode::Scalar);
+    let mut pack = PackBuf::new();
+    for &(n, k, m) in &[(7usize, 19usize, 5usize), (12, 300, 8), (9, 33, 20), (1, 4, 1)] {
+        let a = Mat::randn(n, k, &mut rng);
+        let b = Mat::randn(k, m, &mut rng);
+        let mut want = vec![0.0f64; n * m];
+        for i in 0..n {
+            for p in 0..k {
+                let av = a.data()[i * k + p];
+                for j in 0..m {
+                    want[i * m + j] += av * b.data()[p * m + j];
+                }
+            }
+        }
+        let mut got = nan_mat(n, m);
+        a.matmul_packed_with(&kd, &b, &mut pack, &mut got);
+        for (i, (x, y)) in got.data().iter().zip(&want).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{n}x{k}x{m} element {i}: {x:.17e} vs {y:.17e}"
+            );
+        }
+    }
+}
+
+#[test]
+fn scalar_and_native_modes_agree_within_fusion_tolerance() {
+    // Fused multiply-add rounds once where the scalar chain rounds
+    // twice; over a k-long dot that divergence stays far below 1e-13
+    // relative for these well-conditioned random inputs. (When the host
+    // has no vector unit, both dispatches are scalar and the error is
+    // exactly zero — the bound still holds.)
+    let mut rng = Rng::seed_from(0xFA57);
+    let scalar = KernelDispatch::for_mode(SimdMode::Scalar);
+    let native = KernelDispatch::auto();
+    let mut pack = PackBuf::new();
+    for &(n, k, m) in &[(13usize, 400usize, 7usize), (30, 64, 30), (5, 1000, 3)] {
+        let a = Mat::randn(n, k, &mut rng);
+        let b = Mat::randn(k, m, &mut rng);
+        let mut ws = nan_mat(n, m);
+        a.matmul_packed_with(&scalar, &b, &mut pack, &mut ws);
+        let mut wn = nan_mat(n, m);
+        a.matmul_packed_with(&native, &b, &mut pack, &mut wn);
+        let rel = (&ws - &wn).fro_norm() / ws.fro_norm().max(1.0);
+        assert!(rel <= 1e-13, "{n}x{k}x{m}: scalar vs {:?} rel {rel:.3e}", native.mode());
+    }
+}
+
+#[test]
+fn elementwise_kernels_scalar_reference_and_cross_mode_parity() {
+    let mut rng = Rng::seed_from(0xE1E1);
+    let scalar = KernelDispatch::for_mode(SimdMode::Scalar);
+    for kd in modes() {
+        for len in [1usize, 2, 3, 4, 7, 8, 64, 1500, 1501] {
+            let src: Vec<f64> = (0..len).map(|_| rng.normal()).collect();
+            let base: Vec<f64> = (0..len).map(|_| rng.normal()).collect();
+            let alpha = 0.7346243;
+
+            // axpy vs the unfused reference (exact in scalar mode, 1-ulp
+            // fusion divergence per element otherwise).
+            let mut got = base.clone();
+            kd.axpy(&mut got, alpha, &src);
+            let mut sref = base.clone();
+            for (d, s) in sref.iter_mut().zip(&src) {
+                *d += alpha * s;
+            }
+            for (i, (x, y)) in got.iter().zip(&sref).enumerate() {
+                if kd.mode() == SimdMode::Scalar {
+                    assert_eq!(x.to_bits(), y.to_bits(), "axpy len={len} i={i}");
+                } else {
+                    let rel = (x - y).abs() / y.abs().max(1.0);
+                    assert!(rel <= 1e-13, "axpy len={len} i={i} rel {rel:.3e}");
+                }
+            }
+
+            // add_scaled ≡ copy-then-axpy, bitwise, within the mode.
+            let mut fused = vec![f64::NAN; len];
+            kd.add_scaled(&mut fused, &base, alpha, &src);
+            let mut two_step = base.clone();
+            kd.axpy(&mut two_step, alpha, &src);
+            assert!(
+                fused.iter().zip(&two_step).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "add_scaled vs copy+axpy diverged ({:?}, len={len})",
+                kd.mode()
+            );
+
+            // col_dots accumulates one product per slot — same rounding
+            // profile as axpy against the explicit reference.
+            let mut dots = base.clone();
+            kd.col_dots(&src, &base, &mut dots);
+            let mut dref = base.clone();
+            for j in 0..len {
+                dref[j] += src[j] * base[j];
+            }
+            for (i, (x, y)) in dots.iter().zip(&dref).enumerate() {
+                let rel = (x - y).abs() / y.abs().max(1.0);
+                assert!(rel <= 1e-13, "col_dots len={len} i={i} rel {rel:.3e}");
+            }
+
+            // Multiply-only kernels: bit-identical across ALL modes.
+            let mut fs = vec![f64::NAN; len];
+            kd.fill_scaled(&mut fs, &src, alpha);
+            let mut fs_scalar = vec![f64::NAN; len];
+            scalar.fill_scaled(&mut fs_scalar, &src, alpha);
+            assert!(
+                fs.iter().zip(&fs_scalar).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "fill_scaled diverged across modes ({:?}, len={len})",
+                kd.mode()
+            );
+            let mut sc = src.clone();
+            kd.scale(&mut sc, alpha);
+            let mut sc_scalar = src.clone();
+            scalar.scale(&mut sc_scalar, alpha);
+            assert!(
+                sc.iter().zip(&sc_scalar).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "scale diverged across modes ({:?}, len={len})",
+                kd.mode()
+            );
+        }
+    }
+}
+
+#[test]
+fn degenerate_shapes_are_handled() {
+    let mut pack = PackBuf::new();
+    let a = Mat::zeros(4, 0);
+    let b = Mat::zeros(0, 3);
+    let mut out = nan_mat(4, 3);
+    a.matmul_packed_into(&b, &mut pack, &mut out);
+    assert!(out.data().iter().all(|&x| x == 0.0), "k=0 must zero the output");
+
+    let a = Mat::zeros(4, 5);
+    let b = Mat::zeros(5, 0);
+    let mut out = Mat::zeros(4, 0);
+    a.matmul_packed_into(&b, &mut pack, &mut out);
+    assert_eq!(out.shape(), (4, 0));
+}

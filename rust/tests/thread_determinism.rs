@@ -143,6 +143,30 @@ fn every_algo_and_engine_is_bit_identical_across_thread_counts() {
 }
 
 #[test]
+fn simd_mode_is_a_pure_function_of_the_environment() {
+    // CI runs this whole suite under both `DEEPCA_SIMD=auto` and
+    // `DEEPCA_SIMD=scalar`, so every bit-identity property above is
+    // exercised per kernel set. Here we pin the dispatch itself: the
+    // selected mode is a pure function of env/ISA (never of timing),
+    // stable within the process, and a repeated solve under the ambient
+    // mode reproduces the trajectory bit for bit.
+    use deepca::linalg::simd::{dispatch, SimdMode};
+    let first = dispatch().mode();
+    if let Ok(v) = std::env::var("DEEPCA_SIMD") {
+        if v == "scalar" {
+            assert_eq!(first, SimdMode::Scalar, "DEEPCA_SIMD=scalar must select scalar kernels");
+        }
+    }
+    assert_eq!(dispatch().mode(), first, "dispatch must be stable within a process");
+
+    let (p, topo) = random_problem(0x51D2);
+    let cfg = DeepcaConfig { consensus_rounds: 6, max_iters: 8, ..Default::default() };
+    let a = solve(&p, &topo, Algo::Deepca(cfg.clone()), Engine::Dense, 4);
+    let b = solve(&p, &topo, Algo::Deepca(cfg), Engine::Dense, 4);
+    compare(&a, &b, "repeat solve under the ambient DEEPCA_SIMD mode").unwrap();
+}
+
+#[test]
 fn dense_parallel_engine_is_an_alias_for_dense() {
     // The retired ParallelBackend's Engine variant now composes the same
     // backend with the session executor — literally the same parts.

@@ -52,6 +52,8 @@ pub enum Rule {
     Timing,
     /// `unsafe` without an immediately-preceding `// SAFETY:` comment.
     Safety,
+    /// `core::arch` / CPU feature detection outside `linalg/simd.rs`.
+    ArchScope,
     /// A registered hot region no longer matches any source.
     RegionMissing,
     /// Malformed `// lint: allow(...)` annotation.
@@ -66,6 +68,7 @@ impl Rule {
             Rule::ThreadSpawn => "thread-spawn",
             Rule::Timing => "timing",
             Rule::Safety => "safety",
+            Rule::ArchScope => "arch",
             Rule::RegionMissing => "region-missing",
             Rule::AllowSyntax => "allow-syntax",
         }
@@ -200,17 +203,40 @@ pub fn repo_regions() -> Vec<Region> {
             impl_context: None,
             fn_name: "par_weighted_chunks_ctx",
         },
-        // Blocked wide-matmul inner kernel and the tiled Gram transpose
-        // product (CovTracker / wide power steps run through these).
+        // Packed-B matmul driver and the tiled Gram transpose product
+        // (CovTracker / wide power steps run through these).
         Region {
             file_suffix: "linalg/matrix.rs",
             impl_context: None,
-            fn_name: "matmul_thin_block_into",
+            fn_name: "matmul_packed_with",
         },
         Region {
             file_suffix: "linalg/matrix.rs",
             impl_context: None,
             fn_name: "t_matmul_blocked_into",
+        },
+        // SIMD dispatch seams: every solver-iteration flop funnels
+        // through these, so an allocation here is paid per panel /
+        // per row update.
+        Region {
+            file_suffix: "linalg/simd.rs",
+            impl_context: Some("KernelDispatch"),
+            fn_name: "matmul_panel_block",
+        },
+        Region {
+            file_suffix: "linalg/simd.rs",
+            impl_context: Some("KernelDispatch"),
+            fn_name: "matmul_panel_packed",
+        },
+        Region {
+            file_suffix: "linalg/simd.rs",
+            impl_context: Some("KernelDispatch"),
+            fn_name: "pack_panel",
+        },
+        Region {
+            file_suffix: "linalg/simd.rs",
+            impl_context: Some("KernelDispatch"),
+            fn_name: "axpy",
         },
     ]
 }
@@ -250,7 +276,19 @@ const THREAD_PATTERNS: &[&str] = &["thread::spawn(", "thread::scope(", "thread::
 
 const TIMING_PATTERNS: &[&str] = &["Instant::now(", "SystemTime"];
 
-const KNOWN_ALLOW_RULES: &[&str] = &["alloc", "hash-iter", "thread-spawn", "timing"];
+/// Vendor-intrinsic and CPU-feature-detection surface. Confined to
+/// `linalg/simd.rs` so exactly one file owns unsafe lane code and the
+/// kernel-selection purity contract; everything else must go through
+/// `KernelDispatch`.
+const ARCH_PATTERNS: &[&str] = &[
+    "core::arch",
+    "std::arch",
+    "is_x86_feature_detected",
+    "is_aarch64_feature_detected",
+    "target_feature(",
+];
+
+const KNOWN_ALLOW_RULES: &[&str] = &["alloc", "hash-iter", "thread-spawn", "timing", "arch"];
 
 /// One source line after lexical preprocessing.
 struct Line {
@@ -476,6 +514,10 @@ fn is_timing_seam(label: &str) -> bool {
     label.ends_with("util/timer.rs") || label.ends_with("benchkit.rs")
 }
 
+fn is_simd_seam(label: &str) -> bool {
+    label.ends_with("linalg/simd.rs")
+}
+
 /// Identifier character test for pattern-boundary checks.
 fn ident_char(c: char) -> bool {
     c.is_alphanumeric() || c == '_'
@@ -619,6 +661,28 @@ pub fn lint_file(path_label: &str, src: &str, regions: &[Region]) -> Vec<Finding
                         format!(
                             "`{pat}` outside exec/ — all parallelism must go through \
                              the Executor (determinism + reuse contracts)"
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+
+    // Rule: vendor intrinsics / feature detection outside the SIMD seam.
+    if !is_simd_seam(path_label) {
+        for (idx, line) in lines.iter().enumerate() {
+            if line.in_test_mod {
+                continue;
+            }
+            for pat in ARCH_PATTERNS {
+                if line.code.contains(pat) && !allowed(&lines, idx, "arch") {
+                    findings.push(finding(
+                        idx,
+                        Rule::ArchScope,
+                        format!(
+                            "`{pat}` outside linalg/simd.rs — all vendor intrinsics \
+                             and CPU feature detection must live behind \
+                             KernelDispatch (kernel-selection purity contract)"
                         ),
                     ));
                 }

@@ -1,0 +1,26 @@
+//! Fixture: vendor intrinsics and CPU feature detection outside the
+//! SIMD seam. Both the feature probe and the target_feature attribute
+//! must be flagged anywhere but linalg/simd.rs.
+
+pub fn probe() -> bool {
+    std::arch::is_x86_feature_detected!("avx2")
+}
+
+#[target_feature(enable = "avx2")]
+// SAFETY: fixture only; callers check availability.
+pub unsafe fn lane_kernel(x: &mut [f64]) {
+    use core::arch::x86_64::*;
+    // SAFETY: fixture only.
+    unsafe {
+        let v = _mm256_set1_pd(2.0);
+        _mm256_storeu_pd(x.as_mut_ptr(), v);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn detection_in_test_mod_is_permitted() {
+        let _ = std::arch::is_x86_feature_detected!("avx2");
+    }
+}

@@ -98,6 +98,39 @@ fn unsafe_without_safety_comment_is_flagged_once() {
 }
 
 #[test]
+fn arch_intrinsics_fixture_is_flagged_outside_the_simd_seam() {
+    let src = fixture("arch_intrinsics.rs");
+    let findings = lint_file("rust/src/linalg/fake.rs", &src, &[]);
+    // The probe line matches both the std::arch and the detection-macro
+    // patterns, plus the target_feature attribute and the core::arch
+    // use — the test-mod probe is not flagged.
+    assert_eq!(
+        rules_of(&findings),
+        vec![Rule::ArchScope; 4],
+        "{findings:?}"
+    );
+    assert!(
+        findings.iter().all(|f| f.message.contains("linalg/simd.rs")),
+        "{findings:?}"
+    );
+}
+
+#[test]
+fn arch_intrinsics_are_permitted_in_the_simd_seam() {
+    let src = fixture("arch_intrinsics.rs");
+    let findings = lint_file("rust/src/linalg/simd.rs", &src, &[]);
+    assert!(findings.is_empty(), "{findings:?}");
+}
+
+#[test]
+fn arch_allow_annotation_suppresses_with_reason() {
+    let src = "// lint: allow(arch, build-time probe, no lane code)\n\
+               pub fn ok() -> bool { std::arch::is_x86_feature_detected!(\"avx2\") }\n";
+    let findings = lint_file("rust/src/config.rs", src, &[]);
+    assert!(findings.is_empty(), "{findings:?}");
+}
+
+#[test]
 fn malformed_allow_annotations_are_flagged_and_do_not_suppress() {
     let src = fixture("allow_syntax.rs");
     let findings =
